@@ -1,0 +1,112 @@
+//! Design-choice ablations (DESIGN.md §6):
+//!
+//! 1. **First-stacklet size** — geometric growth should make the
+//!    initial size nearly irrelevant for time, while tiny stacklets
+//!    stress the hot-split guard.
+//! 2. **Eq. (6) victim weights vs uniform** — cross-node steal
+//!    fraction and T_p on the simulated 2×56 testbed.
+//! 3. **Continuation vs child stealing** — same DAG, same overheads,
+//!    the discipline is the only variable (isolates the paper's core
+//!    claim from implementation quality).
+//! 4. **Lazy vs busy** — awake-fraction (CPU occupancy) vs completion
+//!    time across tree sizes.
+//! 5. **Deque initial capacity** — growth amortization check.
+
+use rustfork::harness::{fmt_secs, measure};
+use rustfork::numa::NumaTopology;
+use rustfork::rt::Pool;
+use rustfork::sim::{SimConfig, SimTask, Simulator, StealDiscipline};
+use rustfork::workloads::fib::Fib;
+
+fn main() {
+    println!("# ablations\n");
+
+    // 1. First-stacklet size.
+    println!("## 1. first-stacklet size (fib(26), P=2, real runtime)");
+    for bytes in [256usize, 1024, 4096, 16384, 65536] {
+        let pool = Pool::builder().workers(2).first_stacklet(bytes).build();
+        let m = measure(3, 0.1, || {
+            std::hint::black_box(pool.run(Fib::new(26)));
+        });
+        println!("{bytes:>7} B : {}", fmt_secs(m.secs));
+    }
+
+    // 2. Eq. (6) vs uniform victims (sim).
+    println!("\n## 2. victim selection (sim, fib(26), P=112, 2x56)");
+    for (label, uniform) in [("Eq.(6)", false), ("uniform", true)] {
+        let cfg = SimConfig {
+            workers: 112,
+            topology: NumaTopology::paper_testbed(),
+            uniform_victims: uniform,
+            ..SimConfig::default()
+        };
+        let r = Simulator::new(cfg).run(SimTask::fib(26));
+        println!(
+            "{label:<8}: T_p={:>9} steals={:>5} cross-node={:>4.0}%",
+            r.t_p_ns,
+            r.steals,
+            100.0 * r.remote_steals as f64 / r.steals.max(1) as f64
+        );
+    }
+
+    // 3. Continuation vs child stealing at equal overhead (sim). On
+    // binary trees the two disciplines transfer identical work per
+    // steal, so the separation only appears on multi-child nodes
+    // (n-queens: up to 11 children per scope) — and in memory, which
+    // the real-runtime Fig. 7 bench measures.
+    println!("\n## 3. steal discipline at equal per-task overhead (sim, nqueens(11))");
+    println!("{:<6} {:>14} {:>14} {:>9} {:>14}", "P", "continuation", "child", "ratio", "steals c/ch");
+    for p in [8usize, 28, 56, 112] {
+        let run = |d| {
+            Simulator::new(SimConfig {
+                workers: p,
+                discipline: d,
+                overhead_ns: 15,
+                ..SimConfig::default()
+            })
+            .run(SimTask::nqueens(11))
+        };
+        let cont = run(StealDiscipline::Continuation);
+        let child = run(StealDiscipline::Child);
+        println!(
+            "{p:<6} {:>12}ns {:>12}ns {:>9.2} {:>6}/{:<6}",
+            cont.t_p_ns,
+            child.t_p_ns,
+            child.t_p_ns as f64 / cont.t_p_ns as f64,
+            cont.steals,
+            child.steals
+        );
+    }
+
+    // 4. Lazy vs busy CPU occupancy across tree sizes (sim).
+    println!("\n## 4. lazy vs busy occupancy (sim, P=56)");
+    println!("{:<10} {:>12} {:>12} {:>10} {:>10}", "tree", "T_p busy", "T_p lazy", "awake busy", "awake lazy");
+    for (label, n) in [("fib(16)", 16u32), ("fib(22)", 22), ("fib(26)", 26)] {
+        let run = |lazy| {
+            Simulator::new(SimConfig { workers: 56, lazy, ..SimConfig::default() })
+                .run(SimTask::fib(n))
+        };
+        let busy = run(false);
+        let lazy = run(true);
+        println!(
+            "{label:<10} {:>10}ns {:>10}ns {:>9.0}% {:>9.0}%",
+            busy.t_p_ns,
+            lazy.t_p_ns,
+            100.0 * busy.awake_frac,
+            100.0 * lazy.awake_frac
+        );
+    }
+
+    // 5. Deque initial capacity (real runtime).
+    println!("\n## 5. deque initial capacity is off the hot path (micro)");
+    for cap in [2usize, 64, 1024] {
+        let d: rustfork::deque::Deque<usize> = rustfork::deque::Deque::with_capacity(cap);
+        let m = measure(3, 0.1, || {
+            for i in 0..100_000 {
+                d.push(i);
+                std::hint::black_box(d.pop());
+            }
+        });
+        println!("cap {cap:>5}: {} per 100k push+pop", fmt_secs(m.secs));
+    }
+}

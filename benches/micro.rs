@@ -1,0 +1,147 @@
+//! Micro-benchmarks of the runtime substrates (the §Perf-L3 iteration
+//! targets): Chase-Lev deque ops, segmented-stack alloc/dealloc vs
+//! malloc, the Eq. (6) alias sampler, join-counter ops, and the
+//! fork-join per-task cost (push+pop round trip — the paper's "minimum
+//! overhead of a task").
+
+use rustfork::deque::{Deque, Steal};
+use rustfork::frame::JoinCounter;
+use rustfork::harness::{fmt_secs, measure};
+use rustfork::numa::{AliasSampler, NumaTopology};
+use rustfork::rt::Pool;
+use rustfork::stack::SegmentedStack;
+use rustfork::sync::XorShift64;
+use rustfork::workloads::fib::Fib;
+
+fn per_op(total_secs: f64, ops: u64) -> String {
+    format!("{:7.1} ns/op", total_secs * 1e9 / ops as f64)
+}
+
+fn main() {
+    let reps = 5;
+    println!("# micro-benchmarks (release)");
+
+    // 1. Deque push+pop round trip (the task hot path).
+    {
+        const OPS: u64 = 1_000_000;
+        let d: Deque<usize> = Deque::new();
+        let m = measure(reps, 0.2, || {
+            for i in 0..OPS {
+                d.push(i as usize);
+                std::hint::black_box(d.pop());
+            }
+        });
+        println!("deque push+pop         : {} {}", fmt_secs(m.secs), per_op(m.secs, OPS));
+    }
+
+    // 2. Deque steal throughput (uncontended).
+    {
+        const OPS: u64 = 1_000_000;
+        let d: Deque<usize> = Deque::with_capacity(1 << 21);
+        let m = measure(reps, 0.2, || {
+            for i in 0..OPS {
+                d.push(i as usize);
+            }
+            for _ in 0..OPS {
+                match d.steal() {
+                    Steal::Success(v) => {
+                        std::hint::black_box(v);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        });
+        println!("deque push+steal       : {} {}", fmt_secs(m.secs), per_op(m.secs, 2 * OPS));
+    }
+
+    // 3. Segmented-stack alloc/dealloc vs malloc (Eq. 5's pointer-bump
+    //    claim).
+    {
+        const OPS: u64 = 1_000_000;
+        let mut s = SegmentedStack::new();
+        let m = measure(reps, 0.2, || {
+            for _ in 0..OPS {
+                let p = s.alloc(64);
+                std::hint::black_box(p);
+                s.dealloc(p, 64);
+            }
+        });
+        println!("segstack alloc+dealloc : {} {}", fmt_secs(m.secs), per_op(m.secs, OPS));
+
+        let mal = measure(reps, 0.2, || {
+            for _ in 0..OPS {
+                let v: Vec<u8> = Vec::with_capacity(64);
+                std::hint::black_box(&v);
+            }
+        });
+        println!(
+            "malloc 64B (reference) : {} {}  ({:.1}x slower than segstack)",
+            fmt_secs(mal.secs),
+            per_op(mal.secs, OPS),
+            mal.secs / m.secs
+        );
+    }
+
+    // 4. Eq. (6) victim sampling.
+    {
+        const OPS: u64 = 10_000_000;
+        let topo = NumaTopology::paper_testbed();
+        let sampler = AliasSampler::new(&topo.victim_weights(0));
+        let mut rng = XorShift64::new(1);
+        let m = measure(reps, 0.2, || {
+            for _ in 0..OPS {
+                std::hint::black_box(sampler.sample(&mut rng));
+            }
+        });
+        println!("Eq.(6) alias sample    : {} {}", fmt_secs(m.secs), per_op(m.secs, OPS));
+    }
+
+    // 5. Join counter ops.
+    {
+        const OPS: u64 = 10_000_000;
+        let j = JoinCounter::new();
+        let m = measure(reps, 0.2, || {
+            for _ in 0..OPS {
+                std::hint::black_box(j.signal());
+                std::hint::black_box(j.arrive(1));
+            }
+        });
+        println!("join signal+arrive     : {} {}", fmt_secs(m.secs), per_op(m.secs, 2 * OPS));
+    }
+
+    // 6. End-to-end per-task cost at P = 1 (fork+dispatch+return+pop).
+    {
+        let pool = Pool::with_workers(1);
+        let n = 25u64;
+        let tasks = 2 * rustfork::workloads::fib::fib_exact(n + 1) - 1;
+        let m = measure(reps, 0.2, || {
+            std::hint::black_box(pool.run(Fib::new(n)));
+        });
+        println!(
+            "fork-join task (P=1)   : {} {}  ({} tasks/iter)",
+            fmt_secs(m.secs),
+            per_op(m.secs, tasks),
+            tasks
+        );
+    }
+
+    // 7. Theorem 1 slack: realized footprint vs bound for a deep strand.
+    {
+        let mut s = SegmentedStack::new();
+        let mut ptrs = Vec::new();
+        for _ in 0..10_000 {
+            ptrs.push((s.alloc(200), 200));
+        }
+        let bound = rustfork::stack::theorem1_bound(s.live_bytes());
+        println!(
+            "Theorem 1: live={} footprint={} bound={} (slack {:.2}x)",
+            s.live_bytes(),
+            s.footprint_bytes(),
+            bound,
+            bound as f64 / s.footprint_bytes() as f64
+        );
+        for (p, sz) in ptrs.into_iter().rev() {
+            s.dealloc(p, sz);
+        }
+    }
+}

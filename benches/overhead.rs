@@ -1,0 +1,76 @@
+//! **§IV-C.1a — framework overhead**: `T_1/T_s` on fib — the cost of a
+//! task relative to a bare function call, measured with one worker so
+//! no communication interferes (paper: libfork 8.8, openMP 41, TBB 57,
+//! taskflow 180).
+//!
+//! Also reports per-task absolute overhead in ns, which calibrates the
+//! simulator's `overhead_ns` (DESIGN.md §Substitutions).
+
+use rustfork::config::FrameworkKind;
+use rustfork::harness::{fmt_secs, measure};
+use rustfork::rt::Pool;
+use rustfork::workloads::fib::{fib_exact, fib_serial};
+
+fn main() {
+    let n: u64 = std::env::var("RUSTFORK_FIB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(28);
+    let reps: usize =
+        std::env::var("RUSTFORK_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    // Task count in the fib call tree = 2·F(n+1) − 1.
+    let tasks = 2 * fib_exact(n + 1) - 1;
+
+    println!("# fib({n}) single-worker overhead (T_1/T_s) — paper: LF 8.8, OMP 41, TBB 57, TF 180");
+
+    let t_s = measure(reps, 0.2, || {
+        std::hint::black_box(fib_serial(n));
+    });
+    println!(
+        "{:<12} {:>12}   ({} recursive calls)",
+        "serial",
+        fmt_secs(t_s.secs),
+        tasks
+    );
+
+    println!(
+        "{:<12} {:>12} {:>8} {:>14} {:>10}",
+        "framework", "T_1", "T_1/T_s", "per-task (ns)", "paper"
+    );
+    let paper = [("Lazy-LF", 8.8), ("Busy-LF", 8.8), ("TBB", 57.0), ("OpenMP", 41.0), ("Taskflow", 180.0)];
+    for (fw, paper_ratio) in FrameworkKind::PARALLEL.iter().zip(paper) {
+        let pool = fw.scheduler().map(|s| {
+            Pool::builder().workers(1).scheduler(s).build()
+        });
+        let run = rustfork::harness::runner::WorkloadRun {
+            workload: rustfork::workloads::Workload::Fib,
+            framework: *fw,
+            workers: 1,
+            scale: rustfork::workloads::params::Scale::Scaled,
+        };
+        // Use the same n as the serial reference.
+        let m = measure(reps, 0.2, || {
+            let _ = std::hint::black_box(match fw.scheduler() {
+                Some(_) => pool.as_ref().unwrap().run(rustfork::workloads::fib::Fib::new(n)),
+                None => {
+                    let policy = match fw {
+                        FrameworkKind::ChildStealing => rustfork::baseline::Policy::ChildStealing,
+                        FrameworkKind::GlobalQueue => rustfork::baseline::Policy::GlobalQueue,
+                        FrameworkKind::TaskCaching => rustfork::baseline::Policy::TaskCaching,
+                        _ => unreachable!(),
+                    };
+                    rustfork::baseline::run_job(policy, 1, rustfork::baseline::jobs::FibJob(n))
+                }
+            });
+        });
+        let _ = &run;
+        println!(
+            "{:<12} {:>12} {:>8.1} {:>14.1} {:>10.1}",
+            fw.label(),
+            fmt_secs(m.secs),
+            m.secs / t_s.secs,
+            m.secs * 1e9 / tasks as f64,
+            paper_ratio.1,
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! **Fig. 6 — UTS benchmarks**: the geometric (T1…) and binomial (T3…)
+//! tree families across frameworks, including the `*`-marked variants
+//! that use the stack-allocation API (§III-C) instead of heap-allocated
+//! result buffers.
+//!
+//! The taskflow model retains the whole task graph; on the large trees
+//! it would consume O(total-nodes) memory (the paper reports it
+//! exhausting 500 GiB and failing) — those cells are skipped with a
+//! note unless RUSTFORK_UTS_FULL=1.
+//!
+//! Env: RUSTFORK_REPS, RUSTFORK_UTS_LARGE=1 (include T1L/T3L),
+//! RUSTFORK_UTS_FULL=1 (include XXL + taskflow-on-large).
+
+use rustfork::config::FrameworkKind;
+use rustfork::harness::{fmt_secs, measure, runner};
+use rustfork::rt::Pool;
+use rustfork::workloads::params::{Scale, Workload};
+use rustfork::workloads::uts::{uts_serial, UtsStar};
+
+fn reps() -> usize {
+    std::env::var("RUSTFORK_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+}
+
+fn main() {
+    let large = std::env::var("RUSTFORK_UTS_LARGE").is_ok()
+        || std::env::var("RUSTFORK_UTS_FULL").is_ok();
+    let full = std::env::var("RUSTFORK_UTS_FULL").is_ok();
+    let mut trees = vec![Workload::UtsT1, Workload::UtsT3];
+    if large {
+        trees.extend([Workload::UtsT1L, Workload::UtsT3L]);
+    }
+    if full {
+        trees.extend([Workload::UtsT1XXL, Workload::UtsT3XXL]);
+    }
+    let ps = [1usize, 2, 4];
+
+    println!("# Fig. 6 — UTS benchmarks");
+    for w in trees {
+        let cfg = runner::uts_config(w, Scale::Scaled);
+        let stats = uts_serial(&cfg);
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(uts_serial(&cfg));
+        let t_s = t0.elapsed().as_secs_f64();
+        println!(
+            "### {w} ({}) — {} nodes, depth {}   T_s = {}",
+            w.paper_params(),
+            stats.nodes,
+            stats.max_depth,
+            fmt_secs(t_s)
+        );
+        println!(
+            "{:<12} {:>3} {:>12} {:>10} {:>9}",
+            "framework", "P", "median", "sigma", "speedup"
+        );
+
+        let big_tree = stats.nodes > 1_000_000;
+        for fw in FrameworkKind::PARALLEL {
+            if fw == FrameworkKind::TaskCaching && big_tree && !full {
+                println!(
+                    "{:<12}     (skipped: retains all {} task nodes — the paper's \
+                     taskflow exhausted 500 GiB here)",
+                    fw.label(),
+                    stats.nodes
+                );
+                continue;
+            }
+            for &p in &ps {
+                let pool = fw
+                    .scheduler()
+                    .map(|s| Pool::builder().workers(p).scheduler(s).build());
+                let run = runner::WorkloadRun {
+                    workload: w,
+                    framework: fw,
+                    workers: p,
+                    scale: Scale::Scaled,
+                };
+                let mut checksum = 0;
+                let m = measure(reps(), 0.05, || {
+                    checksum = runner::run_workload(&run, pool.as_ref()).checksum;
+                });
+                assert_eq!(checksum, stats.nodes, "{w} on {fw}");
+                println!(
+                    "{:<12} {:>3} {:>12} {:>10} {:>9.3}",
+                    fw.label(),
+                    p,
+                    fmt_secs(m.secs),
+                    fmt_secs(m.sigma),
+                    t_s / m.secs
+                );
+            }
+        }
+
+        // The `*` variants (stack-allocation API) for both LF schedulers.
+        for fw in [FrameworkKind::LazyLf, FrameworkKind::BusyLf] {
+            for &p in &ps {
+                let pool = Pool::builder()
+                    .workers(p)
+                    .scheduler(fw.scheduler().unwrap())
+                    .build();
+                let mut checksum = 0;
+                let m = measure(reps(), 0.05, || {
+                    checksum = pool.run(UtsStar::new(cfg));
+                });
+                assert_eq!(checksum, stats.nodes);
+                println!(
+                    "{:<12} {:>3} {:>12} {:>10} {:>9.3}",
+                    format!("{}*", fw.label()),
+                    p,
+                    fmt_secs(m.secs),
+                    fmt_secs(m.sigma),
+                    t_s / m.secs
+                );
+            }
+        }
+        println!();
+    }
+}

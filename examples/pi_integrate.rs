@@ -1,0 +1,151 @@
+//! Domain example: estimating π by adaptive quadrature with a custom
+//! coroutine — shows how a *user* of the library writes their own task
+//! (not one of the built-in benchmarks), including the stack-allocation
+//! API (§III-C) for scratch space.
+//!
+//! π = ∫₀¹ 4/(1+x²) dx, refined adaptively with fork-join bisection.
+//!
+//! ```sh
+//! cargo run --release --example pi_integrate [eps]
+//! ```
+
+use rustfork::prelude::*;
+use rustfork::task::Cx;
+
+/// 4/(1+x²).
+fn g(x: f64) -> f64 {
+    4.0 / (1.0 + x * x)
+}
+
+/// User-defined adaptive quadrature coroutine over g.
+struct PiTask {
+    x: f64,
+    dx: f64,
+    gx: f64,
+    gdx: f64,
+    eps: f64,
+    state: u8,
+    left: f64,
+    right: f64,
+}
+
+impl PiTask {
+    fn new(x: f64, dx: f64, gx: f64, gdx: f64, eps: f64) -> Self {
+        PiTask { x, dx, gx, gdx, eps, state: 0, left: 0.0, right: 0.0 }
+    }
+}
+
+impl Coroutine for PiTask {
+    type Output = f64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<f64> {
+        match self.state {
+            0 => {
+                let half = self.dx * 0.5;
+                let mid = self.x + half;
+                let gmid = g(mid);
+                let whole = (self.gx + self.gdx) * self.dx * 0.5;
+                let refined =
+                    (self.gx + gmid) * half * 0.5 + (gmid + self.gdx) * half * 0.5;
+                if (refined - whole).abs() <= self.eps {
+                    return Step::Return(refined);
+                }
+                self.right = gmid; // stash
+                self.state = 1;
+                cx.fork(&mut self.left, PiTask::new(self.x, half, self.gx, gmid, self.eps));
+                Step::Dispatch
+            }
+            1 => {
+                let half = self.dx * 0.5;
+                let mid = self.x + half;
+                let gmid = self.right;
+                self.state = 2;
+                cx.call(&mut self.right, PiTask::new(mid, half, gmid, self.gdx, self.eps));
+                Step::Dispatch
+            }
+            2 => {
+                self.state = 3;
+                Step::Join
+            }
+            _ => Step::Return(self.left + self.right),
+        }
+    }
+}
+
+/// A second user task demonstrating the §III-C stack-allocation API:
+/// partial sums of a k-way split live on the worker's segmented stack
+/// (a portable `alloca` that cannot overflow).
+struct KWayPi {
+    k: usize,
+    eps: f64,
+    state: u8,
+    buf: *mut f64,
+    idx: usize,
+}
+
+unsafe impl Send for KWayPi {}
+
+impl Coroutine for KWayPi {
+    type Output = f64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<f64> {
+        match self.state {
+            0 => {
+                // Scratch buffer for k partial sums — on the segmented
+                // stack, FILO, strictly inside this task's lifetime.
+                self.buf = cx.stack_alloc(self.k * 8) as *mut f64;
+                self.state = 1;
+                self.idx = 0;
+                self.step(cx)
+            }
+            1 => {
+                if self.idx < self.k {
+                    let i = self.idx;
+                    self.idx += 1;
+                    let w = 1.0 / self.k as f64;
+                    let (lo, hi) = (i as f64 * w, (i as f64 + 1.0) * w);
+                    let child = PiTask::new(lo, hi - lo, g(lo), g(hi), self.eps);
+                    let slot = unsafe { self.buf.add(i) };
+                    cx.fork(slot, child);
+                    Step::Dispatch
+                } else {
+                    self.state = 2;
+                    Step::Join
+                }
+            }
+            _ => {
+                let total: f64 =
+                    (0..self.k).map(|i| unsafe { *self.buf.add(i) }).sum();
+                unsafe { cx.stack_dealloc(self.buf as *mut u8, self.k * 8) };
+                Step::Return(total)
+            }
+        }
+    }
+}
+
+fn main() {
+    let eps: f64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1e-12);
+    let pool = Pool::builder().workers(4).build();
+
+    let t = std::time::Instant::now();
+    let pi = pool.run(PiTask::new(0.0, 1.0, g(0.0), g(1.0), eps));
+    println!(
+        "bisection  : pi ~= {pi:.12} (err {:.2e}) [{:?}]",
+        (pi - std::f64::consts::PI).abs(),
+        t.elapsed()
+    );
+
+    let t = std::time::Instant::now();
+    let pi16 = pool.run(KWayPi { k: 16, eps, state: 0, buf: std::ptr::null_mut(), idx: 0 });
+    println!(
+        "16-way+stack-API: pi ~= {pi16:.12} (err {:.2e}) [{:?}]",
+        (pi16 - std::f64::consts::PI).abs(),
+        t.elapsed()
+    );
+
+    let m = pool.metrics();
+    println!("tasks={} steals={} pops={}", m.tasks(), m.steals, m.pops);
+    assert!((pi - std::f64::consts::PI).abs() < 1e-6);
+    assert!((pi16 - std::f64::consts::PI).abs() < 1e-6);
+}

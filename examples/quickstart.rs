@@ -1,0 +1,65 @@
+//! Quickstart: the library in 60 seconds.
+//!
+//! Builds a pool, runs the three core benchmark tasks, prints runtime
+//! metrics, and demonstrates both schedulers plus concurrent root
+//! submission.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use rustfork::prelude::*;
+use rustfork::workloads::fib::{fib_exact, Fib};
+use rustfork::workloads::integrate::{integral_serial, Integrate};
+use rustfork::workloads::nqueens::{nqueens_exact, Nqueens};
+
+fn main() {
+    // 1. A busy-scheduler pool sized to the machine.
+    let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Busy).build();
+    println!("pool: {} workers, busy scheduler", pool.workers());
+
+    // 2. Fork-join Fibonacci (Algorithm 2 of the paper).
+    let n = 30;
+    let t = std::time::Instant::now();
+    let fib = pool.run(Fib::new(n));
+    println!("fib({n}) = {fib}  [{:?}]", t.elapsed());
+    assert_eq!(fib, fib_exact(n));
+
+    // 3. Adaptive quadrature: parallel result equals the serial
+    //    projection bit-for-bit (same DAG, same FP order).
+    let (b, eps) = (1000.0, 1e-4);
+    let integral = pool.run(Integrate::root(b, eps));
+    assert_eq!(integral, integral_serial(b, eps));
+    println!("integral_0^{b} (x^2+1)x dx ~= {integral:.6e}");
+
+    // 4. Multi-way fork-join (n-queens).
+    let q = pool.run(Nqueens::new(10));
+    assert_eq!(Some(q), nqueens_exact(10));
+    println!("10-queens solutions = {q}");
+
+    // 5. Concurrent root tasks from one submitter.
+    let handles: Vec<_> = (20..26).map(|i| pool.submit(Fib::new(i))).collect();
+    let sums: u64 = handles.into_iter().map(|h| h.join()).sum();
+    println!("sum fib(20..26) = {sums}");
+
+    // 6. Runtime counters (signals == steals is the wait-free join
+    //    accounting invariant).
+    let m = pool.metrics();
+    println!(
+        "metrics: {} tasks, {} steals ({} remote), {} hot-path pops, {} signals",
+        m.tasks(),
+        m.steals,
+        m.remote_steals,
+        m.pops,
+        m.signals
+    );
+
+    // 7. The lazy scheduler sleeps idle workers (same results).
+    let lazy = Pool::builder().workers(4).scheduler(SchedulerKind::Lazy).build();
+    let fib_lazy = lazy.run(Fib::new(n));
+    assert_eq!(fib_lazy, fib);
+    println!(
+        "lazy scheduler: fib({n}) = {fib_lazy}, sleeps = {}",
+        lazy.metrics().sleeps
+    );
+}

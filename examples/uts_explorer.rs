@@ -1,0 +1,95 @@
+//! UTS explorer: traverse the paper's unbalanced trees (Table I) on
+//! any framework, comparing the heap and stack-allocation-API (`*`)
+//! variants and printing tree statistics + scheduler counters.
+//!
+//! ```sh
+//! cargo run --release --example uts_explorer [tree] [workers] [framework]
+//! # e.g.
+//! cargo run --release --example uts_explorer T1 4 lazy
+//! cargo run --release --example uts_explorer T3 2 tbb
+//! ```
+
+use rustfork::baseline::{self, jobs::UtsJob};
+use rustfork::config::FrameworkKind;
+use rustfork::rt::Pool;
+use rustfork::workloads::uts::{uts_serial, Uts, UtsConfig, UtsStar};
+use rustfork::workloads::Workload;
+
+fn config_for(w: Workload) -> UtsConfig {
+    match w {
+        Workload::UtsT1 => UtsConfig::t1(),
+        Workload::UtsT1L => UtsConfig::t1l(),
+        Workload::UtsT1XXL => UtsConfig::t1xxl(),
+        Workload::UtsT3 => UtsConfig::t3(),
+        Workload::UtsT3L => UtsConfig::t3l(),
+        Workload::UtsT3XXL => UtsConfig::t3xxl(),
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let tree = std::env::args().nth(1).unwrap_or_else(|| "T1".into());
+    let workers: usize =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let fw = std::env::args()
+        .nth(3)
+        .and_then(|s| FrameworkKind::parse(&s))
+        .unwrap_or(FrameworkKind::BusyLf);
+
+    let workload = Workload::parse(&tree).expect("tree: T1|T1L|T1XXL|T3|T3L|T3XXL");
+    assert!(Workload::UTS.contains(&workload), "not a UTS tree: {tree}");
+    let cfg = config_for(workload);
+    println!("{workload}: {} | {fw}, P={workers}", workload.paper_params());
+
+    // Serial projection: the ground truth (and T_s).
+    let t0 = std::time::Instant::now();
+    let stats = uts_serial(&cfg);
+    let t_serial = t0.elapsed();
+    println!(
+        "serial: {} nodes, depth {}, {} leaves  [{t_serial:?}]",
+        stats.nodes, stats.max_depth, stats.leaves
+    );
+
+    match fw {
+        FrameworkKind::BusyLf | FrameworkKind::LazyLf => {
+            let pool = Pool::builder()
+                .workers(workers)
+                .scheduler(fw.scheduler().unwrap())
+                .build();
+
+            let t0 = std::time::Instant::now();
+            let nodes = pool.run(Uts::new(cfg));
+            let t_heap = t0.elapsed();
+            assert_eq!(nodes, stats.nodes);
+
+            let t0 = std::time::Instant::now();
+            let nodes_star = pool.run(UtsStar::new(cfg));
+            let t_star = t0.elapsed();
+            assert_eq!(nodes_star, stats.nodes);
+
+            let m = pool.metrics();
+            println!("heap variant : {t_heap:?}");
+            println!(
+                "star variant : {t_star:?}  (stack-allocation API, paper's '*' series)"
+            );
+            println!(
+                "counters: forks={} steals={} pops={} signals={} sleeps={}",
+                m.forks, m.steals, m.pops, m.signals, m.sleeps
+            );
+        }
+        FrameworkKind::Serial => {}
+        other => {
+            let policy = match other {
+                FrameworkKind::ChildStealing => baseline::Policy::ChildStealing,
+                FrameworkKind::GlobalQueue => baseline::Policy::GlobalQueue,
+                FrameworkKind::TaskCaching => baseline::Policy::TaskCaching,
+                _ => unreachable!(),
+            };
+            let t0 = std::time::Instant::now();
+            let nodes = baseline::run_job(policy, workers, UtsJob::new(cfg));
+            let dt = t0.elapsed();
+            assert_eq!(nodes, stats.nodes);
+            println!("{other} traversal: {dt:?}");
+        }
+    }
+}

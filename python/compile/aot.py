@@ -1,0 +1,86 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the rust PJRT
+runtime.
+
+HLO text — not ``lowered.compile()`` or serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Writes:
+    matmul_leaf.hlo.txt  — C = A·B on a LEAF_DIM² f32 tile
+    quad_leaf.hlo.txt    — trapezoid sum over [lo, hi]
+    manifest.txt         — shapes/dtypes per artifact (read by rust tests)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True; the
+    rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matmul_leaf():
+    spec = jax.ShapeDtypeStruct((model.LEAF_DIM, model.LEAF_DIM), jnp.float32)
+    return jax.jit(model.matmul_leaf).lower(spec, spec)
+
+
+def lower_quad_leaf():
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(model.quad_leaf).lower(scalar, scalar)
+
+
+ARTIFACTS = {
+    "matmul_leaf": (
+        lower_matmul_leaf,
+        f"inputs: a f32[{model.LEAF_DIM},{model.LEAF_DIM}], "
+        f"b f32[{model.LEAF_DIM},{model.LEAF_DIM}]; "
+        f"output: tuple(f32[{model.LEAF_DIM},{model.LEAF_DIM}])",
+    ),
+    "quad_leaf": (
+        lower_quad_leaf,
+        f"inputs: lo f32[], hi f32[]; output: tuple(f32[]) "
+        f"(panels = {model.QUAD_PANELS})",
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, (lower, desc) in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}: {desc}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

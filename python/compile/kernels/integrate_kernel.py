@@ -1,0 +1,72 @@
+"""L1: Pallas fused evaluate-and-reduce kernel for the quadrature leaf.
+
+The integrate benchmark's leaf work is evaluating the integrand on a
+panel grid and reducing to the trapezoid sum. On TPU this is a VPU
+(vector unit) kernel rather than an MXU one: a 1-D BlockSpec streams
+panel blocks through VMEM, each step evaluating f on its block and
+accumulating a partial sum into an SMEM-style (1, 1) output block —
+fusing what XLA would otherwise schedule as an eval buffer + reduce
+pass (no HBM round-trip for the intermediate f(x) vector).
+
+Lowered with ``interpret=True`` for the CPU PJRT client, like every
+kernel in this repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Panel-block size: one VPU-friendly lane-aligned chunk.
+BLOCK = 1024
+
+
+def _quad_kernel(lo_ref, h_ref, o_ref, *, block, n):
+    """Grid step i: accumulate the trapezoid-weighted f-sum of panel
+    points [i·block, (i+1)·block)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    lo = lo_ref[0]
+    h = h_ref[0]
+    base = i * block
+    idx = base + jax.lax.iota(jnp.int32, block)
+    xs = lo + h * idx.astype(jnp.float32)
+    fx = (xs * xs + 1.0) * xs
+    # Trapezoid weights: 1/2 at the endpoints (global indices 0 and n),
+    # 1 elsewhere; points beyond n are padding with weight 0.
+    w = jnp.where(
+        (idx == 0) | (idx == n),
+        0.5,
+        jnp.where(idx > n, 0.0, 1.0),
+    ).astype(jnp.float32)
+    o_ref[...] += jnp.sum(fx * w)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def quad_eval(lo, hi, *, n, block=BLOCK):
+    """Composite trapezoid sum of ∫ f over [lo, hi] with n panels.
+
+    `lo`/`hi` are traced f32 scalars (the adaptive driver varies them);
+    `n` is static (baked into the AOT artifact).
+    """
+    steps = -(-(n + 1) // block)  # ceil((n+1)/block)
+    lo = jnp.asarray(lo, jnp.float32).reshape((1,))
+    hi = jnp.asarray(hi, jnp.float32).reshape((1,))
+    h = (hi - lo) / jnp.float32(n)
+    total = pl.pallas_call(
+        functools.partial(_quad_kernel, block=block, n=n),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(lo, h)
+    return (h * total)[0]

@@ -1,0 +1,104 @@
+"""L1: Pallas blocked-matmul kernel — the MXU hot-spot of the paper's
+heaviest benchmark (Table I `matmul`).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's D&C
+matmul blocks for the Xeon's cache hierarchy; on TPU the same insight —
+keep the working tile in near memory, stream the long K dimension — maps
+to a `BlockSpec` grid over (M, N, K) with the (TM, TN) output tile
+resident in VMEM and f32 accumulation feeding the 128×128 MXU. The K
+axis is the innermost grid dimension, so the output block is revisited
+(accumulated in place) without round-tripping HBM between K steps.
+
+On this CPU testbed the kernel is lowered with ``interpret=True`` (real
+TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot
+execute); correctness is validated against ``ref.matmul_ref`` and the
+VMEM/MXU characteristics are reported analytically by
+``vmem_footprint_bytes`` / ``mxu_utilization_estimate`` (DESIGN.md
+§Perf, EXPERIMENTS.md §Perf-L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the MXU's 128×128 systolic array; the
+# (128, 128, 128) choice keeps the A, B and f32 accumulator tiles within
+# a small slice of the ~16 MiB/core VMEM (see vmem_footprint_bytes).
+TM = 128
+TN = 128
+TK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: O[i,j] (+)= A[i,k] @ B[k,j].
+
+    The output block is the accumulator: zeroed at k == 0, accumulated
+    across the K grid axis (the block index map revisits the same (i, j)
+    output tile for every k, which Pallas keeps resident).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction with f32 accumulation.
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul(a, b, *, tm=TM, tn=TN, tk=TK):
+    """C = A @ B via the Pallas kernel (interpret mode on CPU).
+
+    Shapes must tile evenly: M % tm == N % tn == K % tk == 0. The AOT
+    artifact is compiled for the fixed leaf-tile shape the rust D&C
+    runtime dispatches (python never runs at serve time).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % tm == 0 and n % tn == 0 and k % tk == 0, (
+        f"shape ({m},{k})x({k2},{n}) must tile by ({tm},{tn},{tk})"
+    )
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_acc(a, b, c, *, tm=TM, tn=TN, tk=TK):
+    """C += A @ B — the D&C leaf contract used by the rust runtime."""
+    return c + matmul(a, b, tm=tm, tn=tn, tk=tk)
+
+
+def vmem_footprint_bytes(tm=TM, tn=TN, tk=TK, dtype_bytes=4):
+    """Per-step VMEM residency: A tile + B tile + f32 output tile.
+    Real-TPU double buffering of the input streams doubles the input
+    term; both figures are reported in EXPERIMENTS.md §Perf-L1."""
+    single = (tm * tk + tk * tn) * dtype_bytes + tm * tn * 4
+    double_buffered = 2 * (tm * tk + tk * tn) * dtype_bytes + tm * tn * 4
+    return {"single": single, "double_buffered": double_buffered}
+
+
+def mxu_utilization_estimate(tm=TM, tn=TN, tk=TK):
+    """Fraction of MXU issue slots doing useful work per grid step: a
+    (tm, tn, tk) contraction issues ceil(t/128) passes per axis; tiles
+    that are exact multiples of 128 waste none of them."""
+
+    def axis_eff(t):
+        passes = -(-t // 128)  # ceil
+        return t / (passes * 128)
+
+    return axis_eff(tm) * axis_eff(tn) * axis_eff(tk)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the pytest suite checks every
+kernel against (`assert_allclose`). They are deliberately written in the
+most obvious jnp style — no tiling, no pallas — so a mismatch always
+implicates the kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """C = A @ B with f32 accumulation (matches the kernel's MXU-style
+    accumulate-in-f32 contract)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_acc_ref(a, b, c):
+    """C += A @ B (the D&C leaf contract: accumulate into C)."""
+    return c + jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def integrand_ref(x):
+    """The paper benchmark's integrand f(x) = (x² + 1)·x."""
+    return (x * x + 1.0) * x
+
+
+def quad_eval_ref(lo, hi, n):
+    """Composite trapezoid evaluation of ∫ f over [lo, hi] with n panels.
+
+    Returns the trapezoid sum; the rust side drives the adaptive
+    refinement, the kernel evaluates panels in bulk.
+    """
+    xs = lo + (hi - lo) * jnp.arange(n + 1, dtype=jnp.float32) / n
+    fx = integrand_ref(xs)
+    h = (hi - lo) / n
+    return h * (jnp.sum(fx) - 0.5 * (fx[0] + fx[-1]))

@@ -1,0 +1,44 @@
+"""L2: the JAX-level leaf computations the rust coordinator dispatches.
+
+This is the build-time model layer: jitted functions calling the L1
+Pallas kernels, lowered once by `aot.py` to HLO text. Python never runs
+on the rust hot path — the rust D&C scheduler calls the *compiled*
+artifacts through PJRT.
+
+Exposed leaves:
+
+* ``matmul_leaf`` — C = A·B on the fixed leaf-tile shape the rust D&C
+  matmul bottoms out at (`LEAF_DIM`²). The rust side accumulates, so
+  the artifact computes the product only.
+* ``quad_leaf`` — composite trapezoid sum over a panel interval (the
+  integrate benchmark's bulk leaf evaluation).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import integrate_kernel, matmul_kernel
+
+# The rust D&C matmul dispatches PJRT leaves of this edge length. Must
+# be a multiple of the kernel tiles (128): 256 gives each leaf 2×2×2
+# kernel grid steps — large enough to amortize the PJRT call, small
+# enough that the D&C recursion above it still exposes parallelism.
+LEAF_DIM = 256
+
+# Panels per quadrature leaf artifact.
+QUAD_PANELS = 4096
+
+
+def matmul_leaf(a, b):
+    """C = A @ B on a LEAF_DIM² tile (f32), via the Pallas kernel."""
+    return (matmul_kernel.matmul(a, b),)
+
+
+def quad_leaf(lo, hi):
+    """Trapezoid sum of the benchmark integrand over [lo, hi] with
+    QUAD_PANELS panels, via the Pallas kernel."""
+    return (integrate_kernel.quad_eval(lo, hi, n=QUAD_PANELS),)
+
+
+def matmul_leaf_ref(a, b):
+    """Oracle for matmul_leaf (pure jnp)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,63 @@
+"""AOT path: lowering produces parseable HLO text with the expected
+entry signatures, and the lowered computation still matches the oracle
+when re-executed through XLA (the same numerics the rust runtime sees)."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_matmul_leaf_hlo_text():
+    text = aot.to_hlo_text(aot.lower_matmul_leaf())
+    assert "HloModule" in text
+    assert f"f32[{model.LEAF_DIM},{model.LEAF_DIM}]" in text
+    # return_tuple=True → tuple root.
+    assert "ENTRY" in text
+
+
+def test_quad_leaf_hlo_text():
+    text = aot.to_hlo_text(aot.lower_quad_leaf())
+    assert "HloModule" in text
+    assert "f32[]" in text
+
+
+def test_matmul_leaf_numerics_via_compiled():
+    """Compile the lowered module (the exact computation the artifact
+    contains) and compare against the oracle."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((model.LEAF_DIM, model.LEAF_DIM)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((model.LEAF_DIM, model.LEAF_DIM)), jnp.float32)
+    compiled = jax.jit(model.matmul_leaf).lower(a, b).compile()
+    (got,) = compiled(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_quad_leaf_numerics_via_compiled():
+    compiled = jax.jit(model.quad_leaf).lower(
+        jnp.float32(0.0), jnp.float32(1.0)
+    ).compile()
+    (got,) = compiled(jnp.float32(0.0), jnp.float32(3.0))
+    want = ref.quad_eval_ref(0.0, 3.0, model.QUAD_PANELS)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_artifact_writer(tmp_path):
+    """aot.main writes all artifacts + manifest."""
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    for name in aot.ARTIFACTS:
+        p = tmp_path / f"{name}.hlo.txt"
+        assert p.exists() and p.stat().st_size > 0, name
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "matmul_leaf" in manifest and "quad_leaf" in manifest

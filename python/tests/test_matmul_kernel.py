@@ -1,0 +1,113 @@
+"""Pallas matmul kernel vs the pure-jnp oracle — the core L1
+correctness signal (kernel == ref across shapes, dtypes and tile
+configurations)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_kernel, ref
+
+
+def rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# Shape sweep (hypothesis-style parametrization: the grid covers single-
+# and multi-step grids on every axis, square and skewed).
+SHAPES = [
+    (128, 128, 128),
+    (256, 128, 128),
+    (128, 256, 128),
+    (128, 128, 256),
+    (256, 256, 256),
+    (384, 128, 256),
+    (128, 384, 384),
+]
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_matches_ref(m, n, k):
+    a = rand((m, k), seed=m + 3 * n + 7 * k)
+    b = rand((k, n), seed=m + 5 * n + 11 * k)
+    got = matmul_kernel.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("tm,tn,tk", [(128, 128, 128), (128, 256, 128), (256, 256, 128)])
+def test_tile_config_invariance(tm, tn, tk):
+    """The result must not depend on the tiling."""
+    m, n, k = 256, 256, 256
+    a = rand((m, k), seed=1)
+    b = rand((k, n), seed=2)
+    base = matmul_kernel.matmul(a, b)
+    tiled = matmul_kernel.matmul(a, b, tm=tm, tn=tn, tk=tk)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(tiled), rtol=1e-6)
+
+
+def test_acc_contract():
+    """matmul_acc implements C += A·B."""
+    a = rand((128, 128), seed=3)
+    b = rand((128, 128), seed=4)
+    c = rand((128, 128), seed=5)
+    got = matmul_kernel.matmul_acc(a, b, c)
+    want = ref.matmul_acc_ref(a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_rejects_untiled_shapes():
+    a = jnp.zeros((100, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul_kernel.matmul(a, b)
+
+
+def test_identity_and_zero():
+    """Structured inputs: A·I = A, A·0 = 0."""
+    a = rand((128, 128), seed=6)
+    eye = jnp.eye(128, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul_kernel.matmul(a, eye)), np.asarray(a), rtol=1e-6
+    )
+    zero = jnp.zeros((128, 128), jnp.float32)
+    np.testing.assert_allclose(np.asarray(matmul_kernel.matmul(a, zero)), 0.0)
+
+
+def test_f32_accumulation_of_bf16_inputs():
+    """bf16 inputs accumulate in f32 (the MXU contract)."""
+    a = rand((128, 256), seed=7).astype(jnp.bfloat16)
+    b = rand((256, 128), seed=8).astype(jnp.bfloat16)
+    got = matmul_kernel.matmul(a, b)
+    assert got.dtype == jnp.float32
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_vmem_footprint_within_budget():
+    """DESIGN.md §Perf-L1: the default tiling must fit VMEM (~16 MiB)
+    with double buffering."""
+    fp = matmul_kernel.vmem_footprint_bytes()
+    assert fp["double_buffered"] < 16 * 1024 * 1024
+    # And the MXU estimate for the default tiles is exact.
+    assert matmul_kernel.mxu_utilization_estimate() == 1.0
+
+
+def test_mxu_estimate_penalizes_ragged_tiles():
+    full = matmul_kernel.mxu_utilization_estimate(128, 128, 128)
+    ragged = matmul_kernel.mxu_utilization_estimate(100, 128, 128)
+    assert ragged < full
+
+
+def test_leaf_dim_compatible():
+    """The L2 leaf shape must tile by the kernel defaults."""
+    from compile import model
+
+    assert model.LEAF_DIM % matmul_kernel.TM == 0
+    assert model.LEAF_DIM % matmul_kernel.TN == 0
+    assert model.LEAF_DIM % matmul_kernel.TK == 0

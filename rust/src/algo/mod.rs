@@ -1,0 +1,22 @@
+//! Higher-level parallel algorithms built on the fork-join runtime —
+//! the "user-facing" layer a framework adopter reaches for before
+//! writing custom coroutines.
+//!
+//! All algorithms are divide-and-conquer coroutines over index ranges:
+//! fork the left half, call the right, join — so they inherit the
+//! runtime's time bound (Eq. 2) and the segmented-stack memory bound
+//! (Theorem 2) with `T_∞ = O(log n)` spans.
+//!
+//! ```
+//! use rustfork::rt::Pool;
+//! use rustfork::algo;
+//!
+//! let pool = Pool::with_workers(2);
+//! let data: Vec<u64> = (1..=1000).collect();
+//! let sum = algo::map_reduce(&pool, &data, 64, |&x| x, |a, b| a + b, 0);
+//! assert_eq!(sum, 500_500);
+//! ```
+
+mod map_reduce;
+
+pub use map_reduce::{for_each, map_collect, map_reduce};

@@ -1,0 +1,7 @@
+//! Statistics and the Eq. (17) power-law fit for Table II.
+
+pub mod fit;
+pub mod stats;
+
+pub use fit::{fit_power_law, PowerLawFit};
+pub use stats::{mean, median, stddev};

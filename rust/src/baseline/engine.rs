@@ -1,0 +1,377 @@
+//! The shared execution engine behind the three baseline runtimes.
+//!
+//! One engine, three [`Policy`] flavours (see the module docs of
+//! [`crate::baseline`]). The engine executes a [`BaselineJob`] DAG with
+//! **child stealing**: at a split, children are pushed onto the worker's
+//! queue (except the last, which runs inline, depth-first) and the
+//! parent's join state becomes a heap-allocated [`Pending`] node holding
+//! the result slots and the combiner — the memory-per-outstanding-child
+//! behaviour that separates these frameworks from continuation stealing
+//! in Fig. 7 / Table II.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::deque::{Deque, Steal};
+use crate::sync::XorShift64;
+
+use super::{BaselineJob, JobResult};
+
+/// Baseline scheduling flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// TBB model: lock-free child stealing, ref-counted join nodes.
+    ChildStealing,
+    /// libomp model: lock-guarded stealing, heavy task descriptors,
+    /// local-queue throttling.
+    GlobalQueue,
+    /// taskflow model: child stealing + full task-graph retention.
+    TaskCaching,
+}
+
+impl Policy {
+    /// Extra descriptor bytes allocated per task, modelling each
+    /// framework's task-object footprint (TBB `tbb::task` ≈ 2 cache
+    /// lines; libomp's `kmp_taskdata_t` ≈ 4+; taskflow's `tf::Node`
+    /// with name/edges vectors ≈ 6).
+    fn descriptor_bytes(self) -> usize {
+        match self {
+            Policy::ChildStealing => 128,
+            Policy::GlobalQueue => 256,
+            Policy::TaskCaching => 384,
+        }
+    }
+
+    /// Local-queue length beyond which new children are executed inline
+    /// (libomp's task throttling).
+    fn throttle(self) -> Option<usize> {
+        match self {
+            Policy::GlobalQueue => Some(256),
+            _ => None,
+        }
+    }
+
+    /// Whether completed task nodes are retained until teardown.
+    fn retains(self) -> bool {
+        matches!(self, Policy::TaskCaching)
+    }
+
+    /// Whether steals must take the global lock (libomp).
+    fn locked_steals(self) -> bool {
+        matches!(self, Policy::GlobalQueue)
+    }
+}
+
+/// Join node: result slots + combiner + where the combined value goes.
+struct Pending<J: BaselineJob> {
+    remaining: AtomicUsize,
+    outs: Vec<std::cell::UnsafeCell<Option<J::Out>>>,
+    combine: std::cell::UnsafeCell<
+        Option<Box<dyn FnOnce(Vec<J::Out>) -> J::Out + Send>>,
+    >,
+    dest: Dest<J>,
+    /// Framework descriptor ballast (see `Policy::descriptor_bytes`).
+    _descriptor: Box<[u8]>,
+}
+
+// Slots are written by exactly one child each and read only by the last
+// completer (fetch_sub AcqRel orders them).
+unsafe impl<J: BaselineJob> Sync for Pending<J> {}
+unsafe impl<J: BaselineJob> Send for Pending<J> {}
+
+/// Where a completed value is delivered.
+enum Dest<J: BaselineJob> {
+    /// Slot `i` of a pending join node.
+    Slot(Arc<Pending<J>>, usize),
+    /// The root result cell.
+    Root,
+}
+
+impl<J: BaselineJob> Clone for Dest<J> {
+    fn clone(&self) -> Self {
+        match self {
+            Dest::Slot(p, i) => Dest::Slot(Arc::clone(p), *i),
+            Dest::Root => Dest::Root,
+        }
+    }
+}
+
+/// A schedulable task: a job plus its destination.
+struct WorkItem<J: BaselineJob> {
+    job: J,
+    dest: Dest<J>,
+    _descriptor: Box<[u8]>,
+}
+
+/// Raw boxed work-item pointer for the lock-free deques.
+struct ItemPtr<J: BaselineJob>(*mut WorkItem<J>);
+
+impl<J: BaselineJob> Clone for ItemPtr<J> {
+    fn clone(&self) -> Self {
+        ItemPtr(self.0)
+    }
+}
+impl<J: BaselineJob> Copy for ItemPtr<J> {}
+unsafe impl<J: BaselineJob> Send for ItemPtr<J> {}
+unsafe impl<J: BaselineJob> Sync for ItemPtr<J> {}
+
+/// Engine-wide shared state.
+struct Ctx<J: BaselineJob> {
+    policy: Policy,
+    deques: Vec<Deque<ItemPtr<J>>>,
+    steal_lock: Mutex<()>,
+    /// Retained nodes (taskflow model) — freed only at teardown.
+    arena: Mutex<Vec<Arc<Pending<J>>>>,
+    retained_items: Mutex<Vec<Box<[u8]>>>,
+    root_out: Mutex<Option<J::Out>>,
+    done: AtomicBool,
+    done_cv: Condvar,
+    done_mx: Mutex<bool>,
+}
+
+unsafe impl<J: BaselineJob> Sync for Ctx<J> {}
+unsafe impl<J: BaselineJob> Send for Ctx<J> {}
+
+impl<J: BaselineJob> Ctx<J> {
+    /// Deliver `value` to `dest`, cascading completed joins iteratively
+    /// (binomial UTS trees are thousands of levels deep — recursion
+    /// would overflow the OS stack).
+    fn complete(&self, mut dest: Dest<J>, mut value: J::Out) {
+        loop {
+            match dest {
+                Dest::Root => {
+                    *self.root_out.lock().unwrap() = Some(value);
+                    self.done.store(true, Ordering::Release);
+                    let mut g = self.done_mx.lock().unwrap();
+                    *g = true;
+                    drop(g);
+                    self.done_cv.notify_all();
+                    return;
+                }
+                Dest::Slot(pending, i) => {
+                    unsafe { *pending.outs[i].get() = Some(value) };
+                    if pending.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+                        return;
+                    }
+                    // Last child: combine and cascade to the parent.
+                    let outs: Vec<J::Out> = pending
+                        .outs
+                        .iter()
+                        .map(|c| unsafe { (*c.get()).take().expect("missing child") })
+                        .collect();
+                    let combine = unsafe {
+                        (*pending.combine.get()).take().expect("combined twice")
+                    };
+                    value = combine(outs);
+                    dest = pending.dest.clone();
+                    if self.policy.retains() {
+                        self.arena.lock().unwrap().push(Arc::clone(&pending));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run `root` on `workers` threads under `policy`; returns the result.
+pub fn run_job<J: BaselineJob>(policy: Policy, workers: usize, root: J) -> J::Out {
+    let workers = workers.max(1);
+    let ctx = Arc::new(Ctx::<J> {
+        policy,
+        deques: (0..workers).map(|_| Deque::new()).collect(),
+        steal_lock: Mutex::new(()),
+        arena: Mutex::new(Vec::new()),
+        retained_items: Mutex::new(Vec::new()),
+        root_out: Mutex::new(None),
+        done: AtomicBool::new(false),
+        done_cv: Condvar::new(),
+        done_mx: Mutex::new(false),
+    });
+
+    // Seed worker 0 with the root task.
+    let root_item = Box::into_raw(Box::new(WorkItem {
+        job: root,
+        dest: Dest::Root,
+        _descriptor: vec![0u8; policy.descriptor_bytes()].into_boxed_slice(),
+    }));
+    ctx.deques[0].push(ItemPtr(root_item));
+
+    let mut handles = Vec::with_capacity(workers);
+    for id in 0..workers {
+        let ctx = Arc::clone(&ctx);
+        handles.push(std::thread::spawn(move || worker_loop(id, ctx)));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let out = ctx.root_out.lock().unwrap().take().expect("root did not complete");
+    // Teardown frees the retained arena here (taskflow's destructor).
+    out
+}
+
+fn worker_loop<J: BaselineJob>(id: usize, ctx: Arc<Ctx<J>>) {
+    let mut rng = XorShift64::new(0xB105 + id as u64);
+    let workers = ctx.deques.len();
+    let mut idle_spins = 0u32;
+    'outer: loop {
+        // 1. Local work (LIFO).
+        let mut item = ctx.deques[id].pop();
+        // 2. Steal (FIFO from a random victim).
+        if item.is_none() {
+            if ctx.done.load(Ordering::Acquire) {
+                break 'outer;
+            }
+            if workers > 1 {
+                let victim = {
+                    let mut v = rng.next_below(workers);
+                    if v == id {
+                        v = (v + 1) % workers;
+                    }
+                    v
+                };
+                let _guard;
+                if ctx.policy.locked_steals() {
+                    _guard = ctx.steal_lock.lock().unwrap();
+                }
+                if let Steal::Success(p) = ctx.deques[victim].steal() {
+                    item = Some(p);
+                }
+            }
+        }
+        let Some(ItemPtr(raw)) = item else {
+            idle_spins += 1;
+            if idle_spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+            continue;
+        };
+        idle_spins = 0;
+        let mut work = *unsafe { Box::from_raw(raw) };
+        // Depth-first execute: run the job; at a split, push all children
+        // but the last, loop on the last inline.
+        loop {
+            if ctx.policy.retains() {
+                // taskflow retains the task descriptor, too.
+                let d = std::mem::take(&mut work._descriptor);
+                ctx.retained_items.lock().unwrap().push(d);
+            }
+            match work.job.run() {
+                JobResult::Done(v) => {
+                    ctx.complete(work.dest, v);
+                    break;
+                }
+                JobResult::Split(mut children, combine) => {
+                    debug_assert!(!children.is_empty());
+                    let n = children.len();
+                    let pending = Arc::new(Pending {
+                        remaining: AtomicUsize::new(n),
+                        outs: (0..n)
+                            .map(|_| std::cell::UnsafeCell::new(None))
+                            .collect(),
+                        combine: std::cell::UnsafeCell::new(Some(combine)),
+                        dest: work.dest,
+                        _descriptor: vec![0u8; ctx.policy.descriptor_bytes()]
+                            .into_boxed_slice(),
+                    });
+                    let last = children.pop().unwrap();
+                    let throttle = ctx.policy.throttle();
+                    let mut inline_queue: Vec<WorkItem<J>> = Vec::new();
+                    for (i, c) in children.into_iter().enumerate() {
+                        let item = WorkItem {
+                            job: c,
+                            dest: Dest::Slot(Arc::clone(&pending), i),
+                            _descriptor: vec![0u8; ctx.policy.descriptor_bytes()]
+                                .into_boxed_slice(),
+                        };
+                        let over = throttle
+                            .map(|t| ctx.deques[id].len() >= t)
+                            .unwrap_or(false);
+                        if over {
+                            // libomp task throttling: execute serially.
+                            inline_queue.push(item);
+                        } else {
+                            ctx.deques[id].push(ItemPtr(Box::into_raw(Box::new(item))));
+                        }
+                    }
+                    // Serialize throttled children right here.
+                    for it in inline_queue {
+                        execute_serial(&ctx, it);
+                    }
+                    work = WorkItem {
+                        job: last,
+                        dest: Dest::Slot(Arc::clone(&pending), n - 1),
+                        _descriptor: vec![0u8; ctx.policy.descriptor_bytes()]
+                            .into_boxed_slice(),
+                    };
+                }
+            }
+        }
+        if ctx.done.load(Ordering::Acquire) {
+            // Drain our own queue before exiting so no boxed items leak.
+            while let Some(ItemPtr(p)) = ctx.deques[id].pop() {
+                drop(unsafe { Box::from_raw(p) });
+            }
+            break;
+        }
+    }
+}
+
+/// Fully serial execution of a throttled item (explicit stack, no
+/// scheduling).
+fn execute_serial<J: BaselineJob>(ctx: &Ctx<J>, item: WorkItem<J>) {
+    let mut stack = vec![item];
+    while let Some(work) = stack.pop() {
+        match work.job.run() {
+            JobResult::Done(v) => ctx.complete(work.dest, v),
+            JobResult::Split(children, combine) => {
+                let n = children.len();
+                let pending = Arc::new(Pending {
+                    remaining: AtomicUsize::new(n),
+                    outs: (0..n).map(|_| std::cell::UnsafeCell::new(None)).collect(),
+                    combine: std::cell::UnsafeCell::new(Some(combine)),
+                    dest: work.dest,
+                    _descriptor: vec![0u8; ctx.policy.descriptor_bytes()]
+                        .into_boxed_slice(),
+                });
+                for (i, c) in children.into_iter().enumerate() {
+                    stack.push(WorkItem {
+                        job: c,
+                        dest: Dest::Slot(Arc::clone(&pending), i),
+                        _descriptor: vec![0u8; ctx.policy.descriptor_bytes()]
+                            .into_boxed_slice(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::jobs::FibJob;
+    use crate::workloads::fib::fib_exact;
+
+    #[test]
+    fn child_stealing_fib() {
+        for p in [1, 2, 4] {
+            assert_eq!(run_job(Policy::ChildStealing, p, FibJob(20)), fib_exact(20));
+        }
+    }
+
+    #[test]
+    fn global_queue_fib() {
+        for p in [1, 3] {
+            assert_eq!(run_job(Policy::GlobalQueue, p, FibJob(18)), fib_exact(18));
+        }
+    }
+
+    #[test]
+    fn task_caching_fib() {
+        for p in [1, 2] {
+            assert_eq!(run_job(Policy::TaskCaching, p, FibJob(18)), fib_exact(18));
+        }
+    }
+}

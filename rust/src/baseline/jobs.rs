@@ -1,0 +1,322 @@
+//! [`BaselineJob`] encodings of the paper's benchmark workloads, so the
+//! comparator runtimes execute exactly the same computations as the
+//! continuation-stealing coroutines in [`crate::workloads`].
+
+use super::{BaselineJob, JobResult};
+use crate::workloads::integrate::f as integrand;
+use crate::workloads::matmul::{GemmLeaf, BASE, SCALAR_LEAF};
+use crate::workloads::uts::{Node, UtsConfig};
+
+/// Fibonacci.
+pub struct FibJob(pub u64);
+
+impl BaselineJob for FibJob {
+    type Out = u64;
+
+    fn run(self) -> JobResult<Self> {
+        let n = self.0;
+        if n < 2 {
+            JobResult::Done(n)
+        } else {
+            JobResult::Split(
+                vec![FibJob(n - 1), FibJob(n - 2)],
+                Box::new(|v| v[0] + v[1]),
+            )
+        }
+    }
+}
+
+/// Adaptive integration over `[x, x+dx]`.
+pub struct IntegrateJob {
+    pub x: f64,
+    pub dx: f64,
+    pub fx: f64,
+    pub fdx: f64,
+    pub eps: f64,
+}
+
+impl IntegrateJob {
+    /// ∫₀ⁿ with tolerance ε (paper parameters).
+    pub fn root(n: f64, eps: f64) -> Self {
+        IntegrateJob { x: 0.0, dx: n, fx: integrand(0.0), fdx: integrand(n), eps }
+    }
+}
+
+impl BaselineJob for IntegrateJob {
+    type Out = f64;
+
+    fn run(self) -> JobResult<Self> {
+        let dx_half = self.dx * 0.5;
+        let mid = self.x + dx_half;
+        let fmid = integrand(mid);
+        let area_whole = (self.fx + self.fdx) * self.dx * 0.5;
+        let area_left = (self.fx + fmid) * dx_half * 0.5;
+        let area_right = (fmid + self.fdx) * dx_half * 0.5;
+        let refined = area_left + area_right;
+        if (refined - area_whole).abs() <= self.eps {
+            JobResult::Done(refined)
+        } else {
+            JobResult::Split(
+                vec![
+                    IntegrateJob {
+                        x: self.x,
+                        dx: dx_half,
+                        fx: self.fx,
+                        fdx: fmid,
+                        eps: self.eps,
+                    },
+                    IntegrateJob {
+                        x: mid,
+                        dx: dx_half,
+                        fx: fmid,
+                        fdx: self.fdx,
+                        eps: self.eps,
+                    },
+                ],
+                Box::new(|v| v[0] + v[1]),
+            )
+        }
+    }
+}
+
+/// N-queens at a partial placement.
+pub struct NqueensJob {
+    pub n: u8,
+    pub cols: [u8; crate::workloads::nqueens::MAX_N],
+    pub depth: u8,
+}
+
+impl NqueensJob {
+    /// Root job for an n×n board.
+    pub fn new(n: usize) -> Self {
+        NqueensJob { n: n as u8, cols: [0; crate::workloads::nqueens::MAX_N], depth: 0 }
+    }
+
+    fn safe(&self, col: u8) -> bool {
+        for i in 0..self.depth as usize {
+            let dr = (self.depth as usize - i) as i32;
+            let dc = col as i32 - self.cols[i] as i32;
+            if dc == 0 || dc == dr || dc == -dr {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl BaselineJob for NqueensJob {
+    type Out = u64;
+
+    fn run(self) -> JobResult<Self> {
+        if self.depth == self.n {
+            return JobResult::Done(1);
+        }
+        let mut children = Vec::new();
+        for col in 0..self.n {
+            if self.safe(col) {
+                let mut cols = self.cols;
+                cols[self.depth as usize] = col;
+                children.push(NqueensJob { n: self.n, cols, depth: self.depth + 1 });
+            }
+        }
+        if children.is_empty() {
+            JobResult::Done(0)
+        } else {
+            JobResult::Split(children, Box::new(|v| v.iter().sum()))
+        }
+    }
+}
+
+/// D&C matrix multiplication tile (same recursion as
+/// [`crate::workloads::matmul::Matmul`]). k-splits are expressed as a
+/// 1-child chain (first half) whose combiner enqueues nothing — instead
+/// k-splits run both halves serially inside `run`, preserving the
+/// deterministic summation order.
+pub struct MatmulJob {
+    pub a: *const f32,
+    pub b: *const f32,
+    pub c: *mut f32,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub lda: usize,
+    pub ldb: usize,
+    pub ldc: usize,
+}
+
+unsafe impl Send for MatmulJob {}
+
+impl MatmulJob {
+    /// Square-matrix root job.
+    pub fn square(a: &[f32], b: &[f32], c: &mut [f32], n: usize) -> Self {
+        MatmulJob {
+            a: a.as_ptr(),
+            b: b.as_ptr(),
+            c: c.as_mut_ptr(),
+            m: n,
+            n,
+            k: n,
+            lda: n,
+            ldb: n,
+            ldc: n,
+        }
+    }
+
+    fn sub(&self, a: *const f32, b: *const f32, c: *mut f32, m: usize, n: usize, k: usize) -> Self {
+        MatmulJob { a, b, c, m, n, k, lda: self.lda, ldb: self.ldb, ldc: self.ldc }
+    }
+}
+
+impl BaselineJob for MatmulJob {
+    type Out = ();
+
+    fn run(self) -> JobResult<Self> {
+        let (m, n, k) = (self.m, self.n, self.k);
+        if m <= BASE && n <= BASE && k <= BASE {
+            unsafe {
+                SCALAR_LEAF.gemm(
+                    self.a, self.b, self.c, m, n, k, self.lda, self.ldb, self.ldc,
+                );
+            }
+            return JobResult::Done(());
+        }
+        if m >= n && m >= k {
+            let mh = m / 2;
+            let top = self.sub(self.a, self.b, self.c, mh, n, k);
+            let bot = unsafe {
+                self.sub(
+                    self.a.add(mh * self.lda),
+                    self.b,
+                    self.c.add(mh * self.ldc),
+                    m - mh,
+                    n,
+                    k,
+                )
+            };
+            JobResult::Split(vec![top, bot], Box::new(|_| ()))
+        } else if n >= k {
+            let nh = n / 2;
+            let left = self.sub(self.a, self.b, self.c, m, nh, k);
+            let right = unsafe {
+                self.sub(self.a, self.b.add(nh), self.c.add(nh), m, n - nh, k)
+            };
+            JobResult::Split(vec![left, right], Box::new(|_| ()))
+        } else {
+            // k-split: both halves write the same C — sequential chain:
+            // run the first half eagerly (recursing through `run_job`'s
+            // inline loop would reorder); emit the second as the child.
+            let kh = k / 2;
+            let first = self.sub(self.a, self.b, self.c, m, n, kh);
+            run_serial_gemm(first);
+            let second = unsafe {
+                self.sub(self.a.add(kh), self.b.add(kh * self.ldb), self.c, m, n, k - kh)
+            };
+            JobResult::Split(vec![second], Box::new(|_| ()))
+        }
+    }
+}
+
+/// Serial k-half execution (keeps the FP summation order identical to
+/// the serial projection).
+fn run_serial_gemm(job: MatmulJob) {
+    let mut stack = vec![job];
+    while let Some(j) = stack.pop() {
+        match j.run() {
+            JobResult::Done(()) => {}
+            JobResult::Split(children, _) => stack.extend(children),
+        }
+    }
+}
+
+/// UTS traversal rooted at a node.
+pub struct UtsJob {
+    pub cfg: UtsConfig,
+    pub node: Node,
+}
+
+impl UtsJob {
+    /// Job for the configured tree's root.
+    pub fn new(cfg: UtsConfig) -> Self {
+        UtsJob { node: cfg.root(), cfg }
+    }
+}
+
+impl BaselineJob for UtsJob {
+    type Out = u64;
+
+    fn run(self) -> JobResult<Self> {
+        let n = self.cfg.num_children(&self.node);
+        if n == 0 {
+            return JobResult::Done(1);
+        }
+        let children: Vec<UtsJob> = (0..n)
+            .map(|i| UtsJob { cfg: self.cfg, node: self.node.child(i) })
+            .collect();
+        JobResult::Split(children, Box::new(|v| 1 + v.iter().sum::<u64>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{run_job, Policy};
+    use crate::workloads::fib::fib_exact;
+    use crate::workloads::integrate::integral_serial;
+    use crate::workloads::matmul::{matmul_naive, matmul_serial};
+    use crate::workloads::nqueens::nqueens_exact;
+    use crate::workloads::uts::uts_serial;
+
+    #[test]
+    fn all_policies_fib() {
+        for policy in
+            [Policy::ChildStealing, Policy::GlobalQueue, Policy::TaskCaching]
+        {
+            assert_eq!(run_job(policy, 2, FibJob(16)), fib_exact(16), "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn integrate_matches_serial() {
+        let (n, eps) = (300.0, 1e-6);
+        let expect = integral_serial(n, eps);
+        for policy in [Policy::ChildStealing, Policy::GlobalQueue] {
+            let got = run_job(policy, 3, IntegrateJob::root(n, eps));
+            assert_eq!(got, expect, "{policy:?} must match serial bitwise");
+        }
+    }
+
+    #[test]
+    fn nqueens_matches_known() {
+        let got = run_job(Policy::ChildStealing, 4, NqueensJob::new(8));
+        assert_eq!(Some(got), nqueens_exact(8));
+    }
+
+    #[test]
+    fn matmul_matches_serial() {
+        let n = 96;
+        let mut rng = crate::sync::XorShift64::new(11);
+        let a: Vec<f32> = (0..n * n).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let mut c_ser = vec![0.0f32; n * n];
+        matmul_serial(&a, &b, &mut c_ser, n, n, n, n, n, n);
+        let mut c_par = vec![0.0f32; n * n];
+        run_job(Policy::ChildStealing, 4, MatmulJob::square(&a, &b, &mut c_par, n));
+        assert_eq!(c_par, c_ser, "baseline matmul must match serial bitwise");
+        // And against the naive reference within tolerance.
+        let naive = matmul_naive(&a, &b, n, n, n);
+        for (x, y) in c_par.iter().zip(&naive) {
+            assert!((x - y).abs() <= 1e-3);
+        }
+    }
+
+    #[test]
+    fn uts_matches_serial() {
+        let cfg = UtsConfig::geometric(3.5, 7, 19);
+        let expect = uts_serial(&cfg).nodes;
+        for policy in
+            [Policy::ChildStealing, Policy::GlobalQueue, Policy::TaskCaching]
+        {
+            assert_eq!(run_job(policy, 4, UtsJob::new(cfg)), expect, "{policy:?}");
+        }
+    }
+}

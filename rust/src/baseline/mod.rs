@@ -1,0 +1,53 @@
+//! Baseline comparator runtimes (paper §IV).
+//!
+//! The paper compares libfork against Intel TBB, openMP (libomp) and
+//! taskflow. Those exact libraries are C++; we reproduce their *salient
+//! scheduling strategies* as Rust runtimes over a shared
+//! [`BaselineJob`] divide-and-combine interface, so every benchmark
+//! workload runs unmodified on every comparator (see DESIGN.md
+//! §Substitutions):
+//!
+//! * [`Policy::ChildStealing`] (“TBB”) — **child stealing** over
+//!   per-worker Chase-Lev deques: children are pushed, the parent's join
+//!   state is a heap-allocated, reference-counted continuation node.
+//!   This is the strategy that breaks the paper's Eq. (3) memory bound
+//!   (outstanding children are unbounded), giving Table II exponents
+//!   slightly above 1.
+//! * [`Policy::GlobalQueue`] (“OpenMP”) — libomp's model: per-worker
+//!   deques but lock-guarded stealing, a heavier per-task descriptor,
+//!   and a task-throttling cutoff that serializes when the local queue
+//!   overflows.
+//! * [`Policy::TaskCaching`] (“Taskflow”) — taskflow's graph-ownership
+//!   model: every task node (plus name/edge metadata) is **retained
+//!   until teardown**, so memory grows with the *total* number of tasks
+//!   (Table II exponent ≈ 0) and exhausts memory on the big UTS trees.
+//!
+//! The serial projection ("Serial") is provided directly by each
+//! workload's `*_serial` function.
+
+pub mod engine;
+pub mod jobs;
+
+pub use engine::{run_job, Policy};
+
+/// A divide-and-combine job: the baseline-runtime encoding of an SFJ
+/// task. `run` either completes (leaf) or splits into subjobs plus a
+/// combiner applied to their results.
+pub trait BaselineJob: Send + Sized + 'static {
+    /// Result type.
+    type Out: Send + 'static;
+
+    /// Execute until the first fork point.
+    fn run(self) -> JobResult<Self>;
+}
+
+/// Outcome of running a job to its first fork point.
+pub enum JobResult<J: BaselineJob> {
+    /// Leaf: finished with a value.
+    Done(J::Out),
+    /// Interior: children to schedule + a combiner over their results
+    /// (boxed per interior node — baseline frameworks pay this heap
+    /// traffic by design; libfork's frames replace it with segmented-
+    /// stack slots).
+    Split(Vec<J>, Box<dyn FnOnce(Vec<J::Out>) -> J::Out + Send>),
+}

@@ -1,0 +1,164 @@
+//! Run configuration: CLI / env / defaults.
+//!
+//! The launcher (`repro`) and the benchmark harness share this config
+//! system. Precedence: explicit CLI flags > `RUSTFORK_*` environment
+//! variables > defaults.
+
+use crate::sched::SchedulerKind;
+
+/// Which runtime executes a workload — the reproduction's schedulers or
+/// one of the baseline comparators (paper §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameworkKind {
+    /// Continuation stealing, busy scheduler (this paper).
+    BusyLf,
+    /// Continuation stealing, lazy scheduler (this paper).
+    LazyLf,
+    /// Child stealing with heap task nodes (Intel TBB model).
+    ChildStealing,
+    /// Shared task pool with eager descriptors (libomp model).
+    GlobalQueue,
+    /// Full-DAG retention (taskflow model).
+    TaskCaching,
+    /// Serial projection (no parallelism; the `T_s`/`M_s` reference).
+    Serial,
+}
+
+impl FrameworkKind {
+    /// All comparators, in the paper's figure order.
+    pub const ALL: [FrameworkKind; 6] = [
+        FrameworkKind::LazyLf,
+        FrameworkKind::BusyLf,
+        FrameworkKind::ChildStealing,
+        FrameworkKind::GlobalQueue,
+        FrameworkKind::TaskCaching,
+        FrameworkKind::Serial,
+    ];
+
+    /// Parallel frameworks only (excludes Serial).
+    pub const PARALLEL: [FrameworkKind; 5] = [
+        FrameworkKind::LazyLf,
+        FrameworkKind::BusyLf,
+        FrameworkKind::ChildStealing,
+        FrameworkKind::GlobalQueue,
+        FrameworkKind::TaskCaching,
+    ];
+
+    /// Label matching the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FrameworkKind::BusyLf => "Busy-LF",
+            FrameworkKind::LazyLf => "Lazy-LF",
+            FrameworkKind::ChildStealing => "TBB",
+            FrameworkKind::GlobalQueue => "OpenMP",
+            FrameworkKind::TaskCaching => "Taskflow",
+            FrameworkKind::Serial => "Serial",
+        }
+    }
+
+    /// Parse a CLI name (accepts both paper labels and model names).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "busy" | "busy-lf" => Some(FrameworkKind::BusyLf),
+            "lazy" | "lazy-lf" => Some(FrameworkKind::LazyLf),
+            "tbb" | "child" | "child-stealing" => Some(FrameworkKind::ChildStealing),
+            "openmp" | "omp" | "global-queue" => Some(FrameworkKind::GlobalQueue),
+            "taskflow" | "task-caching" => Some(FrameworkKind::TaskCaching),
+            "serial" => Some(FrameworkKind::Serial),
+            _ => None,
+        }
+    }
+
+    /// The scheduler kind for the two libfork-model frameworks.
+    pub fn scheduler(&self) -> Option<SchedulerKind> {
+        match self {
+            FrameworkKind::BusyLf => Some(SchedulerKind::Busy),
+            FrameworkKind::LazyLf => Some(SchedulerKind::Lazy),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FrameworkKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Worker count P.
+    pub workers: usize,
+    /// Which framework/scheduler.
+    pub framework: FrameworkKind,
+    /// First stacklet capacity (bytes).
+    pub first_stacklet: usize,
+    /// RNG seed (victim selection, workload generation).
+    pub seed: u64,
+    /// Benchmark repetitions.
+    pub repetitions: usize,
+    /// Minimum time per measurement (seconds) à la Google benchmark.
+    pub min_time: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workers: crate::numa::available_cpus(),
+            framework: FrameworkKind::BusyLf,
+            first_stacklet: crate::stack::FIRST_STACKLET,
+            seed: 0x5EED,
+            repetitions: 5,
+            min_time: 0.1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `RUSTFORK_*` environment overrides.
+    pub fn from_env() -> Self {
+        let mut c = Self::default();
+        if let Ok(v) = std::env::var("RUSTFORK_WORKERS") {
+            if let Ok(n) = v.parse() {
+                c.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("RUSTFORK_FRAMEWORK") {
+            if let Some(f) = FrameworkKind::parse(&v) {
+                c.framework = f;
+            }
+        }
+        if let Ok(v) = std::env::var("RUSTFORK_SEED") {
+            if let Ok(s) = v.parse() {
+                c.seed = s;
+            }
+        }
+        if let Ok(v) = std::env::var("RUSTFORK_REPS") {
+            if let Ok(r) = v.parse() {
+                c.repetitions = r;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framework_parse_roundtrip() {
+        for f in FrameworkKind::ALL {
+            assert_eq!(FrameworkKind::parse(f.label()), Some(f));
+        }
+        assert_eq!(FrameworkKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = RunConfig::default();
+        assert!(c.workers >= 1);
+        assert!(c.repetitions >= 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Work-stealing queues (paper §II-C1, §III-D1).
+//!
+//! * [`chase_lev::Deque`] — the per-worker work-stealing queue: the
+//!   owning worker pushes/pops continuations in FILO order at the bottom,
+//!   thieves steal in FIFO order from the top. The implementation follows
+//!   the weak-memory-model-optimized formulation of Lê, Pop, Cohen &
+//!   Zappa Nardelli (PPoPP '13), which the paper adopts.
+//! * [`submission::SubmissionQueue`] — a lock-free multi-producer,
+//!   single-consumer queue, one per worker, replacing a global submission
+//!   queue; also the mechanism behind explicit scheduling (§III-D1).
+
+pub mod chase_lev;
+pub mod submission;
+
+pub use chase_lev::{Deque, Steal};
+pub use submission::SubmissionQueue;

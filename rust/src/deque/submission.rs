@@ -1,0 +1,178 @@
+//! Per-worker submission queues (paper §III-D1).
+//!
+//! Libfork has **no global submission queue**: each worker owns a
+//! lock-free multi-producer single-consumer queue through which external
+//! threads submit root tasks and through which suspended tasks implement
+//! *explicit scheduling* (pinning themselves to a specific worker, e.g.
+//! for MPI rank-confinement).
+//!
+//! The implementation is Vyukov's MPSC queue: producers exchange the tail
+//! pointer (wait-free per producer), the consumer chases `next` links.
+
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+struct Node<T> {
+    next: AtomicPtr<Node<T>>,
+    value: Option<T>,
+}
+
+/// Lock-free MPSC queue. `push` may be called from any thread; `pop`
+/// only from the owning worker.
+pub struct SubmissionQueue<T> {
+    head: AtomicPtr<Node<T>>, // consumer end (stub initially)
+    tail: AtomicPtr<Node<T>>, // producer end
+}
+
+unsafe impl<T: Send> Send for SubmissionQueue<T> {}
+unsafe impl<T: Send> Sync for SubmissionQueue<T> {}
+
+impl<T> SubmissionQueue<T> {
+    /// New empty queue.
+    pub fn new() -> Self {
+        let stub = Box::into_raw(Box::new(Node {
+            next: AtomicPtr::new(ptr::null_mut()),
+            value: None,
+        }));
+        SubmissionQueue { head: AtomicPtr::new(stub), tail: AtomicPtr::new(stub) }
+    }
+
+    /// Producer: enqueue from any thread. Wait-free (single `swap`).
+    pub fn push(&self, value: T) {
+        let node = Box::into_raw(Box::new(Node {
+            next: AtomicPtr::new(ptr::null_mut()),
+            value: Some(value),
+        }));
+        let prev = self.tail.swap(node, Ordering::AcqRel);
+        // Link the previous tail to us. A consumer arriving between the
+        // swap and this store sees a transient "empty" — acceptable: the
+        // scheduler re-polls.
+        unsafe { (*prev).next.store(node, Ordering::Release) };
+    }
+
+    /// Consumer: dequeue in FIFO order. Must only be called by the owner.
+    pub fn pop(&self) -> Option<T> {
+        unsafe {
+            let head = self.head.load(Ordering::Relaxed);
+            let next = (*head).next.load(Ordering::Acquire);
+            if next.is_null() {
+                return None;
+            }
+            // `next` becomes the new stub; its value moves out.
+            let value = (*next).value.take();
+            self.head.store(next, Ordering::Relaxed);
+            drop(Box::from_raw(head));
+            debug_assert!(value.is_some());
+            value
+        }
+    }
+
+    /// True when the consumer observes no pending submissions. Racy by
+    /// nature; used only as a scheduling hint.
+    pub fn is_empty(&self) -> bool {
+        unsafe {
+            let head = self.head.load(Ordering::Relaxed);
+            (*head).next.load(Ordering::Acquire).is_null()
+        }
+    }
+}
+
+impl<T> Default for SubmissionQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Drop for SubmissionQueue<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+        let stub = self.head.load(Ordering::Relaxed);
+        unsafe { drop(Box::from_raw(stub)) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = SubmissionQueue::new();
+        assert!(q.is_empty());
+        for i in 0..100 {
+            q.push(i);
+        }
+        assert!(!q.is_empty());
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drop_with_pending_items() {
+        let q = SubmissionQueue::new();
+        let item = Arc::new(());
+        for _ in 0..10 {
+            q.push(Arc::clone(&item));
+        }
+        drop(q);
+        assert_eq!(Arc::strong_count(&item), 1, "leaked pending submissions");
+    }
+
+    #[test]
+    fn multi_producer_no_loss() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 5000;
+        let q = Arc::new(SubmissionQueue::new());
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    q.push(p * PER + i);
+                }
+            }));
+        }
+        let mut got = Vec::new();
+        while got.len() < PRODUCERS * PER {
+            if let Some(v) = q.pop() {
+                got.push(v);
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), PRODUCERS * PER);
+    }
+
+    #[test]
+    fn per_producer_fifo() {
+        // Elements from a single producer must come out in order.
+        let q = Arc::new(SubmissionQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            for i in 0..10_000u64 {
+                q2.push(i);
+            }
+        });
+        let mut last: Option<u64> = None;
+        let mut seen = 0;
+        while seen < 10_000 {
+            if let Some(v) = q.pop() {
+                if let Some(l) = last {
+                    assert!(v > l, "out of order: {v} after {l}");
+                }
+                last = Some(v);
+                seen += 1;
+            }
+        }
+        h.join().unwrap();
+    }
+}

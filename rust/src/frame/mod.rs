@@ -1,0 +1,258 @@
+//! Task frames and the wait-free **split join counter**.
+//!
+//! Every task (stackless coroutine) is represented at runtime by a
+//! [`FrameHeader`] followed by its typed state (the "coroutine frame" a
+//! C++ compiler would synthesize), allocated on a
+//! [`crate::stack::SegmentedStack`]. The header carries what the paper's
+//! Algorithms 3–5 manipulate:
+//!
+//! * the **parent** link (the cactus-stack edge),
+//! * the **stack** the frame's allocation lives on (needed for the
+//!   stack-ownership transfers in Algorithms 4 and 5),
+//! * the **steal counter** — how many times this frame's continuation was
+//!   stolen in the current fork-join scope (owner-exclusive, non-atomic),
+//! * the **join counter** — the wait-free split counter of nowa
+//!   (Schmaus et al., IPDPS '21) used by both the explicit
+//!   join-awaitable and the implicit join in the final-awaitable.
+//!
+//! ## Split-counter protocol
+//!
+//! The counter starts at 0 for each fork-join scope.
+//!
+//! * A child whose final return fails to pop its parent (the parent's
+//!   continuation was stolen) **signals**: `fetch_add(1)`. If the new
+//!   value is 0 the parent had already arrived and this child is the
+//!   last — the signaller resumes the parent.
+//! * The parent **arrives** at the join expecting `steals` signals:
+//!   `fetch_sub(steals)`. If the new value is 0 all children already
+//!   signalled — the parent continues. Otherwise it suspends; the last
+//!   signal observes 0 and resumes it.
+//!
+//! Each steal of the parent's continuation leaves exactly one child
+//! behind on the victim, and that child's subtree-completion performs
+//! exactly one failed-pop signal, so `signals == steals` — see
+//! `rt::worker` for the full argument. After a completed join the counter
+//! is back at 0, ready for the next scope, and the (exclusively owned)
+//! steal counter is reset by the resuming worker.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+
+use crate::stack::SegmentedStack;
+
+/// How a frame was created; decided statically in libfork via the
+/// type-system (Algorithm 2's "static information"), and similarly known
+/// at compile time in the monomorphized resume shims here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A root task submitted from outside the pool.
+    Root,
+    /// Created by `fork` — participates in join counting.
+    Forked,
+    /// Created by `call` — resumes its parent directly on return.
+    Called,
+}
+
+/// Control-transfer result of resuming a frame: either symmetric transfer
+/// to another frame (consuming no OS stack — the worker trampolines) or a
+/// return to the scheduler loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transfer {
+    /// Continue executing this frame next (symmetric transfer).
+    To(*mut FrameHeader),
+    /// Strand exhausted: return to the scheduler (steal / sleep).
+    ToScheduler,
+}
+
+/// Monomorphized resume entry point stored in each frame header: runs one
+/// `step()` of the task and applies Algorithms 3/4/5.
+pub type ResumeFn = unsafe fn(*mut FrameHeader, &mut crate::rt::worker::Worker) -> Transfer;
+
+/// The wait-free split join counter (nowa).
+#[derive(Debug)]
+pub struct JoinCounter(AtomicI64);
+
+impl JoinCounter {
+    /// Fresh counter (scope with no outstanding signals).
+    pub const fn new() -> Self {
+        JoinCounter(AtomicI64::new(0))
+    }
+
+    /// Child side: signal completion of a dangling child. Returns `true`
+    /// iff the parent already arrived and this was the last outstanding
+    /// child — the caller must resume the parent.
+    #[inline]
+    pub fn signal(&self) -> bool {
+        self.0.fetch_add(1, Ordering::AcqRel) + 1 == 0
+    }
+
+    /// Parent side: arrive at the join expecting `steals` signals.
+    /// Returns `true` iff all signals already arrived (continue without
+    /// suspending). Must not be called with `steals == 0` (fast path
+    /// bypasses the counter entirely).
+    #[inline]
+    pub fn arrive(&self, steals: u32) -> bool {
+        debug_assert!(steals > 0);
+        self.0.fetch_sub(steals as i64, Ordering::AcqRel) - steals as i64 == 0
+    }
+
+    /// Current raw value (tests only).
+    #[cfg(test)]
+    pub fn raw(&self) -> i64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+impl Default for JoinCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-task runtime header. Lives at the start of every frame allocation;
+/// the typed task state follows it (see `task::Frame`).
+#[repr(C)]
+pub struct FrameHeader {
+    /// Monomorphized resume shim.
+    pub resume: ResumeFn,
+    /// Parent frame (cactus-stack edge); null for root tasks.
+    pub parent: *mut FrameHeader,
+    /// Segmented stack this frame's allocation lives on.
+    pub stack: *mut SegmentedStack,
+    /// Size in bytes of the whole frame allocation (for FILO dealloc).
+    pub alloc_size: u32,
+    /// Creation kind (root / forked / called).
+    pub kind: FrameKind,
+    /// Times this frame's continuation was stolen in the current
+    /// fork-join scope. Owner-exclusive: only the worker currently
+    /// executing (or having just stolen) the frame touches it; ownership
+    /// hand-offs synchronize via the deque CAS / join counter.
+    pub steals: u32,
+    /// Wait-free split join counter for the current scope.
+    pub join: JoinCounter,
+    /// Completion signal for root tasks (null otherwise). Points at a
+    /// `rt::pool::RootSignal` owned by the submitter.
+    pub root_signal: *const crate::rt::pool::RootSignal,
+}
+
+impl FrameHeader {
+    /// Number of signals expected at the next join = continuation steals
+    /// in this scope.
+    #[inline]
+    pub fn expected_signals(&self) -> u32 {
+        self.steals
+    }
+}
+
+/// A `Send`/`Sync` transparent wrapper for frame pointers stored in the
+/// work-stealing and submission queues. Safety rests on the runtime's
+/// ownership protocol: a frame pointer in a queue is owned by the queue;
+/// whoever removes it (pop/steal) becomes the exclusive executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct FramePtr(pub *mut FrameHeader);
+
+unsafe impl Send for FramePtr {}
+unsafe impl Sync for FramePtr {}
+
+impl FramePtr {
+    /// Null pointer (sentinel).
+    pub const fn null() -> Self {
+        FramePtr(std::ptr::null_mut())
+    }
+
+    /// True when null.
+    pub fn is_null(&self) -> bool {
+        self.0.is_null()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn join_counter_parent_last() {
+        // Two signals land before the parent arrives: parent continues.
+        let j = JoinCounter::new();
+        assert!(!j.signal());
+        assert!(!j.signal());
+        assert!(j.arrive(2));
+        assert_eq!(j.raw(), 0, "counter must return to 0 after the scope");
+    }
+
+    #[test]
+    fn join_counter_child_last() {
+        // Parent arrives first, expecting 2; the second child resumes it.
+        let j = JoinCounter::new();
+        assert!(!j.arrive(2));
+        assert!(!j.signal());
+        assert!(j.signal());
+        assert_eq!(j.raw(), 0);
+    }
+
+    #[test]
+    fn join_counter_interleaved() {
+        let j = JoinCounter::new();
+        assert!(!j.signal());
+        assert!(!j.arrive(3)); // expects 3, got 1
+        assert!(!j.signal());
+        assert!(j.signal()); // last child resumes
+        assert_eq!(j.raw(), 0);
+    }
+
+    #[test]
+    fn join_counter_reusable_across_scopes() {
+        let j = JoinCounter::new();
+        assert!(!j.arrive(1));
+        assert!(j.signal());
+        // Next scope.
+        assert!(!j.signal());
+        assert!(j.arrive(1));
+    }
+
+    /// Exactly one participant observes "last" under concurrency.
+    #[test]
+    fn join_counter_exactly_one_winner() {
+        for trial in 0..200 {
+            let j = Arc::new(JoinCounter::new());
+            let signals = 4u32;
+            let winners = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..signals {
+                let j = Arc::clone(&j);
+                let winners = Arc::clone(&winners);
+                handles.push(std::thread::spawn(move || {
+                    if j.signal() {
+                        winners.fetch_add(1, Ordering::SeqCst);
+                    }
+                }));
+            }
+            {
+                let j = Arc::clone(&j);
+                let winners = Arc::clone(&winners);
+                handles.push(std::thread::spawn(move || {
+                    if j.arrive(signals) {
+                        winners.fetch_add(1, Ordering::SeqCst);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(
+                winners.load(Ordering::SeqCst),
+                1,
+                "trial {trial}: exactly one resumer required"
+            );
+            assert_eq!(j.raw(), 0);
+        }
+    }
+
+    #[test]
+    fn header_layout_reasonable() {
+        // The header should stay compact — it is per-task overhead
+        // (paper: "average task size is a few hundred bytes").
+        assert!(std::mem::size_of::<FrameHeader>() <= 64);
+    }
+}

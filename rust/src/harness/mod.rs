@@ -1,0 +1,95 @@
+//! Benchmark harness shared by the `benches/` frontends and the
+//! `repro` launcher.
+//!
+//! Methodology mirrors the paper (§IV-A): each measurement is repeated
+//! until a minimum wall time has elapsed (Google-benchmark style), the
+//! whole measurement is repeated `reps` times (default 5), and the
+//! median ± stddev are reported. Memory measurements use the counting
+//! allocator ([`crate::mem`]) as the MRSS analogue.
+
+pub mod runner;
+
+pub use runner::{run_workload, MeasuredRun, WorkloadRun};
+
+use crate::analysis::{median, stddev};
+
+/// One benchmark measurement: median ± σ over repetitions.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Median seconds per run.
+    pub secs: f64,
+    /// Sample standard deviation.
+    pub sigma: f64,
+    /// Repetitions aggregated.
+    pub reps: usize,
+}
+
+/// Time `f` per the paper's methodology: repeat until `min_time`
+/// elapsed within each of `reps` samples, report median ± σ of the
+/// per-iteration times.
+pub fn measure<F: FnMut()>(reps: usize, min_time: f64, mut f: F) -> Measurement {
+    // Warmup iteration (page-faults, pool spin-up effects).
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let mut iters = 0u32;
+        let start = std::time::Instant::now();
+        loop {
+            f();
+            iters += 1;
+            if start.elapsed().as_secs_f64() >= min_time {
+                break;
+            }
+        }
+        samples.push(start.elapsed().as_secs_f64() / iters as f64);
+    }
+    Measurement { secs: median(&samples), sigma: stddev(&samples), reps: samples.len() }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:8.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.3}ms", s * 1e3)
+    } else {
+        format!("{:8.3}s ", s)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1 << 10 {
+        format!("{b} B")
+    } else if b < 1 << 20 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else if b < 1 << 30 {
+        format!("{:.2} MiB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.2} GiB", b as f64 / (1 << 30) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_times() {
+        let m = measure(3, 0.01, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.secs > 0.0 && m.secs < 0.02);
+        assert_eq!(m.reps, 3);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_secs(5e-7).contains("us"));
+        assert!(fmt_secs(5e-2).contains("ms"));
+        assert!(fmt_secs(5.0).contains("s"));
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(4096).contains("KiB"));
+        assert!(fmt_bytes(5 << 20).contains("MiB"));
+    }
+}

@@ -1,0 +1,78 @@
+//! # rustfork
+//!
+//! A reproduction of *“Libfork: portable continuation-stealing with
+//! stackless coroutines”* (Williams & Elliott, 2024) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate implements a lock-free, continuation-stealing, fully-strict
+//! fork-join runtime:
+//!
+//! * [`stack`] — geometric **segmented stacks** (stacklets) that hold task
+//!   frames and form the cactus stack (paper §III-A, Theorem 1).
+//! * [`deque`] — a weak-memory-optimized **Chase-Lev** work-stealing deque
+//!   (paper §II-C1) and per-worker MPSC submission queues (§III-D1).
+//! * [`frame`] — task frame headers with the **nowa split join counter**
+//!   for wait-free joins.
+//! * [`task`] — the stackless-coroutine task model: explicit state-machine
+//!   [`task::Coroutine`]s whose frames live on the segmented stacks.
+//! * [`rt`] — the worker trampoline implementing the paper's Algorithms
+//!   3 (fork-awaitable), 4 (join-awaitable) and 5 (final-awaitable),
+//!   including stack-ownership transfer.
+//! * [`sched`] — the **busy** and **lazy** (adaptive, per-NUMA-node)
+//!   schedulers (§III-D).
+//! * [`numa`] — topology modelling and Eq. (6) victim selection.
+//! * [`baseline`] — child-stealing (TBB-like), global-queue (libomp-like)
+//!   and task-caching (taskflow-like) comparator runtimes.
+//! * [`workloads`] — the paper's benchmark programs (Table I): fib,
+//!   integrate, matmul, nqueens and the UTS family.
+//! * [`sim`] — a discrete-event simulator reproducing the paper's 112-core
+//!   time-scaling experiments on this single-core testbed.
+//! * [`mem`], [`analysis`], [`metrics`] — peak-memory accounting, power-law
+//!   fitting (Eq. 17 / Table II) and runtime counters.
+//! * [`runtime`] — the PJRT client that loads AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for the matmul leaf tiles.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use rustfork::prelude::*;
+//! use rustfork::workloads::fib::Fib;
+//!
+//! // Parallel Fibonacci on the busy scheduler with 2 workers.
+//! let pool = Pool::builder().workers(2).build();
+//! let fib10 = pool.run(Fib::new(10));
+//! assert_eq!(fib10, 55);
+//! ```
+
+pub mod algo;
+pub mod analysis;
+pub mod baseline;
+pub mod config;
+pub mod deque;
+pub mod frame;
+pub mod harness;
+pub mod mem;
+pub mod metrics;
+pub mod numa;
+pub mod rt;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stack;
+pub mod sync;
+pub mod task;
+pub mod workloads;
+
+/// Commonly used items re-exported for examples and benches.
+pub mod prelude {
+    pub use crate::config::RunConfig;
+    pub use crate::rt::pool::Pool;
+    pub use crate::sched::SchedulerKind;
+    pub use crate::task::{Coroutine, Step};
+    pub use crate::workloads::Workload;
+}
+
+/// Crate-wide counting allocator powering the Fig. 7 / Table II memory
+/// measurements (see [`mem`]).
+#[global_allocator]
+static GLOBAL_ALLOC: mem::CountingAlloc = mem::CountingAlloc;

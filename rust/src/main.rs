@@ -1,0 +1,285 @@
+//! `repro` — the rustfork launcher.
+//!
+//! Subcommands:
+//!
+//! * `params`    — print Table I (benchmark parameters + realized sizes)
+//! * `validate`  — run every workload on every framework and check all
+//!                 results against the serial projection
+//! * `sim`       — Fig. 5/6 time-scaling curves on the simulated paper
+//!                 testbed (`--family classic|uts`, `--max-p N`,
+//!                 `--numa-ablation`)
+//! * `calibrate` — measure per-task overheads (feeds the simulator)
+//! * `run`       — run one workload: `repro run fib --workers 4
+//!                 --framework busy --scale scaled`
+//! * `bench`     — pointers to the cargo bench targets per figure/table
+
+use rustfork::config::FrameworkKind;
+use rustfork::harness::{fmt_secs, measure, runner};
+use rustfork::numa::NumaTopology;
+use rustfork::rt::Pool;
+use rustfork::sim::{SimConfig, SimTask, Simulator, StealDiscipline};
+use rustfork::workloads::params::{Scale, Workload};
+use rustfork::workloads::uts::{uts_serial, UtsConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("params") => params(),
+        Some("validate") => validate(),
+        Some("sim") => sim(&args[1..]),
+        Some("calibrate") => calibrate(),
+        Some("run") => run_one(&args[1..]),
+        Some("bench") => bench_help(),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    println!(
+        "repro — rustfork launcher\n\
+         usage: repro <params|validate|sim|calibrate|run|bench> [options]\n\
+         \n\
+         repro run <workload> [--workers N] [--framework F] [--scale S]\n\
+         repro sim [--family classic|uts] [--max-p N] [--numa-ablation]\n\
+         workloads: fib integrate matmul nqueens T1 T1L T1XXL T3 T3L T3XXL\n\
+         frameworks: busy lazy tbb openmp taskflow serial"
+    );
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+/// Table I.
+fn params() {
+    println!("# Table I — benchmark parameters");
+    println!("{:<10} {:<42} {:>14}", "name", "paper parameters", "realized size");
+    for w in Workload::CLASSIC {
+        println!("{:<10} {:<42} {:>14}", w.label(), w.paper_params(), w.size(Scale::Paper));
+    }
+    for w in Workload::UTS {
+        let stats = uts_serial(&runner::uts_config(w, Scale::Scaled));
+        println!(
+            "{:<10} {:<42} {:>10} nodes",
+            w.label(),
+            w.paper_params(),
+            stats.nodes
+        );
+    }
+}
+
+/// Cross-framework correctness sweep.
+fn validate() {
+    println!("# validate: every workload x every framework == serial projection");
+    let workloads =
+        [Workload::Fib, Workload::Integrate, Workload::Nqueens, Workload::Matmul, Workload::UtsT1, Workload::UtsT3];
+    let mut failures = 0;
+    for w in workloads {
+        let expect = runner::serial_checksum(w, Scale::Smoke);
+        for fw in FrameworkKind::PARALLEL {
+            for p in [1usize, 2, 4] {
+                let pool = fw
+                    .scheduler()
+                    .map(|s| Pool::builder().workers(p).scheduler(s).build());
+                let run =
+                    runner::WorkloadRun { workload: w, framework: fw, workers: p, scale: Scale::Smoke };
+                let got = runner::run_workload(&run, pool.as_ref()).checksum;
+                let ok = got == expect;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "{:<10} {:<10} P={p}  {}",
+                    w.label(),
+                    fw.label(),
+                    if ok { "ok" } else { "MISMATCH" }
+                );
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} FAILURES");
+        std::process::exit(1);
+    }
+    println!("all ok");
+}
+
+/// Simulated paper-testbed scaling (Fig. 5/6 shapes) + NUMA ablation.
+fn sim(args: &[String]) {
+    let family = flag_value(args, "--family").unwrap_or("classic");
+    let max_p: usize =
+        flag_value(args, "--max-p").and_then(|v| v.parse().ok()).unwrap_or(112);
+    let ablation = args.iter().any(|a| a == "--numa-ablation");
+    let ps: Vec<usize> =
+        [1, 2, 4, 8, 16, 28, 56, 84, 112].into_iter().filter(|&p| p <= max_p).collect();
+
+    let tasks: Vec<(String, SimTask)> = match family {
+        "uts" => vec![
+            ("T1".into(), SimTask::uts(UtsConfig::t1())),
+            ("T3".into(), SimTask::uts(UtsConfig::t3())),
+        ],
+        _ => vec![
+            ("fib(30)".into(), SimTask::fib(30)),
+            ("integrate".into(), SimTask::integrate(20)),
+            ("nqueens(11)".into(), SimTask::nqueens(11)),
+        ],
+    };
+
+    if ablation {
+        println!("# NUMA ablation (fib(28), P=112): Eq. (6) weights vs uniform victims");
+        for (label, uniform) in
+            [("2x56 + Eq.(6)", false), ("2x56 + uniform", true)]
+        {
+            let cfg = SimConfig {
+                workers: 112,
+                topology: NumaTopology::paper_testbed(),
+                uniform_victims: uniform,
+                ..SimConfig::default()
+            };
+            let r = Simulator::new(cfg).run(SimTask::fib(28));
+            println!(
+                "{label:<16} T_p={} steals={} remote={} ({:.0}%)",
+                r.t_p_ns,
+                r.steals,
+                r.remote_steals,
+                100.0 * r.remote_steals as f64 / r.steals.max(1) as f64
+            );
+        }
+        return;
+    }
+
+    println!("# simulated paper testbed (2x56 cores) — family: {family}");
+    for (name, task) in tasks {
+        println!("### {name}: speedup (T_s/T_p) and [T_1/T_p]");
+        print!("{:<10}", "framework");
+        for p in &ps {
+            print!(" {:>14}", format!("P={p}"));
+        }
+        println!();
+        for (fname, disc, lazy, overhead) in [
+            ("Lazy-LF", StealDiscipline::Continuation, true, 15u64),
+            ("Busy-LF", StealDiscipline::Continuation, false, 15),
+            ("TBB", StealDiscipline::Child, false, 110),
+            ("OpenMP", StealDiscipline::Child, false, 80),
+            ("Taskflow", StealDiscipline::Child, false, 350),
+        ] {
+            print!("{fname:<10}");
+            for &p in &ps {
+                let cfg = SimConfig {
+                    workers: p,
+                    discipline: disc,
+                    lazy,
+                    overhead_ns: overhead,
+                    ..SimConfig::default()
+                };
+                let r = Simulator::new(cfg).run(task.clone());
+                print!(" {:>6.1} [{:>5.1}]", r.speedup(), r.t1_speedup());
+            }
+            println!();
+        }
+        println!();
+    }
+}
+
+/// Measure per-task overhead per framework (the simulator calibration).
+fn calibrate() {
+    let n = 26u64;
+    let tasks = 2 * rustfork::workloads::fib::fib_exact(n + 1) - 1;
+    println!("# calibrate: per-task overhead on fib({n}) ({tasks} tasks)");
+    let t_s = measure(5, 0.2, || {
+        std::hint::black_box(rustfork::workloads::fib::fib_serial(n));
+    });
+    let call_ns = t_s.secs * 1e9 / tasks as f64;
+    println!("bare call: {call_ns:.1} ns");
+    for fw in FrameworkKind::PARALLEL {
+        let pool =
+            fw.scheduler().map(|s| Pool::builder().workers(1).scheduler(s).build());
+        let m = measure(3, 0.2, || {
+            match fw.scheduler() {
+                Some(_) => {
+                    std::hint::black_box(
+                        pool.as_ref().unwrap().run(rustfork::workloads::fib::Fib::new(n)),
+                    );
+                }
+                None => {
+                    let policy = match fw {
+                        FrameworkKind::ChildStealing => rustfork::baseline::Policy::ChildStealing,
+                        FrameworkKind::GlobalQueue => rustfork::baseline::Policy::GlobalQueue,
+                        FrameworkKind::TaskCaching => rustfork::baseline::Policy::TaskCaching,
+                        _ => unreachable!(),
+                    };
+                    std::hint::black_box(rustfork::baseline::run_job(
+                        policy,
+                        1,
+                        rustfork::baseline::jobs::FibJob(n),
+                    ));
+                }
+            };
+        });
+        let per_task = m.secs * 1e9 / tasks as f64;
+        println!(
+            "{:<10} per-task {:.1} ns -> sim overhead_ns ~= {:.0}",
+            fw.label(),
+            per_task,
+            (per_task - call_ns).max(1.0)
+        );
+    }
+}
+
+/// Run one workload once, with timing + metrics.
+fn run_one(args: &[String]) {
+    let Some(wname) = args.first() else {
+        usage();
+        return;
+    };
+    let Some(w) = Workload::parse(wname) else {
+        eprintln!("unknown workload {wname}");
+        std::process::exit(2);
+    };
+    let workers: usize =
+        flag_value(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let fw = flag_value(args, "--framework")
+        .and_then(FrameworkKind::parse)
+        .unwrap_or(FrameworkKind::BusyLf);
+    let scale = match flag_value(args, "--scale") {
+        Some("paper") => Scale::Paper,
+        Some("smoke") => Scale::Smoke,
+        _ => Scale::Scaled,
+    };
+    let pool =
+        fw.scheduler().map(|s| Pool::builder().workers(workers).scheduler(s).build());
+    let run = runner::WorkloadRun { workload: w, framework: fw, workers, scale };
+    let m = runner::run_workload(&run, pool.as_ref());
+    println!(
+        "{w} on {fw} P={workers} ({scale:?}): {}  peak-mem {}  checksum {:#x}",
+        fmt_secs(m.secs),
+        rustfork::harness::fmt_bytes(m.peak_bytes),
+        m.checksum
+    );
+    if let Some(pool) = pool {
+        let met = pool.metrics();
+        println!(
+            "tasks={} steals={} remote={} pops={} signals={} sleeps={}",
+            met.tasks(),
+            met.steals,
+            met.remote_steals,
+            met.pops,
+            met.signals,
+            met.sleeps
+        );
+    }
+}
+
+fn bench_help() {
+    println!(
+        "# benchmark targets (cargo bench --bench <name>)\n\
+         classic   — Fig. 5: classic benchmarks, measured + simulated\n\
+         uts       — Fig. 6: UTS trees incl. '*' stack-API variants\n\
+         memory    — Fig. 7 + Table II: peak memory power-law fits\n\
+         overhead  — §IV-C.1a: T_1/T_s per framework\n\
+         micro     — substrate micro-benches (deque/stack/sampler/join)\n\
+         \n\
+         env: RUSTFORK_REPS, RUSTFORK_SMOKE=1, RUSTFORK_UTS_LARGE=1,\n\
+              RUSTFORK_UTS_FULL=1, RUSTFORK_SIM_MAX_P, RUSTFORK_MEM_MAX_P"
+    );
+}

@@ -1,0 +1,166 @@
+//! Runtime counters (per-worker, cache-padded, relaxed).
+//!
+//! These feed the benchmark harness (steal rates for the UTS discussion,
+//! task counts for overhead normalization) and the EXPERIMENTS.md
+//! reporting. Counters are owner-written with relaxed ordering; readers
+//! aggregate after quiescence, so no stronger ordering is needed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::CachePadded;
+
+/// Per-worker event counters.
+#[derive(Debug, Default)]
+pub struct WorkerCounters {
+    /// Tasks forked (Algorithm 3 with WSQ push).
+    pub forks: AtomicU64,
+    /// Tasks called (no WSQ exposure).
+    pub calls: AtomicU64,
+    /// Successful steals performed by this worker.
+    pub steals: AtomicU64,
+    /// Failed steal attempts (empty or lost race).
+    pub steal_misses: AtomicU64,
+    /// Cross-NUMA-node steals (subset of `steals`).
+    pub remote_steals: AtomicU64,
+    /// Hot-path pops (Algorithm 5 line 10 success).
+    pub pops: AtomicU64,
+    /// Implicit-join signals sent (failed pops).
+    pub signals: AtomicU64,
+    /// Times this worker went to sleep (lazy scheduler).
+    pub sleeps: AtomicU64,
+    /// Root tasks executed to completion.
+    pub roots: AtomicU64,
+}
+
+macro_rules! bump {
+    ($($name:ident => $field:ident),* $(,)?) => {
+        $(
+            #[doc = concat!("Increment `", stringify!($field), "` (relaxed).")]
+            #[inline]
+            pub fn $name(&self) {
+                self.$field.fetch_add(1, Ordering::Relaxed);
+            }
+        )*
+    };
+}
+
+impl WorkerCounters {
+    bump! {
+        bump_forks => forks,
+        bump_calls => calls,
+        bump_steals => steals,
+        bump_steal_misses => steal_misses,
+        bump_remote_steals => remote_steals,
+        bump_pops => pops,
+        bump_signals => signals,
+        bump_sleeps => sleeps,
+        bump_roots => roots,
+    }
+}
+
+/// Aggregated snapshot across all workers.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub forks: u64,
+    pub calls: u64,
+    pub steals: u64,
+    pub steal_misses: u64,
+    pub remote_steals: u64,
+    pub pops: u64,
+    pub signals: u64,
+    pub sleeps: u64,
+    pub roots: u64,
+}
+
+impl MetricsSnapshot {
+    /// Total tasks created (forks + calls + roots).
+    pub fn tasks(&self) -> u64 {
+        self.forks + self.calls + self.roots
+    }
+
+    /// Difference against an earlier snapshot.
+    pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            forks: self.forks - earlier.forks,
+            calls: self.calls - earlier.calls,
+            steals: self.steals - earlier.steals,
+            steal_misses: self.steal_misses - earlier.steal_misses,
+            remote_steals: self.remote_steals - earlier.remote_steals,
+            pops: self.pops - earlier.pops,
+            signals: self.signals - earlier.signals,
+            sleeps: self.sleeps - earlier.sleeps,
+            roots: self.roots - earlier.roots,
+        }
+    }
+}
+
+/// All workers' counters; indexed by worker id.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    per_worker: Vec<CachePadded<WorkerCounters>>,
+}
+
+impl Metrics {
+    /// Counters for `workers` workers.
+    pub fn new(workers: usize) -> Self {
+        Metrics {
+            per_worker: (0..workers)
+                .map(|_| CachePadded::new(WorkerCounters::default()))
+                .collect(),
+        }
+    }
+
+    /// Counters of one worker.
+    #[inline]
+    pub fn worker(&self, id: usize) -> &WorkerCounters {
+        &self.per_worker[id]
+    }
+
+    /// Aggregate a snapshot (call at quiescence for exact values).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        for w in &self.per_worker {
+            s.forks += w.forks.load(Ordering::Relaxed);
+            s.calls += w.calls.load(Ordering::Relaxed);
+            s.steals += w.steals.load(Ordering::Relaxed);
+            s.steal_misses += w.steal_misses.load(Ordering::Relaxed);
+            s.remote_steals += w.remote_steals.load(Ordering::Relaxed);
+            s.pops += w.pops.load(Ordering::Relaxed);
+            s.signals += w.signals.load(Ordering::Relaxed);
+            s.sleeps += w.sleeps.load(Ordering::Relaxed);
+            s.roots += w.roots.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new(3);
+        m.worker(0).bump_forks();
+        m.worker(1).bump_forks();
+        m.worker(2).bump_steals();
+        m.worker(2).bump_roots();
+        let s = m.snapshot();
+        assert_eq!(s.forks, 2);
+        assert_eq!(s.steals, 1);
+        assert_eq!(s.tasks(), 3);
+    }
+
+    #[test]
+    fn since_diff() {
+        let m = Metrics::new(1);
+        m.worker(0).bump_forks();
+        let a = m.snapshot();
+        m.worker(0).bump_forks();
+        m.worker(0).bump_pops();
+        let b = m.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.forks, 1);
+        assert_eq!(d.pops, 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! Walker's alias method for O(1) weighted victim sampling.
+//!
+//! Victim selection happens on the steal path, which is the latency-
+//! critical path for work distribution: the paper's Eq. (6) distribution
+//! is sampled millions of times per second by spinning thieves, so we
+//! precompute an alias table per thief at pool construction.
+
+use crate::sync::XorShift64;
+
+/// Precomputed alias table over `n` outcomes.
+#[derive(Debug, Clone)]
+pub struct AliasSampler {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasSampler {
+    /// Build from non-negative weights (not all zero).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all-zero weight vector");
+        let scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        let mut p = scaled;
+        for (i, &v) in p.iter().enumerate() {
+            if v < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let s = small.pop().unwrap();
+            let l = *large.last().unwrap();
+            prob[s] = p[s];
+            alias[s] = l;
+            p[l] = (p[l] + p[s]) - 1.0;
+            if p[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for i in large {
+            prob[i] = 1.0;
+        }
+        for i in small {
+            prob[i] = 1.0;
+        }
+        AliasSampler { prob, alias }
+    }
+
+    /// Draw one outcome. O(1): one random draw, one comparison.
+    #[inline]
+    pub fn sample(&self, rng: &mut XorShift64) -> usize {
+        let n = self.prob.len();
+        let i = rng.next_below(n);
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True when there are no outcomes (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(weights: &[f64], draws: usize) -> Vec<f64> {
+        let s = AliasSampler::new(weights);
+        let mut rng = XorShift64::new(0xDEADBEEF);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let freq = empirical(&[1.0, 1.0, 1.0, 1.0], 200_000);
+        for f in freq {
+            assert!((f - 0.25).abs() < 0.01, "freq {f}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights() {
+        let freq = empirical(&[8.0, 1.0, 1.0], 300_000);
+        assert!((freq[0] - 0.8).abs() < 0.01);
+        assert!((freq[1] - 0.1).abs() < 0.01);
+        assert!((freq[2] - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn zero_weight_outcomes_never_drawn() {
+        let freq = empirical(&[0.0, 1.0, 0.0, 3.0], 100_000);
+        assert_eq!(freq[0], 0.0);
+        assert_eq!(freq[2], 0.0);
+        assert!((freq[3] - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn eq6_distribution_matches() {
+        // Sample victims for core 0 on the paper testbed; the same-node
+        // class should receive 1/(1+1/4) = 80% of the mass.
+        let topo = crate::numa::NumaTopology::paper_testbed();
+        let w = topo.victim_weights(0);
+        let s = AliasSampler::new(&w);
+        let mut rng = XorShift64::new(7);
+        let mut local = 0usize;
+        let draws = 200_000;
+        for _ in 0..draws {
+            let v = s.sample(&mut rng);
+            assert_ne!(v, 0, "sampler must never pick the thief itself");
+            if topo.distance(0, v) == 1 {
+                local += 1;
+            }
+        }
+        let frac = local as f64 / draws as f64;
+        assert!((frac - 0.8).abs() < 0.01, "local fraction {frac}");
+    }
+
+    #[test]
+    fn single_outcome() {
+        let s = AliasSampler::new(&[2.5]);
+        let mut rng = XorShift64::new(1);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&mut rng), 0);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Machine topology model: a tree with cores at the leaves.
+//!
+//! Reproduces what the paper obtains from hwloc. Three sources:
+//!
+//! * [`NumaTopology::detect`] — parse `/sys/devices/system/node/node*`;
+//! * [`NumaTopology::synthetic`] — an explicit `sockets × cores` tree
+//!   (used for the simulator's 2×56 Xeon model and for tests);
+//! * [`NumaTopology::flat`] — a single node (UMA fallback).
+
+/// How a topology was obtained (reporting / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Parsed from /sys.
+    Detected,
+    /// Synthesized from an explicit shape.
+    Synthetic,
+    /// Single-node fallback.
+    Flat,
+}
+
+/// A NUMA topology: `P` workers/cores partitioned into nodes, with a
+/// tree-derived distance metric.
+///
+/// The modelled tree has three levels — machine → NUMA node → core — so
+/// the topological distance (max distance of each leaf to the common
+/// ancestor) is 1 for same-node pairs and 2 for cross-node pairs. Deeper
+/// trees (e.g. L3 groups) would extend `distance` without changing any
+/// consumer.
+#[derive(Debug, Clone)]
+pub struct NumaTopology {
+    kind: TopologyKind,
+    /// `node_of[i]` = NUMA node of core i.
+    node_of: Vec<usize>,
+    /// Number of nodes.
+    nodes: usize,
+}
+
+impl NumaTopology {
+    /// Detect from `/sys/devices/system/node`; fall back to
+    /// [`Self::flat`] when unavailable. `cores` is the number of workers
+    /// to map (cores beyond the detected CPU count wrap around, which is
+    /// how P > physical-cores oversubscription is modelled).
+    pub fn detect(cores: usize) -> Self {
+        match Self::try_detect(cores) {
+            Some(t) => t,
+            None => Self::flat(cores),
+        }
+    }
+
+    fn try_detect(cores: usize) -> Option<Self> {
+        let mut cpu_node: Vec<(usize, usize)> = Vec::new(); // (cpu, node)
+        let dir = std::fs::read_dir("/sys/devices/system/node").ok()?;
+        for entry in dir.flatten() {
+            let name = entry.file_name().into_string().ok()?;
+            if let Some(node_str) = name.strip_prefix("node") {
+                if let Ok(node) = node_str.parse::<usize>() {
+                    let list =
+                        std::fs::read_to_string(entry.path().join("cpulist")).ok()?;
+                    for cpu in parse_cpulist(list.trim()) {
+                        cpu_node.push((cpu, node));
+                    }
+                }
+            }
+        }
+        if cpu_node.is_empty() {
+            return None;
+        }
+        cpu_node.sort_unstable();
+        let nodes = cpu_node.iter().map(|&(_, n)| n).max().unwrap() + 1;
+        let physical: Vec<usize> = cpu_node.iter().map(|&(_, n)| n).collect();
+        let node_of = (0..cores).map(|i| physical[i % physical.len()]).collect();
+        Some(NumaTopology { kind: TopologyKind::Detected, node_of, nodes })
+    }
+
+    /// Explicit `sockets` × `cores_per_socket` topology.
+    pub fn synthetic(sockets: usize, cores_per_socket: usize) -> Self {
+        assert!(sockets > 0 && cores_per_socket > 0);
+        let node_of =
+            (0..sockets * cores_per_socket).map(|i| i / cores_per_socket).collect();
+        NumaTopology { kind: TopologyKind::Synthetic, node_of, nodes: sockets }
+    }
+
+    /// The paper's testbed: 2 sockets × 56 cores (Xeon Platinum 8480+).
+    pub fn paper_testbed() -> Self {
+        Self::synthetic(2, 56)
+    }
+
+    /// Single NUMA node containing all cores.
+    pub fn flat(cores: usize) -> Self {
+        NumaTopology {
+            kind: TopologyKind::Flat,
+            node_of: vec![0; cores.max(1)],
+            nodes: 1,
+        }
+    }
+
+    /// Restrict/extend to exactly `cores` workers (wrapping node
+    /// assignment, preserving shape).
+    pub fn with_cores(&self, cores: usize) -> Self {
+        let node_of =
+            (0..cores).map(|i| self.node_of[i % self.node_of.len()]).collect();
+        NumaTopology { kind: self.kind, node_of, nodes: self.nodes }
+    }
+
+    /// Number of cores / workers.
+    pub fn cores(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Number of NUMA nodes actually populated.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// NUMA node of a core.
+    pub fn node_of(&self, core: usize) -> usize {
+        self.node_of[core]
+    }
+
+    /// Cores belonging to `node`.
+    pub fn cores_in(&self, node: usize) -> Vec<usize> {
+        (0..self.cores()).filter(|&c| self.node_of[c] == node).collect()
+    }
+
+    /// Topological distance `r_ij`: max of each leaf's distance to the
+    /// common ancestor in the machine→node→core tree.
+    pub fn distance(&self, i: usize, j: usize) -> u32 {
+        if i == j {
+            0
+        } else if self.node_of[i] == self.node_of[j] {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Eq. (6) victim weights for thief `i` over all other cores:
+    /// `w_ij = 1/(n_ij · r_ij²)` where `n_ij` counts cores at distance
+    /// `r_ij` from `i`. Entry `i` itself gets weight 0.
+    pub fn victim_weights(&self, i: usize) -> Vec<f64> {
+        let p = self.cores();
+        // n_ij per distance class.
+        let mut count_at = std::collections::HashMap::new();
+        for j in 0..p {
+            if j != i {
+                *count_at.entry(self.distance(i, j)).or_insert(0usize) += 1;
+            }
+        }
+        (0..p)
+            .map(|j| {
+                if j == i {
+                    0.0
+                } else {
+                    let r = self.distance(i, j) as f64;
+                    let n = count_at[&self.distance(i, j)] as f64;
+                    1.0 / (n * r * r)
+                }
+            })
+            .collect()
+    }
+
+    /// Source of this topology.
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+}
+
+/// Parse a Linux cpulist string like "0-3,8,10-11".
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    if s.is_empty() {
+        return out;
+    }
+    for part in s.split(',') {
+        let part = part.trim();
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.parse::<usize>(), b.parse::<usize>()) {
+                out.extend(a..=b);
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4"), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("0-1,4,6-7"), vec![0, 1, 4, 6, 7]);
+        assert!(parse_cpulist("").is_empty());
+    }
+
+    #[test]
+    fn synthetic_shape() {
+        let t = NumaTopology::synthetic(2, 4);
+        assert_eq!(t.cores(), 8);
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 1);
+        assert_eq!(t.cores_in(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn distances() {
+        let t = NumaTopology::synthetic(2, 2);
+        assert_eq!(t.distance(0, 0), 0);
+        assert_eq!(t.distance(0, 1), 1); // same node
+        assert_eq!(t.distance(0, 2), 2); // cross node
+        assert_eq!(t.distance(0, 2), t.distance(2, 0));
+    }
+
+    #[test]
+    fn eq6_weights_favor_local() {
+        let t = NumaTopology::paper_testbed();
+        let w = t.victim_weights(0);
+        assert_eq!(w[0], 0.0);
+        // Same-node victim: n=55, r=1 → 1/55. Remote: n=56, r=2 → 1/224.
+        assert!((w[1] - 1.0 / 55.0).abs() < 1e-12);
+        assert!((w[56] - 1.0 / (56.0 * 4.0)).abs() < 1e-12);
+        assert!(w[1] > w[56] * 3.9 && w[1] < w[56] * 4.2);
+    }
+
+    #[test]
+    fn weights_probability_mass() {
+        // Total local mass : total remote mass = 1 : 1/4 per Eq. (6)
+        // (each distance class contributes 1/r² in aggregate).
+        let t = NumaTopology::paper_testbed();
+        let w = t.victim_weights(3);
+        let local: f64 =
+            (0..112).filter(|&j| t.distance(3, j) == 1).map(|j| w[j]).sum();
+        let remote: f64 =
+            (0..112).filter(|&j| t.distance(3, j) == 2).map(|j| w[j]).sum();
+        assert!((local - 1.0).abs() < 1e-9);
+        assert!((remote - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flat_single_node() {
+        let t = NumaTopology::flat(4);
+        assert_eq!(t.nodes(), 1);
+        assert_eq!(t.distance(0, 3), 1);
+    }
+
+    #[test]
+    fn with_cores_wraps() {
+        let t = NumaTopology::synthetic(2, 2).with_cores(8);
+        assert_eq!(t.cores(), 8);
+        assert_eq!(t.node_of(4), 0);
+        assert_eq!(t.node_of(6), 1);
+    }
+
+    #[test]
+    fn detect_does_not_panic() {
+        let t = NumaTopology::detect(4);
+        assert_eq!(t.cores(), 4);
+        assert!(t.nodes() >= 1);
+    }
+}

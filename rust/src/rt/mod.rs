@@ -1,0 +1,27 @@
+//! The continuation-stealing runtime (paper §III-B).
+//!
+//! * [`worker::Worker`] — the per-thread execution engine: the resume
+//!   trampoline (symmetric transfer) and the paper's Algorithm 3
+//!   (fork-awaitable), Algorithm 4 (join-awaitable) and Algorithm 5
+//!   (final-awaitable), including segmented-stack ownership transfer.
+//! * [`pool::Pool`] — worker lifecycle, root-task submission, shutdown.
+//!
+//! ## Ownership invariants (load-bearing; see the proofs in worker.rs)
+//!
+//! 1. A worker in its scheduler loop owns exactly one **empty** current
+//!    stack.
+//! 2. A frame's deque entry is consumed exactly once — by the hot-path
+//!    pop of its child's final return, or by a steal (which increments
+//!    the frame's steal counter).
+//! 3. `signals == steals` per fork-join scope: every steal of a
+//!    continuation leaves exactly one dangling child whose
+//!    subtree-completion performs one failed-pop signal.
+//! 4. At a frame's final return, the executing worker's current stack is
+//!    the stack the frame was allocated on (re-established after every
+//!    join by the stack-transfer rules).
+
+pub mod pool;
+pub mod worker;
+
+pub use pool::{Pool, PoolBuilder};
+pub use worker::Worker;

@@ -1,0 +1,365 @@
+//! The worker pool: construction, root-task submission, shutdown.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::deque::{Deque, SubmissionQueue};
+use crate::frame::{FrameHeader, FrameKind, FramePtr, JoinCounter};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::numa::{AliasSampler, NumaTopology};
+use crate::sched::SchedulerKind;
+use crate::stack::SegmentedStack;
+use crate::sync::{CachePadded, Parker};
+use crate::task::{Coroutine, Frame};
+
+/// Completion signal for a root task (non-generic part). The submitter
+/// parks on it; the worker finishing the root notifies it.
+#[derive(Debug)]
+pub struct RootSignal {
+    done: AtomicBool,
+    parker: Parker,
+}
+
+impl RootSignal {
+    fn new() -> Self {
+        RootSignal { done: AtomicBool::new(false), parker: Parker::new() }
+    }
+
+    /// Worker side: publish completion (Release) and wake the submitter.
+    pub fn complete(&self) {
+        self.done.store(true, Ordering::Release);
+        self.parker.notify();
+    }
+
+    /// Submitter side: block until complete.
+    pub fn wait(&self) {
+        while !self.done.load(Ordering::Acquire) {
+            self.parker.park_timeout(std::time::Duration::from_millis(50));
+        }
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+}
+
+/// State shared by all workers of a pool.
+pub struct Shared {
+    /// Per-worker work-stealing deques of continuations.
+    pub deques: Vec<Deque<FramePtr>>,
+    /// Per-worker MPSC submission queues (no global queue, §III-D1).
+    pub submissions: Vec<SubmissionQueue<FramePtr>>,
+    /// Per-worker parkers (lazy scheduler sleep/wake).
+    pub parkers: Vec<Parker>,
+    /// Per-worker Eq. (6) victim samplers.
+    pub samplers: Vec<AliasSampler>,
+    /// Machine/NUMA model.
+    pub topology: NumaTopology,
+    /// Scheduler flavour (busy / lazy).
+    pub scheduler: SchedulerKind,
+    /// Event counters.
+    pub metrics: Metrics,
+    /// Pool shutdown flag.
+    pub shutdown: AtomicBool,
+    /// Workers currently executing tasks (lazy policy input).
+    pub active: AtomicUsize,
+    /// Workers currently parked.
+    pub sleepers: AtomicUsize,
+    /// Per-node count of awake (not parked) workers.
+    pub awake_in_node: Vec<CachePadded<AtomicUsize>>,
+    /// Per-worker "is parked" flags (for targeted wakeups).
+    pub parked_flag: Vec<CachePadded<AtomicBool>>,
+    /// First-stacklet capacity for worker stacks.
+    pub first_stacklet: usize,
+}
+
+impl Shared {
+    /// Wake one parked worker, preferring `from`'s NUMA node. Cheap when
+    /// nobody sleeps (single relaxed load) — called on the fork hot path.
+    #[inline]
+    pub fn wake_one(&self, from: usize) {
+        if self.sleepers.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        self.wake_one_slow(from);
+    }
+
+    #[cold]
+    fn wake_one_slow(&self, from: usize) {
+        let node = self.topology.node_of(from);
+        let p = self.deques.len();
+        // Same node first, then the rest.
+        for w in (0..p).filter(|&w| self.topology.node_of(w) == node) {
+            if self.try_wake(w) {
+                return;
+            }
+        }
+        for w in (0..p).filter(|&w| self.topology.node_of(w) != node) {
+            if self.try_wake(w) {
+                return;
+            }
+        }
+    }
+
+    fn try_wake(&self, w: usize) -> bool {
+        if self.parked_flag[w]
+            .compare_exchange(true, false, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.parkers[w].notify();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Wake everyone (shutdown).
+    pub fn wake_all(&self) {
+        for p in &self.parkers {
+            p.notify();
+        }
+    }
+}
+
+/// Builder for [`Pool`].
+pub struct PoolBuilder {
+    workers: usize,
+    scheduler: SchedulerKind,
+    topology: Option<NumaTopology>,
+    first_stacklet: usize,
+    seed: u64,
+}
+
+impl PoolBuilder {
+    fn new() -> Self {
+        PoolBuilder {
+            workers: crate::numa::available_cpus(),
+            scheduler: SchedulerKind::Busy,
+            topology: None,
+            first_stacklet: crate::stack::FIRST_STACKLET,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Number of workers (default: available CPUs).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Scheduler flavour (default: busy).
+    pub fn scheduler(mut self, s: SchedulerKind) -> Self {
+        self.scheduler = s;
+        self
+    }
+
+    /// Override the detected topology (e.g. the synthetic paper testbed).
+    pub fn topology(mut self, t: NumaTopology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    /// First-stacklet capacity in bytes.
+    pub fn first_stacklet(mut self, bytes: usize) -> Self {
+        self.first_stacklet = bytes;
+        self
+    }
+
+    /// RNG seed for victim selection (determinism in tests).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Spawn the workers and return the pool.
+    pub fn build(self) -> Pool {
+        let p = self.workers;
+        let topology = match self.topology {
+            Some(t) => t.with_cores(p),
+            None => NumaTopology::detect(p),
+        };
+        let samplers = if p > 1 {
+            (0..p).map(|i| AliasSampler::new(&topology.victim_weights(i))).collect()
+        } else {
+            // Single worker: sampler unused; a uniform stub keeps the
+            // types simple.
+            vec![AliasSampler::new(&[1.0])]
+        };
+        let nodes = topology.nodes();
+        let mut awake_in_node: Vec<CachePadded<AtomicUsize>> =
+            (0..nodes).map(|_| CachePadded::new(AtomicUsize::new(0))).collect();
+        for w in 0..p {
+            *awake_in_node[topology.node_of(w)].get_mut() += 1;
+        }
+        let shared = Arc::new(Shared {
+            deques: (0..p).map(|_| Deque::new()).collect(),
+            submissions: (0..p).map(|_| SubmissionQueue::new()).collect(),
+            parkers: (0..p).map(|_| Parker::new()).collect(),
+            samplers,
+            topology,
+            scheduler: self.scheduler,
+            metrics: Metrics::new(p),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            awake_in_node,
+            parked_flag: (0..p)
+                .map(|_| CachePadded::new(AtomicBool::new(false)))
+                .collect(),
+            first_stacklet: self.first_stacklet,
+        });
+        let mut threads = Vec::with_capacity(p);
+        for id in 0..p {
+            let shared = Arc::clone(&shared);
+            let seed = self.seed.wrapping_add(1 + id as u64).wrapping_mul(0x9E3779B9);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("rustfork-w{id}"))
+                    .spawn(move || {
+                        let mut w = super::worker::Worker::new(id, shared, seed);
+                        w.run();
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Pool { shared, threads, next_submit: AtomicUsize::new(0) }
+    }
+}
+
+/// A pool of continuation-stealing workers. Submit root tasks with
+/// [`Pool::run`]; the pool shuts down (joining all threads) on drop.
+pub struct Pool {
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    next_submit: AtomicUsize,
+}
+
+impl Pool {
+    /// Start building a pool.
+    pub fn builder() -> PoolBuilder {
+        PoolBuilder::new()
+    }
+
+    /// A busy-scheduler pool with `n` workers.
+    pub fn with_workers(n: usize) -> Pool {
+        Self::builder().workers(n).build()
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Aggregate runtime counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Shared state (used by benches to inspect per-worker data).
+    pub fn shared(&self) -> &Arc<Shared> {
+        &self.shared
+    }
+
+    /// Run a root task to completion and return its result (blocking).
+    pub fn run<C: Coroutine>(&self, task: C) -> C::Output {
+        let handle = self.submit(task);
+        handle.join()
+    }
+
+    /// Submit a root task; returns a handle to join later. Root tasks are
+    /// distributed round-robin over the per-worker submission queues.
+    pub fn submit<C: Coroutine>(&self, task: C) -> RootHandle<C::Output> {
+        // The root gets a fresh stack that travels with the frame.
+        let mut stack = SegmentedStack::with_first_capacity(self.shared.first_stacklet);
+        let signal = Box::new(RootSignal::new());
+        let result: Box<std::mem::MaybeUninit<C::Output>> =
+            Box::new(std::mem::MaybeUninit::uninit());
+        let result_ptr = Box::into_raw(result);
+        let size = Frame::<C>::alloc_size();
+        let mem = stack.alloc(size) as *mut Frame<C>;
+        unsafe {
+            mem.write(Frame {
+                header: FrameHeader {
+                    resume: super::worker::resume_shim::<C>,
+                    parent: std::ptr::null_mut(),
+                    stack: std::ptr::null_mut(), // patched below
+                    alloc_size: size as u32,
+                    kind: FrameKind::Root,
+                    steals: 0,
+                    join: JoinCounter::new(),
+                    root_signal: &*signal,
+                },
+                out: result_ptr as *mut C::Output,
+                task,
+            });
+        }
+        let stack_ptr = Box::into_raw(stack);
+        unsafe { (*(mem as *mut FrameHeader)).stack = stack_ptr };
+
+        let target =
+            self.next_submit.fetch_add(1, Ordering::Relaxed) % self.workers();
+        self.shared.submissions[target].push(FramePtr(mem as *mut FrameHeader));
+        self.shared.parkers[target].notify();
+        // A parked target must also clear its flag eagerly; wake_one
+        // handles the general case of other sleepers.
+        self.shared.parked_flag[target].store(false, Ordering::Release);
+        RootHandle { signal, result: result_ptr, joined: false }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wake_all();
+        for t in self.threads.drain(..) {
+            // Keep waking: a worker may re-park between flag store and join.
+            while !t.is_finished() {
+                self.shared.wake_all();
+                std::thread::yield_now();
+            }
+            let _ = t.join();
+        }
+    }
+}
+
+/// Join handle for a submitted root task.
+pub struct RootHandle<T> {
+    signal: Box<RootSignal>,
+    result: *mut std::mem::MaybeUninit<T>,
+    joined: bool,
+}
+
+unsafe impl<T: Send> Send for RootHandle<T> {}
+
+impl<T> RootHandle<T> {
+    /// Block until the task completes and take its result.
+    pub fn join(mut self) -> T {
+        self.signal.wait();
+        self.joined = true;
+        unsafe {
+            let b = Box::from_raw(self.result);
+            *b.assume_init()
+        }
+    }
+
+    /// Non-blocking completion check.
+    pub fn is_done(&self) -> bool {
+        self.signal.is_done()
+    }
+}
+
+impl<T> Drop for RootHandle<T> {
+    fn drop(&mut self) {
+        if !self.joined {
+            // Must wait: the worker writes through `result` and reads the
+            // signal; both must stay alive until completion.
+            self.signal.wait();
+            unsafe {
+                let b = Box::from_raw(self.result);
+                // Drop the initialized value.
+                drop(b.assume_init());
+            }
+        }
+    }
+}

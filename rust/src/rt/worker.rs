@@ -1,0 +1,451 @@
+//! The per-thread worker: trampoline + Algorithms 3, 4, 5.
+//!
+//! ## Why `signals == steals` (invariant 3)
+//!
+//! A frame `p`'s continuation enters the owner's deque once per fork.
+//! Each entry is consumed either by the **hot-path pop** in the final
+//! return of the very child whose fork pushed it (no signal is sent), or
+//! by a **steal**. Stealing is FIFO from the top of the Chase-Lev deque,
+//! so entries are stolen strictly oldest-first: if `p`'s entry is still
+//! present when a child's final return pops, every entry pushed during
+//! that child's subtree has already been consumed, hence the popped entry
+//! *is* `p` — the pop either returns `p` or fails. Each steal of `p`
+//! leaves exactly one child subtree dangling on the victim; wherever that
+//! subtree's completion migrates (via nested join resumes), the
+//! completing worker's deque is empty at that point (everything older
+//! was stolen first, everything newer was consumed), so it performs
+//! exactly one failed-pop **signal** on `p`. Therefore the number of
+//! signals `p` must expect at its join equals the number of times it was
+//! stolen during the scope.
+//!
+//! ## Why the executor owns `f.stack` at `f`'s final return (invariant 4)
+//!
+//! A frame is allocated on its creator's current stack, so the invariant
+//! holds at birth. It can only break when the continuation is stolen —
+//! but a stolen frame is fully strict and must join before returning, and
+//! both join completion paths re-adopt the frame's stack: the arriving
+//! parent adopts it when `arrive()` succeeds (Algorithm 4 lines 8–10) and
+//! the last signalling child adopts it before resuming (Algorithm 5
+//! lines 16–18).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::frame::{FrameHeader, FrameKind, FramePtr, Transfer};
+use crate::stack::SegmentedStack;
+use crate::sync::{Backoff, XorShift64};
+use crate::task::{Coroutine, Cx, Frame, StageKind, Step};
+
+use super::pool::Shared;
+
+/// Hot-path event counters kept worker-local (plain increments) and
+/// flushed to the shared atomics at strand boundaries — fork/call/pop
+/// fire per task, and a relaxed `fetch_add` per event costs ~10 ns/task
+/// (§Perf-L3 iteration 1: 34.0 → 24.3 ns). Rare-path counters (steals,
+/// signals, sleeps) stay atomic so cross-worker invariants like
+/// `signals == steals` remain exact at quiescence.
+#[derive(Default)]
+struct LocalCounters {
+    forks: u64,
+    calls: u64,
+    pops: u64,
+}
+
+/// Per-thread worker state. Created on the worker thread by the pool.
+pub struct Worker {
+    /// Worker id == index into the shared deque/submission/parker arrays.
+    pub id: usize,
+    /// Shared pool state.
+    pub shared: Arc<Shared>,
+    /// Current segmented stack (exclusively owned). Empty whenever the
+    /// worker sits in its scheduler loop (invariant 1).
+    pub(crate) stack: *mut SegmentedStack,
+    /// Cached empty stack (zero or one).
+    pub(crate) spare: *mut SegmentedStack,
+    /// Child staged by `Cx::fork`/`Cx::call` awaiting dispatch.
+    pub(crate) staged: *mut FrameHeader,
+    pub(crate) staged_kind: StageKind,
+    /// Victim-selection randomness.
+    pub(crate) rng: XorShift64,
+    /// Hot-path counters, flushed at strand boundaries.
+    local: LocalCounters,
+}
+
+impl Worker {
+    /// Build a worker (call on its own thread).
+    pub(crate) fn new(id: usize, shared: Arc<Shared>, seed: u64) -> Self {
+        let stack = Box::into_raw(SegmentedStack::with_first_capacity(
+            shared.first_stacklet,
+        ));
+        Worker {
+            id,
+            shared,
+            stack,
+            spare: std::ptr::null_mut(),
+            staged: std::ptr::null_mut(),
+            staged_kind: StageKind::Call,
+            rng: XorShift64::new(seed),
+            local: LocalCounters::default(),
+        }
+    }
+
+    /// Flush the worker-local hot-path counters to the shared metrics.
+    #[inline]
+    pub(crate) fn flush_counters(&mut self) {
+        if self.local.forks | self.local.calls | self.local.pops != 0 {
+            let c = self.shared.metrics.worker(self.id);
+            c.forks.fetch_add(self.local.forks, Ordering::Relaxed);
+            c.calls.fetch_add(self.local.calls, Ordering::Relaxed);
+            c.pops.fetch_add(self.local.pops, Ordering::Relaxed);
+            self.local = LocalCounters::default();
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Scheduler loop
+    // ----------------------------------------------------------------
+
+    /// Main loop: drain submissions, steal, idle per the configured
+    /// scheduler (busy or lazy).
+    pub(crate) fn run(&mut self) {
+        let _ = crate::numa::pin_current_thread(self.id);
+        let mut backoff = Backoff::new();
+        loop {
+            debug_assert!(unsafe { (*self.stack).is_empty() }, "invariant 1");
+
+            // 1. Own submission queue (root tasks, explicit scheduling).
+            if let Some(FramePtr(f)) = self.shared.submissions[self.id].pop() {
+                unsafe { self.adopt_stack((*f).stack) };
+                self.enter_active();
+                unsafe { self.execute(f) };
+                self.exit_active();
+                backoff.reset();
+                continue;
+            }
+
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                // Drain any submission that raced with shutdown: with no
+                // thieves left, strands complete inline (steals == 0 fast
+                // paths), so executing here cannot block.
+                while let Some(FramePtr(f)) = self.shared.submissions[self.id].pop() {
+                    unsafe {
+                        self.adopt_stack((*f).stack);
+                        self.execute(f);
+                    }
+                }
+                break;
+            }
+
+            // 2. Steal, victim per Eq. (6).
+            if self.shared.deques.len() > 1 {
+                let victim = self.shared.samplers[self.id].sample(&mut self.rng);
+                match self.shared.deques[victim].steal() {
+                    crate::deque::Steal::Success(FramePtr(f)) => {
+                        let counters = self.shared.metrics.worker(self.id);
+                        counters.bump_steals();
+                        if self.shared.topology.distance(self.id, victim) > 1 {
+                            counters.bump_remote_steals();
+                        }
+                        // The thief owns the continuation now; count the
+                        // steal on the frame (owner-exclusive field —
+                        // ownership was transferred by the deque CAS).
+                        unsafe { (*f).steals += 1 };
+                        self.enter_active();
+                        // Propagate parallelism: if the victim still has
+                        // work and someone is asleep, wake them.
+                        if !self.shared.deques[victim].is_empty() {
+                            self.shared.wake_one(self.id);
+                        }
+                        unsafe { self.execute(f) };
+                        self.exit_active();
+                        backoff.reset();
+                        continue;
+                    }
+                    crate::deque::Steal::Retry => {
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    crate::deque::Steal::Empty => {
+                        self.shared.metrics.worker(self.id).bump_steal_misses();
+                    }
+                }
+            }
+
+            // 3. Idle policy.
+            match self.shared.scheduler {
+                crate::sched::SchedulerKind::Busy => backoff.snooze(),
+                crate::sched::SchedulerKind::Lazy => {
+                    if backoff.is_completed() {
+                        crate::sched::lazy::idle(self);
+                        backoff.reset();
+                    } else {
+                        backoff.snooze();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Trampoline: resume frames via symmetric transfer until the strand
+    /// is exhausted. Uses no OS stack per transfer (a loop, not
+    /// recursion) — the analogue of C++ symmetric transfer.
+    pub(crate) unsafe fn execute(&mut self, mut f: *mut FrameHeader) {
+        loop {
+            match ((*f).resume)(f, self) {
+                Transfer::To(next) => f = next,
+                Transfer::ToScheduler => break,
+            }
+        }
+    }
+
+    fn enter_active(&self) {
+        self.shared.active.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn exit_active(&mut self) {
+        self.flush_counters();
+        self.shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    // ----------------------------------------------------------------
+    // Algorithm 3 — fork/call dispatch
+    // ----------------------------------------------------------------
+
+    /// Dispatch the staged child. For forks, expose the parent's
+    /// continuation on our WSQ *after* its `step` returned (the paper
+    /// pushes inside the awaitable, i.e. equally after the parent
+    /// suspended) — a thief may resume the parent from this instant.
+    #[inline]
+    pub(crate) unsafe fn dispatch(&mut self, parent: *mut FrameHeader) -> Transfer {
+        let child = self.staged;
+        debug_assert!(!child.is_null(), "Step::Dispatch without a staged child");
+        self.staged = std::ptr::null_mut();
+        match self.staged_kind {
+            StageKind::Fork => {
+                self.shared.deques[self.id].push(FramePtr(parent));
+                self.local.forks += 1;
+                // Newly stealable work: wake a sleeper if any. Busy
+                // pools never park, so skip even the relaxed sleeper
+                // load there (§Perf-L3 iteration 4).
+                if self.shared.scheduler == crate::sched::SchedulerKind::Lazy {
+                    self.shared.wake_one(self.id);
+                }
+            }
+            StageKind::Call => {
+                self.local.calls += 1;
+            }
+        }
+        Transfer::To(child)
+    }
+
+    // ----------------------------------------------------------------
+    // Algorithm 4 — join
+    // ----------------------------------------------------------------
+
+    /// `co_await join`.
+    #[inline]
+    pub(crate) unsafe fn join_awaitable(&mut self, h: *mut FrameHeader) -> Transfer {
+        let steals = (*h).steals;
+        if steals == 0 {
+            // Fast path: continuation never stolen → every child completed
+            // locally (their hot-path pops returned us). No atomics.
+            return Transfer::To(h);
+        }
+        // Read everything we need *before* the linearization point.
+        let h_stack = (*h).stack;
+        if (*h).join.arrive(steals) {
+            // All dangling children already signalled: continue without
+            // suspending, adopting h's stack (Alg. 4 lines 8–10).
+            (*h).steals = 0;
+            self.adopt_stack(h_stack);
+            Transfer::To(h)
+        } else {
+            // Suspend; the last signalling child resumes h. After
+            // `arrive` fails we may not touch *h. If our current stack is
+            // h's stack it must stay with h (h's frame lives there);
+            // detach and take a fresh one.
+            if self.stack == h_stack {
+                self.stack = self.fresh_stack();
+            } else {
+                debug_assert!((*self.stack).is_empty());
+            }
+            Transfer::ToScheduler
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Algorithm 5 — final awaitable (cooperative return)
+    // ----------------------------------------------------------------
+
+    /// `co_return` epilogue. The typed shim has already written the
+    /// output slot and dropped the task state; here we deallocate the
+    /// frame and transfer control per the paper.
+    pub(crate) unsafe fn final_awaitable(&mut self, h: *mut FrameHeader) -> Transfer {
+        // Read all header fields before deallocation.
+        let parent = (*h).parent;
+        let kind = (*h).kind;
+        let size = (*h).alloc_size as usize;
+        let root_signal = (*h).root_signal;
+        debug_assert_eq!(self.stack, (*h).stack, "invariant 4");
+        (*self.stack).dealloc(h as *mut u8, size);
+
+        match kind {
+            FrameKind::Root => {
+                // Output was written by the shim; publish completion
+                // (flush first so `pool.metrics()` right after `run()`
+                // sees this strand's counts).
+                self.flush_counters();
+                self.shared.metrics.worker(self.id).bump_roots();
+                (*root_signal).complete();
+                // Root's stack is now empty; keep it as our current.
+                debug_assert!((*self.stack).is_empty());
+                Transfer::ToScheduler
+            }
+            FrameKind::Called => {
+                // Resolved at compile time in libfork; here the branch is
+                // predictable. Resume the caller directly.
+                Transfer::To(parent)
+            }
+            FrameKind::Forked => {
+                // Hot path (Alg. 5 line 10): reclaim the parent from our
+                // own deque. By invariant 2 the popped entry is `parent`.
+                if let Some(FramePtr(p)) = self.shared.deques[self.id].pop() {
+                    debug_assert_eq!(p, parent, "invariant 2");
+                    self.local.pops += 1;
+                    return Transfer::To(parent);
+                }
+                // Implicit join (parent's continuation was stolen). Read
+                // the parent's stack before the signal linearizes.
+                let p_stack = (*parent).stack;
+                self.shared.metrics.worker(self.id).bump_signals();
+                if (*parent).join.signal() {
+                    // Last joiner: resume the parent, adopting its stack
+                    // (Alg. 5 lines 16–18).
+                    (*parent).steals = 0;
+                    self.adopt_stack(p_stack);
+                    return Transfer::To(parent);
+                }
+                // Not last. If we hold the parent's stack (we are the
+                // original victim), release it to the future resumer
+                // (Alg. 5 lines 20–21) and take a fresh one.
+                if self.stack == p_stack {
+                    self.stack = self.fresh_stack();
+                } else {
+                    debug_assert!((*self.stack).is_empty());
+                }
+                Transfer::ToScheduler
+            }
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // Explicit scheduling (§III-D1)
+    // ----------------------------------------------------------------
+
+    /// Migrate `h` (with its stack) to `target`'s submission queue.
+    pub(crate) unsafe fn schedule_on(
+        &mut self,
+        h: *mut FrameHeader,
+        target: usize,
+    ) -> Transfer {
+        assert!(target < self.shared.submissions.len(), "no such worker {target}");
+        debug_assert_eq!(
+            self.stack,
+            (*h).stack,
+            "ScheduleOn is only legal outside fork-join scopes"
+        );
+        // The stack travels with the frame; take a fresh one for ourselves.
+        self.stack = self.fresh_stack();
+        self.shared.submissions[target].push(FramePtr(h));
+        self.shared.parkers[target].notify();
+        Transfer::ToScheduler
+    }
+
+    // ----------------------------------------------------------------
+    // Stack ownership plumbing
+    // ----------------------------------------------------------------
+
+    /// Adopt `target` as the current stack, releasing our (empty) one.
+    #[inline]
+    pub(crate) unsafe fn adopt_stack(&mut self, target: *mut SegmentedStack) {
+        if self.stack != target {
+            debug_assert!((*self.stack).is_empty(), "released stacks must be empty");
+            self.release_stack(self.stack);
+            self.stack = target;
+        }
+    }
+
+    /// Take the spare stack or allocate a new one.
+    #[inline]
+    pub(crate) fn fresh_stack(&mut self) -> *mut SegmentedStack {
+        if !self.spare.is_null() {
+            std::mem::replace(&mut self.spare, std::ptr::null_mut())
+        } else {
+            Box::into_raw(SegmentedStack::with_first_capacity(
+                self.shared.first_stacklet,
+            ))
+        }
+    }
+
+    /// Cache (or free) an empty stack.
+    #[inline]
+    unsafe fn release_stack(&mut self, s: *mut SegmentedStack) {
+        if self.spare.is_null() {
+            self.spare = s;
+        } else {
+            drop(Box::from_raw(s));
+        }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        unsafe {
+            debug_assert!((*self.stack).is_empty(), "worker exited with live frames");
+            drop(Box::from_raw(self.stack));
+            if !self.spare.is_null() {
+                drop(Box::from_raw(self.spare));
+            }
+        }
+    }
+}
+
+/// Monomorphized resume entry: run one `step()` of the typed task and
+/// apply the matching awaitable. Stored in every frame header.
+pub unsafe fn resume_shim<C: Coroutine>(
+    h: *mut FrameHeader,
+    w: &mut Worker,
+) -> Transfer {
+    let frame = h as *mut Frame<C>;
+    loop {
+        let step = {
+            let mut cx = Cx { worker: w, frame: h };
+            (*frame).task.step(&mut cx)
+        };
+        match step {
+            Step::Dispatch => return w.dispatch(h),
+            Step::Join => {
+                let t = w.join_awaitable(h);
+                // Join fast path resumes this same frame: loop here
+                // instead of bouncing through the trampoline's indirect
+                // call (§Perf-L3 iteration 2).
+                if t == Transfer::To(h) {
+                    continue;
+                }
+                return t;
+            }
+            Step::Return(v) => {
+                // co_return: write the result through the parent's slot,
+                // then destroy the task state, then run the final
+                // awaitable.
+                let out = (*frame).out;
+                if !out.is_null() {
+                    out.write(v);
+                }
+                std::ptr::drop_in_place(&mut (*frame).task);
+                return w.final_awaitable(h);
+            }
+            Step::ScheduleOn(target) => return w.schedule_on(h, target),
+        }
+    }
+}

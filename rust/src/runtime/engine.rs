@@ -1,0 +1,180 @@
+//! PJRT engine: compile-once, execute-many leaf kernels.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Edge length of the matmul leaf tile baked into the AOT artifact
+/// (must match `python/compile/model.py::LEAF_DIM`).
+pub const LEAF_DIM: usize = 256;
+
+/// Quadrature panels per `quad_leaf` call (must match
+/// `python/compile/model.py::QUAD_PANELS` — checked by the manifest
+/// test in `rust/tests/pjrt.rs`).
+pub const QUAD_PANELS: usize = 4096;
+
+/// A loaded PJRT engine holding the compiled leaf executables.
+pub struct Engine {
+    // Fields below: the xla crate's client/executable wrap `Rc`s and raw
+    // PJRT pointers, so they are neither Send nor Sync by default. The
+    // PJRT C API itself is thread-safe for execution; we additionally
+    // serialize every call through `exec_lock`, and the `Rc`s are never
+    // cloned after construction, so cross-thread sharing is sound (see
+    // the unsafe impls below).
+    client: xla::PjRtClient,
+    matmul: xla::PjRtLoadedExecutable,
+    quad: xla::PjRtLoadedExecutable,
+    /// PJRT CPU execution is thread-safe, but buffer transfers share the
+    /// client; a coarse lock keeps the leaf path simple and is not the
+    /// bottleneck (leaves are ≥ 2·LEAF_DIM³ flops each).
+    exec_lock: Mutex<()>,
+}
+
+// SAFETY: every use of the client/executables after construction goes
+// through `exec_lock`; the inner Rc reference counts are not mutated
+// cross-thread (no clones escape), and PJRT CPU execution is itself
+// thread-safe.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load and compile all artifacts from a directory (default:
+    /// `artifacts/` next to the workspace root).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let matmul = Self::compile(&client, &dir.join("matmul_leaf.hlo.txt"))?;
+        let quad = Self::compile(&client, &dir.join("quad_leaf.hlo.txt"))?;
+        Ok(Engine { client, matmul, quad, exec_lock: Mutex::new(()) })
+    }
+
+    /// Default artifact location: `$REPO/artifacts` (env override
+    /// `RUSTFORK_ARTIFACTS`).
+    pub fn load_default() -> Result<Engine> {
+        Self::load_dir(Self::default_dir())
+    }
+
+    /// Resolve the artifact directory.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("RUSTFORK_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        // Walk up from the executable / cwd looking for `artifacts/`.
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..4 {
+            let cand = cur.join("artifacts");
+            if cand.join("matmul_leaf.hlo.txt").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).with_context(|| format!("compile {}", path.display()))
+    }
+
+    /// Number of PJRT devices (1 on the CPU client).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Execute the matmul leaf: returns `a · b` for two row-major
+    /// `LEAF_DIM × LEAF_DIM` f32 tiles.
+    pub fn matmul_leaf(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(a.len() == LEAF_DIM * LEAF_DIM, "a: wrong tile size");
+        anyhow::ensure!(b.len() == LEAF_DIM * LEAF_DIM, "b: wrong tile size");
+        let la = xla::Literal::vec1(a).reshape(&[LEAF_DIM as i64, LEAF_DIM as i64])?;
+        let lb = xla::Literal::vec1(b).reshape(&[LEAF_DIM as i64, LEAF_DIM as i64])?;
+        let result = {
+            let _g = self.exec_lock.lock().unwrap();
+            self.matmul.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?
+        };
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Execute the quadrature leaf: trapezoid sum of the benchmark
+    /// integrand over `[lo, hi]` with `QUAD_PANELS` panels.
+    pub fn quad_leaf(&self, lo: f32, hi: f32) -> Result<f32> {
+        let llo = xla::Literal::from(lo);
+        let lhi = xla::Literal::from(hi);
+        let result = {
+            let _g = self.exec_lock.lock().unwrap();
+            self.quad.execute::<xla::Literal>(&[llo, lhi])?[0][0].to_literal_sync()?
+        };
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.get_first_element::<f32>()?)
+    }
+}
+
+/// [`crate::workloads::matmul::GemmLeaf`] adapter dispatching leaf tiles
+/// to the PJRT engine. Tiles smaller than `LEAF_DIM` (ragged edges of
+/// the D&C recursion) fall back to the scalar kernel.
+pub struct PjrtGemmLeaf {
+    engine: Engine,
+}
+
+impl PjrtGemmLeaf {
+    /// Wrap a loaded engine.
+    pub fn new(engine: Engine) -> Self {
+        PjrtGemmLeaf { engine }
+    }
+
+    /// Access the inner engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl crate::workloads::matmul::GemmLeaf for PjrtGemmLeaf {
+    unsafe fn gemm(
+        &self,
+        a: *const f32,
+        b: *const f32,
+        c: *mut f32,
+        m: usize,
+        n: usize,
+        k: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+    ) {
+        if m == LEAF_DIM && n == LEAF_DIM && k == LEAF_DIM {
+            // Gather the strided tiles into dense buffers, run the
+            // compiled Pallas kernel, scatter-accumulate the product.
+            let mut da = vec![0.0f32; m * k];
+            let mut db = vec![0.0f32; k * n];
+            for i in 0..m {
+                std::ptr::copy_nonoverlapping(a.add(i * lda), da[i * k..].as_mut_ptr(), k);
+            }
+            for i in 0..k {
+                std::ptr::copy_nonoverlapping(b.add(i * ldb), db[i * n..].as_mut_ptr(), n);
+            }
+            let prod = self
+                .engine
+                .matmul_leaf(&da, &db)
+                .expect("PJRT matmul leaf failed");
+            for i in 0..m {
+                let crow = c.add(i * ldc);
+                for j in 0..n {
+                    *crow.add(j) += prod[i * n + j];
+                }
+            }
+        } else {
+            crate::workloads::matmul::SCALAR_LEAF.gemm(a, b, c, m, n, k, lda, ldb, ldc);
+        }
+    }
+}

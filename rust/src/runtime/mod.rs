@@ -1,0 +1,13 @@
+//! The PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them from the rust hot path.
+//!
+//! Python runs **once** (`make artifacts`); afterwards the rust binary
+//! is self-contained: [`Engine::load_dir`] parses the HLO text with
+//! `HloModuleProto::from_text_file` (text, not serialized protos — the
+//! bundled xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos),
+//! compiles each module on the PJRT CPU client, and exposes typed entry
+//! points the workloads dispatch at D&C leaves.
+
+pub mod engine;
+
+pub use engine::{Engine, LEAF_DIM, QUAD_PANELS};

@@ -1,0 +1,58 @@
+//! The lazy (adaptive) idle policy (paper §III-D).
+//!
+//! A thief that has repeatedly failed to find work tries to park. The
+//! sleep condition implements the paper's per-NUMA-group rule:
+//!
+//! * if **no worker is active globally** there is nothing to steal —
+//!   everyone may sleep (submissions wake their target directly);
+//! * otherwise a worker may sleep only if it is **not the last awake
+//!   worker of its NUMA node** — keeping ≥1 thief awake per node
+//!   minimizes both wake-up latency and cross-node stealing.
+//!
+//! Parking uses a timeout as a liveness backstop: a lost wakeup costs at
+//! most one timeout period, never a hang. Wake-ups are targeted through
+//! the per-worker parked flags (see `Shared::wake_one`).
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use crate::rt::worker::Worker;
+
+/// Backstop park duration; wake-ups normally arrive via `notify` long
+/// before this expires.
+const PARK_BACKSTOP: Duration = Duration::from_millis(1);
+
+/// Try to park the worker per the adaptive policy. Called from the
+/// scheduler loop once the steal backoff is exhausted.
+pub fn idle(w: &mut Worker) {
+    let shared = &w.shared;
+    let node = shared.topology.node_of(w.id);
+    let awake = &shared.awake_in_node[node];
+
+    // Tentatively leave the awake set.
+    let was_awake = awake.fetch_sub(1, Ordering::SeqCst);
+    let active = shared.active.load(Ordering::SeqCst);
+    if active > 0 && was_awake <= 1 {
+        // Work exists somewhere and we are the node's last thief: the
+        // paper keeps us awake to patrol the node.
+        awake.fetch_add(1, Ordering::SeqCst);
+        std::thread::yield_now();
+        return;
+    }
+
+    shared.metrics.worker(w.id).bump_sleeps();
+    shared.sleepers.fetch_add(1, Ordering::SeqCst);
+    shared.parked_flag[w.id].store(true, Ordering::Release);
+
+    // Re-check for work between flag-set and park (close the race with
+    // wake_one's flag CAS).
+    let should_park = shared.submissions[w.id].is_empty()
+        && !shared.shutdown.load(Ordering::Acquire);
+    if should_park {
+        shared.parkers[w.id].park_timeout(PARK_BACKSTOP);
+    }
+
+    shared.parked_flag[w.id].store(false, Ordering::Release);
+    shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+    awake.fetch_add(1, Ordering::SeqCst);
+}

@@ -1,0 +1,62 @@
+//! Scheduler flavours (paper §III-D).
+//!
+//! Both schedulers are **greedy** (a worker with work executes it) and
+//! differ only in the idle policy:
+//!
+//! * [`SchedulerKind::Busy`] — continuous randomized stealing with
+//!   exponential backoff. Minimal latency, P×100% CPU while idle.
+//! * [`SchedulerKind::Lazy`] — the adaptive scheduler: workers are
+//!   grouped by NUMA node; while at least one worker is active globally,
+//!   **at least one thief stays awake per node**; the rest park. Trades
+//!   a little wake-up latency for near-zero idle CPU, and keeping one
+//!   thief per node reduces cross-node stealing (the paper's variation on
+//!   Lin, Huang & Wong's adaptive scheduler).
+
+pub mod lazy;
+
+/// Which idle policy a pool uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// Busy-waiting randomized stealing (minimum latency).
+    Busy,
+    /// Adaptive sleeping with one awake thief per NUMA node.
+    Lazy,
+}
+
+impl SchedulerKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "busy" | "busy-lf" => Some(SchedulerKind::Busy),
+            "lazy" | "lazy-lf" => Some(SchedulerKind::Lazy),
+            _ => None,
+        }
+    }
+
+    /// Display name matching the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Busy => "Busy-LF",
+            SchedulerKind::Lazy => "Lazy-LF",
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(SchedulerKind::parse("busy"), Some(SchedulerKind::Busy));
+        assert_eq!(SchedulerKind::parse("Lazy-LF"), Some(SchedulerKind::Lazy));
+        assert_eq!(SchedulerKind::parse("nope"), None);
+        assert_eq!(SchedulerKind::Busy.label(), "Busy-LF");
+    }
+}

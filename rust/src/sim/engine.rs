@@ -1,0 +1,664 @@
+//! The discrete-event work-stealing simulator core.
+//!
+//! Virtual time is in nanoseconds. Each worker alternates between
+//! *executing a task node* (busy until `now + body/speed`) and
+//! *acquiring work* (own deque pop, else Eq. (6) steal). Frames carry
+//! the unspawned-children queue and the outstanding-children counter —
+//! the node-granularity equivalent of the real runtime's continuation +
+//! join counter.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::numa::{AliasSampler, NumaTopology};
+use crate::sync::XorShift64;
+
+use super::workload::SimTask;
+
+/// Which side of a fork is exposed to thieves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StealDiscipline {
+    /// libfork: the parent's continuation is stealable; children run
+    /// depth-first on the forking worker.
+    Continuation,
+    /// TBB/openMP/taskflow: children are pushed; the parent's join node
+    /// persists on the heap.
+    Child,
+}
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Worker count P.
+    pub workers: usize,
+    /// NUMA model (defaults to the paper's 2×56 testbed shape).
+    pub topology: NumaTopology,
+    /// Fork exposure discipline.
+    pub discipline: StealDiscipline,
+    /// Lazy (adaptive sleeping) idle policy instead of busy spinning.
+    pub lazy: bool,
+    /// Per-fork framework overhead (ns) — calibrate from the real
+    /// `--bench overhead` measurements.
+    pub overhead_ns: u64,
+    /// Join/epilogue cost per interior node (ns).
+    pub join_ns: u64,
+    /// Successful steal latency, same NUMA node (ns).
+    pub steal_local_ns: u64,
+    /// Successful steal latency, cross-node (ns).
+    pub steal_remote_ns: u64,
+    /// Failed steal probe cost (ns).
+    pub steal_miss_ns: u64,
+    /// Wake-from-park latency for the lazy policy (ns).
+    pub wake_ns: u64,
+    /// Model the >56-active-cores clock throttle.
+    pub throttle: bool,
+    /// Boost / base clock (GHz) for the throttle model.
+    pub boost_ghz: f64,
+    /// Base clock (GHz).
+    pub base_ghz: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Ablation: uniform victim selection instead of Eq. (6) weights.
+    pub uniform_victims: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            workers: 1,
+            topology: NumaTopology::paper_testbed(),
+            discipline: StealDiscipline::Continuation,
+            lazy: false,
+            overhead_ns: 15,
+            join_ns: 8,
+            steal_local_ns: 150,
+            steal_remote_ns: 600,
+            steal_miss_ns: 80,
+            wake_ns: 3000,
+            throttle: true,
+            boost_ghz: 3.8,
+            // All-core sustained clock (between the 2.0 GHz base and the
+            // 3.8 GHz single-core boost): keeps T_p improving past the
+            // 56-core knee with a shallower slope, as in Fig. 5.
+            base_ghz: 2.6,
+            seed: 0x51AB,
+            uniform_victims: false,
+        }
+    }
+}
+
+/// Simulation outputs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    /// Virtual completion time of the root task (T_p), ns.
+    pub t_p_ns: u64,
+    /// Total body work (T_s — the serial projection), ns.
+    pub t_s_ns: u64,
+    /// Total work + framework overhead (T_1), ns.
+    pub t_1_ns: u64,
+    /// Tasks executed.
+    pub tasks: u64,
+    /// Successful steals.
+    pub steals: u64,
+    /// Cross-node steals.
+    pub remote_steals: u64,
+    /// Failed steal probes.
+    pub steal_misses: u64,
+    /// Σ busy time / (P · T_p): worker utilization.
+    pub busy_frac: f64,
+    /// Σ awake time / (P · T_p): CPU occupancy (lazy < busy).
+    pub awake_frac: f64,
+}
+
+impl SimResult {
+    /// Speedup vs the serial projection (the paper's Eq. 15; bounded
+    /// above by P·T_s/T_1, i.e. penalized by framework overhead).
+    pub fn speedup(&self) -> f64 {
+        self.t_s_ns as f64 / self.t_p_ns as f64
+    }
+
+    /// Scaling vs the single-worker run of the same framework
+    /// (T_1 / T_p — isolates scheduler scalability from overhead).
+    pub fn t1_speedup(&self) -> f64 {
+        self.t_1_ns as f64 / self.t_p_ns as f64
+    }
+
+    /// Parallel efficiency (Eq. 16).
+    pub fn efficiency(&self, p: usize) -> f64 {
+        self.speedup() / p as f64
+    }
+}
+
+const NONE: u32 = u32::MAX;
+
+/// A fork-scope frame in the simulator's arena.
+struct Frame {
+    parent: u32,
+    /// Outstanding children (spawned or not).
+    pending: u32,
+    /// Unspawned children (the continuation's remaining forks).
+    queue: VecDeque<SimTask>,
+}
+
+/// An entry in a worker's deque.
+enum QItem {
+    /// A continuation: frame with unspawned children (continuation
+    /// stealing).
+    Cont(u32),
+    /// A ready child task under a frame (child stealing).
+    Task(SimTask, u32),
+}
+
+enum WorkerState {
+    /// Executing a node body; at the event it expands/completes.
+    Busy { task_frame: u32, children: Vec<SimTask> },
+    /// Probing for work at the event time.
+    Stealing,
+    /// Parked (lazy) — woken by pushes.
+    Parked,
+    Idle,
+}
+
+struct SimWorker {
+    state: WorkerState,
+    deque: VecDeque<QItem>,
+    busy_ns: u64,
+    last_wake: u64,
+    awake_ns: u64,
+}
+
+/// The simulator.
+pub struct Simulator {
+    cfg: SimConfig,
+    /// Physical cores of the modelled machine (throttle threshold) —
+    /// captured before the topology is resized to P workers.
+    machine_cores: usize,
+    samplers: Vec<AliasSampler>,
+    rng: XorShift64,
+    frames: Vec<Frame>,
+    free_frames: Vec<u32>,
+    workers: Vec<SimWorker>,
+    events: BinaryHeap<Reverse<(u64, u64, usize)>>, // (time, seq, wid)
+    seq: u64,
+    now: u64,
+    busy_count: usize,
+    parked: Vec<usize>,
+    root_done_at: Option<u64>,
+    /// Consecutive failed probes per worker (exponential backoff).
+    miss_streak: Vec<u32>,
+    // accounting
+    tasks: u64,
+    steals: u64,
+    remote_steals: u64,
+    steal_misses: u64,
+    t_s: u64,
+    t_1: u64,
+}
+
+impl Simulator {
+    /// Build a simulator for `cfg`.
+    pub fn new(cfg: SimConfig) -> Self {
+        let p = cfg.workers.max(1);
+        let topo = cfg.topology.with_cores(p);
+        let samplers = if p > 1 {
+            (0..p)
+                .map(|i| {
+                    if cfg.uniform_victims {
+                        let w: Vec<f64> =
+                            (0..p).map(|j| if j == i { 0.0 } else { 1.0 }).collect();
+                        AliasSampler::new(&w)
+                    } else {
+                        AliasSampler::new(&topo.victim_weights(i))
+                    }
+                })
+                .collect()
+        } else {
+            vec![AliasSampler::new(&[1.0])]
+        };
+        let rng = XorShift64::new(cfg.seed);
+        let machine_cores = cfg.topology.cores().max(p);
+        Simulator {
+            cfg: SimConfig { topology: topo, workers: p, ..cfg },
+            machine_cores,
+            samplers,
+            rng,
+            frames: Vec::new(),
+            free_frames: Vec::new(),
+            workers: (0..p)
+                .map(|_| SimWorker {
+                    state: WorkerState::Idle,
+                    deque: VecDeque::new(),
+                    busy_ns: 0,
+                    last_wake: 0,
+                    awake_ns: 0,
+                })
+                .collect(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            busy_count: 0,
+            parked: Vec::new(),
+            root_done_at: None,
+            miss_streak: vec![0; p],
+            tasks: 0,
+            steals: 0,
+            remote_steals: 0,
+            steal_misses: 0,
+            t_s: 0,
+            t_1: 0,
+        }
+    }
+
+    /// Current clock-speed factor (≤ 1) per the throttle model: full
+    /// boost up to half the cores active, linear decay to base at full
+    /// occupancy.
+    fn speed(&self) -> f64 {
+        if !self.cfg.throttle {
+            return 1.0;
+        }
+        // The paper's knee: the Xeon holds full boost while at most half
+        // of the *machine's* cores are active, then decays towards the
+        // base clock as thermal load grows — an absolute threshold (56
+        // on the 112-core testbed), not a fraction of P.
+        let half = self.machine_cores as f64 / 2.0;
+        let busy = self.busy_count as f64;
+        if busy <= half {
+            1.0
+        } else {
+            let f = self.cfg.boost_ghz
+                - (self.cfg.boost_ghz - self.cfg.base_ghz) * (busy - half) / half;
+            f / self.cfg.boost_ghz
+        }
+    }
+
+    fn alloc_frame(&mut self, f: Frame) -> u32 {
+        if let Some(i) = self.free_frames.pop() {
+            self.frames[i as usize] = f;
+            i
+        } else {
+            self.frames.push(f);
+            (self.frames.len() - 1) as u32
+        }
+    }
+
+    fn schedule(&mut self, t: u64, wid: usize) {
+        self.seq += 1;
+        self.events.push(Reverse((t, self.seq, wid)));
+    }
+
+    /// Begin executing `task` on `wid` at `self.now`.
+    fn start_task(&mut self, wid: usize, task: SimTask, frame: u32) {
+        let body = task.work_ns() + self.cfg.overhead_ns;
+        let dur = (body as f64 / self.speed()).ceil() as u64;
+        let children = task.children();
+        self.tasks += 1;
+        self.t_s += task.work_ns();
+        self.t_1 += body;
+        self.workers[wid].busy_ns += dur;
+        self.workers[wid].state = WorkerState::Busy { task_frame: frame, children };
+        self.miss_streak[wid] = 0;
+        self.busy_count += 1;
+        self.schedule(self.now + dur.max(1), wid);
+    }
+
+    /// Child-completion cascade from frame `fi`.
+    fn notify(&mut self, mut fi: u32, _wid: usize) {
+        loop {
+            if fi == NONE {
+                self.root_done_at = Some(self.now);
+                return;
+            }
+            let f = &mut self.frames[fi as usize];
+            debug_assert!(f.pending > 0);
+            f.pending -= 1;
+            if f.pending > 0 || !f.queue.is_empty() {
+                return;
+            }
+            // Frame complete: cascade to parent. (The join epilogue is
+            // below timeline resolution; charging it to busy_ns without
+            // advancing the clock would inflate utilization > 1.)
+            let parent = f.parent;
+            self.free_frames.push(fi);
+            fi = parent;
+        }
+    }
+
+    /// Wake a parked worker (prefer `node`) for newly-pushed work.
+    fn wake_one(&mut self, from: usize) {
+        if self.parked.is_empty() {
+            return;
+        }
+        let node = self.cfg.topology.node_of(from);
+        let pos = self
+            .parked
+            .iter()
+            .position(|&w| self.cfg.topology.node_of(w) == node)
+            .unwrap_or(self.parked.len() - 1);
+        let w = self.parked.swap_remove(pos);
+        self.workers[w].state = WorkerState::Stealing;
+        self.workers[w].last_wake = self.now + self.cfg.wake_ns;
+        self.schedule(self.now + self.cfg.wake_ns, w);
+    }
+
+    fn push_item(&mut self, wid: usize, item: QItem) {
+        let was_empty = self.workers[wid].deque.is_empty();
+        self.workers[wid].deque.push_back(item);
+        if was_empty || self.cfg.lazy {
+            self.wake_one(wid);
+        }
+    }
+
+    /// Acquire next work for `wid` at `self.now` (after completing a
+    /// strand): own pop, else transition to stealing.
+    fn acquire(&mut self, wid: usize) {
+        if let Some(item) = self.workers[wid].deque.pop_back() {
+            self.resume_item(wid, item);
+            return;
+        }
+        // Idle: park or probe.
+        if self.cfg.lazy && self.deques_all_empty() {
+            self.park(wid);
+        } else {
+            self.workers[wid].state = WorkerState::Stealing;
+            self.schedule(self.now + self.cfg.steal_miss_ns, wid);
+        }
+    }
+
+    fn deques_all_empty(&self) -> bool {
+        self.workers.iter().all(|w| w.deque.is_empty())
+    }
+
+    fn park(&mut self, wid: usize) {
+        let w = &mut self.workers[wid];
+        w.awake_ns += self.now.saturating_sub(w.last_wake);
+        w.state = WorkerState::Parked;
+        self.parked.push(wid);
+    }
+
+    fn resume_item(&mut self, wid: usize, item: QItem) {
+        match item {
+            QItem::Task(task, frame) => self.start_task(wid, task, frame),
+            QItem::Cont(fi) => {
+                let task = self.frames[fi as usize]
+                    .queue
+                    .pop_front()
+                    .expect("continuation with no children");
+                if !self.frames[fi as usize].queue.is_empty() {
+                    // Re-expose the continuation (next fork of the scope).
+                    self.push_item(wid, QItem::Cont(fi));
+                }
+                self.start_task(wid, task, fi);
+            }
+        }
+    }
+
+    /// Handle an event for `wid`.
+    fn on_event(&mut self, wid: usize) {
+        let state = std::mem::replace(&mut self.workers[wid].state, WorkerState::Idle);
+        match state {
+            WorkerState::Busy { task_frame, children } => {
+                self.busy_count -= 1;
+                if children.is_empty() {
+                    // Leaf complete.
+                    self.notify(task_frame, wid);
+                    if self.root_done_at.is_some() {
+                        return;
+                    }
+                    self.acquire(wid);
+                    return;
+                }
+                let n = children.len() as u32;
+                let fi = self.alloc_frame(Frame {
+                    parent: task_frame,
+                    pending: n,
+                    queue: VecDeque::new(),
+                });
+                match self.cfg.discipline {
+                    StealDiscipline::Continuation => {
+                        let mut q: VecDeque<SimTask> = children.into();
+                        let first = q.pop_front().unwrap();
+                        self.frames[fi as usize].queue = q;
+                        if !self.frames[fi as usize].queue.is_empty() {
+                            self.push_item(wid, QItem::Cont(fi));
+                        }
+                        self.start_task(wid, first, fi);
+                    }
+                    StealDiscipline::Child => {
+                        let mut iter = children.into_iter();
+                        let first = iter.next().unwrap();
+                        for c in iter {
+                            self.push_item(wid, QItem::Task(c, fi));
+                        }
+                        // TBB-style: run the first child depth-first.
+                        self.start_task(wid, first, fi);
+                    }
+                }
+            }
+            WorkerState::Stealing => {
+                // Probe a victim.
+                let victim = if self.cfg.workers > 1 {
+                    self.samplers[wid].sample(&mut self.rng)
+                } else {
+                    wid
+                };
+                if victim != wid {
+                    if let Some(item) = self.workers[victim].deque.pop_front() {
+                        self.steals += 1;
+                        let dist = self.cfg.topology.distance(wid, victim);
+                        let lat = if dist > 1 {
+                            self.remote_steals += 1;
+                            self.cfg.steal_remote_ns
+                        } else {
+                            self.cfg.steal_local_ns
+                        };
+                        // Charge the transfer latency to the stolen
+                        // strand's start time.
+                        let saved_now = self.now;
+                        self.now = saved_now + lat;
+                        self.resume_item(wid, item);
+                        self.now = saved_now;
+                        self.miss_streak[wid] = 0;
+                        return;
+                    }
+                }
+                self.steal_misses += 1;
+                if self.cfg.lazy && self.deques_all_empty() {
+                    self.park(wid);
+                } else {
+                    // Exponential backoff on repeated misses (bounds the
+                    // event rate of spinning thieves; the real busy
+                    // scheduler backs off identically).
+                    let streak = self.miss_streak[wid].min(5);
+                    self.miss_streak[wid] += 1;
+                    let delay = self.cfg.steal_miss_ns << streak;
+                    self.workers[wid].state = WorkerState::Stealing;
+                    self.schedule(self.now + delay, wid);
+                }
+            }
+            WorkerState::Parked | WorkerState::Idle => {
+                // Woken: start probing.
+                self.workers[wid].state = WorkerState::Stealing;
+                self.schedule(self.now, wid);
+            }
+        }
+    }
+
+    /// Run `root` to completion; returns the metrics.
+    pub fn run(mut self, root: SimTask) -> SimResult {
+        // All workers start awake and probing; worker 0 gets the root.
+        for w in 0..self.cfg.workers {
+            self.workers[w].last_wake = 0;
+        }
+        self.start_task(0, root, NONE);
+        for w in 1..self.cfg.workers {
+            if self.cfg.lazy {
+                self.park(w);
+            } else {
+                self.workers[w].state = WorkerState::Stealing;
+                self.schedule(self.cfg.steal_miss_ns, w);
+            }
+        }
+
+        while let Some(Reverse((t, _, wid))) = self.events.pop() {
+            if self.root_done_at.is_some() {
+                break;
+            }
+            self.now = t;
+            // Skip stale events for parked workers.
+            if matches!(self.workers[wid].state, WorkerState::Parked) {
+                continue;
+            }
+            self.on_event(wid);
+        }
+
+        let t_p = self.root_done_at.unwrap_or(self.now).max(1);
+        let p = self.cfg.workers as f64;
+        let busy: u64 = self.workers.iter().map(|w| w.busy_ns).sum();
+        let awake: u64 = self
+            .workers
+            .iter()
+            .map(|w| {
+                if matches!(w.state, WorkerState::Parked) {
+                    w.awake_ns
+                } else {
+                    w.awake_ns + t_p.saturating_sub(w.last_wake)
+                }
+            })
+            .sum();
+        SimResult {
+            t_p_ns: t_p,
+            t_s_ns: self.t_s,
+            t_1_ns: self.t_1,
+            tasks: self.tasks,
+            steals: self.steals,
+            remote_steals: self.remote_steals,
+            steal_misses: self.steal_misses,
+            busy_frac: busy as f64 / (p * t_p as f64),
+            awake_frac: (awake as f64 / (p * t_p as f64)).min(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_fib(p: usize, n: u32, discipline: StealDiscipline) -> SimResult {
+        let cfg = SimConfig {
+            workers: p,
+            discipline,
+            throttle: false,
+            ..SimConfig::default()
+        };
+        Simulator::new(cfg).run(SimTask::fib(n))
+    }
+
+    #[test]
+    fn single_worker_matches_t1() {
+        let r = run_fib(1, 15, StealDiscipline::Continuation);
+        // With one worker, T_p ≈ T_1 (+ join epilogues).
+        assert!(r.t_p_ns >= r.t_1_ns, "{} < {}", r.t_p_ns, r.t_1_ns);
+        assert!(r.t_p_ns < r.t_1_ns * 2);
+        assert_eq!(r.steals, 0);
+    }
+
+    #[test]
+    fn speedup_scales_with_workers() {
+        let r1 = run_fib(1, 22, StealDiscipline::Continuation);
+        let r8 = run_fib(8, 22, StealDiscipline::Continuation);
+        let r32 = run_fib(32, 22, StealDiscipline::Continuation);
+        // T_1/T_p scaling should be near-linear (Eq. 2): ≥ 0.8·P here.
+        assert!(r8.t1_speedup() > 6.4, "8-worker T1-speedup {}", r8.t1_speedup());
+        assert!(
+            r32.t1_speedup() > 20.0,
+            "32-worker T1-speedup {}",
+            r32.t1_speedup()
+        );
+        assert!(r1.t1_speedup() <= 1.01);
+        // And Eq. 15 speedup is the T1 scaling damped by T_1/T_s.
+        assert!(r8.speedup() < r8.t1_speedup());
+    }
+
+    #[test]
+    fn task_counts_invariant_across_p() {
+        let a = run_fib(1, 18, StealDiscipline::Continuation);
+        let b = run_fib(16, 18, StealDiscipline::Continuation);
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.t_s_ns, b.t_s_ns);
+    }
+
+    #[test]
+    fn child_stealing_also_completes() {
+        let a = run_fib(4, 18, StealDiscipline::Child);
+        let b = run_fib(4, 18, StealDiscipline::Continuation);
+        assert_eq!(a.tasks, b.tasks);
+        assert!(a.t1_speedup() > 2.0, "child-stealing T1-speedup {}", a.t1_speedup());
+    }
+
+    #[test]
+    fn steals_happen_and_are_mostly_local() {
+        let cfg = SimConfig { workers: 64, ..SimConfig::default() };
+        let r = Simulator::new(cfg).run(SimTask::fib(24));
+        assert!(r.steals > 0);
+        // Eq. (6): ~80% of victims are same-node.
+        let local = r.steals - r.remote_steals;
+        assert!(
+            local as f64 / r.steals as f64 > 0.6,
+            "local fraction {}",
+            local as f64 / r.steals as f64
+        );
+    }
+
+    #[test]
+    fn lazy_uses_less_cpu_on_small_trees() {
+        let busy = Simulator::new(SimConfig {
+            workers: 32,
+            lazy: false,
+            ..SimConfig::default()
+        })
+        .run(SimTask::fib(16));
+        let lazy = Simulator::new(SimConfig {
+            workers: 32,
+            lazy: true,
+            ..SimConfig::default()
+        })
+        .run(SimTask::fib(16));
+        assert!(
+            lazy.awake_frac < busy.awake_frac,
+            "lazy {} !< busy {}",
+            lazy.awake_frac,
+            busy.awake_frac
+        );
+    }
+
+    #[test]
+    fn throttle_slows_high_occupancy() {
+        let no = Simulator::new(SimConfig {
+            workers: 96,
+            throttle: false,
+            ..SimConfig::default()
+        })
+        .run(SimTask::fib(24));
+        let yes = Simulator::new(SimConfig {
+            workers: 96,
+            throttle: true,
+            ..SimConfig::default()
+        })
+        .run(SimTask::fib(24));
+        assert!(yes.t_p_ns > no.t_p_ns, "throttled {} !> {}", yes.t_p_ns, no.t_p_ns);
+    }
+
+    #[test]
+    fn brent_bound_holds() {
+        // T_p >= max(T_1/P, T_inf): at least check T_p >= T_1/P.
+        for p in [2usize, 8, 24] {
+            let r = run_fib(p, 20, StealDiscipline::Continuation);
+            assert!(
+                r.t_p_ns as f64 >= r.t_1_ns as f64 / p as f64 * 0.99,
+                "P={p}: T_p {} < T_1/P {}",
+                r.t_p_ns,
+                r.t_1_ns / p as u64
+            );
+        }
+    }
+}

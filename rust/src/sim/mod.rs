@@ -1,0 +1,27 @@
+//! Discrete-event simulation of work-stealing execution (the
+//! hardware-substitution layer for the paper's 112-core time-scaling
+//! figures — see DESIGN.md §Substitutions).
+//!
+//! This testbed has one physical core, so Fig. 5/6's wall-clock speedup
+//! curves cannot be measured directly. The simulator executes the same
+//! task DAGs (fib, integrate, nqueens, UTS — generated lazily from the
+//! identical recurrences) under a virtual-time model of the paper's
+//! machine:
+//!
+//! * **continuation stealing** (libfork model) or **child stealing**
+//!   (TBB/openMP/taskflow model) disciplines over per-worker deques,
+//! * Eq. (6) NUMA victim selection with distance-dependent steal
+//!   latency on the synthetic 2×56-core topology,
+//! * per-framework per-task overhead calibrated from the *real* runtime
+//!   measurements (`--bench overhead`),
+//! * the clock-boost throttle the paper observes above 56 active cores
+//!   (3.8 GHz boost → 2.0 GHz base).
+//!
+//! Outputs virtual `T_p`, steal counts and busy fractions per P, from
+//! which the harness prints Fig. 5/6-shaped speedup/efficiency series.
+
+pub mod engine;
+pub mod workload;
+
+pub use engine::{SimConfig, SimResult, Simulator, StealDiscipline};
+pub use workload::SimTask;

@@ -1,0 +1,193 @@
+//! Lazily-generated task DAGs for the simulator — the same recurrences
+//! as [`crate::workloads`], expressed as child enumerators plus a leaf
+//! compute-cost model.
+
+use crate::workloads::uts::{Node, UtsConfig};
+
+/// A simulated task: expands into children (empty = leaf) and carries
+/// the compute cost of its own body in nanoseconds (excluding framework
+/// overhead, which the simulator adds per discipline).
+#[derive(Debug, Clone)]
+pub enum SimTask {
+    /// Fibonacci.
+    Fib(u32),
+    /// Adaptive integration modelled as a balanced bisection of the
+    /// given remaining depth (the real refinement depth distribution is
+    /// narrow; see EXPERIMENTS.md).
+    Integrate(u32),
+    /// N-queens at (depth, legal-successor count) — modelled with the
+    /// exact branching profile of an n×n board, precomputed cheaply.
+    Nqueens { n: u8, cols: NqState },
+    /// UTS node under a tree config.
+    Uts(UtsConfig, Node),
+    /// Synthetic balanced tree (ablations): (depth, fanout, leaf_ns).
+    Balanced { depth: u32, fanout: u32, leaf_ns: u64 },
+}
+
+/// Compact n-queens placement state (same encoding as the workload).
+#[derive(Debug, Clone, Copy)]
+pub struct NqState {
+    cols: [u8; 16],
+    depth: u8,
+}
+
+impl NqState {
+    fn root() -> Self {
+        NqState { cols: [0; 16], depth: 0 }
+    }
+
+    fn safe(&self, col: u8) -> bool {
+        for i in 0..self.depth as usize {
+            let dr = (self.depth as usize - i) as i32;
+            let dc = col as i32 - self.cols[i] as i32;
+            if dc == 0 || dc == dr || dc == -dr {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn push(&self, col: u8) -> Self {
+        let mut s = *self;
+        s.cols[s.depth as usize] = col;
+        s.depth += 1;
+        s
+    }
+}
+
+impl SimTask {
+    /// Root task for each benchmark family.
+    pub fn fib(n: u32) -> Self {
+        SimTask::Fib(n)
+    }
+
+    /// Integration root: depth chosen so leaf count ≈ the real
+    /// workload's (`depth = log2(leaves)`).
+    pub fn integrate(depth: u32) -> Self {
+        SimTask::Integrate(depth)
+    }
+
+    /// N-queens root.
+    pub fn nqueens(n: u8) -> Self {
+        SimTask::Nqueens { n, cols: NqState::root() }
+    }
+
+    /// UTS root.
+    pub fn uts(cfg: UtsConfig) -> Self {
+        let root = cfg.root();
+        SimTask::Uts(cfg, root)
+    }
+
+    /// Enumerate children (empty = leaf).
+    pub fn children(&self) -> Vec<SimTask> {
+        match self {
+            SimTask::Fib(n) => {
+                if *n < 2 {
+                    Vec::new()
+                } else {
+                    vec![SimTask::Fib(n - 1), SimTask::Fib(n - 2)]
+                }
+            }
+            SimTask::Integrate(d) => {
+                if *d == 0 {
+                    Vec::new()
+                } else {
+                    vec![SimTask::Integrate(d - 1), SimTask::Integrate(d - 1)]
+                }
+            }
+            SimTask::Nqueens { n, cols } => {
+                if cols.depth == *n {
+                    return Vec::new();
+                }
+                (0..*n)
+                    .filter(|&c| cols.safe(c))
+                    .map(|c| SimTask::Nqueens { n: *n, cols: cols.push(c) })
+                    .collect()
+            }
+            SimTask::Uts(cfg, node) => {
+                let k = cfg.num_children(node);
+                (0..k).map(|i| SimTask::Uts(*cfg, node.child(i))).collect()
+            }
+            SimTask::Balanced { depth, fanout, leaf_ns } => {
+                if *depth == 0 {
+                    Vec::new()
+                } else {
+                    (0..*fanout)
+                        .map(|_| SimTask::Balanced {
+                            depth: depth - 1,
+                            fanout: *fanout,
+                            leaf_ns: *leaf_ns,
+                        })
+                        .collect()
+                }
+            }
+        }
+    }
+
+    /// Body compute cost in ns (the work the serial projection would do
+    /// in this node, excluding recursion).
+    pub fn work_ns(&self) -> u64 {
+        match self {
+            SimTask::Fib(_) => 4,
+            SimTask::Integrate(_) => 15,
+            SimTask::Nqueens { n, cols } => {
+                // Legality scan cost grows with depth.
+                20 + (*n as u64) * (cols.depth as u64)
+            }
+            SimTask::Uts(_, _) => 120, // one SHA-1 per child gen
+            SimTask::Balanced { leaf_ns, .. } => *leaf_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count(task: &SimTask) -> u64 {
+        let mut n = 0u64;
+        let mut stack = vec![task.clone()];
+        while let Some(t) = stack.pop() {
+            n += 1;
+            stack.extend(t.children());
+        }
+        n
+    }
+
+    #[test]
+    fn fib_node_count() {
+        // Nodes in the fib call tree: 2·F(n+1) − 1.
+        assert_eq!(count(&SimTask::fib(10)), 2 * 89 - 1);
+    }
+
+    #[test]
+    fn balanced_count() {
+        // fanout^0 + ... + fanout^depth
+        assert_eq!(
+            count(&SimTask::Balanced { depth: 3, fanout: 2, leaf_ns: 1 }),
+            15
+        );
+    }
+
+    #[test]
+    fn nqueens_leaves_match_workload() {
+        // The simulator's n-queens branching must equal the real one:
+        // count solution leaves at full depth.
+        fn solutions(task: &SimTask) -> u64 {
+            match task {
+                SimTask::Nqueens { n, cols } if cols.depth == *n => 1,
+                _ => task.children().iter().map(solutions).sum(),
+            }
+        }
+        assert_eq!(
+            solutions(&SimTask::nqueens(8)),
+            crate::workloads::nqueens::nqueens_serial(8)
+        );
+    }
+
+    #[test]
+    fn uts_matches_serial_traversal() {
+        let cfg = UtsConfig::geometric(3.0, 5, 19);
+        assert_eq!(count(&SimTask::uts(cfg)), crate::workloads::uts::uts_serial(&cfg).nodes);
+    }
+}

@@ -1,0 +1,466 @@
+//! Geometric **segmented stacks** (paper §III-A, Fig. 4, Theorem 1).
+//!
+//! A [`SegmentedStack`] is a doubly-linked list of [`stacklet::Stacklet`]s
+//! — contiguous memory segments, each starting with a fixed metadata
+//! header. Task frames (and user scratch allocations, §III-C) are bump-
+//! allocated from the *top* stacklet; when an allocation does not fit, a
+//! new stacklet **twice as large** as the previous one (or large enough
+//! for the allocation, whichever is greater) is heap-allocated and linked
+//! in, giving the `n·T_ptr + O(log2 n)·T_heap` amortized cost of Eq. (5).
+//!
+//! When a stacklet becomes empty it may be **cached** (zero-or-one cached
+//! stacklet per stack) which guards against *hot-splitting*: a fork-join
+//! boundary that repeatedly crosses a stacklet boundary would otherwise
+//! heap-allocate on every iteration.
+//!
+//! Stacks are owned by exactly one worker at a time; ownership moves
+//! between workers through the steal/join protocol of the runtime
+//! ([`crate::rt`]), never concurrently. All operations here are therefore
+//! single-threaded and panic-free on the hot path.
+
+pub mod stacklet;
+
+use stacklet::Stacklet;
+
+/// Frame alignment: every allocation is rounded up to this. 16 matches
+/// the ABI max-align of the target and keeps SIMD-friendly frames.
+pub const ALIGN: usize = 16;
+
+/// Default capacity of the first stacklet in a fresh stack (bytes of
+/// usable space, excluding metadata). The paper starts small — geometric
+/// growth makes the initial size mostly irrelevant.
+pub const FIRST_STACKLET: usize = 4 * 1024;
+
+/// Round `n` up to [`ALIGN`].
+#[inline]
+pub const fn round_up(n: usize) -> usize {
+    (n + ALIGN - 1) & !(ALIGN - 1)
+}
+
+/// A geometric segmented stack.
+///
+/// Invariants:
+/// * `top` points at the stacklet containing the most recent live
+///   allocation (or the first stacklet when empty).
+/// * at most one cached (empty, unlinked-above-top) stacklet exists,
+///   reachable as `top.next`.
+/// * deallocation is strictly FILO: `dealloc` receives the pointer
+///   returned by the matching `alloc` and all allocations made after it
+///   have already been deallocated.
+#[derive(Debug)]
+pub struct SegmentedStack {
+    /// Stacklet holding the stack pointer.
+    top: *mut Stacklet,
+    /// First (bottom) stacklet; owned.
+    first: *mut Stacklet,
+    /// Bytes of live user allocations (excludes metadata + slack).
+    live: usize,
+    /// High-water mark of `live`.
+    peak_live: usize,
+    /// Total heap bytes currently owned by this stack (all stacklets,
+    /// including cached and metadata) — the quantity Theorem 1 bounds.
+    footprint: usize,
+    /// High-water mark of `footprint`.
+    peak_footprint: usize,
+    /// Number of stacklet heap allocations performed over the lifetime.
+    heap_allocs: u64,
+}
+
+// Stacks move between workers (ownership handed over at steal/join
+// boundaries) but are never accessed concurrently.
+unsafe impl Send for SegmentedStack {}
+
+impl SegmentedStack {
+    /// A new stack with one empty stacklet of [`FIRST_STACKLET`] bytes.
+    pub fn new() -> Box<Self> {
+        Self::with_first_capacity(FIRST_STACKLET)
+    }
+
+    /// A new stack whose first stacklet has `cap` usable bytes.
+    pub fn with_first_capacity(cap: usize) -> Box<Self> {
+        let first = Stacklet::alloc(round_up(cap.max(ALIGN)));
+        let footprint = unsafe { (*first).total_size() };
+        Box::new(SegmentedStack {
+            top: first,
+            first,
+            live: 0,
+            peak_live: 0,
+            footprint,
+            peak_footprint: footprint,
+            heap_allocs: 1,
+        })
+    }
+
+    /// Bump-allocate `size` bytes (rounded to [`ALIGN`]). Hot path: one
+    /// comparison + pointer increment when the top stacklet has room.
+    #[inline]
+    pub fn alloc(&mut self, size: usize) -> *mut u8 {
+        let size = round_up(size.max(1));
+        unsafe {
+            let top = &mut *self.top;
+            let sp = top.sp;
+            let new_sp = sp.add(size);
+            if new_sp <= top.end {
+                top.sp = new_sp;
+                self.live += size;
+                if self.live > self.peak_live {
+                    self.peak_live = self.live;
+                }
+                return sp;
+            }
+        }
+        self.alloc_slow(size)
+    }
+
+    /// Overflow path: reuse the cached stacklet when large enough, else
+    /// heap-allocate a stacklet of `max(2 × top.capacity, size)`.
+    #[cold]
+    fn alloc_slow(&mut self, size: usize) -> *mut u8 {
+        unsafe {
+            let top = &mut *self.top;
+            // A cached stacklet sits above top (empty).
+            if !top.next.is_null() {
+                let cached = &mut *top.next;
+                debug_assert!(cached.is_empty());
+                if cached.capacity() >= size {
+                    self.top = top.next;
+                    let sp = cached.sp;
+                    cached.sp = sp.add(size);
+                    self.live += size;
+                    if self.live > self.peak_live {
+                        self.peak_live = self.live;
+                    }
+                    return sp;
+                }
+                // Too small for this allocation: discard so geometry is
+                // preserved by the fresh allocation below.
+                self.footprint -= cached.total_size();
+                let stale = top.next;
+                top.next = std::ptr::null_mut();
+                Stacklet::free(stale);
+            }
+            let cap = (2 * top.capacity()).max(size);
+            let fresh = Stacklet::alloc(cap);
+            self.heap_allocs += 1;
+            self.footprint += (*fresh).total_size();
+            if self.footprint > self.peak_footprint {
+                self.peak_footprint = self.footprint;
+            }
+            (*fresh).prev = self.top;
+            top.next = fresh;
+            self.top = fresh;
+            let f = &mut *fresh;
+            let sp = f.sp;
+            f.sp = sp.add(size);
+            self.live += size;
+            if self.live > self.peak_live {
+                self.peak_live = self.live;
+            }
+            sp
+        }
+    }
+
+    /// FILO-deallocate the allocation that returned `base` (with the same
+    /// `size` passed to `alloc`). Hot path: a pointer store; when a
+    /// stacklet empties it is popped and cached or freed.
+    #[inline]
+    pub fn dealloc(&mut self, base: *mut u8, size: usize) {
+        let size = round_up(size.max(1));
+        self.live -= size;
+        unsafe {
+            let top = &mut *self.top;
+            debug_assert!(
+                base >= top.data_start() && base < top.end,
+                "FILO violation: dealloc base not in top stacklet"
+            );
+            debug_assert_eq!(top.sp, base.add(size), "FILO violation: not last allocation");
+            top.sp = base;
+            if top.sp == top.data_start() && !top.prev.is_null() {
+                self.pop_stacklet();
+            }
+        }
+    }
+
+    /// Pop an empty top stacklet, caching or freeing it, per §III-A:
+    /// cache iff there is no cached stacklet already and the popped
+    /// stacklet is not more than twice as large as its predecessor.
+    #[cold]
+    fn pop_stacklet(&mut self) {
+        unsafe {
+            let old_top = self.top;
+            let prev = (*old_top).prev;
+            debug_assert!(!prev.is_null());
+            self.top = prev;
+            // At most one cached stacklet per stack: drop anything that
+            // was cached above the stacklet we are popping.
+            let above = (*old_top).next;
+            if !above.is_null() {
+                self.footprint -= (*above).total_size();
+                Stacklet::free(above);
+                (*old_top).next = std::ptr::null_mut();
+            }
+            if (*old_top).capacity() <= 2 * (*prev).capacity() {
+                // Keep it linked above the new top as the cache.
+                debug_assert_eq!((*prev).next, old_top);
+            } else {
+                (*prev).next = std::ptr::null_mut();
+                self.footprint -= (*old_top).total_size();
+                Stacklet::free(old_top);
+            }
+        }
+    }
+
+    /// True when no live allocations exist.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Bytes of live user allocations.
+    #[inline]
+    pub fn live_bytes(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of live allocations.
+    #[inline]
+    pub fn peak_live_bytes(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Current total heap footprint (stacklets + metadata), the `M'` of
+    /// Theorem 1.
+    #[inline]
+    pub fn footprint_bytes(&self) -> usize {
+        self.footprint
+    }
+
+    /// High-water mark of [`Self::footprint_bytes`].
+    #[inline]
+    pub fn peak_footprint_bytes(&self) -> usize {
+        self.peak_footprint
+    }
+
+    /// Lifetime count of stacklet heap allocations (Eq. 5's `O(log2 n)`
+    /// term).
+    #[inline]
+    pub fn heap_alloc_count(&self) -> u64 {
+        self.heap_allocs
+    }
+
+    /// Number of stacklets currently linked (including the cached one).
+    pub fn stacklet_count(&self) -> usize {
+        let mut n = 0;
+        let mut cur = self.first;
+        while !cur.is_null() {
+            n += 1;
+            cur = unsafe { (*cur).next };
+        }
+        n
+    }
+}
+
+impl Drop for SegmentedStack {
+    fn drop(&mut self) {
+        debug_assert!(self.is_empty(), "dropping a segmented stack with live allocations");
+        let mut cur = self.first;
+        while !cur.is_null() {
+            let next = unsafe { (*cur).next };
+            Stacklet::free(cur);
+            cur = next;
+        }
+    }
+}
+
+/// Theorem 1 worst-case bound on the footprint of a stack holding `m`
+/// live bytes: `M' <= O(c) + c·log2(M) + 4M` with `c` the metadata size.
+/// Used by the property tests and the `--bench memory` harness.
+pub fn theorem1_bound(m_live: usize) -> usize {
+    let c = stacklet::METADATA_SIZE + FIRST_STACKLET + 2 * ALIGN;
+    let m = m_live.max(1) as f64;
+    // O(c) constant + c·log2(2M+1) + 4M, with per-allocation rounding
+    // slack folded into the 4M term via ALIGN padding per stacklet chain.
+    let log_term = (stacklet::METADATA_SIZE as f64) * (2.0 * m + 1.0).log2();
+    let align_slack = ALIGN as f64 * (2.0 * m + 1.0).log2();
+    (4.0 * m + log_term + align_slack) as usize + 4 * c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::XorShift64;
+
+    #[test]
+    fn alloc_dealloc_roundtrip() {
+        let mut s = SegmentedStack::new();
+        let a = s.alloc(64);
+        let b = s.alloc(128);
+        assert!(!a.is_null() && !b.is_null());
+        assert_eq!(s.live_bytes(), 192);
+        s.dealloc(b, 128);
+        s.dealloc(a, 64);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn writes_land_in_allocation() {
+        let mut s = SegmentedStack::new();
+        let p = s.alloc(256);
+        unsafe {
+            std::ptr::write_bytes(p, 0xAB, 256);
+            assert_eq!(*p, 0xAB);
+            assert_eq!(*p.add(255), 0xAB);
+        }
+        s.dealloc(p, 256);
+    }
+
+    #[test]
+    fn geometric_growth() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        // Allocate way past the first stacklet.
+        let mut allocs = Vec::new();
+        for _ in 0..1000 {
+            allocs.push((s.alloc(64), 64));
+        }
+        // 1000 * 64 = 64000 bytes; geometric growth should need only
+        // O(log) stacklets.
+        assert!(s.stacklet_count() <= 12, "stacklets = {}", s.stacklet_count());
+        for (p, n) in allocs.into_iter().rev() {
+            s.dealloc(p, n);
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn oversized_allocation_gets_own_stacklet() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        let big = s.alloc(1 << 20);
+        unsafe { std::ptr::write_bytes(big, 1, 1 << 20) };
+        s.dealloc(big, 1 << 20);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cached_stacklet_prevents_hot_split() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        // Fill the first stacklet so the next alloc crosses the boundary.
+        let pad = s.alloc(48);
+        let before = s.heap_alloc_count();
+        // Repeatedly cross the boundary: after the first crossing the
+        // stacklet should be cached, so no further heap allocations.
+        for _ in 0..100 {
+            let p = s.alloc(64);
+            s.dealloc(p, 64);
+        }
+        let after = s.heap_alloc_count();
+        assert_eq!(after - before, 1, "hot split: {} heap allocs", after - before);
+        s.dealloc(pad, 48);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn at_most_one_cached_stacklet() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        let mut ps = Vec::new();
+        for _ in 0..100 {
+            ps.push((s.alloc(128), 128));
+        }
+        for (p, n) in ps.into_iter().rev() {
+            s.dealloc(p, n);
+        }
+        // All but (first + one cached) must be freed.
+        assert!(s.stacklet_count() <= 2, "count = {}", s.stacklet_count());
+    }
+
+    #[test]
+    fn theorem1_random_sequences() {
+        // Property test: for random FILO alloc/dealloc sequences, the
+        // footprint never exceeds the Theorem 1 bound.
+        let mut rng = XorShift64::new(0xF0F0);
+        for round in 0..50 {
+            let mut s = SegmentedStack::with_first_capacity(64);
+            let mut live: Vec<(*mut u8, usize)> = Vec::new();
+            for _ in 0..400 {
+                if live.is_empty() || rng.next_below(100) < 60 {
+                    let size = 1 + rng.next_below(if round % 2 == 0 { 512 } else { 8192 });
+                    live.push((s.alloc(size), size));
+                } else {
+                    let (p, n) = live.pop().unwrap();
+                    s.dealloc(p, n);
+                }
+                let m = s.live_bytes().max(1);
+                assert!(
+                    s.footprint_bytes() <= theorem1_bound(m),
+                    "round {round}: footprint {} > bound {} at live {}",
+                    s.footprint_bytes(),
+                    theorem1_bound(m),
+                    m
+                );
+            }
+            for (p, n) in live.into_iter().rev() {
+                s.dealloc(p, n);
+            }
+        }
+    }
+
+    #[test]
+    fn amortized_heap_allocs_logarithmic() {
+        // Eq. (5): n consecutive allocations cost n pointer bumps +
+        // O(log2 n) heap allocations.
+        let mut s = SegmentedStack::with_first_capacity(64);
+        let n = 100_000usize;
+        let mut ps = Vec::with_capacity(n);
+        for _ in 0..n {
+            ps.push((s.alloc(16), 16));
+        }
+        let heap = s.heap_alloc_count() as usize;
+        let bound = ((2 * n * 16 + 1) as f64).log2() as usize + 2;
+        assert!(heap <= bound, "heap allocs {heap} > log bound {bound}");
+        for (p, sz) in ps.into_iter().rev() {
+            s.dealloc(p, sz);
+        }
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut s = SegmentedStack::new();
+        let a = s.alloc(1024);
+        let b = s.alloc(2048);
+        s.dealloc(b, 2048);
+        s.dealloc(a, 1024);
+        assert_eq!(s.peak_live_bytes(), 1024 + 2048);
+        assert!(s.peak_footprint_bytes() >= 1024 + 2048);
+    }
+
+    #[test]
+    fn alignment_maintained() {
+        let mut s = SegmentedStack::new();
+        let mut ps = Vec::new();
+        let mut rng = XorShift64::new(9);
+        for _ in 0..200 {
+            let sz = 1 + rng.next_below(100);
+            let p = s.alloc(sz);
+            assert_eq!(p as usize % ALIGN, 0, "misaligned allocation");
+            ps.push((p, sz));
+        }
+        for (p, sz) in ps.into_iter().rev() {
+            s.dealloc(p, sz);
+        }
+    }
+
+    #[test]
+    fn stack_moves_across_threads() {
+        let mut s = SegmentedStack::new();
+        let p = s.alloc(64);
+        unsafe { *p = 42 };
+        s.dealloc(p, 64);
+        let handle = std::thread::spawn(move || {
+            let mut s = s;
+            let q = s.alloc(64);
+            unsafe { *q = 43 };
+            s.dealloc(q, 64);
+            s.is_empty()
+        });
+        assert!(handle.join().unwrap());
+    }
+}

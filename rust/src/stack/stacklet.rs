@@ -1,0 +1,143 @@
+//! A single stack segment (paper §III-A, Fig. 4).
+//!
+//! Each stacklet begins with a metadata header ("48B of metadata" in the
+//! paper: prev/next links, the internal stack pointer and the end marker)
+//! followed by the usable region. The stacklet is a single heap
+//! allocation so the header and data are contiguous — allocation inside a
+//! stacklet never touches another cache line's worth of metadata.
+
+use std::alloc::{alloc, dealloc, Layout};
+
+use super::ALIGN;
+
+/// Size of the metadata header in bytes (rounded to [`ALIGN`]). The
+/// paper quotes 48 B: four pointers (prev, next, sp, end) at 8 B plus
+/// padding; this is the `c` of Theorem 1.
+pub const METADATA_SIZE: usize = 48;
+
+/// Stacklet header. The usable region begins at
+/// `self as *mut u8 + METADATA_SIZE` and ends at `end`.
+#[repr(C)]
+#[derive(Debug)]
+pub struct Stacklet {
+    /// Previous (older) stacklet in the stack, null for the first.
+    pub prev: *mut Stacklet,
+    /// Next (newer) stacklet; non-null above `top` only for the single
+    /// cached stacklet.
+    pub next: *mut Stacklet,
+    /// Internal stack pointer: next free byte.
+    pub sp: *mut u8,
+    /// One past the last usable byte.
+    pub end: *mut u8,
+    /// Usable capacity in bytes (cached to avoid recomputing `end - data`).
+    pub cap: usize,
+}
+
+const _: () = assert!(std::mem::size_of::<Stacklet>() <= METADATA_SIZE);
+
+impl Stacklet {
+    /// Heap-allocate a stacklet with `cap` usable bytes.
+    pub fn alloc(cap: usize) -> *mut Stacklet {
+        let cap = super::round_up(cap.max(ALIGN));
+        let total = METADATA_SIZE + cap;
+        let layout = Layout::from_size_align(total, ALIGN).expect("stacklet layout");
+        unsafe {
+            let raw = alloc(layout) as *mut Stacklet;
+            assert!(!raw.is_null(), "stacklet allocation failed");
+            let data = (raw as *mut u8).add(METADATA_SIZE);
+            raw.write(Stacklet {
+                prev: std::ptr::null_mut(),
+                next: std::ptr::null_mut(),
+                sp: data,
+                end: data.add(cap),
+                cap,
+            });
+            raw
+        }
+    }
+
+    /// Free a stacklet previously returned by [`Self::alloc`].
+    pub fn free(this: *mut Stacklet) {
+        unsafe {
+            let cap = (*this).cap;
+            let total = METADATA_SIZE + cap;
+            let layout = Layout::from_size_align(total, ALIGN).expect("stacklet layout");
+            dealloc(this as *mut u8, layout);
+        }
+    }
+
+    /// First usable byte.
+    #[inline]
+    pub fn data_start(&self) -> *mut u8 {
+        unsafe { (self as *const Stacklet as *mut u8).add(METADATA_SIZE) }
+    }
+
+    /// Usable capacity in bytes.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total heap size including metadata (the quantity Theorem 1 sums).
+    #[inline]
+    pub fn total_size(&self) -> usize {
+        METADATA_SIZE + self.cap
+    }
+
+    /// Bytes currently allocated from this stacklet.
+    #[inline]
+    pub fn used(&self) -> usize {
+        self.sp as usize - self.data_start() as usize
+    }
+
+    /// True when no allocation is live in this stacklet.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.used() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_fits_metadata_budget() {
+        assert!(std::mem::size_of::<Stacklet>() <= METADATA_SIZE);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let s = Stacklet::alloc(1024);
+        unsafe {
+            assert_eq!((*s).capacity(), 1024);
+            assert!((*s).is_empty());
+            assert_eq!((*s).total_size(), 1024 + METADATA_SIZE);
+            // sp starts at data_start and end is cap bytes later.
+            assert_eq!((*s).sp, (*s).data_start());
+            assert_eq!((*s).end as usize - (*s).data_start() as usize, 1024);
+        }
+        Stacklet::free(s);
+    }
+
+    #[test]
+    fn capacity_rounds_up() {
+        let s = Stacklet::alloc(1);
+        unsafe {
+            assert!((*s).capacity() >= ALIGN);
+            assert_eq!((*s).capacity() % ALIGN, 0);
+        }
+        Stacklet::free(s);
+    }
+
+    #[test]
+    fn data_is_aligned() {
+        for cap in [16usize, 64, 100, 4096] {
+            let s = Stacklet::alloc(cap);
+            unsafe {
+                assert_eq!((*s).data_start() as usize % ALIGN, 0);
+            }
+            Stacklet::free(s);
+        }
+    }
+}

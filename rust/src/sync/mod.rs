@@ -1,0 +1,187 @@
+//! Low-level synchronization primitives shared by the runtime.
+//!
+//! The paper's runtime is lock-free on the hot path (fork / join / return)
+//! and only blocks in the *lazy* scheduler's sleep path (§III-D). This
+//! module provides the small set of primitives the rest of the crate
+//! builds on: cache-padded cells, exponential backoff for steal loops and
+//! a [`Parker`] used by sleeping workers.
+
+mod parker;
+
+pub use crossbeam_utils::CachePadded;
+pub use parker::Parker;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Exponential backoff for contended retry loops (steal attempts,
+/// buffer-growth races). Mirrors `crossbeam_utils::Backoff` but exposes
+/// the step count so schedulers can decide when to park.
+#[derive(Debug)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    const SPIN_LIMIT: u32 = 6;
+    const YIELD_LIMIT: u32 = 10;
+
+    /// A fresh backoff with no accumulated contention.
+    #[inline]
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Reset after successful progress.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// Spin (or yield, once the spin budget is exhausted) and increase the
+    /// backoff step.
+    #[inline]
+    pub fn snooze(&mut self) {
+        if self.step <= Self::SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::yield_now();
+        }
+        if self.step <= Self::YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// True once the caller should consider parking instead of spinning.
+    #[inline]
+    pub fn is_completed(&self) -> bool {
+        self.step > Self::YIELD_LIMIT
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A monotonically increasing id source for workers / stacks / frames.
+#[derive(Debug, Default)]
+pub struct IdSource {
+    next: AtomicUsize,
+}
+
+impl IdSource {
+    /// New source starting at zero.
+    pub const fn new() -> Self {
+        IdSource { next: AtomicUsize::new(0) }
+    }
+
+    /// Fetch the next id.
+    #[inline]
+    pub fn next(&self) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// xorshift64* PRNG — tiny, fast, good-enough randomness for victim
+/// selection and tests. Deterministic given the seed, which the
+/// benchmarking harness relies on.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create from a nonzero seed (zero is mapped to a fixed constant).
+    #[inline]
+    pub fn new(seed: u64) -> Self {
+        XorShift64 { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be nonzero.
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Multiply-shift trick avoids modulo bias well enough for
+        // victim selection.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_progression() {
+        let mut b = Backoff::new();
+        assert!(!b.is_completed());
+        for _ in 0..32 {
+            b.snooze();
+        }
+        assert!(b.is_completed());
+        b.reset();
+        assert!(!b.is_completed());
+    }
+
+    #[test]
+    fn id_source_monotone() {
+        let ids = IdSource::new();
+        let a = ids.next();
+        let b = ids.next();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn xorshift_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_below_bounds() {
+        let mut rng = XorShift64::new(7);
+        for n in 1..64usize {
+            for _ in 0..100 {
+                assert!(rng.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn xorshift_f64_range() {
+        let mut rng = XorShift64::new(3);
+        for _ in 0..1000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn xorshift_zero_seed_ok() {
+        let mut rng = XorShift64::new(0);
+        assert_ne!(rng.next_u64(), 0);
+    }
+}

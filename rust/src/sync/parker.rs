@@ -1,0 +1,155 @@
+//! A latching parker for sleeping workers (lazy scheduler, §III-D).
+//!
+//! The fast path (`notify` with nobody asleep) is a single atomic load +
+//! store; the slow path uses a mutex/condvar pair. Notifications are
+//! *latched*: a `notify` delivered while the worker is awake prevents the
+//! next `park` from blocking, which closes the sleep/wake race without a
+//! lock on the producer side.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+const EMPTY: u32 = 0;
+const PARKED: u32 = 1;
+const NOTIFIED: u32 = 2;
+
+/// One-shot-latching parker; one per worker.
+#[derive(Debug)]
+pub struct Parker {
+    state: AtomicU32,
+    lock: Mutex<()>,
+    cvar: Condvar,
+}
+
+impl Default for Parker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Parker {
+    /// New parker with no pending notification.
+    pub fn new() -> Self {
+        Parker { state: AtomicU32::new(EMPTY), lock: Mutex::new(()), cvar: Condvar::new() }
+    }
+
+    /// Block until notified (or consume a latched notification
+    /// immediately).
+    pub fn park(&self) {
+        // Consume a latched notification without blocking.
+        if self.state.swap(EMPTY, Ordering::Acquire) == NOTIFIED {
+            return;
+        }
+        let mut guard = self.lock.lock().unwrap();
+        match self.state.compare_exchange(EMPTY, PARKED, Ordering::Relaxed, Ordering::Relaxed) {
+            Err(_) => {
+                // A notify raced in: consume it.
+                self.state.store(EMPTY, Ordering::Relaxed);
+                return;
+            }
+            Ok(_) => loop {
+                guard = self.cvar.wait(guard).unwrap();
+                if self.state.swap(EMPTY, Ordering::Acquire) != PARKED {
+                    return;
+                }
+                // Spurious wakeup: restore PARKED and wait again.
+                self.state.store(PARKED, Ordering::Relaxed);
+            },
+        }
+    }
+
+    /// Like [`Self::park`] but with a timeout; returns `true` when woken
+    /// by a notification, `false` on timeout.
+    pub fn park_timeout(&self, dur: Duration) -> bool {
+        if self.state.swap(EMPTY, Ordering::Acquire) == NOTIFIED {
+            return true;
+        }
+        let guard = self.lock.lock().unwrap();
+        if self.state.compare_exchange(EMPTY, PARKED, Ordering::Relaxed, Ordering::Relaxed).is_err()
+        {
+            self.state.store(EMPTY, Ordering::Relaxed);
+            return true;
+        }
+        let (_guard, timeout) = self.cvar.wait_timeout(guard, dur).unwrap();
+        let prev = self.state.swap(EMPTY, Ordering::Acquire);
+        prev == NOTIFIED || !timeout.timed_out()
+    }
+
+    /// Wake the parked worker, or latch the notification for the next
+    /// `park`.
+    pub fn notify(&self) {
+        match self.state.swap(NOTIFIED, Ordering::Release) {
+            PARKED => {
+                // Must take the lock so the wake cannot be lost between
+                // the sleeper's state check and its cvar wait.
+                drop(self.lock.lock().unwrap());
+                self.cvar.notify_one();
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn latched_notify_does_not_block() {
+        let p = Parker::new();
+        p.notify();
+        let start = Instant::now();
+        p.park();
+        assert!(start.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn park_timeout_expires() {
+        let p = Parker::new();
+        let woke = p.park_timeout(Duration::from_millis(10));
+        assert!(!woke);
+    }
+
+    #[test]
+    fn cross_thread_wake() {
+        let p = Arc::new(Parker::new());
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            p2.notify();
+        });
+        let start = Instant::now();
+        p.park();
+        assert!(start.elapsed() < Duration::from_secs(5));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn repeated_park_notify_cycles() {
+        let p = Arc::new(Parker::new());
+        let p2 = Arc::clone(&p);
+        let h = std::thread::spawn(move || {
+            for _ in 0..100 {
+                p2.notify();
+                std::thread::yield_now();
+            }
+        });
+        for _ in 0..10 {
+            p.park_timeout(Duration::from_millis(50));
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn double_notify_single_consume() {
+        let p = Parker::new();
+        p.notify();
+        p.notify();
+        p.park(); // consumes the latch
+        // Second park must block until timeout.
+        assert!(!p.park_timeout(Duration::from_millis(10)));
+    }
+}

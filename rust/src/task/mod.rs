@@ -1,0 +1,254 @@
+//! The stackless-coroutine task model (paper §II-A, §III-B).
+//!
+//! A task is a [`Coroutine`]: an explicit state machine whose `step`
+//! method runs the code between two suspension points. This is precisely
+//! the lowering a C++20 compiler applies to a coroutine — a frame struct
+//! holding variables that span suspension points plus a state index — so
+//! the runtime semantics match libfork's while remaining a pure library
+//! in a language without coroutines.
+//!
+//! Suspension points are expressed by the [`Step`] value returned from
+//! `step`:
+//!
+//! * `cx.fork(&mut slot, child)` … `Step::Dispatch` — `co_await fork[…]`:
+//!   the child is placement-allocated on the worker's current segmented
+//!   stack; when `step` returns, the parent's continuation is pushed onto
+//!   the worker's WSQ and control transfers to the child (Algorithm 3).
+//! * `cx.call(&mut slot, child)` … `Step::Dispatch` — `co_await call[…]`:
+//!   same, but the parent is *not* exposed for stealing; the child's
+//!   return resumes the parent directly.
+//! * `Step::Join` — `co_await join` (Algorithm 4).
+//! * `Step::Return(v)` — `co_return v` (Algorithm 5): `v` is written to
+//!   the slot the parent supplied at fork/call.
+//!
+//! The first `fork` of a scope must be preceded by advancing the state
+//! index, exactly as a compiler would save the resume point *before*
+//! suspending.
+
+use crate::frame::{FrameHeader, FrameKind, JoinCounter, Transfer};
+use crate::stack::round_up;
+
+/// What a task does at a suspension point.
+#[derive(Debug)]
+pub enum Step<T> {
+    /// A child was staged with [`Cx::fork`] or [`Cx::call`]; transfer
+    /// control to it.
+    Dispatch,
+    /// `co_await join`: wait for all forked children of the current scope.
+    Join,
+    /// `co_return value`.
+    Return(T),
+    /// Suspend and migrate this task to the submission queue of the given
+    /// worker (explicit scheduling, §III-D1). Only legal outside a
+    /// fork-join scope, when this frame is the top allocation of the
+    /// worker's current stack.
+    ScheduleOn(usize),
+}
+
+/// A task: an explicit state machine executed by the runtime. `step` is
+/// called once per resume; the state saved in `self` determines where
+/// execution continues.
+pub trait Coroutine: Send {
+    /// Value produced by `co_return`, written to the parent's slot.
+    type Output: Send;
+
+    /// Run until the next suspension point.
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<Self::Output>;
+}
+
+/// The typed frame: header + output slot + task state. The whole struct
+/// is placement-allocated on a segmented stack; `header` must be first so
+/// a `*mut FrameHeader` is also a pointer to the frame.
+#[repr(C)]
+pub struct Frame<C: Coroutine> {
+    /// Runtime header (must be field 0).
+    pub header: FrameHeader,
+    /// Where `Return(v)` is written. Points into the parent frame (or the
+    /// root signal's result cell).
+    pub out: *mut C::Output,
+    /// The user's coroutine state.
+    pub task: C,
+}
+
+impl<C: Coroutine> Frame<C> {
+    /// Allocation size for this frame on a segmented stack.
+    pub const fn alloc_size() -> usize {
+        round_up(std::mem::size_of::<Frame<C>>())
+    }
+}
+
+/// How a staged child will be dispatched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Parent continuation exposed for stealing (Algorithm 3 line 7).
+    Fork,
+    /// Parent resumed directly by the child's return.
+    Call,
+}
+
+/// Per-resume context handed to [`Coroutine::step`]. Wraps the worker;
+/// exposes child staging, the stack-allocation API (§III-C) and worker
+/// introspection.
+pub struct Cx<'w> {
+    pub(crate) worker: &'w mut crate::rt::worker::Worker,
+    /// The frame currently executing (parent of anything staged).
+    pub(crate) frame: *mut FrameHeader,
+}
+
+impl<'w> Cx<'w> {
+    /// `co_await fork[slot, child]` — stage a forked child. The caller
+    /// must return [`Step::Dispatch`] immediately afterwards, and must
+    /// have already advanced its own state index.
+    ///
+    /// `slot` must point into the *current frame* (or memory owned by
+    /// it) and stay valid until the matching join completes.
+    #[inline]
+    pub fn fork<C: Coroutine>(&mut self, slot: *mut C::Output, child: C) {
+        self.stage(slot, child, StageKind::Fork);
+    }
+
+    /// `co_await call[slot, child]` — stage a called child (tail of a
+    /// fork-join scope; no steal exposure, Algorithm 2's `call`).
+    #[inline]
+    pub fn call<C: Coroutine>(&mut self, slot: *mut C::Output, child: C) {
+        self.stage(slot, child, StageKind::Call);
+    }
+
+    #[inline]
+    fn stage<C: Coroutine>(&mut self, slot: *mut C::Output, child: C, kind: StageKind) {
+        debug_assert!(
+            self.worker.staged.is_null(),
+            "at most one child may be staged per suspension"
+        );
+        let kind_frame = match kind {
+            StageKind::Fork => FrameKind::Forked,
+            StageKind::Call => FrameKind::Called,
+        };
+        // Algorithm 3 lines 2–5: allocate the child frame on the
+        // thread-local (segmented) stack and link it to the parent.
+        let size = Frame::<C>::alloc_size();
+        let stack = self.worker.stack;
+        let mem = unsafe { (*stack).alloc(size) } as *mut Frame<C>;
+        unsafe {
+            mem.write(Frame {
+                header: FrameHeader {
+                    resume: crate::rt::worker::resume_shim::<C>,
+                    parent: self.frame,
+                    stack,
+                    alloc_size: size as u32,
+                    kind: kind_frame,
+                    steals: 0,
+                    join: JoinCounter::new(),
+                    root_signal: std::ptr::null(),
+                },
+                out: slot,
+                task: child,
+            });
+        }
+        self.worker.staged = mem as *mut FrameHeader;
+        self.worker.staged_kind = kind;
+    }
+
+    /// §III-C stack-allocation API: a portable `alloca`. Allocates from
+    /// the worker's current segmented stack. Must be released with
+    /// [`Self::stack_dealloc`] in FILO order, outside any fork-join scope
+    /// whose children could outlive it, and within this task's lifetime.
+    #[inline]
+    pub fn stack_alloc(&mut self, size: usize) -> *mut u8 {
+        unsafe { (*self.worker.stack).alloc(size) }
+    }
+
+    /// Release a [`Self::stack_alloc`] allocation (FILO).
+    ///
+    /// # Safety
+    /// `ptr`/`size` must match the most recent live `stack_alloc`, and the
+    /// worker's current stack must be the one it was allocated from —
+    /// guaranteed when alloc/dealloc pair up outside fork-join scopes.
+    #[inline]
+    pub unsafe fn stack_dealloc(&mut self, ptr: *mut u8, size: usize) {
+        (*self.worker.stack).dealloc(ptr, size);
+    }
+
+    /// Id of the executing worker.
+    #[inline]
+    pub fn worker_id(&self) -> usize {
+        self.worker.id
+    }
+
+    /// Number of workers in the pool.
+    #[inline]
+    pub fn num_workers(&self) -> usize {
+        self.worker.shared.deques.len()
+    }
+}
+
+/// Adapter turning a plain closure into a leaf coroutine (no
+/// fork/call/join — a single `step` returning the value).
+pub struct FnTask<F, T>(Option<F>, std::marker::PhantomData<fn() -> T>);
+
+impl<F, T> FnTask<F, T>
+where
+    F: FnOnce() -> T + Send,
+    T: Send,
+{
+    /// Wrap a closure.
+    pub fn new(f: F) -> Self {
+        FnTask(Some(f), std::marker::PhantomData)
+    }
+}
+
+impl<F, T> Coroutine for FnTask<F, T>
+where
+    F: FnOnce() -> T + Send,
+    T: Send,
+{
+    type Output = T;
+
+    fn step(&mut self, _cx: &mut Cx<'_>) -> Step<T> {
+        let f = self.0.take().expect("leaf task resumed twice");
+        Step::Return(f())
+    }
+}
+
+/// Dispatch a resume through a frame's vtable entry.
+///
+/// # Safety
+/// `h` must be a live frame exclusively owned by `worker`.
+#[inline]
+pub unsafe fn resume(h: *mut FrameHeader, worker: &mut crate::rt::worker::Worker) -> Transfer {
+    ((*h).resume)(h, worker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_header_is_prefix() {
+        // FramePtr casts rely on the header being at offset 0.
+        #[allow(dead_code)]
+        struct Dummy;
+        impl Coroutine for Dummy {
+            type Output = ();
+            fn step(&mut self, _cx: &mut Cx<'_>) -> Step<()> {
+                Step::Return(())
+            }
+        }
+        assert_eq!(std::mem::offset_of!(Frame<Dummy>, header), 0);
+    }
+
+    #[test]
+    fn alloc_size_rounded() {
+        struct Big {
+            _x: [u64; 9],
+        }
+        impl Coroutine for Big {
+            type Output = ();
+            fn step(&mut self, _cx: &mut Cx<'_>) -> Step<()> {
+                Step::Return(())
+            }
+        }
+        assert_eq!(Frame::<Big>::alloc_size() % crate::stack::ALIGN, 0);
+        assert!(Frame::<Big>::alloc_size() >= std::mem::size_of::<Frame<Big>>());
+    }
+}

@@ -1,0 +1,142 @@
+//! Recursive Fibonacci (Table I: `fib`, paper n = 42).
+//!
+//! The canonical SFJ microbenchmark (Algorithm 1/2): nearly zero work per
+//! task, so it measures pure framework overhead — the paper's
+//! `T_1/T_s = 8.8` headline. The coroutine below is the explicit
+//! state-machine lowering of Algorithm 2's C++.
+
+use crate::task::{Coroutine, Cx, Step};
+
+/// Serial projection (the `T_s` reference).
+pub fn fib_serial(n: u64) -> u64 {
+    if n < 2 {
+        n
+    } else {
+        fib_serial(n - 1) + fib_serial(n - 2)
+    }
+}
+
+/// Closed-form check values for tests.
+pub fn fib_exact(n: u64) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    a
+}
+
+/// Parallel Fibonacci task: `fork fib(n-1); call fib(n-2); join`.
+pub struct Fib {
+    n: u64,
+    state: u8,
+    a: u64,
+    b: u64,
+}
+
+impl Fib {
+    /// Task computing `F(n)`.
+    pub fn new(n: u64) -> Self {
+        Fib { n, state: 0, a: 0, b: 0 }
+    }
+}
+
+impl Coroutine for Fib {
+    type Output = u64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+        match self.state {
+            0 => {
+                if self.n < 2 {
+                    return Step::Return(self.n);
+                }
+                // co_await fork[&a, fib](n - 1);
+                self.state = 1;
+                cx.fork(&mut self.a, Fib::new(self.n - 1));
+                Step::Dispatch
+            }
+            1 => {
+                // co_await call[&b, fib](n - 2);
+                self.state = 2;
+                cx.call(&mut self.b, Fib::new(self.n - 2));
+                Step::Dispatch
+            }
+            2 => {
+                // co_await join;
+                self.state = 3;
+                Step::Join
+            }
+            _ => Step::Return(self.a + self.b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::Pool;
+    use crate::sched::SchedulerKind;
+
+    #[test]
+    fn serial_matches_exact() {
+        for n in 0..25 {
+            assert_eq!(fib_serial(n), fib_exact(n));
+        }
+    }
+
+    #[test]
+    fn single_worker() {
+        let pool = Pool::with_workers(1);
+        assert_eq!(pool.run(Fib::new(20)), fib_exact(20));
+    }
+
+    #[test]
+    fn two_workers() {
+        let pool = Pool::with_workers(2);
+        assert_eq!(pool.run(Fib::new(22)), fib_exact(22));
+    }
+
+    #[test]
+    fn four_workers_busy() {
+        let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Busy).build();
+        assert_eq!(pool.run(Fib::new(24)), fib_exact(24));
+    }
+
+    #[test]
+    fn four_workers_lazy() {
+        let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Lazy).build();
+        assert_eq!(pool.run(Fib::new(24)), fib_exact(24));
+    }
+
+    #[test]
+    fn repeated_roots_reuse_pool() {
+        let pool = Pool::with_workers(3);
+        for n in [5, 10, 15, 18] {
+            assert_eq!(pool.run(Fib::new(n)), fib_exact(n));
+        }
+    }
+
+    #[test]
+    fn concurrent_roots() {
+        let pool = Pool::with_workers(4);
+        let handles: Vec<_> = (10..18).map(|n| pool.submit(Fib::new(n))).collect();
+        for (h, n) in handles.into_iter().zip(10..18) {
+            assert_eq!(h.join(), fib_exact(n));
+        }
+    }
+
+    #[test]
+    fn steals_happen_under_parallelism() {
+        let pool = Pool::with_workers(4);
+        let _ = pool.run(Fib::new(25));
+        let m = pool.metrics();
+        assert!(m.forks > 0);
+        // On a multi-worker pool running a deep recursion, at least some
+        // steals are overwhelmingly likely (not guaranteed, but fib(25)
+        // forks ~240k times).
+        assert!(m.steals > 0, "no steals recorded: {m:?}");
+        // Join accounting: every signal corresponds to a steal.
+        assert_eq!(m.signals, m.steals, "signals must equal steals");
+    }
+}

@@ -1,0 +1,145 @@
+//! Adaptive numerical integration (Table I: `integrate`,
+//! n = 10^4, ε = 10^-9).
+//!
+//! The classic Cilk benchmark: recursively bisect `[a, b]`, comparing the
+//! trapezoid estimate against the midpoint refinement, forking the left
+//! half and calling the right. Like fib it is extremely fine-grained —
+//! the integrand is a cheap polynomial — so it predominantly measures
+//! scheduling overhead.
+
+use crate::task::{Coroutine, Cx, Step};
+
+/// The integrand used by the Cilk/nowa/fibril versions of this
+/// benchmark: `f(x) = (x·x + 1)·x`.
+#[inline]
+pub fn f(x: f64) -> f64 {
+    (x * x + 1.0) * x
+}
+
+/// Serial projection: adaptive trapezoid refinement of ∫f over [x, x+dx].
+pub fn integrate_serial(x: f64, dx: f64, fx: f64, fdx: f64, eps: f64) -> f64 {
+    let dx_half = dx * 0.5;
+    let mid = x + dx_half;
+    let fmid = f(mid);
+    let area_whole = (fx + fdx) * dx * 0.5;
+    let area_left = (fx + fmid) * dx_half * 0.5;
+    let area_right = (fmid + fdx) * dx_half * 0.5;
+    let refined = area_left + area_right;
+    if (refined - area_whole).abs() <= eps {
+        refined
+    } else {
+        integrate_serial(x, dx_half, fx, fmid, eps)
+            + integrate_serial(mid, dx_half, fmid, fdx, eps)
+    }
+}
+
+/// Entry point matching the paper's parameters: ∫₀ⁿ f with tolerance ε.
+pub fn integral_serial(n: f64, eps: f64) -> f64 {
+    integrate_serial(0.0, n, f(0.0), f(n), eps)
+}
+
+/// Exact value of ∫₀ⁿ (x²+1)x dx = n⁴/4 + n²/2.
+pub fn integral_exact(n: f64) -> f64 {
+    n.powi(4) / 4.0 + n * n / 2.0
+}
+
+/// Parallel adaptive integration task.
+pub struct Integrate {
+    x: f64,
+    dx: f64,
+    fx: f64,
+    fdx: f64,
+    eps: f64,
+    state: u8,
+    left: f64,
+    right: f64,
+}
+
+impl Integrate {
+    /// Task integrating f over `[x, x+dx]` given endpoint values.
+    pub fn new(x: f64, dx: f64, fx: f64, fdx: f64, eps: f64) -> Self {
+        Integrate { x, dx, fx, fdx, eps, state: 0, left: 0.0, right: 0.0 }
+    }
+
+    /// Root task matching the paper's parameters (∫₀ⁿ, tolerance ε).
+    pub fn root(n: f64, eps: f64) -> Self {
+        Self::new(0.0, n, f(0.0), f(n), eps)
+    }
+}
+
+impl Coroutine for Integrate {
+    type Output = f64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<f64> {
+        match self.state {
+            0 => {
+                let dx_half = self.dx * 0.5;
+                let mid = self.x + dx_half;
+                let fmid = f(mid);
+                let area_whole = (self.fx + self.fdx) * self.dx * 0.5;
+                let area_left = (self.fx + fmid) * dx_half * 0.5;
+                let area_right = (fmid + self.fdx) * dx_half * 0.5;
+                let refined = area_left + area_right;
+                if (refined - area_whole).abs() <= self.eps {
+                    return Step::Return(refined);
+                }
+                // fork left half; stash fmid in `right` until state 1.
+                self.right = fmid;
+                self.state = 1;
+                cx.fork(
+                    &mut self.left,
+                    Integrate::new(self.x, dx_half, self.fx, fmid, self.eps),
+                );
+                Step::Dispatch
+            }
+            1 => {
+                let dx_half = self.dx * 0.5;
+                let mid = self.x + dx_half;
+                let fmid = self.right;
+                self.state = 2;
+                cx.call(
+                    &mut self.right,
+                    Integrate::new(mid, dx_half, fmid, self.fdx, self.eps),
+                );
+                Step::Dispatch
+            }
+            2 => {
+                self.state = 3;
+                Step::Join
+            }
+            _ => Step::Return(self.left + self.right),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::Pool;
+
+    #[test]
+    fn serial_accuracy() {
+        let n = 100.0;
+        let got = integral_serial(n, 1e-9);
+        let exact = integral_exact(n);
+        assert!((got - exact).abs() / exact < 1e-6, "got {got}, exact {exact}");
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = Pool::with_workers(4);
+        let n = 500.0;
+        let eps = 1e-6;
+        let par = pool.run(Integrate::root(n, eps));
+        let ser = integral_serial(n, eps);
+        assert_eq!(par, ser, "parallel must equal the serial projection bit-for-bit");
+    }
+
+    #[test]
+    fn single_worker_matches_serial() {
+        let pool = Pool::with_workers(1);
+        let n = 200.0;
+        let par = pool.run(Integrate::root(n, 1e-7));
+        assert_eq!(par, integral_serial(n, 1e-7));
+    }
+}

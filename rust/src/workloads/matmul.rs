@@ -1,0 +1,366 @@
+//! Divide-and-conquer matrix multiplication (Table I: `matmul`,
+//! paper n = 8192).
+//!
+//! Cache-oblivious recursive GEMM: split the largest of (m, n, k) in
+//! half. Splits of `m` or `n` produce two children writing **disjoint**
+//! regions of C, so they are forked; splits of `k` both accumulate into
+//! the same C and are executed as two sequential `call`s — the serial
+//! projection and the parallel DAG therefore compute identical floating
+//! point sums.
+//!
+//! The leaf tile is pluggable through [`GemmLeaf`]: the default is a
+//! register-blocked scalar kernel; the end-to-end example installs the
+//! PJRT-compiled Pallas kernel from `artifacts/` (see
+//! [`crate::runtime`]), which is how the paper's heaviest benchmark
+//! exercises layers L1/L2.
+
+use crate::task::{Coroutine, Cx, Step};
+
+/// Leaf-tile GEMM provider: `C += A·B` on a row-major tile.
+pub trait GemmLeaf: Sync {
+    /// `a`: m×k (leading dim `lda`), `b`: k×n (`ldb`), `c`: m×n (`ldc`).
+    ///
+    /// # Safety
+    /// Pointers must reference valid, non-overlapping (a/b vs c) tiles.
+    unsafe fn gemm(
+        &self,
+        a: *const f32,
+        b: *const f32,
+        c: *mut f32,
+        m: usize,
+        n: usize,
+        k: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+    );
+}
+
+/// Default scalar leaf: i-k-j loop order (streams B and C rows).
+pub struct ScalarLeaf;
+
+impl GemmLeaf for ScalarLeaf {
+    unsafe fn gemm(
+        &self,
+        a: *const f32,
+        b: *const f32,
+        c: *mut f32,
+        m: usize,
+        n: usize,
+        k: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+    ) {
+        for i in 0..m {
+            for p in 0..k {
+                let aip = *a.add(i * lda + p);
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = b.add(p * ldb);
+                let crow = c.add(i * ldc);
+                for j in 0..n {
+                    *crow.add(j) += aip * *brow.add(j);
+                }
+            }
+        }
+    }
+}
+
+/// Shared scalar leaf instance.
+pub static SCALAR_LEAF: ScalarLeaf = ScalarLeaf;
+
+/// Tile edge below which the leaf kernel runs (paper's base case is a
+/// similar cache-sized tile).
+pub const BASE: usize = 64;
+
+/// Serial projection: same recursion, no fork/join.
+pub fn matmul_serial(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) {
+    unsafe {
+        serial_rec(a.as_ptr(), b.as_ptr(), c.as_mut_ptr(), m, n, k, lda, ldb, ldc)
+    }
+}
+
+unsafe fn serial_rec(
+    a: *const f32,
+    b: *const f32,
+    c: *mut f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+) {
+    if m <= BASE && n <= BASE && k <= BASE {
+        SCALAR_LEAF.gemm(a, b, c, m, n, k, lda, ldb, ldc);
+    } else if m >= n && m >= k {
+        let mh = m / 2;
+        serial_rec(a, b, c, mh, n, k, lda, ldb, ldc);
+        serial_rec(a.add(mh * lda), b, c.add(mh * ldc), m - mh, n, k, lda, ldb, ldc);
+    } else if n >= k {
+        let nh = n / 2;
+        serial_rec(a, b, c, m, nh, k, lda, ldb, ldc);
+        serial_rec(a, b.add(nh), c.add(nh), m, n - nh, k, lda, ldb, ldc);
+    } else {
+        let kh = k / 2;
+        serial_rec(a, b, c, m, n, kh, lda, ldb, ldc);
+        serial_rec(a.add(kh), b.add(kh * ldb), c, m, n, k - kh, lda, ldb, ldc);
+    }
+}
+
+/// Naive reference for validation.
+pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += aip * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Parallel D&C GEMM task. Pointers are captured raw; the caller must
+/// keep the matrices alive until `Pool::run` returns (it blocks, so any
+/// stack-owned buffer qualifies).
+pub struct Matmul {
+    a: *const f32,
+    b: *const f32,
+    c: *mut f32,
+    m: usize,
+    n: usize,
+    k: usize,
+    lda: usize,
+    ldb: usize,
+    ldc: usize,
+    leaf: *const dyn GemmLeaf,
+    /// Tile edge at which the leaf fires (BASE for scalar, LEAF_DIM for
+    /// PJRT leaves).
+    base: usize,
+    state: u8,
+    unit: (),
+}
+
+// Safety: disjoint C tiles per the recursion; A/B are read-only.
+unsafe impl Send for Matmul {}
+
+impl Matmul {
+    /// Square-matrix convenience: `c += a·b`, all n×n row-major.
+    pub fn square(a: &[f32], b: &[f32], c: &mut [f32], n: usize) -> Self {
+        assert_eq!(a.len(), n * n);
+        assert_eq!(b.len(), n * n);
+        assert_eq!(c.len(), n * n);
+        Self::new(
+            a.as_ptr(),
+            b.as_ptr(),
+            c.as_mut_ptr(),
+            n,
+            n,
+            n,
+            n,
+            n,
+            n,
+            &SCALAR_LEAF,
+        )
+    }
+
+    /// General tile task with an explicit leaf provider.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        a: *const f32,
+        b: *const f32,
+        c: *mut f32,
+        m: usize,
+        n: usize,
+        k: usize,
+        lda: usize,
+        ldb: usize,
+        ldc: usize,
+        leaf: &(impl GemmLeaf + 'static),
+    ) -> Self {
+        Matmul { a, b, c, m, n, k, lda, ldb, ldc, leaf, base: BASE, state: 0, unit: () }
+    }
+
+    /// Override the leaf tile edge (e.g. `runtime::LEAF_DIM` when using
+    /// the PJRT Pallas leaf).
+    pub fn with_base(mut self, base: usize) -> Self {
+        self.base = base;
+        self
+    }
+
+    fn sub(&self, a: *const f32, b: *const f32, c: *mut f32, m: usize, n: usize, k: usize) -> Self {
+        Matmul {
+            a,
+            b,
+            c,
+            m,
+            n,
+            k,
+            lda: self.lda,
+            ldb: self.ldb,
+            ldc: self.ldc,
+            leaf: self.leaf,
+            base: self.base,
+            state: 0,
+            unit: (),
+        }
+    }
+}
+
+impl Coroutine for Matmul {
+    type Output = ();
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<()> {
+        let (m, n, k) = (self.m, self.n, self.k);
+        match self.state {
+            0 => {
+                if m <= self.base && n <= self.base && k <= self.base {
+                    unsafe {
+                        (*self.leaf).gemm(
+                            self.a, self.b, self.c, m, n, k, self.lda, self.ldb,
+                            self.ldc,
+                        );
+                    }
+                    return Step::Return(());
+                }
+                if m >= n && m >= k {
+                    // Split rows: disjoint C → fork + call + join.
+                    let mh = m / 2;
+                    self.state = 1;
+                    let child = self.sub(self.a, self.b, self.c, mh, n, k);
+                    cx.fork(&mut self.unit, child);
+                    Step::Dispatch
+                } else if n >= k {
+                    // Split cols: disjoint C → fork + call + join.
+                    let nh = n / 2;
+                    self.state = 3;
+                    let child = self.sub(self.a, self.b, self.c, m, nh, k);
+                    cx.fork(&mut self.unit, child);
+                    Step::Dispatch
+                } else {
+                    // Split k: same C → two sequential calls.
+                    let kh = k / 2;
+                    self.state = 5;
+                    let child = self.sub(self.a, self.b, self.c, m, n, kh);
+                    cx.call(&mut self.unit, child);
+                    Step::Dispatch
+                }
+            }
+            1 => {
+                // Second row-half.
+                let mh = m / 2;
+                self.state = 2;
+                let child = unsafe {
+                    self.sub(
+                        self.a.add(mh * self.lda),
+                        self.b,
+                        self.c.add(mh * self.ldc),
+                        m - mh,
+                        n,
+                        k,
+                    )
+                };
+                cx.call(&mut self.unit, child);
+                Step::Dispatch
+            }
+            3 => {
+                // Second col-half.
+                let nh = n / 2;
+                self.state = 2;
+                let child = unsafe {
+                    self.sub(self.a, self.b.add(nh), self.c.add(nh), m, n - nh, k)
+                };
+                cx.call(&mut self.unit, child);
+                Step::Dispatch
+            }
+            5 => {
+                // Second k-half (after the first completed — sequential).
+                let kh = k / 2;
+                self.state = 6;
+                let child = unsafe {
+                    self.sub(
+                        self.a.add(kh),
+                        self.b.add(kh * self.ldb),
+                        self.c,
+                        m,
+                        n,
+                        k - kh,
+                    )
+                };
+                cx.call(&mut self.unit, child);
+                Step::Dispatch
+            }
+            2 => {
+                self.state = 7;
+                Step::Join
+            }
+            _ => Step::Return(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::Pool;
+    use crate::sync::XorShift64;
+
+    fn random_matrix(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift64::new(seed);
+        (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+    }
+
+    #[test]
+    fn serial_matches_naive() {
+        let (m, n, k) = (70, 90, 110);
+        let a = random_matrix(m * k, 1);
+        let b = random_matrix(k * n, 2);
+        let mut c = vec![0.0f32; m * n];
+        matmul_serial(&a, &b, &mut c, m, n, k, k, n, n);
+        let reference = matmul_naive(&a, &b, m, n, k);
+        for (x, y) in c.iter().zip(&reference) {
+            assert!((x - y).abs() <= 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let n = 128;
+        let a = random_matrix(n * n, 3);
+        let b = random_matrix(n * n, 4);
+        let mut c_par = vec![0.0f32; n * n];
+        let mut c_ser = vec![0.0f32; n * n];
+        matmul_serial(&a, &b, &mut c_ser, n, n, n, n, n, n);
+        let pool = Pool::with_workers(4);
+        pool.run(Matmul::square(&a, &b, &mut c_par, n));
+        assert_eq!(c_par, c_ser, "parallel and serial projections must agree bitwise");
+    }
+
+    #[test]
+    fn non_power_of_two() {
+        let n = 96;
+        let a = random_matrix(n * n, 5);
+        let b = random_matrix(n * n, 6);
+        let mut c = vec![0.0f32; n * n];
+        let pool = Pool::with_workers(2);
+        pool.run(Matmul::square(&a, &b, &mut c, n));
+        let reference = matmul_naive(&a, &b, n, n, n);
+        for (x, y) in c.iter().zip(&reference) {
+            assert!((x - y).abs() <= 1e-3);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's benchmark programs (Table I).
+//!
+//! Each workload provides:
+//!
+//! * a [`Coroutine`] state machine for the continuation-stealing runtime
+//!   (the explicit lowering of Algorithm 2-style code),
+//! * a **serial projection** (fork/join keywords erased; defines `T_s`
+//!   and the expected result),
+//! * a [`baseline`](crate::baseline)-runtime encoding via the generic
+//!   [`crate::baseline::BaselineTask`] interface,
+//! * its Table I parameters.
+
+pub mod fib;
+pub mod integrate;
+pub mod matmul;
+pub mod nqueens;
+pub mod params;
+pub mod uts;
+
+pub use params::Workload;

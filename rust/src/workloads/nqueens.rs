@@ -1,0 +1,176 @@
+//! N-queens backtracking count (Table I: `nqueens`, paper n = 14).
+//!
+//! Counts the placements of n queens on an n×n board. Each task extends
+//! a partial placement by one row, forking one child per legal column —
+//! a multi-way fork-join scope (unlike fib's two-way), which exercises
+//! join counters > 1 and the deque under bursts of pushes. The paper
+//! notes this is the easiest benchmark to schedule: each task carries
+//! substantial work (the legality scan) relative to scheduling cost.
+
+use crate::task::{Coroutine, Cx, Step};
+
+/// Maximum board size supported by the fixed-size frame (the paper uses
+/// 14; 16 keeps the frame compact while covering it).
+pub const MAX_N: usize = 16;
+
+/// Is placing a queen at `(row = len, col)` legal given `cols[..len]`?
+#[inline]
+fn safe(cols: &[u8], col: u8) -> bool {
+    for (i, &c) in cols.iter().enumerate() {
+        let dr = (cols.len() - i) as i32;
+        let dc = col as i32 - c as i32;
+        if dc == 0 || dc == dr || dc == -dr {
+            return false;
+        }
+    }
+    true
+}
+
+/// Serial projection.
+pub fn nqueens_serial(n: usize) -> u64 {
+    fn rec(n: usize, cols: &mut Vec<u8>) -> u64 {
+        if cols.len() == n {
+            return 1;
+        }
+        let mut count = 0;
+        for col in 0..n as u8 {
+            if safe(cols, col) {
+                cols.push(col);
+                count += rec(n, cols);
+                cols.pop();
+            }
+        }
+        count
+    }
+    rec(n, &mut Vec::with_capacity(n))
+}
+
+/// Known solution counts for validation.
+pub fn nqueens_exact(n: usize) -> Option<u64> {
+    const KNOWN: [u64; 15] =
+        [1, 1, 0, 0, 2, 10, 4, 40, 92, 352, 724, 2680, 14200, 73712, 365596];
+    KNOWN.get(n).copied()
+}
+
+/// Parallel N-queens task: one fork per legal column of the next row.
+pub struct Nqueens {
+    n: u8,
+    /// Partial placement: `cols[..depth]`.
+    cols: [u8; MAX_N],
+    depth: u8,
+    state: u8,
+    /// Per-child solution counts (written by forked children).
+    counts: [u64; MAX_N],
+    forks: u8,
+}
+
+impl Nqueens {
+    /// Root task for an n×n board.
+    pub fn new(n: usize) -> Self {
+        assert!(n <= MAX_N, "n > {MAX_N} unsupported");
+        Nqueens {
+            n: n as u8,
+            cols: [0; MAX_N],
+            depth: 0,
+            state: 0,
+            counts: [0; MAX_N],
+            forks: 0,
+        }
+    }
+
+    fn child(&self, col: u8) -> Self {
+        let mut cols = self.cols;
+        cols[self.depth as usize] = col;
+        Nqueens {
+            n: self.n,
+            cols,
+            depth: self.depth + 1,
+            state: 0,
+            counts: [0; MAX_N],
+            forks: 0,
+        }
+    }
+}
+
+impl Coroutine for Nqueens {
+    type Output = u64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+        match self.state {
+            0 => {
+                if self.depth == self.n {
+                    return Step::Return(1);
+                }
+                // Fork one child per legal column, one per suspension —
+                // state 0 is re-entered via the `forks` cursor pattern
+                // below; the scan restarts at `counts`-tracked columns.
+                self.state = 1;
+                self.forks = 0;
+                // Fall through to the forking state.
+                self.step(cx)
+            }
+            1 => {
+                // Find the next legal column at or after `forks`.
+                let placed = &self.cols[..self.depth as usize];
+                let mut col = self.forks;
+                while (col as usize) < self.n as usize && !safe(placed, col) {
+                    col += 1;
+                }
+                if (col as usize) >= self.n as usize {
+                    // No more children: join.
+                    self.state = 2;
+                    return Step::Join;
+                }
+                let child = self.child(col);
+                let slot = &mut self.counts[col as usize] as *mut u64;
+                self.forks = col + 1;
+                // Stay in state 1 to continue scanning after this child.
+                cx.fork(slot, child);
+                Step::Dispatch
+            }
+            _ => {
+                let total: u64 =
+                    self.counts[..self.n as usize].iter().sum();
+                Step::Return(total)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::Pool;
+
+    #[test]
+    fn serial_known_counts() {
+        for n in 1..=9 {
+            assert_eq!(Some(nqueens_serial(n)), nqueens_exact(n), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_known() {
+        let pool = Pool::with_workers(4);
+        for n in [6, 8, 9] {
+            assert_eq!(Some(pool.run(Nqueens::new(n))), nqueens_exact(n), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn parallel_ten_queens_two_workers() {
+        let pool = Pool::with_workers(2);
+        assert_eq!(Some(pool.run(Nqueens::new(10))), nqueens_exact(10));
+    }
+
+    #[test]
+    fn multiway_join_counting() {
+        // n-queens forks up to n children per scope — exercises join
+        // counters above 1. Validate against serial on a lazy pool.
+        let pool = Pool::builder()
+            .workers(3)
+            .scheduler(crate::sched::SchedulerKind::Lazy)
+            .build();
+        assert_eq!(pool.run(Nqueens::new(9)), nqueens_serial(9));
+    }
+}

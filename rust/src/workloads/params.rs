@@ -1,0 +1,157 @@
+//! Benchmark parameter registry (paper Table I), with the scaled
+//! variants used on this testbed (documented in EXPERIMENTS.md).
+
+/// The benchmark programs of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Recursive Fibonacci.
+    Fib,
+    /// Adaptive numerical integration.
+    Integrate,
+    /// Divide-and-conquer matrix multiplication.
+    Matmul,
+    /// N-queens backtracking.
+    Nqueens,
+    /// UTS geometric trees (T1 family).
+    UtsT1,
+    UtsT1L,
+    UtsT1XXL,
+    /// UTS binomial trees (T3 family).
+    UtsT3,
+    UtsT3L,
+    UtsT3XXL,
+}
+
+impl Workload {
+    /// The classic benchmarks (Fig. 5).
+    pub const CLASSIC: [Workload; 4] =
+        [Workload::Fib, Workload::Integrate, Workload::Matmul, Workload::Nqueens];
+
+    /// The UTS family (Fig. 6).
+    pub const UTS: [Workload; 6] = [
+        Workload::UtsT1,
+        Workload::UtsT1L,
+        Workload::UtsT1XXL,
+        Workload::UtsT3,
+        Workload::UtsT3L,
+        Workload::UtsT3XXL,
+    ];
+
+    /// Paper name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Workload::Fib => "fib",
+            Workload::Integrate => "integrate",
+            Workload::Matmul => "matmul",
+            Workload::Nqueens => "nqueens",
+            Workload::UtsT1 => "T1",
+            Workload::UtsT1L => "T1L",
+            Workload::UtsT1XXL => "T1XXL",
+            Workload::UtsT3 => "T3",
+            Workload::UtsT3L => "T3L",
+            Workload::UtsT3XXL => "T3XXL",
+        }
+    }
+
+    /// Paper parameters (Table I) as a human-readable string.
+    pub fn paper_params(&self) -> &'static str {
+        match self {
+            Workload::Fib => "n = 42",
+            Workload::Integrate => "n = 10^4, eps = 10^-9",
+            Workload::Matmul => "n = 8192",
+            Workload::Nqueens => "n = 14",
+            Workload::UtsT1 => "d = 10, b = 4, r = 19 (geometric)",
+            Workload::UtsT1L => "d = 13, b = 4, r = 29 (geometric)",
+            Workload::UtsT1XXL => "d = 15, b = 4, r = 19 (geometric)",
+            Workload::UtsT3 => "q = 0.124875, m = 8, r = 42 (binomial)",
+            Workload::UtsT3L => "q = 0.200014, m = 5, r = 7 (binomial)",
+            Workload::UtsT3XXL => "q = 0.499995, m = 2, r = 316 (binomial)",
+        }
+    }
+
+    /// Parse from a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        let all = [
+            Workload::Fib,
+            Workload::Integrate,
+            Workload::Matmul,
+            Workload::Nqueens,
+            Workload::UtsT1,
+            Workload::UtsT1L,
+            Workload::UtsT1XXL,
+            Workload::UtsT3,
+            Workload::UtsT3L,
+            Workload::UtsT3XXL,
+        ];
+        all.into_iter().find(|w| w.label().eq_ignore_ascii_case(s))
+    }
+}
+
+impl std::fmt::Display for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Problem-size scaling for this testbed. The paper's sizes (fib 42,
+/// matmul 8192, T1XXL…) target a 112-core Xeon for seconds-long runs;
+/// the benchmark harness defaults to `Scaled` and records both in
+/// EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper-size problems (hours on this VM — used only via --full).
+    Paper,
+    /// Scaled problems preserving the DAG shape (default).
+    Scaled,
+    /// Tiny smoke-test sizes (CI).
+    Smoke,
+}
+
+impl Workload {
+    /// The size parameter `n` (or recursion scale) for a given scale.
+    pub fn size(&self, scale: Scale) -> u64 {
+        use Scale::*;
+        match (self, scale) {
+            (Workload::Fib, Paper) => 42,
+            (Workload::Fib, Scaled) => 30,
+            (Workload::Fib, Smoke) => 20,
+            (Workload::Integrate, Paper) => 10_000,
+            (Workload::Integrate, Scaled) => 10_000,
+            (Workload::Integrate, Smoke) => 100,
+            (Workload::Matmul, Paper) => 8192,
+            (Workload::Matmul, Scaled) => 512,
+            (Workload::Matmul, Smoke) => 128,
+            (Workload::Nqueens, Paper) => 14,
+            (Workload::Nqueens, Scaled) => 11,
+            (Workload::Nqueens, Smoke) => 8,
+            // UTS sizes are driven by the tree params; `size` returns the
+            // root seed r.
+            (Workload::UtsT1, _) => 19,
+            (Workload::UtsT1L, _) => 29,
+            (Workload::UtsT1XXL, _) => 19,
+            (Workload::UtsT3, _) => 42,
+            (Workload::UtsT3L, _) => 7,
+            (Workload::UtsT3XXL, _) => 316,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_labels() {
+        for w in Workload::CLASSIC.iter().chain(Workload::UTS.iter()) {
+            assert_eq!(Workload::parse(w.label()), Some(*w));
+        }
+    }
+
+    #[test]
+    fn scaled_sizes_below_paper() {
+        for w in Workload::CLASSIC {
+            assert!(w.size(Scale::Scaled) <= w.size(Scale::Paper));
+            assert!(w.size(Scale::Smoke) <= w.size(Scale::Scaled));
+        }
+    }
+}

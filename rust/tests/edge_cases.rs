@@ -1,0 +1,173 @@
+//! Edge cases and failure-mode coverage: handle-drop paths, degenerate
+//! problem sizes, non-square matrices, large stack-API allocations,
+//! and scheduler corner cases.
+
+use rustfork::algo;
+use rustfork::rt::Pool;
+use rustfork::sched::SchedulerKind;
+use rustfork::sync::XorShift64;
+use rustfork::task::{Coroutine, Cx, Step};
+use rustfork::workloads::fib::{fib_exact, Fib};
+use rustfork::workloads::matmul::{matmul_naive, Matmul, SCALAR_LEAF};
+use rustfork::workloads::nqueens::Nqueens;
+use rustfork::workloads::uts::{uts_serial, Uts, UtsConfig};
+
+#[test]
+fn root_handle_dropped_without_join() {
+    // Dropping the handle must wait for completion (the worker writes
+    // through the result pointer) and free the result without leaks.
+    let pool = Pool::with_workers(2);
+    for _ in 0..20 {
+        let h = pool.submit(Fib::new(15));
+        drop(h); // must block until done internally, then drop the result
+    }
+    // Pool still healthy.
+    assert_eq!(pool.run(Fib::new(10)), 55);
+}
+
+#[test]
+fn non_copy_root_result() {
+    struct MakeVec;
+    impl Coroutine for MakeVec {
+        type Output = Vec<u64>;
+        fn step(&mut self, _cx: &mut Cx<'_>) -> Step<Vec<u64>> {
+            Step::Return((0..1000).collect())
+        }
+    }
+    let pool = Pool::with_workers(2);
+    let v = pool.run(MakeVec);
+    assert_eq!(v.len(), 1000);
+    // And the drop-without-join path with a heap result:
+    drop(pool.submit(MakeVec));
+}
+
+#[test]
+fn trivial_problem_sizes() {
+    let pool = Pool::with_workers(2);
+    assert_eq!(pool.run(Fib::new(0)), 0);
+    assert_eq!(pool.run(Fib::new(1)), 1);
+    assert_eq!(pool.run(Nqueens::new(1)), 1);
+    // A tree whose root is a leaf.
+    let cfg = UtsConfig::geometric(4.0, 0, 19); // depth limit 0 → root only
+    assert_eq!(uts_serial(&cfg).nodes, 1);
+    assert_eq!(pool.run(Uts::new(cfg)), 1);
+}
+
+#[test]
+fn single_worker_pool_is_serial_projection() {
+    // With P = 1 there are no thieves: execution order must equal the
+    // depth-first serial projection (checked via identical results on
+    // an order-sensitive float reduction).
+    let pool = Pool::with_workers(1);
+    let data: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+    let par = algo::map_reduce(&pool, &data, 64, |&x| x, |a, b| a + b, 0.0);
+    let par2 = algo::map_reduce(&pool, &data, 64, |&x| x, |a, b| a + b, 0.0);
+    assert_eq!(par, par2);
+    let m = pool.metrics();
+    assert_eq!(m.steals, 0, "a 1-worker pool cannot steal");
+}
+
+#[test]
+fn rectangular_matmul_shapes() {
+    let mut rng = XorShift64::new(77);
+    for (m, n, k) in [(130usize, 70, 96), (65, 257, 64), (64, 64, 300)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let mut c = vec![0.0f32; m * n];
+        let pool = Pool::with_workers(3);
+        pool.run(Matmul::new(
+            a.as_ptr(),
+            b.as_ptr(),
+            c.as_mut_ptr(),
+            m,
+            n,
+            k,
+            k,
+            n,
+            n,
+            &SCALAR_LEAF,
+        ));
+        let want = matmul_naive(&a, &b, m, n, k);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() <= 1e-3, "({m},{n},{k}): {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn large_stack_api_allocation() {
+    // A single stack_alloc far larger than any stacklet must work
+    // (oversized stacklet path) and be reclaimed.
+    struct BigScratch;
+    impl Coroutine for BigScratch {
+        type Output = u64;
+        fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+            let bytes = 4 << 20; // 4 MiB
+            let p = cx.stack_alloc(bytes);
+            unsafe {
+                std::ptr::write_bytes(p, 0x5A, bytes);
+                let sum = *p as u64 + *p.add(bytes - 1) as u64;
+                cx.stack_dealloc(p, bytes);
+                Step::Return(sum)
+            }
+        }
+    }
+    let pool = Pool::builder().workers(2).first_stacklet(512).build();
+    assert_eq!(pool.run(BigScratch), 2 * 0x5A);
+}
+
+#[test]
+fn lazy_pool_survives_idle_then_burst() {
+    let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Lazy).build();
+    let _ = pool.run(Fib::new(12));
+    // Let everyone fall asleep.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // Burst of work must wake them and complete correctly.
+    let handles: Vec<_> = (0..16).map(|_| pool.submit(Fib::new(16))).collect();
+    for h in handles {
+        assert_eq!(h.join(), fib_exact(16));
+    }
+}
+
+#[test]
+fn deeply_sequential_chain_of_calls() {
+    // A call-only chain (no forks at all): exercises the Called fast
+    // path and stacklet growth without any steal traffic. 50k frames
+    // deep — the OS stack stays flat (trampoline), the segmented stack
+    // grows geometrically.
+    struct Chain {
+        n: u32,
+        state: u8,
+        sub: u64,
+    }
+    impl Coroutine for Chain {
+        type Output = u64;
+        fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+            match self.state {
+                0 => {
+                    if self.n == 0 {
+                        return Step::Return(0);
+                    }
+                    self.state = 1;
+                    cx.call(&mut self.sub, Chain { n: self.n - 1, state: 0, sub: 0 });
+                    Step::Dispatch
+                }
+                _ => Step::Return(self.sub + 1),
+            }
+        }
+    }
+    let pool = Pool::builder().workers(2).first_stacklet(256).build();
+    assert_eq!(pool.run(Chain { n: 50_000, state: 0, sub: 0 }), 50_000);
+}
+
+#[test]
+fn map_reduce_on_lazy_pool_under_repeat() {
+    let pool = Pool::builder().workers(3).scheduler(SchedulerKind::Lazy).build();
+    let data: Vec<u64> = (0..10_000).collect();
+    for _ in 0..5 {
+        assert_eq!(
+            algo::map_reduce(&pool, &data, 100, |&x| x, |a, b| a + b, 0),
+            49_995_000
+        );
+    }
+}

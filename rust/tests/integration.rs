@@ -1,0 +1,183 @@
+//! Cross-module integration tests: every workload × every framework ×
+//! both schedulers, pool reuse, deep recursion, concurrent submitters,
+//! and the Theorem 1/2 bounds on the live runtime.
+
+use rustfork::baseline::{self, jobs, Policy};
+use rustfork::config::FrameworkKind;
+use rustfork::harness::runner::{self, WorkloadRun};
+use rustfork::rt::Pool;
+use rustfork::sched::SchedulerKind;
+use rustfork::stack;
+use rustfork::workloads::fib::{fib_exact, Fib};
+use rustfork::workloads::integrate::Integrate;
+use rustfork::workloads::nqueens::Nqueens;
+use rustfork::workloads::params::{Scale, Workload};
+use rustfork::workloads::uts::{uts_serial, Uts, UtsConfig, UtsStar};
+
+#[test]
+fn full_matrix_smoke() {
+    // The validate sweep: all workloads × all frameworks × P ∈ {1,3}.
+    for w in [Workload::Fib, Workload::Integrate, Workload::Nqueens, Workload::Matmul, Workload::UtsT1] {
+        let expect = runner::serial_checksum(w, Scale::Smoke);
+        for fw in FrameworkKind::PARALLEL {
+            for p in [1usize, 3] {
+                let pool = fw
+                    .scheduler()
+                    .map(|s| Pool::builder().workers(p).scheduler(s).build());
+                let run = WorkloadRun { workload: w, framework: fw, workers: p, scale: Scale::Smoke };
+                let got = runner::run_workload(&run, pool.as_ref()).checksum;
+                assert_eq!(got, expect, "{w} × {fw} × P={p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_reuse_many_roots() {
+    let pool = Pool::with_workers(3);
+    for _ in 0..50 {
+        assert_eq!(pool.run(Fib::new(12)), fib_exact(12));
+    }
+    // Mixed task types on one pool.
+    assert_eq!(pool.run(Nqueens::new(8)), 92);
+    let v = pool.run(Integrate::root(50.0, 1e-4));
+    assert!((v - rustfork::workloads::integrate::integral_exact(50.0)).abs() / v < 1e-4);
+}
+
+#[test]
+fn concurrent_submitters() {
+    let pool = std::sync::Arc::new(Pool::with_workers(4));
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let pool = std::sync::Arc::clone(&pool);
+        joins.push(std::thread::spawn(move || {
+            let mut acc = 0u64;
+            for i in 0..8 {
+                acc += pool.run(Fib::new(10 + (t + i) % 8));
+            }
+            acc
+        }));
+    }
+    for j in joins {
+        assert!(j.join().unwrap() > 0);
+    }
+}
+
+#[test]
+fn deep_binomial_tree_no_stack_overflow() {
+    // T3-shaped trees reach depths in the thousands; frames live on
+    // segmented stacks, so neither the runtime nor the baselines may
+    // overflow the OS stack.
+    let cfg = UtsConfig::binomial(50.0, 0.35, 2, 9);
+    let expect = uts_serial(&cfg).nodes;
+    let pool = Pool::with_workers(2);
+    assert_eq!(pool.run(Uts::new(cfg)), expect);
+    assert_eq!(pool.run(UtsStar::new(cfg)), expect);
+    assert_eq!(baseline::run_job(Policy::ChildStealing, 2, jobs::UtsJob::new(cfg)), expect);
+}
+
+#[test]
+fn lazy_scheduler_sleeps_when_idle() {
+    let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Lazy).build();
+    let _ = pool.run(Fib::new(18));
+    // Give the thieves a moment to go idle, then check sleep counters.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let m = pool.metrics();
+    assert!(m.sleeps > 0, "lazy workers never slept: {m:?}");
+    // And correctness is unaffected after sleeping.
+    assert_eq!(pool.run(Fib::new(15)), fib_exact(15));
+}
+
+#[test]
+fn theorem2_memory_bound_live() {
+    // M_p <= (2c+3)·P·M_1 on the real runtime: measure the peak heap
+    // footprint of a deep recursion for P = 1 and P = 4.
+    let peak_for = |p: usize| {
+        let pool = Pool::builder().workers(p).first_stacklet(1024).build();
+        let scope = rustfork::mem::MemScope::begin();
+        let _ = pool.run(Fib::new(22));
+        scope.peak_bytes()
+    };
+    let m1 = peak_for(1).max(1);
+    let m4 = peak_for(4);
+    // Theorem 2's constant is loose; in practice (paper §IV-C) the
+    // coefficient is < 1. Assert the P-scaling stays within the bound
+    // with a small practical constant.
+    assert!(
+        m4 <= m1 * 4 * 8,
+        "M_4 = {m4} exceeds 8×P×M_1 = {} (M_1 = {m1})",
+        m1 * 4 * 8
+    );
+}
+
+#[test]
+fn theorem1_stack_bound_live() {
+    // Segmented-stack footprint vs Theorem 1 for a strand of frames.
+    let mut s = stack::SegmentedStack::with_first_capacity(64);
+    let mut live = Vec::new();
+    for i in 0..1000 {
+        let size = 64 + (i % 7) * 48;
+        live.push((s.alloc(size), size));
+        assert!(
+            s.footprint_bytes() <= stack::theorem1_bound(s.live_bytes()),
+            "footprint {} > bound {}",
+            s.footprint_bytes(),
+            stack::theorem1_bound(s.live_bytes())
+        );
+    }
+    for (p, sz) in live.into_iter().rev() {
+        s.dealloc(p, sz);
+    }
+}
+
+#[test]
+fn explicit_scheduling_pins_to_worker() {
+    use rustfork::task::{Coroutine, Cx, Step};
+
+    /// Migrates itself to a target worker, then reports where it ran.
+    struct Pinned {
+        target: usize,
+        state: u8,
+    }
+    impl Coroutine for Pinned {
+        type Output = usize;
+        fn step(&mut self, cx: &mut Cx<'_>) -> Step<usize> {
+            match self.state {
+                0 => {
+                    self.state = 1;
+                    Step::ScheduleOn(self.target)
+                }
+                _ => Step::Return(cx.worker_id()),
+            }
+        }
+    }
+
+    let pool = Pool::with_workers(4);
+    for target in 0..4 {
+        let ran_on = pool.run(Pinned { target, state: 0 });
+        assert_eq!(ran_on, target, "explicit scheduling ignored");
+    }
+}
+
+#[test]
+fn metrics_signals_equal_steals_at_quiescence() {
+    let pool = Pool::with_workers(4);
+    for _ in 0..10 {
+        let _ = pool.run(Fib::new(20));
+    }
+    let m = pool.metrics();
+    assert_eq!(m.signals, m.steals, "join accounting broke: {m:?}");
+}
+
+#[test]
+fn baseline_policies_scale_out() {
+    // Baselines complete with many workers (no deadlock under
+    // oversubscription).
+    for policy in [Policy::ChildStealing, Policy::GlobalQueue, Policy::TaskCaching] {
+        assert_eq!(
+            baseline::run_job(policy, 8, jobs::FibJob(18)),
+            fib_exact(18),
+            "{policy:?}"
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Integration: the full AOT bridge — JAX/Pallas-lowered HLO text
+//! artifacts loaded, compiled and executed through the rust PJRT
+//! runtime, composed with the continuation-stealing scheduler.
+//!
+//! Requires `make artifacts` (skipped with a note otherwise, so
+//! `cargo test` stays green on a fresh checkout).
+
+use rustfork::rt::Pool;
+use rustfork::runtime::{Engine, LEAF_DIM};
+use rustfork::sync::XorShift64;
+use rustfork::workloads::matmul::{matmul_naive, Matmul};
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("matmul_leaf.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load_dir(dir).expect("engine load"))
+}
+
+fn random(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| rng.next_f64() as f32 - 0.5).collect()
+}
+
+#[test]
+fn matmul_leaf_matches_naive() {
+    let Some(engine) = engine() else { return };
+    let a = random(LEAF_DIM * LEAF_DIM, 1);
+    let b = random(LEAF_DIM * LEAF_DIM, 2);
+    let got = engine.matmul_leaf(&a, &b).expect("execute");
+    let want = matmul_naive(&a, &b, LEAF_DIM, LEAF_DIM, LEAF_DIM);
+    let mut max_err = 0.0f32;
+    for (x, y) in got.iter().zip(&want) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 1e-2, "max abs err {max_err}");
+}
+
+#[test]
+fn quad_leaf_matches_analytic() {
+    let Some(engine) = engine() else { return };
+    // ∫₀⁴ (x²+1)x dx = 4⁴/4 + 4²/2 = 72.
+    let got = engine.quad_leaf(0.0, 4.0).expect("execute");
+    assert!((got - 72.0).abs() / 72.0 < 1e-3, "got {got}");
+    // Traced bounds: a second interval through the same executable.
+    let got2 = engine.quad_leaf(1.0, 2.0).expect("execute");
+    let exact = (2.0f32.powi(4) / 4.0 + 2.0) - (1.0 / 4.0 + 0.5);
+    assert!((got2 - exact).abs() / exact < 1e-3, "got {got2} want {exact}");
+}
+
+#[test]
+fn pjrt_leaves_under_scheduler() {
+    // The end-to-end composition: D&C matmul on the continuation-
+    // stealing pool with PJRT Pallas leaves.
+    let Some(engine) = engine() else { return };
+    let leaf = Box::leak(Box::new(rustfork::runtime::engine::PjrtGemmLeaf::new(engine)));
+    let n = 2 * LEAF_DIM; // 4 leaf tiles
+    let a = random(n * n, 3);
+    let b = random(n * n, 4);
+    let mut c = vec![0.0f32; n * n];
+    let pool = Pool::with_workers(2);
+    let task = Matmul::new(
+        a.as_ptr(),
+        b.as_ptr(),
+        c.as_mut_ptr(),
+        n,
+        n,
+        n,
+        n,
+        n,
+        n,
+        leaf,
+    )
+    .with_base(LEAF_DIM);
+    pool.run(task);
+    let want = matmul_naive(&a, &b, n, n, n);
+    let mut max_err = 0.0f32;
+    for (x, y) in c.iter().zip(&want) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 5e-2, "max abs err {max_err}");
+}

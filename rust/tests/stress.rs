@@ -1,0 +1,166 @@
+//! Stress and property tests: sustained contention on the runtime's
+//! lock-free structures and randomized workload shapes (hand-rolled
+//! property generators; proptest is not in the vendored crate set).
+
+use rustfork::rt::Pool;
+use rustfork::sched::SchedulerKind;
+use rustfork::sync::XorShift64;
+use rustfork::task::{Coroutine, Cx, Step};
+use rustfork::workloads::fib::{fib_exact, Fib};
+use rustfork::workloads::uts::{uts_serial, Uts, UtsConfig};
+
+/// A randomized irregular tree task: each node derives its child count
+/// and sizes from a splitmix of its seed — a property generator for the
+/// fork/join/steal machinery (distinct from UTS's SHA-1 trees).
+struct RandomTree {
+    seed: u64,
+    depth: u32,
+    max_depth: u32,
+    state: u8,
+    idx: u32,
+    nchild: u32,
+    counts: Vec<u64>,
+}
+
+impl RandomTree {
+    fn new(seed: u64, max_depth: u32) -> Self {
+        RandomTree { seed, depth: 0, max_depth, state: 0, idx: 0, nchild: 0, counts: Vec::new() }
+    }
+
+    fn expected(seed: u64, depth: u32, max_depth: u32) -> u64 {
+        if depth >= max_depth {
+            return 1;
+        }
+        let n = Self::fanout(seed, depth, max_depth);
+        let mut total = 1;
+        for i in 0..n {
+            total += Self::expected(Self::child_seed(seed, i), depth + 1, max_depth);
+        }
+        total
+    }
+
+    fn fanout(seed: u64, depth: u32, max_depth: u32) -> u32 {
+        if depth >= max_depth {
+            return 0;
+        }
+        let mut rng = XorShift64::new(seed ^ 0x9E37);
+        (rng.next_below(4)) as u32 // 0..=3 children
+    }
+
+    fn child_seed(seed: u64, i: u32) -> u64 {
+        seed.wrapping_mul(6364136223846793005).wrapping_add(i as u64 + 1)
+    }
+}
+
+impl Coroutine for RandomTree {
+    type Output = u64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+        match self.state {
+            0 => {
+                self.nchild = Self::fanout(self.seed, self.depth, self.max_depth);
+                if self.nchild == 0 {
+                    return Step::Return(1);
+                }
+                self.counts = vec![0; self.nchild as usize];
+                self.state = 1;
+                self.step(cx)
+            }
+            1 => {
+                if self.idx < self.nchild {
+                    let i = self.idx;
+                    self.idx += 1;
+                    let child = RandomTree {
+                        seed: Self::child_seed(self.seed, i),
+                        depth: self.depth + 1,
+                        max_depth: self.max_depth,
+                        state: 0,
+                        idx: 0,
+                        nchild: 0,
+                        counts: Vec::new(),
+                    };
+                    let slot = &mut self.counts[i as usize] as *mut u64;
+                    cx.fork(slot, child);
+                    Step::Dispatch
+                } else {
+                    self.state = 2;
+                    Step::Join
+                }
+            }
+            _ => Step::Return(1 + self.counts.iter().sum::<u64>()),
+        }
+    }
+}
+
+#[test]
+fn property_random_trees_match_serial_count() {
+    // 20 random tree shapes × 2 schedulers; parallel count must match
+    // the recursive expectation.
+    let busy = Pool::with_workers(4);
+    let lazy = Pool::builder().workers(3).scheduler(SchedulerKind::Lazy).build();
+    let mut rng = XorShift64::new(0xBEEF);
+    for trial in 0..20 {
+        let seed = rng.next_u64();
+        let depth = 4 + (trial % 8) as u32;
+        let expect = RandomTree::expected(seed, 0, depth);
+        assert_eq!(busy.run(RandomTree::new(seed, depth)), expect, "busy trial {trial}");
+        assert_eq!(lazy.run(RandomTree::new(seed, depth)), expect, "lazy trial {trial}");
+    }
+}
+
+#[test]
+fn sustained_contention_small_tasks() {
+    // Many tiny roots back-to-back: exercises submission queues,
+    // steal races and stack recycling under constant churn.
+    let pool = Pool::with_workers(4);
+    for round in 0..200 {
+        let n = 8 + round % 10;
+        assert_eq!(pool.run(Fib::new(n)), fib_exact(n), "round {round}");
+    }
+}
+
+#[test]
+fn burst_of_concurrent_roots() {
+    let pool = Pool::with_workers(4);
+    let handles: Vec<_> = (0..64).map(|i| pool.submit(Fib::new(12 + i % 6))).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        assert_eq!(h.join(), fib_exact(12 + (i as u64) % 6));
+    }
+}
+
+#[test]
+fn repeated_uts_deterministic_across_runs() {
+    let cfg = UtsConfig::geometric(4.0, 8, 3);
+    let expect = uts_serial(&cfg).nodes;
+    let pool = Pool::with_workers(4);
+    for _ in 0..10 {
+        assert_eq!(pool.run(Uts::new(cfg)), expect);
+    }
+}
+
+#[test]
+fn many_pools_lifecycle() {
+    // Pool construction/teardown churn: worker threads must always
+    // join (no leaked threads or lost shutdown wakeups).
+    for p in 1..=4 {
+        for _ in 0..5 {
+            let pool = Pool::builder()
+                .workers(p)
+                .scheduler(if p % 2 == 0 { SchedulerKind::Lazy } else { SchedulerKind::Busy })
+                .build();
+            assert_eq!(pool.run(Fib::new(10)), 55);
+            drop(pool);
+        }
+    }
+}
+
+#[test]
+fn stack_churn_alternating_deep_shallow() {
+    // Alternating deep and shallow strands forces stacklet growth,
+    // caching and release cycles (the hot-split guard).
+    let pool = Pool::builder().workers(2).first_stacklet(256).build();
+    for i in 0..30 {
+        let n = if i % 2 == 0 { 18 } else { 4 };
+        assert_eq!(pool.run(Fib::new(n)), fib_exact(n));
+    }
+}
