@@ -129,8 +129,11 @@ pub struct FrameHeader {
     pub steals: u32,
     /// Wait-free split join counter for the current scope.
     pub join: JoinCounter,
-    /// Completion signal for root tasks (null otherwise). Points at a
-    /// `rt::pool::RootSignal` owned by the submitter.
+    /// Completion signal for root tasks (null otherwise). A raw
+    /// `Arc::into_raw` reference to the `rt::pool::RootSignal` shared
+    /// with the submitter's handle; the worker reconstitutes (and
+    /// releases) it in the final awaitable, so the signal outlives
+    /// `complete()` even if the handle is dropped concurrently.
     pub root_signal: *const crate::rt::pool::RootSignal,
 }
 

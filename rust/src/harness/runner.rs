@@ -35,7 +35,9 @@ pub struct MeasuredRun {
 }
 
 /// The integrate tolerance per scale (n is fixed at the paper's 10⁴).
-fn integrate_eps(scale: Scale) -> f64 {
+/// Public so external conformance tests can construct bit-identical
+/// integrate jobs.
+pub fn integrate_eps(scale: Scale) -> f64 {
     match scale {
         Scale::Paper => 1e-9,
         Scale::Scaled => 1e-4,

@@ -30,7 +30,12 @@
 //! * [`mem`], [`analysis`], [`metrics`] — peak-memory accounting, power-law
 //!   fitting (Eq. 17 / Table II) and runtime counters.
 //! * [`runtime`] — the PJRT client that loads AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) for the matmul leaf tiles.
+//!   artifacts (`artifacts/*.hlo.txt`) for the matmul leaf tiles
+//!   (`pjrt` feature; requires vendored xla bindings).
+//! * [`service`] — the **job-service layer**: an asynchronous, batched,
+//!   NUMA-sharded [`service::JobServer`] over the pool, with pluggable
+//!   placement (round-robin / least-loaded) and bounded-admission
+//!   backpressure.
 //!
 //! ## Quickstart
 //!
@@ -42,6 +47,46 @@
 //! let pool = Pool::builder().workers(2).build();
 //! let fib10 = pool.run(Fib::new(10));
 //! assert_eq!(fib10, 55);
+//! ```
+//!
+//! ## Async and batched submission
+//!
+//! [`rt::pool::RootHandle`] is both a blocking join handle and a
+//! [`std::future::Future`]; [`rt::pool::Pool::submit_batch`] enqueues
+//! many roots with one wake sweep. The async contract: the completing
+//! worker's Release-store of the done flag happens-after the result
+//! write, wakers registered via `poll` are invoked exactly once on
+//! completion, and the result is produced exactly once.
+//!
+//! ```
+//! use rustfork::prelude::*;
+//! use rustfork::workloads::fib::Fib;
+//!
+//! let pool = Pool::builder().workers(2).build();
+//! // Batched: one submission sweep for all three roots.
+//! let handles = pool.submit_batch((10..13).map(Fib::new));
+//! let total: u64 = handles.into_iter().map(|h| h.join()).sum();
+//! assert_eq!(total, 55 + 89 + 144);
+//! // Async: await a root on the minimal built-in executor.
+//! let value = rustfork::sync::block_on(pool.submit(Fib::new(10)));
+//! assert_eq!(value, 55);
+//! ```
+//!
+//! ## Serving traffic
+//!
+//! ```
+//! use rustfork::numa::NumaTopology;
+//! use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded};
+//!
+//! let server = JobServer::builder()
+//!     .topology(NumaTopology::synthetic(2, 2)) // 2 shards × 2 workers
+//!     .capacity(64)                            // backpressure bound
+//!     .policy(LeastLoaded)
+//!     .build();
+//! let handles = server.submit_batch((0..8).map(MixedJob::from_seed).collect());
+//! for (seed, h) in (0..8).zip(handles) {
+//!     assert_eq!(h.join(), MixedJob::expected(seed));
+//! }
 //! ```
 
 pub mod algo;
@@ -57,6 +102,7 @@ pub mod numa;
 pub mod rt;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod sim;
 pub mod stack;
 pub mod sync;
@@ -66,8 +112,10 @@ pub mod workloads;
 /// Commonly used items re-exported for examples and benches.
 pub mod prelude {
     pub use crate::config::RunConfig;
-    pub use crate::rt::pool::Pool;
+    pub use crate::rt::pool::{Pool, RootHandle};
     pub use crate::sched::SchedulerKind;
+    pub use crate::service::JobServer;
+    pub use crate::sync::block_on;
     pub use crate::task::{Coroutine, Step};
     pub use crate::workloads::Workload;
 }

@@ -11,12 +11,16 @@
 //! * `calibrate` — measure per-task overheads (feeds the simulator)
 //! * `run`       — run one workload: `repro run fib --workers 4
 //!                 --framework busy --scale scaled`
+//! * `serve`     — job-service throughput: `repro serve --jobs 10000
+//!                 --shards 2 --policy least --batch 64`
 //! * `bench`     — pointers to the cargo bench targets per figure/table
 
 use rustfork::config::FrameworkKind;
 use rustfork::harness::{fmt_secs, measure, runner};
 use rustfork::numa::NumaTopology;
 use rustfork::rt::Pool;
+use rustfork::sched::SchedulerKind;
+use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, RoundRobin};
 use rustfork::sim::{SimConfig, SimTask, Simulator, StealDiscipline};
 use rustfork::workloads::params::{Scale, Workload};
 use rustfork::workloads::uts::{uts_serial, UtsConfig};
@@ -29,6 +33,7 @@ fn main() {
         Some("sim") => sim(&args[1..]),
         Some("calibrate") => calibrate(),
         Some("run") => run_one(&args[1..]),
+        Some("serve") => serve(&args[1..]),
         Some("bench") => bench_help(),
         _ => usage(),
     }
@@ -37,10 +42,12 @@ fn main() {
 fn usage() {
     println!(
         "repro — rustfork launcher\n\
-         usage: repro <params|validate|sim|calibrate|run|bench> [options]\n\
+         usage: repro <params|validate|sim|calibrate|run|serve|bench> [options]\n\
          \n\
          repro run <workload> [--workers N] [--framework F] [--scale S]\n\
          repro sim [--family classic|uts] [--max-p N] [--numa-ablation]\n\
+         repro serve [--jobs N] [--batch N] [--shards N] [--workers N]\n\
+         \x20          [--capacity N] [--policy rr|least] [--scheduler busy|lazy]\n\
          workloads: fib integrate matmul nqueens T1 T1L T1XXL T3 T3L T3XXL\n\
          frameworks: busy lazy tbb openmp taskflow serial"
     );
@@ -270,6 +277,91 @@ fn run_one(args: &[String]) {
     }
 }
 
+/// Job-service throughput demo: drive a sharded [`JobServer`] with a
+/// stream of small mixed jobs (validated against their serial oracle)
+/// and report jobs/sec plus per-shard placement/steal statistics.
+fn serve(args: &[String]) {
+    let jobs: u64 =
+        flag_value(args, "--jobs").and_then(|v| v.parse().ok()).unwrap_or(10_000);
+    let batch: usize =
+        flag_value(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let capacity: usize =
+        flag_value(args, "--capacity").and_then(|v| v.parse().ok()).unwrap_or(1024);
+    let scheduler = flag_value(args, "--scheduler")
+        .and_then(SchedulerKind::parse)
+        .unwrap_or(SchedulerKind::Lazy);
+    let policy = flag_value(args, "--policy").unwrap_or("rr");
+
+    let mut builder = JobServer::builder().capacity(capacity).scheduler(scheduler);
+    if let Some(n) = flag_value(args, "--shards").and_then(|v| v.parse().ok()) {
+        builder = builder.shards(n);
+    }
+    if let Some(n) = flag_value(args, "--workers").and_then(|v| v.parse().ok()) {
+        builder = builder.workers_per_shard(n);
+    }
+    let server = match policy {
+        "least" | "least-loaded" => builder.policy(LeastLoaded).build(),
+        _ => builder.policy(RoundRobin::new()).build(),
+    };
+    println!(
+        "# serve: {} shards × {} workers, policy {}, capacity {}, {} jobs (batch {})",
+        server.shards(),
+        server.workers() / server.shards().max(1),
+        server.policy_name(),
+        server.capacity(),
+        jobs,
+        batch
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut joined = 0u64;
+    let mut failures = 0u64;
+    let mut seed = 0u64;
+    while seed < jobs {
+        let wave = batch.min((jobs - seed) as usize);
+        let seeds: Vec<u64> = (seed..seed + wave as u64).collect();
+        let handles =
+            server.submit_batch(seeds.iter().map(|&s| MixedJob::from_seed(s)).collect());
+        for (&s, h) in seeds.iter().zip(handles) {
+            if h.join() != MixedJob::expected(s) {
+                failures += 1;
+            }
+            joined += 1;
+        }
+        seed += wave as u64;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{} jobs in {} — {:.0} jobs/sec, {} result mismatches",
+        joined,
+        fmt_secs(secs),
+        joined as f64 / secs,
+        failures
+    );
+    let stats = server.stats();
+    for s in &stats.shards {
+        let m = server.shard_metrics(s.shard);
+        println!(
+            "shard {} (node {}, {} workers): completed={} tasks={} steals={} sleeps={}",
+            s.shard, s.node, s.workers, s.completed, m.tasks(), m.steals, m.sleeps
+        );
+    }
+    let m = server.metrics();
+    println!(
+        "aggregate: submitted={} completed={} rejected={} signals={} steals={}{}",
+        stats.submitted,
+        stats.completed,
+        stats.rejected,
+        m.signals,
+        m.steals,
+        if m.signals == m.steals { " (quiescent ✓)" } else { " (MISMATCH)" }
+    );
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
 fn bench_help() {
     println!(
         "# benchmark targets (cargo bench --bench <name>)\n\
@@ -278,8 +370,10 @@ fn bench_help() {
          memory    — Fig. 7 + Table II: peak memory power-law fits\n\
          overhead  — §IV-C.1a: T_1/T_s per framework\n\
          micro     — substrate micro-benches (deque/stack/sampler/join)\n\
+         service   — job-service throughput (jobs/sec, batched vs not)\n\
          \n\
          env: RUSTFORK_REPS, RUSTFORK_SMOKE=1, RUSTFORK_UTS_LARGE=1,\n\
-              RUSTFORK_UTS_FULL=1, RUSTFORK_SIM_MAX_P, RUSTFORK_MEM_MAX_P"
+              RUSTFORK_UTS_FULL=1, RUSTFORK_SIM_MAX_P, RUSTFORK_MEM_MAX_P,\n\
+              RUSTFORK_JOBS, RUSTFORK_BATCH"
     );
 }

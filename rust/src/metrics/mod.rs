@@ -78,6 +78,20 @@ impl MetricsSnapshot {
         self.forks + self.calls + self.roots
     }
 
+    /// Accumulate another snapshot into this one (e.g. aggregating the
+    /// per-shard sub-pools of a [`crate::service::JobServer`]).
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.forks += other.forks;
+        self.calls += other.calls;
+        self.steals += other.steals;
+        self.steal_misses += other.steal_misses;
+        self.remote_steals += other.remote_steals;
+        self.pops += other.pops;
+        self.signals += other.signals;
+        self.sleeps += other.sleeps;
+        self.roots += other.roots;
+    }
+
     /// Difference against an earlier snapshot.
     pub fn since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {

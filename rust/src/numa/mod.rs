@@ -24,20 +24,38 @@ pub use topology::{NumaTopology, TopologyKind};
 /// Pin the calling thread to a CPU. No-op (Ok) when the CPU does not
 /// exist (e.g. simulating 112 workers on a 1-core machine) — the
 /// schedulers are correct without affinity, just less cache-friendly.
+///
+/// Binds `sched_setaffinity` directly from the C library instead of
+/// going through the `libc` crate, keeping the build dependency-free.
+#[cfg(target_os = "linux")]
 pub fn pin_current_thread(cpu: usize) -> std::io::Result<()> {
+    // Mirrors glibc's fixed 1024-bit cpu_set_t.
+    const MASK_WORDS: usize = 1024 / 64;
+
+    extern "C" {
+        // int sched_setaffinity(pid_t pid, size_t cpusetsize, const cpu_set_t *mask);
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
     let ncpus = available_cpus();
-    if cpu >= ncpus {
+    if cpu >= ncpus || cpu >= 1024 {
         return Ok(());
     }
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        libc::CPU_SET(cpu, &mut set);
-        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
-        if rc != 0 {
-            return Err(std::io::Error::last_os_error());
-        }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    let rc = unsafe {
+        sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr())
+    };
+    if rc != 0 {
+        return Err(std::io::Error::last_os_error());
     }
+    Ok(())
+}
+
+/// Non-Linux fallback: affinity is best-effort everywhere; correctness
+/// never depends on it.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpu: usize) -> std::io::Result<()> {
     Ok(())
 }
 

@@ -13,22 +13,52 @@ use crate::sync::{CachePadded, Parker};
 use crate::task::{Coroutine, Frame};
 
 /// Completion signal for a root task (non-generic part). The submitter
-/// parks on it; the worker finishing the root notifies it.
+/// either parks on it (blocking `join`) or registers a [`Waker`]
+/// (async `await`); the worker finishing the root notifies both.
 #[derive(Debug)]
 pub struct RootSignal {
     done: AtomicBool,
     parker: Parker,
+    /// Waker registered by an async awaiter (at most one — `RootHandle`
+    /// is not cloneable). Guarded by a mutex rather than an atomic state
+    /// machine: registration/completion happen once per root, never on
+    /// the fork/join hot path.
+    waker: std::sync::Mutex<Option<std::task::Waker>>,
 }
 
 impl RootSignal {
     fn new() -> Self {
-        RootSignal { done: AtomicBool::new(false), parker: Parker::new() }
+        RootSignal {
+            done: AtomicBool::new(false),
+            parker: Parker::new(),
+            waker: std::sync::Mutex::new(None),
+        }
     }
 
-    /// Worker side: publish completion (Release) and wake the submitter.
+    /// Worker side: publish completion (Release) and wake the submitter —
+    /// both the blocking parker and any registered async waker.
     pub fn complete(&self) {
         self.done.store(true, Ordering::Release);
         self.parker.notify();
+        // Lock ordering vs `register_waker`: `done` is set before taking
+        // the lock here, and `poll` re-checks `done` after releasing it,
+        // so either we see the waker or the poller sees completion.
+        let waker = self.waker.lock().unwrap().take();
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+
+    /// Async side: (re-)register the waker to be called on completion.
+    /// The caller must re-check [`Self::is_done`] afterwards to close the
+    /// race with a concurrent [`Self::complete`].
+    pub fn register_waker(&self, waker: &std::task::Waker) {
+        let mut slot = self.waker.lock().unwrap();
+        // Skip the clone when re-registering the same waker.
+        match &mut *slot {
+            Some(w) if w.will_wake(waker) => {}
+            other => *other = Some(waker.clone()),
+        }
     }
 
     /// Submitter side: block until complete.
@@ -72,6 +102,10 @@ pub struct Shared {
     pub parked_flag: Vec<CachePadded<AtomicBool>>,
     /// First-stacklet capacity for worker stacks.
     pub first_stacklet: usize,
+    /// CPU id of worker 0 — worker `i` pins to CPU `pin_offset + i`.
+    /// Lets a sharded job server place each sub-pool on its own NUMA
+    /// node's cores (see [`crate::service`]).
+    pub pin_offset: usize,
 }
 
 impl Shared {
@@ -129,6 +163,7 @@ pub struct PoolBuilder {
     topology: Option<NumaTopology>,
     first_stacklet: usize,
     seed: u64,
+    pin_offset: usize,
 }
 
 impl PoolBuilder {
@@ -139,6 +174,7 @@ impl PoolBuilder {
             topology: None,
             first_stacklet: crate::stack::FIRST_STACKLET,
             seed: 0x5EED,
+            pin_offset: 0,
         }
     }
 
@@ -169,6 +205,14 @@ impl PoolBuilder {
     /// RNG seed for victim selection (determinism in tests).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Pin worker `i` to CPU `offset + i` instead of CPU `i`. Used by
+    /// the sharded [`crate::service::JobServer`] to place each sub-pool
+    /// on its own NUMA node's cores. Best-effort, like all pinning.
+    pub fn pin_offset(mut self, offset: usize) -> Self {
+        self.pin_offset = offset;
         self
     }
 
@@ -208,6 +252,7 @@ impl PoolBuilder {
                 .map(|_| CachePadded::new(AtomicBool::new(false)))
                 .collect(),
             first_stacklet: self.first_stacklet,
+            pin_offset: self.pin_offset,
         });
         let mut threads = Vec::with_capacity(p);
         for id in 0..p {
@@ -267,12 +312,72 @@ impl Pool {
         handle.join()
     }
 
-    /// Submit a root task; returns a handle to join later. Root tasks are
-    /// distributed round-robin over the per-worker submission queues.
+    /// Submit a root task; returns a handle to join later (or `.await`).
+    /// Root tasks are distributed round-robin over the per-worker
+    /// submission queues.
     pub fn submit<C: Coroutine>(&self, task: C) -> RootHandle<C::Output> {
+        let (frame, handle) = self.new_root(task);
+        let target = self.next_target();
+        self.shared.submissions[target].push(frame);
+        self.wake_target(target);
+        handle
+    }
+
+    /// Submit a batch of root tasks with one wake sweep instead of a
+    /// per-job `notify`, amortizing parker and flag traffic on the
+    /// submission hot path. Frames are distributed round-robin (same
+    /// counter as [`Self::submit`]) but enqueued per worker via
+    /// [`SubmissionQueue::push_batch`] — a single tail exchange per
+    /// (batch × worker) rather than per job. Handles are returned in
+    /// input order.
+    pub fn submit_batch<C: Coroutine>(
+        &self,
+        tasks: impl IntoIterator<Item = C>,
+    ) -> Vec<RootHandle<C::Output>> {
+        let p = self.workers();
+        let mut groups: Vec<Vec<FramePtr>> = (0..p).map(|_| Vec::new()).collect();
+        let mut handles = Vec::new();
+        for task in tasks {
+            let (frame, handle) = self.new_root(task);
+            groups[self.next_target()].push(frame);
+            handles.push(handle);
+        }
+        for (w, group) in groups.into_iter().enumerate() {
+            if !group.is_empty() {
+                self.shared.submissions[w].push_batch(group);
+                self.wake_target(w);
+            }
+        }
+        handles
+    }
+
+    /// Round-robin submission target.
+    #[inline]
+    fn next_target(&self) -> usize {
+        self.next_submit.fetch_add(1, Ordering::Relaxed) % self.workers()
+    }
+
+    /// Wake `target` after pushing to its submission queue. The eager
+    /// flag clear keeps `wake_one` from wasting its CAS on a worker that
+    /// is already being woken; the latched parker closes the race with a
+    /// concurrent park.
+    #[inline]
+    fn wake_target(&self, target: usize) {
+        self.shared.parked_flag[target].store(false, Ordering::Release);
+        self.shared.parkers[target].notify();
+    }
+
+    /// Allocate a root frame (stack + signal + result cell) for `task`.
+    fn new_root<C: Coroutine>(&self, task: C) -> (FramePtr, RootHandle<C::Output>) {
         // The root gets a fresh stack that travels with the frame.
         let mut stack = SegmentedStack::with_first_capacity(self.shared.first_stacklet);
-        let signal = Box::new(RootSignal::new());
+        // The signal is jointly owned: the handle holds one reference,
+        // the frame a second (as a raw Arc clone, released by the worker
+        // in the final awaitable). Joint ownership is load-bearing — a
+        // waiter can observe `done` and free its side while the worker
+        // is still inside `complete()` (parker notify, waker wake), so
+        // single ownership through the handle would be a use-after-free.
+        let signal = Arc::new(RootSignal::new());
         let result: Box<std::mem::MaybeUninit<C::Output>> =
             Box::new(std::mem::MaybeUninit::uninit());
         let result_ptr = Box::into_raw(result);
@@ -288,7 +393,7 @@ impl Pool {
                     kind: FrameKind::Root,
                     steals: 0,
                     join: JoinCounter::new(),
-                    root_signal: &*signal,
+                    root_signal: Arc::into_raw(Arc::clone(&signal)),
                 },
                 out: result_ptr as *mut C::Output,
                 task,
@@ -296,15 +401,10 @@ impl Pool {
         }
         let stack_ptr = Box::into_raw(stack);
         unsafe { (*(mem as *mut FrameHeader)).stack = stack_ptr };
-
-        let target =
-            self.next_submit.fetch_add(1, Ordering::Relaxed) % self.workers();
-        self.shared.submissions[target].push(FramePtr(mem as *mut FrameHeader));
-        self.shared.parkers[target].notify();
-        // A parked target must also clear its flag eagerly; wake_one
-        // handles the general case of other sleepers.
-        self.shared.parked_flag[target].store(false, Ordering::Release);
-        RootHandle { signal, result: result_ptr, joined: false }
+        (
+            FramePtr(mem as *mut FrameHeader),
+            RootHandle { signal, result: result_ptr, joined: false },
+        )
     }
 }
 
@@ -324,8 +424,21 @@ impl Drop for Pool {
 }
 
 /// Join handle for a submitted root task.
+///
+/// Works both synchronously and asynchronously:
+///
+/// * [`RootHandle::join`] blocks the calling thread until completion;
+/// * as a [`std::future::Future`], it registers its waker with the
+///   root's [`RootSignal`] and resolves to the task's output when the
+///   completing worker calls [`RootSignal::complete`]. Any executor
+///   works; the crate ships a minimal one in [`crate::sync::block_on`].
+///
+/// The async contract: the result is produced exactly once (by `join`,
+/// by the future's `Ready`, or by the blocking drop path), the worker's
+/// Release store of `done` happens-after the result write, and polling
+/// after completion panics (like `JoinHandle` misuse).
 pub struct RootHandle<T> {
-    signal: Box<RootSignal>,
+    signal: Arc<RootSignal>,
     result: *mut std::mem::MaybeUninit<T>,
     joined: bool,
 }
@@ -336,16 +449,50 @@ impl<T> RootHandle<T> {
     /// Block until the task completes and take its result.
     pub fn join(mut self) -> T {
         self.signal.wait();
-        self.joined = true;
-        unsafe {
-            let b = Box::from_raw(self.result);
-            *b.assume_init()
-        }
+        unsafe { self.take_result() }
     }
 
     /// Non-blocking completion check.
     pub fn is_done(&self) -> bool {
         self.signal.is_done()
+    }
+
+    /// Take ownership of the completed result.
+    ///
+    /// # Safety
+    /// The signal must have completed (`is_done()`), and the result must
+    /// not have been taken yet (`!self.joined`).
+    unsafe fn take_result(&mut self) -> T {
+        debug_assert!(self.signal.is_done() && !self.joined);
+        self.joined = true;
+        let b = Box::from_raw(self.result);
+        *b.assume_init()
+    }
+}
+
+impl<T: Send> std::future::Future for RootHandle<T> {
+    type Output = T;
+
+    fn poll(
+        self: std::pin::Pin<&mut Self>,
+        cx: &mut std::task::Context<'_>,
+    ) -> std::task::Poll<T> {
+        // All fields are Unpin (Box / raw pointer / bool), so the struct
+        // is Unpin and get_mut is safe.
+        let this = self.get_mut();
+        assert!(!this.joined, "RootHandle polled after completion");
+        if this.signal.is_done() {
+            return std::task::Poll::Ready(unsafe { this.take_result() });
+        }
+        this.signal.register_waker(cx.waker());
+        // Re-check: completion may have raced between the first check
+        // and the registration (complete() takes the same lock, so if it
+        // missed our waker it had already set `done`).
+        if this.signal.is_done() {
+            std::task::Poll::Ready(unsafe { this.take_result() })
+        } else {
+            std::task::Poll::Pending
+        }
     }
 }
 

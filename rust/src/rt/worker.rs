@@ -108,13 +108,21 @@ impl Worker {
     /// Main loop: drain submissions, steal, idle per the configured
     /// scheduler (busy or lazy).
     pub(crate) fn run(&mut self) {
-        let _ = crate::numa::pin_current_thread(self.id);
+        let _ = crate::numa::pin_current_thread(self.shared.pin_offset + self.id);
         let mut backoff = Backoff::new();
         loop {
             debug_assert!(unsafe { (*self.stack).is_empty() }, "invariant 1");
 
             // 1. Own submission queue (root tasks, explicit scheduling).
             if let Some(FramePtr(f)) = self.shared.submissions[self.id].pop() {
+                // Batched submissions leave more jobs behind us; on a
+                // lazy pool, wake a sleeper now so the forks we are
+                // about to publish get stolen while we drain the rest.
+                if self.shared.scheduler == crate::sched::SchedulerKind::Lazy
+                    && !self.shared.submissions[self.id].is_empty()
+                {
+                    self.shared.wake_one(self.id);
+                }
                 unsafe { self.adopt_stack((*f).stack) };
                 self.enter_active();
                 unsafe { self.execute(f) };
@@ -296,7 +304,14 @@ impl Worker {
                 // sees this strand's counts).
                 self.flush_counters();
                 self.shared.metrics.worker(self.id).bump_roots();
-                (*root_signal).complete();
+                // The frame's signal reference is a raw Arc clone
+                // (`Pool::new_root`); reconstituting it keeps the signal
+                // alive through `complete()` — parker notify + async
+                // waker — even when the submitter observes `done` and
+                // drops its handle concurrently.
+                let signal = Arc::from_raw(root_signal);
+                signal.complete();
+                drop(signal);
                 // Root's stack is now empty; keep it as our current.
                 debug_assert!((*self.stack).is_empty());
                 Transfer::ToScheduler

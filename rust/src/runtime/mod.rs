@@ -8,6 +8,28 @@
 //! compiles each module on the PJRT CPU client, and exposes typed entry
 //! points the workloads dispatch at D&C leaves.
 
+//! The engine requires the vendored `xla` PJRT bindings, which are not
+//! part of the offline dependency-free build; it is gated behind the
+//! `pjrt` cargo feature. The AOT artifact *contract* (leaf shapes) is
+//! kept available unconditionally so the Pallas kernel sizes stay
+//! checkable without the bindings.
+
+// NOTE: enabling `pjrt` additionally requires adding the vendored `xla`
+// and `anyhow` crates as path dependencies in Cargo.toml — they are not
+// fetchable offline, so the feature alone activates no dependency and
+// engine.rs fails with unresolved-crate errors until they are vendored.
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, LEAF_DIM, QUAD_PANELS};
+
+/// Edge length of the matmul leaf tile baked into the AOT artifact
+/// (must match `python/compile/model.py::LEAF_DIM`).
+#[cfg(not(feature = "pjrt"))]
+pub const LEAF_DIM: usize = 256;
+
+/// Quadrature panels per `quad_leaf` call (must match
+/// `python/compile/model.py::QUAD_PANELS`).
+#[cfg(not(feature = "pjrt"))]
+pub const QUAD_PANELS: usize = 4096;

@@ -20,7 +20,12 @@ use crate::rt::worker::Worker;
 
 /// Backstop park duration; wake-ups normally arrive via `notify` long
 /// before this expires.
-const PARK_BACKSTOP: Duration = Duration::from_millis(1);
+///
+/// Public so tests can assert the liveness contract: even if a wakeup
+/// is lost in the `parked_flag`-store ↔ `wake_one`-CAS window, no
+/// submitted job waits longer than one backstop period before its
+/// target worker re-polls (see `rust/tests/lazy_wake.rs`).
+pub const PARK_BACKSTOP: Duration = Duration::from_millis(1);
 
 /// Try to park the worker per the adaptive policy. Called from the
 /// scheduler loop once the steal backoff is exhausted.

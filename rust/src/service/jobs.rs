@@ -1,0 +1,104 @@
+//! Small mixed workloads for driving a [`super::JobServer`]: the
+//! service-layer analogue of the paper's Table I programs, sized for
+//! many-jobs-per-second traffic instead of one seconds-long root.
+//!
+//! [`MixedJob`] is a single `Coroutine` type (so it can ride
+//! [`crate::rt::pool::Pool::submit_batch`]) that wraps fib, integrate
+//! and nqueens behind a common `u64` checksum output, with a seeded
+//! generator + expected-value oracle for stress tests and benches.
+
+use crate::task::{Coroutine, Cx, Step};
+use crate::workloads::fib::{fib_exact, Fib};
+use crate::workloads::integrate::{integral_serial, Integrate};
+use crate::workloads::nqueens::{nqueens_serial, Nqueens};
+
+/// Tolerance used by the seeded integrate jobs (coarse: service jobs
+/// are meant to be small).
+const EPS: f64 = 1e-4;
+
+/// One small job of a mixed service workload. Output is a `u64`
+/// checksum: fib/nqueens return their count, integrate returns the
+/// bit-pattern of its (deterministic) sum — the same convention as
+/// [`crate::harness::runner::serial_checksum`].
+pub enum MixedJob {
+    /// Recursive Fibonacci.
+    Fib(Fib),
+    /// Adaptive quadrature.
+    Integrate(Integrate),
+    /// N-queens backtracking.
+    Nqueens(Nqueens),
+}
+
+impl MixedJob {
+    /// A fib job.
+    pub fn fib(n: u64) -> Self {
+        MixedJob::Fib(Fib::new(n))
+    }
+
+    /// An integrate job over `[0, n]`.
+    pub fn integrate(n: f64, eps: f64) -> Self {
+        MixedJob::Integrate(Integrate::root(n, eps))
+    }
+
+    /// An nqueens job.
+    pub fn nqueens(n: usize) -> Self {
+        MixedJob::Nqueens(Nqueens::new(n))
+    }
+
+    /// Deterministic mixed job from a seed; [`Self::expected`] is its
+    /// oracle. Sizes are kept small (sub-millisecond each) so stress
+    /// tests and throughput benches measure the service layer, not the
+    /// workload.
+    pub fn from_seed(seed: u64) -> Self {
+        match seed % 3 {
+            0 => Self::fib(10 + (seed / 3) % 9),
+            1 => Self::integrate(10.0 + ((seed / 3) % 32) as f64, EPS),
+            _ => Self::nqueens(6 + ((seed / 3) % 3) as usize),
+        }
+    }
+
+    /// The serial expectation for [`Self::from_seed`]`(seed)`.
+    pub fn expected(seed: u64) -> u64 {
+        match seed % 3 {
+            0 => fib_exact(10 + (seed / 3) % 9),
+            1 => integral_serial(10.0 + ((seed / 3) % 32) as f64, EPS).to_bits(),
+            _ => nqueens_serial(6 + ((seed / 3) % 3) as usize),
+        }
+    }
+}
+
+impl Coroutine for MixedJob {
+    type Output = u64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+        match self {
+            MixedJob::Fib(t) => t.step(cx),
+            MixedJob::Integrate(t) => t.step(cx).map(f64::to_bits),
+            MixedJob::Nqueens(t) => t.step(cx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::Pool;
+
+    #[test]
+    fn seeded_jobs_match_oracle_on_a_pool() {
+        let pool = Pool::with_workers(2);
+        for seed in 0..24 {
+            let got = pool.run(MixedJob::from_seed(seed));
+            assert_eq!(got, MixedJob::expected(seed), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn seeded_batch_in_order() {
+        let pool = Pool::with_workers(3);
+        let handles = pool.submit_batch((0..30).map(MixedJob::from_seed));
+        for (seed, h) in (0..30).zip(handles) {
+            assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,685 @@
+//! The **job-service layer**: an asynchronous, batched, NUMA-sharded
+//! front-end over the continuation-stealing runtime.
+//!
+//! The paper's runtime is optimal for a *single* fork-join root; a
+//! production service instead faces a stream of independent root jobs
+//! from many client threads. [`JobServer`] turns the [`Pool`] into that
+//! service:
+//!
+//! * **Sharding** — one sub-pool per NUMA node (reusing
+//!   [`crate::numa::NumaTopology`]), each pinned to its node's cores via
+//!   [`crate::rt::pool::PoolBuilder::pin_offset`]. Steals stay
+//!   node-local inside a shard; jobs only cross nodes at placement
+//!   time, mirroring how HPX partitions its lightweight-task scheduler.
+//! * **Placement** — a pluggable [`PlacementPolicy`] decides which shard
+//!   receives each job: [`RoundRobin`] (stateless fairness) or
+//!   [`LeastLoaded`] (pick the shard with the fewest in-flight jobs,
+//!   fed by the per-shard load counters).
+//! * **Backpressure** — a bounded admission count. [`JobServer::submit`]
+//!   blocks while `capacity` jobs are in flight;
+//!   [`JobServer::try_submit`] fails fast and returns the job to the
+//!   caller. A job releases its slot the moment its root strand
+//!   returns, on the completing worker.
+//! * **Batching** — [`JobServer::submit_batch`] admits jobs in waves and
+//!   forwards each wave through [`Pool::submit_batch`], which enqueues
+//!   per-worker chains with a single MPSC tail exchange and performs
+//!   one wake sweep per touched worker instead of one `notify` per job.
+//! * **Async** — every submission returns a [`RootHandle`], which is
+//!   both a blocking join handle and a `Future` (waker plumbing through
+//!   [`crate::rt::pool::RootSignal`]), so callers can `.await` results
+//!   on any executor — e.g. [`crate::sync::block_on`].
+//!
+//! The quiescence invariant of the runtime (`signals == steals`,
+//! `rt::worker` invariant 3) holds per shard and therefore for the
+//! aggregated [`JobServer::metrics`], which the service stress tests
+//! assert after draining traffic.
+
+pub mod jobs;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::metrics::MetricsSnapshot;
+use crate::numa::NumaTopology;
+use crate::rt::pool::{Pool, RootHandle};
+use crate::sched::SchedulerKind;
+use crate::sync::CachePadded;
+use crate::task::{Coroutine, Cx, Step};
+
+/// Read-only view of the per-shard load counters, handed to placement
+/// policies. Reads the live atomics directly — no allocation or
+/// snapshotting on the submission path.
+pub struct ShardLoads<'a> {
+    loads: &'a [CachePadded<ShardLoad>],
+}
+
+impl ShardLoads<'_> {
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// True when the server has no shards (cannot happen in practice —
+    /// the builder enforces at least one).
+    pub fn is_empty(&self) -> bool {
+        self.loads.is_empty()
+    }
+
+    /// Admitted-but-uncompleted jobs currently placed on `shard`.
+    pub fn in_flight(&self, shard: usize) -> usize {
+        self.loads[shard].in_flight.load(Ordering::Relaxed)
+    }
+}
+
+/// Chooses the shard for each incoming job.
+///
+/// Implementations must return an index `< loads.len()` (out-of-range
+/// values are clamped by the server).
+pub trait PlacementPolicy: Send + Sync {
+    /// Pick a shard for the next job.
+    fn place(&self, loads: &ShardLoads<'_>) -> usize;
+
+    /// Human-readable policy name (reporting).
+    fn name(&self) -> &'static str {
+        "custom"
+    }
+}
+
+/// Stateless round-robin placement: perfect fairness, no load feedback.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    /// Fresh policy starting at shard 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl PlacementPolicy for RoundRobin {
+    fn place(&self, loads: &ShardLoads<'_>) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % loads.len().max(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Pick the shard with the fewest in-flight jobs (ties → lowest index).
+/// Adapts to skewed job sizes at the cost of reading every shard's load
+/// counter per placement.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl PlacementPolicy for LeastLoaded {
+    fn place(&self, loads: &ShardLoads<'_>) -> usize {
+        (0..loads.len()).min_by_key(|&s| loads.in_flight(s)).unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Per-shard load accounting (placement input + stats).
+#[derive(Debug)]
+struct ShardLoad {
+    /// Admitted jobs placed on this shard and not yet returned.
+    in_flight: AtomicUsize,
+    /// Jobs completed by this shard since construction.
+    completed: AtomicU64,
+}
+
+/// State shared between the server front-end and the completion hooks
+/// running on pool workers.
+struct ServerCore {
+    loads: Vec<CachePadded<ShardLoad>>,
+    /// Maximum admitted (in-flight) jobs — the backpressure bound.
+    capacity: usize,
+    /// Currently admitted jobs; guarded so waiters can sleep on `space`.
+    admitted: Mutex<usize>,
+    space: Condvar,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl ServerCore {
+    /// Completion hook: runs on the worker finishing a job's root
+    /// strand. Frees the admission slot and wakes one blocked submitter.
+    fn complete(&self, shard: usize) {
+        self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
+        self.loads[shard].completed.fetch_add(1, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut admitted = self.admitted.lock().unwrap();
+        debug_assert!(*admitted > 0, "completion without admission");
+        *admitted -= 1;
+        drop(admitted);
+        self.space.notify_one();
+    }
+}
+
+/// Wrapper coroutine that reports completion to the server when the
+/// inner job's root strand returns. Forks, calls and joins of the inner
+/// task pass through untouched — only the final `Return` is observed.
+struct Tracked<C: Coroutine> {
+    inner: C,
+    core: Arc<ServerCore>,
+    shard: usize,
+    done: bool,
+}
+
+impl<C: Coroutine> Coroutine for Tracked<C> {
+    type Output = C::Output;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<C::Output> {
+        let step = self.inner.step(cx);
+        if matches!(step, Step::Return(_)) && !self.done {
+            self.done = true;
+            self.core.complete(self.shard);
+        }
+        step
+    }
+}
+
+/// One shard: a pool bound to a NUMA node.
+struct Shard {
+    pool: Pool,
+    node: usize,
+}
+
+/// Builder for [`JobServer`].
+pub struct JobServerBuilder {
+    shards: Option<usize>,
+    workers_per_shard: Option<usize>,
+    scheduler: SchedulerKind,
+    capacity: usize,
+    topology: Option<NumaTopology>,
+    policy: Box<dyn PlacementPolicy>,
+    seed: u64,
+}
+
+impl JobServerBuilder {
+    fn new() -> Self {
+        JobServerBuilder {
+            shards: None,
+            workers_per_shard: None,
+            // Service default: lazy — an idle server should not spin.
+            scheduler: SchedulerKind::Lazy,
+            capacity: 1024,
+            topology: None,
+            policy: Box::new(RoundRobin::new()),
+            seed: 0x5EED,
+        }
+    }
+
+    /// Number of shards (default: one per detected NUMA node).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = Some(n.max(1));
+        self
+    }
+
+    /// Workers per shard (default: the shard's node core count).
+    pub fn workers_per_shard(mut self, n: usize) -> Self {
+        self.workers_per_shard = Some(n.max(1));
+        self
+    }
+
+    /// Scheduler for the sub-pools (default: lazy).
+    pub fn scheduler(mut self, s: SchedulerKind) -> Self {
+        self.scheduler = s;
+        self
+    }
+
+    /// Admission bound: maximum in-flight jobs before `submit` blocks
+    /// and `try_submit` rejects (default 1024).
+    pub fn capacity(mut self, jobs: usize) -> Self {
+        self.capacity = jobs.max(1);
+        self
+    }
+
+    /// Override the detected topology (tests, simulation).
+    pub fn topology(mut self, t: NumaTopology) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    /// Placement policy (default: round-robin).
+    pub fn policy(mut self, p: impl PlacementPolicy + 'static) -> Self {
+        self.policy = Box::new(p);
+        self
+    }
+
+    /// Placement policy, pre-boxed (for policies chosen at runtime).
+    pub fn policy_boxed(mut self, p: Box<dyn PlacementPolicy>) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Seed for the sub-pools' victim selection.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Build the server, spawning every shard's workers.
+    pub fn build(self) -> JobServer {
+        let topology = self
+            .topology
+            .unwrap_or_else(|| NumaTopology::detect(crate::numa::available_cpus()));
+        let nodes = topology.nodes().max(1);
+        let shard_count = self.shards.unwrap_or(nodes).max(1);
+        let mut shards = Vec::with_capacity(shard_count);
+        for s in 0..shard_count {
+            let node = s % nodes;
+            let cores = topology.cores_in(node);
+            // When several shards land on one node (more shards than
+            // nodes), split its cores between them.
+            let shards_on_node = shard_count / nodes
+                + usize::from(s % nodes < shard_count % nodes);
+            let workers = self
+                .workers_per_shard
+                .unwrap_or_else(|| (cores.len() / shards_on_node.max(1)).max(1));
+            let pin_offset = cores
+                .get((s / nodes) * workers)
+                .or_else(|| cores.first())
+                .copied()
+                .unwrap_or(0);
+            let pool = Pool::builder()
+                .workers(workers)
+                .scheduler(self.scheduler)
+                .seed(self.seed.wrapping_add(0x9E37 * (1 + s as u64)))
+                .pin_offset(pin_offset)
+                // Within a shard the cores are one NUMA node: flat.
+                .topology(NumaTopology::flat(workers))
+                .build();
+            shards.push(Shard { pool, node });
+        }
+        let core = Arc::new(ServerCore {
+            loads: (0..shard_count)
+                .map(|_| {
+                    CachePadded::new(ShardLoad {
+                        in_flight: AtomicUsize::new(0),
+                        completed: AtomicU64::new(0),
+                    })
+                })
+                .collect(),
+            capacity: self.capacity,
+            admitted: Mutex::new(0),
+            space: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        });
+        JobServer { shards, core, policy: self.policy }
+    }
+}
+
+/// Point-in-time server statistics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    /// Jobs admitted since construction.
+    pub submitted: u64,
+    /// Jobs whose root strand returned.
+    pub completed: u64,
+    /// `try_submit` calls bounced by backpressure.
+    pub rejected: u64,
+    /// Currently admitted (queued + running) jobs.
+    pub in_flight: usize,
+    /// The admission bound.
+    pub capacity: usize,
+    /// Per-shard breakdown.
+    pub shards: Vec<ShardStats>,
+}
+
+/// Per-shard statistics.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Shard index.
+    pub shard: usize,
+    /// NUMA node the shard is bound to.
+    pub node: usize,
+    /// Worker threads in the shard's pool.
+    pub workers: usize,
+    /// In-flight jobs placed on this shard.
+    pub in_flight: usize,
+    /// Jobs this shard completed.
+    pub completed: u64,
+}
+
+/// An asynchronous, sharded, backpressured job service over the
+/// continuation-stealing runtime. See the [module docs](self).
+pub struct JobServer {
+    shards: Vec<Shard>,
+    core: Arc<ServerCore>,
+    policy: Box<dyn PlacementPolicy>,
+}
+
+impl JobServer {
+    /// Start building a server.
+    pub fn builder() -> JobServerBuilder {
+        JobServerBuilder::new()
+    }
+
+    /// A default server: one shard per NUMA node, lazy scheduler.
+    pub fn with_defaults() -> JobServer {
+        Self::builder().build()
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total worker threads across all shards.
+    pub fn workers(&self) -> usize {
+        self.shards.iter().map(|s| s.pool.workers()).sum()
+    }
+
+    /// The admission bound.
+    pub fn capacity(&self) -> usize {
+        self.core.capacity
+    }
+
+    /// Currently admitted jobs.
+    pub fn in_flight(&self) -> usize {
+        *self.core.admitted.lock().unwrap()
+    }
+
+    /// The active placement policy's name.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    // ----------------------------------------------------------------
+    // Admission (backpressure)
+    // ----------------------------------------------------------------
+
+    fn admit_blocking(&self) {
+        let granted = self.admit_up_to(1);
+        debug_assert_eq!(granted, 1);
+    }
+
+    fn try_admit(&self) -> bool {
+        let mut admitted = self.core.admitted.lock().unwrap();
+        if *admitted < self.core.capacity {
+            *admitted += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Admit up to `want` jobs, blocking until at least one slot frees.
+    fn admit_up_to(&self, want: usize) -> usize {
+        let mut admitted = self.core.admitted.lock().unwrap();
+        while *admitted >= self.core.capacity {
+            admitted = self.core.space.wait(admitted).unwrap();
+        }
+        let granted = want.min(self.core.capacity - *admitted);
+        *admitted += granted;
+        granted
+    }
+
+    // ----------------------------------------------------------------
+    // Placement + submission
+    // ----------------------------------------------------------------
+
+    /// Run the policy and charge the chosen shard's load counter.
+    fn place(&self) -> usize {
+        let view = ShardLoads { loads: &self.core.loads };
+        let shard = self.policy.place(&view).min(self.shards.len() - 1);
+        self.core.loads[shard].in_flight.fetch_add(1, Ordering::AcqRel);
+        shard
+    }
+
+    fn wrap<C: Coroutine>(&self, job: C, shard: usize) -> Tracked<C> {
+        Tracked { inner: job, core: Arc::clone(&self.core), shard, done: false }
+    }
+
+    /// Submit one job, blocking while the server is at capacity.
+    /// The returned handle joins or `.await`s the result.
+    pub fn submit<C: Coroutine>(&self, job: C) -> RootHandle<C::Output> {
+        self.admit_blocking();
+        self.core.submitted.fetch_add(1, Ordering::Relaxed);
+        let shard = self.place();
+        self.shards[shard].pool.submit(self.wrap(job, shard))
+    }
+
+    /// Submit one job unless the server is at capacity; on rejection the
+    /// job is handed back so the caller can retry, shed or redirect it.
+    pub fn try_submit<C: Coroutine>(&self, job: C) -> Result<RootHandle<C::Output>, C> {
+        if !self.try_admit() {
+            self.core.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(job);
+        }
+        self.core.submitted.fetch_add(1, Ordering::Relaxed);
+        let shard = self.place();
+        Ok(self.shards[shard].pool.submit(self.wrap(job, shard)))
+    }
+
+    /// Submit a batch. Jobs are admitted in capacity-bounded waves
+    /// (blocking between waves while the server is full); each wave is
+    /// grouped by placement shard and forwarded through
+    /// [`Pool::submit_batch`] — one MPSC tail exchange and one wake
+    /// sweep per (wave × shard). Handles are returned in input order.
+    pub fn submit_batch<C: Coroutine>(
+        &self,
+        batch: Vec<C>,
+    ) -> Vec<RootHandle<C::Output>> {
+        let total = batch.len();
+        let mut out: Vec<Option<RootHandle<C::Output>>> =
+            (0..total).map(|_| None).collect();
+        let mut jobs = batch.into_iter().enumerate();
+        let mut remaining = total;
+        while remaining > 0 {
+            let wave = self.admit_up_to(remaining);
+            self.core.submitted.fetch_add(wave as u64, Ordering::Relaxed);
+            let mut groups: Vec<Vec<(usize, Tracked<C>)>> =
+                (0..self.shards.len()).map(|_| Vec::new()).collect();
+            for _ in 0..wave {
+                let (idx, job) = jobs.next().expect("wave exceeded batch");
+                let shard = self.place();
+                groups[shard].push((idx, self.wrap(job, shard)));
+            }
+            for (shard, group) in groups.into_iter().enumerate() {
+                if group.is_empty() {
+                    continue;
+                }
+                let (idxs, tasks): (Vec<usize>, Vec<Tracked<C>>) =
+                    group.into_iter().unzip();
+                let handles = self.shards[shard].pool.submit_batch(tasks);
+                for (idx, handle) in idxs.into_iter().zip(handles) {
+                    out[idx] = Some(handle);
+                }
+            }
+            remaining -= wave;
+        }
+        out.into_iter().map(|h| h.expect("unplaced job")).collect()
+    }
+
+    // ----------------------------------------------------------------
+    // Introspection
+    // ----------------------------------------------------------------
+
+    /// Current server statistics.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            submitted: self.core.submitted.load(Ordering::Relaxed),
+            completed: self.core.completed.load(Ordering::Relaxed),
+            rejected: self.core.rejected.load(Ordering::Relaxed),
+            in_flight: self.in_flight(),
+            capacity: self.core.capacity,
+            shards: self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| ShardStats {
+                    shard: i,
+                    node: s.node,
+                    workers: s.pool.workers(),
+                    in_flight: self.core.loads[i].in_flight.load(Ordering::Relaxed),
+                    completed: self.core.loads[i].completed.load(Ordering::Relaxed),
+                })
+                .collect(),
+        }
+    }
+
+    /// Runtime counters of one shard's pool.
+    pub fn shard_metrics(&self, shard: usize) -> MetricsSnapshot {
+        self.shards[shard].pool.metrics()
+    }
+
+    /// Aggregated runtime counters across all shards. At quiescence
+    /// (no in-flight jobs) the `signals == steals` invariant holds both
+    /// per shard and in this aggregate.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut total = MetricsSnapshot::default();
+        for s in &self.shards {
+            total.merge(&s.pool.metrics());
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::jobs::MixedJob;
+    use super::*;
+    use crate::task::FnTask;
+    use crate::workloads::fib::fib_exact;
+
+    fn small_server(shards: usize, workers: usize, capacity: usize) -> JobServer {
+        JobServer::builder()
+            .topology(NumaTopology::synthetic(shards, workers))
+            .shards(shards)
+            .workers_per_shard(workers)
+            .capacity(capacity)
+            .build()
+    }
+
+    /// Build a load view for policy unit tests.
+    fn loads_of(vals: &[usize]) -> Vec<CachePadded<ShardLoad>> {
+        vals.iter()
+            .map(|&v| {
+                CachePadded::new(ShardLoad {
+                    in_flight: AtomicUsize::new(v),
+                    completed: AtomicU64::new(0),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let p = RoundRobin::new();
+        let loads = loads_of(&[0, 0, 0]);
+        let view = ShardLoads { loads: &loads };
+        let picks: Vec<usize> = (0..6).map(|_| p.place(&view)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        let p = LeastLoaded;
+        let pick = |vals: &[usize]| {
+            let loads = loads_of(vals);
+            p.place(&ShardLoads { loads: &loads })
+        };
+        assert_eq!(pick(&[3, 1, 2]), 1);
+        assert_eq!(pick(&[0, 0, 0]), 0); // tie → lowest index
+        assert_eq!(pick(&[5]), 0);
+    }
+
+    #[test]
+    fn submits_and_completes_jobs() {
+        let server = small_server(2, 2, 64);
+        assert_eq!(server.shards(), 2);
+        assert_eq!(server.workers(), 4);
+        let h = server.submit(MixedJob::fib(15));
+        assert_eq!(h.join(), fib_exact(15));
+        // The completion hook runs strictly before the root signal that
+        // `join` waits on, so the counters are already settled here.
+        let stats = server.stats();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(server.in_flight(), 0);
+    }
+
+    #[test]
+    fn batch_preserves_input_order() {
+        let server = small_server(2, 2, 32);
+        let handles = server.submit_batch((0..40).map(MixedJob::from_seed).collect());
+        for (seed, h) in (0..40).zip(handles) {
+            assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn try_submit_rejects_at_capacity_then_recovers() {
+        let server = small_server(1, 1, 1);
+        let gate = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let g = std::sync::Arc::clone(&gate);
+        // Occupy the only slot with a job that spins until released.
+        let blocker = server.submit(FnTask::new(move || {
+            while !g.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            1u64
+        }));
+        // Server is full: try_submit must bounce and return the job.
+        let bounced = server.try_submit(FnTask::new(|| 2u64));
+        assert!(bounced.is_err(), "admission bound not enforced");
+        assert_eq!(server.stats().rejected, 1);
+        gate.store(true, Ordering::Release);
+        assert_eq!(blocker.join(), 1);
+        // Slot freed: the next try_submit succeeds.
+        let h = loop {
+            match server.try_submit(FnTask::new(|| 3u64)) {
+                Ok(h) => break h,
+                Err(_) => std::thread::yield_now(),
+            }
+        };
+        assert_eq!(h.join(), 3);
+    }
+
+    #[test]
+    fn blocking_submit_waits_for_space() {
+        let server = std::sync::Arc::new(small_server(1, 2, 2));
+        // Saturate, then have a second thread push 20 more with blocking
+        // submit; all must complete.
+        let s2 = std::sync::Arc::clone(&server);
+        let t = std::thread::spawn(move || {
+            let handles: Vec<_> =
+                (0..20).map(|seed| s2.submit(MixedJob::from_seed(seed))).collect();
+            handles
+                .into_iter()
+                .zip(0..20)
+                .all(|(h, seed)| h.join() == MixedJob::expected(seed))
+        });
+        assert!(t.join().unwrap());
+        assert_eq!(server.in_flight(), 0);
+    }
+
+    #[test]
+    fn least_loaded_server_drains() {
+        let server = JobServer::builder()
+            .topology(NumaTopology::synthetic(2, 2))
+            .shards(2)
+            .workers_per_shard(2)
+            .capacity(16)
+            .policy(LeastLoaded)
+            .build();
+        assert_eq!(server.policy_name(), "least-loaded");
+        let handles = server.submit_batch((0..32).map(MixedJob::from_seed).collect());
+        for (seed, h) in (0..32).zip(handles) {
+            assert_eq!(h.join(), MixedJob::expected(seed));
+        }
+        let stats = server.stats();
+        assert_eq!(stats.submitted, 32);
+        assert!(stats.shards.iter().all(|s| s.in_flight == 0));
+    }
+}

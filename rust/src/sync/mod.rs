@@ -8,10 +8,91 @@
 
 mod parker;
 
-pub use crossbeam_utils::CachePadded;
 pub use parker::Parker;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Pads and aligns a value to (at least) one cache line so adjacent
+/// per-worker hot fields never share a line (false sharing). 128 bytes
+/// covers the common 64-byte line as well as the 128-byte prefetch pair
+/// on modern x86 and the 128-byte lines of Apple silicon. Local stand-in
+/// for `crossbeam_utils::CachePadded` so the crate builds offline with
+/// zero dependencies.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Pad `value` to a cache line.
+    #[inline]
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    /// Unwrap the padded value.
+    #[inline]
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        CachePadded::new(value)
+    }
+}
+
+/// Drive a future to completion on the current thread, parking between
+/// polls — the minimal executor used by the `serve` path and the async
+/// conformance tests to await [`crate::rt::pool::RootHandle`]s without
+/// pulling in an async runtime.
+pub fn block_on<F: std::future::Future>(mut future: F) -> F::Output {
+    use std::task::{Context, Poll, Wake, Waker};
+
+    /// Wakes the blocked thread via unpark; unpark latches like the
+    /// runtime's [`Parker`], so a wake between poll and park is not lost.
+    struct ThreadWaker(std::thread::Thread);
+
+    impl Wake for ThreadWaker {
+        fn wake(self: std::sync::Arc<Self>) {
+            self.0.unpark();
+        }
+
+        fn wake_by_ref(self: &std::sync::Arc<Self>) {
+            self.0.unpark();
+        }
+    }
+
+    let waker = Waker::from(std::sync::Arc::new(ThreadWaker(std::thread::current())));
+    let mut cx = Context::from_waker(&waker);
+    // SAFETY: `future` lives on this stack frame and is shadowed, so it
+    // can never be moved again after this point.
+    let mut future = unsafe { std::pin::Pin::new_unchecked(&mut future) };
+    loop {
+        match future.as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
 
 /// Exponential backoff for contended retry loops (steal attempts,
 /// buffer-growth races). Mirrors `crossbeam_utils::Backoff` but exposes
@@ -183,5 +264,58 @@ mod tests {
     fn xorshift_zero_seed_ok() {
         let mut rng = XorShift64::new(0);
         assert_ne!(rng.next_u64(), 0);
+    }
+
+    #[test]
+    fn cache_padded_aligned_and_transparent() {
+        let c = CachePadded::new(41u64);
+        assert_eq!(*c, 41);
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 128);
+        let mut c = CachePadded::new(AtomicUsize::new(1));
+        *c.get_mut() += 1;
+        assert_eq!(c.into_inner().load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn block_on_ready_future() {
+        assert_eq!(block_on(std::future::ready(7)), 7);
+    }
+
+    #[test]
+    fn block_on_cross_thread_wake() {
+        use std::task::{Context, Poll};
+
+        /// Completes when the flag is set, registering its waker with the
+        /// setter thread through a channel.
+        struct Flag {
+            done: std::sync::Arc<std::sync::atomic::AtomicBool>,
+            tx: std::sync::mpsc::Sender<std::task::Waker>,
+        }
+        impl std::future::Future for Flag {
+            type Output = ();
+            fn poll(self: std::pin::Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+                if self.done.load(Ordering::Acquire) {
+                    Poll::Ready(())
+                } else {
+                    let _ = self.tx.send(cx.waker().clone());
+                    if self.done.load(Ordering::Acquire) {
+                        Poll::Ready(())
+                    } else {
+                        Poll::Pending
+                    }
+                }
+            }
+        }
+
+        let done = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let done2 = std::sync::Arc::clone(&done);
+        let h = std::thread::spawn(move || {
+            let waker: std::task::Waker = rx.recv().unwrap();
+            done2.store(true, Ordering::Release);
+            waker.wake();
+        });
+        block_on(Flag { done, tx });
+        h.join().unwrap();
     }
 }

@@ -45,6 +45,21 @@ pub enum Step<T> {
     ScheduleOn(usize),
 }
 
+impl<T> Step<T> {
+    /// Map the `Return` value, passing control-flow variants through
+    /// unchanged. Lets wrapper coroutines (e.g. the job-service
+    /// completion tracker and [`crate::service::jobs::MixedJob`])
+    /// delegate `step` to an inner task while adapting its output type.
+    pub fn map<U>(self, f: impl FnOnce(T) -> U) -> Step<U> {
+        match self {
+            Step::Dispatch => Step::Dispatch,
+            Step::Join => Step::Join,
+            Step::ScheduleOn(w) => Step::ScheduleOn(w),
+            Step::Return(v) => Step::Return(f(v)),
+        }
+    }
+}
+
 /// A task: an explicit state machine executed by the runtime. `step` is
 /// called once per resume; the state saved in `self` determines where
 /// execution continues.

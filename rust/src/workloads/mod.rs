@@ -15,6 +15,7 @@ pub mod integrate;
 pub mod matmul;
 pub mod nqueens;
 pub mod params;
+pub mod sha1;
 pub mod uts;
 
 pub use params::Workload;

@@ -18,8 +18,7 @@
 //! [`UtsStar`] (the `*`-marked variant) uses the **stack allocation API**
 //! (§III-C) to place it on the worker's segmented stack.
 
-use sha1::{Digest, Sha1};
-
+use super::sha1::Sha1;
 use crate::task::{Coroutine, Cx, Step};
 
 /// 31-bit probability denominator (UTS uses positive 31-bit ints).

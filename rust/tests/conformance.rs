@@ -1,0 +1,104 @@
+//! Conformance matrix for the three submission paths:
+//!
+//! {busy, lazy} schedulers × P ∈ {1, 2, 4} × {fib, integrate, nqueens}
+//! × {blocking `submit`, `submit_batch`, async `await`}
+//!
+//! Every cell must produce the workload's serial checksum
+//! ([`runner::serial_checksum`]), i.e. batching and async plumbing are
+//! pure transport: they may never change a result, on any scheduler,
+//! at any worker count.
+
+use rustfork::harness::runner::{integrate_eps, serial_checksum};
+use rustfork::rt::Pool;
+use rustfork::sched::SchedulerKind;
+use rustfork::service::jobs::MixedJob;
+use rustfork::sync::block_on;
+use rustfork::workloads::params::{Scale, Workload};
+
+/// The classic small workloads as service jobs at smoke scale, paired
+/// with their serial checksums.
+fn cases() -> Vec<(Workload, fn() -> MixedJob, u64)> {
+    fn fib_job() -> MixedJob {
+        MixedJob::fib(Workload::Fib.size(Scale::Smoke))
+    }
+    fn integrate_job() -> MixedJob {
+        MixedJob::integrate(
+            Workload::Integrate.size(Scale::Smoke) as f64,
+            integrate_eps(Scale::Smoke),
+        )
+    }
+    fn nqueens_job() -> MixedJob {
+        MixedJob::nqueens(Workload::Nqueens.size(Scale::Smoke) as usize)
+    }
+    vec![
+        (Workload::Fib, fib_job as fn() -> MixedJob, serial_checksum(Workload::Fib, Scale::Smoke)),
+        (Workload::Integrate, integrate_job, serial_checksum(Workload::Integrate, Scale::Smoke)),
+        (Workload::Nqueens, nqueens_job, serial_checksum(Workload::Nqueens, Scale::Smoke)),
+    ]
+}
+
+fn matrix(check: impl Fn(&Pool, &dyn Fn() -> MixedJob, u64, &str)) {
+    for sched in [SchedulerKind::Busy, SchedulerKind::Lazy] {
+        for p in [1usize, 2, 4] {
+            let pool = Pool::builder().workers(p).scheduler(sched).build();
+            for (w, job, expect) in cases() {
+                let label = format!("{w} × {sched} × P={p}");
+                check(&pool, &job, expect, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn blocking_submit_matches_serial() {
+    matrix(|pool, job, expect, label| {
+        assert_eq!(pool.submit(job()).join(), expect, "submit: {label}");
+    });
+}
+
+#[test]
+fn submit_batch_matches_serial() {
+    matrix(|pool, job, expect, label| {
+        let handles = pool.submit_batch((0..8).map(|_| job()));
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join(), expect, "submit_batch[{i}]: {label}");
+        }
+    });
+}
+
+#[test]
+fn async_await_matches_serial() {
+    matrix(|pool, job, expect, label| {
+        assert_eq!(block_on(pool.submit(job())), expect, "await: {label}");
+    });
+}
+
+/// Mixed batch across workload kinds in one `submit_batch` call —
+/// handles resolve in input order with each kind's own checksum.
+#[test]
+fn mixed_batch_preserves_per_job_results() {
+    for sched in [SchedulerKind::Busy, SchedulerKind::Lazy] {
+        for p in [1usize, 2, 4] {
+            let pool = Pool::builder().workers(p).scheduler(sched).build();
+            let batch: Vec<MixedJob> =
+                (0..4).flat_map(|_| cases().into_iter().map(|(_, job, _)| job())).collect();
+            let expects: Vec<u64> =
+                (0..4).flat_map(|_| cases().into_iter().map(|(_, _, e)| e)).collect();
+            let handles = pool.submit_batch(batch);
+            for (i, (h, e)) in handles.into_iter().zip(expects).enumerate() {
+                assert_eq!(h.join(), e, "mixed[{i}] × {sched} × P={p}");
+            }
+        }
+    }
+}
+
+/// Await many futures concurrently-ish: poll each to completion in
+/// submission order; results must be independent of completion order.
+#[test]
+fn async_batch_awaited_in_order() {
+    let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Lazy).build();
+    let handles = pool.submit_batch((0..24).map(MixedJob::from_seed));
+    for (seed, h) in (0..24).zip(handles) {
+        assert_eq!(block_on(h), MixedJob::expected(seed), "seed {seed}");
+    }
+}

@@ -1,0 +1,114 @@
+//! Regression test for the lazy scheduler's park/wake race window
+//! (`sched/lazy.rs`): between a worker storing its `parked_flag` and a
+//! submitter's `wake_one` CAS there is a window in which a wakeup could
+//! be lost. The design closes it threefold:
+//!
+//! 1. the submitter notifies the target's parker *directly* (latched —
+//!    a notify delivered before `park` prevents the next park),
+//! 2. the worker re-checks its submission queue after setting the flag,
+//! 3. [`PARK_BACKSTOP`] bounds any residual lost wakeup to one timeout.
+//!
+//! These tests hammer submit-while-parking and assert no job ever waits
+//! an unbounded time; the latency ceiling asserted here is hundreds of
+//! backstops — tight enough to catch a real lost-wakeup hang (which
+//! manifests as ≥ the 50 ms `RootSignal` poll or a full test timeout)
+//! while loose enough for CI-noise scheduling delays.
+
+use std::time::{Duration, Instant};
+
+use rustfork::rt::Pool;
+use rustfork::sched::lazy::PARK_BACKSTOP;
+use rustfork::sched::SchedulerKind;
+use rustfork::service::jobs::MixedJob;
+use rustfork::workloads::fib::{fib_exact, Fib};
+
+/// Generous ceiling: lost-wakeup bugs produce multi-second stalls (the
+/// submitter's own 50 ms poll loop × retries), CI noise produces tens
+/// of milliseconds.
+fn latency_ceiling() -> Duration {
+    PARK_BACKSTOP * 400 + Duration::from_millis(600)
+}
+
+#[test]
+fn submit_while_parking_is_promptly_served() {
+    let pool = Pool::builder().workers(2).scheduler(SchedulerKind::Lazy).build();
+    // Warm up (thread spawn, first stacklet faults).
+    assert_eq!(pool.run(Fib::new(10)), 55);
+
+    let mut worst = Duration::ZERO;
+    for round in 0..400u64 {
+        // Vary the phase between submissions so they land at different
+        // offsets inside the park window (flag-store → park → backstop).
+        let phase = Duration::from_micros((round % 23) * 97);
+        if !phase.is_zero() {
+            std::thread::sleep(phase);
+        }
+        let t0 = Instant::now();
+        let h = pool.submit(Fib::new(1));
+        assert_eq!(h.join(), 1, "round {round}");
+        worst = worst.max(t0.elapsed());
+    }
+    assert!(
+        worst < latency_ceiling(),
+        "trivial job waited {worst:?} (park backstop {PARK_BACKSTOP:?}) — \
+         lost wakeup in the parked_flag/wake_one window?"
+    );
+}
+
+#[test]
+fn concurrent_submitters_racing_parking_workers() {
+    // Multiple producers hammer a mostly-idle lazy pool, so nearly every
+    // submission races a worker entering or leaving park. All jobs must
+    // complete promptly and correctly.
+    let pool = std::sync::Arc::new(
+        Pool::builder().workers(3).scheduler(SchedulerKind::Lazy).build(),
+    );
+    let _ = pool.run(Fib::new(10));
+    let mut threads = Vec::new();
+    for t in 0..3u64 {
+        let pool = std::sync::Arc::clone(&pool);
+        threads.push(std::thread::spawn(move || {
+            let mut worst = Duration::ZERO;
+            for i in 0..150u64 {
+                // Idle gaps let the workers fall asleep between jobs.
+                std::thread::sleep(Duration::from_micros((t * 131 + i * 53) % 1500));
+                let seed = t * 1000 + i;
+                let t0 = Instant::now();
+                let h = pool.submit(MixedJob::from_seed(seed));
+                assert_eq!(h.join(), MixedJob::expected(seed), "submitter {t} job {i}");
+                worst = worst.max(t0.elapsed());
+            }
+            worst
+        }));
+    }
+    for th in threads {
+        let worst = th.join().unwrap();
+        assert!(
+            worst < latency_ceiling(),
+            "job waited {worst:?} under concurrent submit-while-parking"
+        );
+    }
+}
+
+#[test]
+fn batch_submission_wakes_parked_workers() {
+    // A batch dropped onto a fully-parked lazy pool must be served by
+    // the single wake sweep (one notify per touched worker), not rely
+    // on per-job notifies.
+    let pool = Pool::builder().workers(4).scheduler(SchedulerKind::Lazy).build();
+    let _ = pool.run(Fib::new(10));
+    for round in 0..30 {
+        // Let every worker park (backstop is 1 ms; give them plenty).
+        std::thread::sleep(Duration::from_millis(5));
+        let t0 = Instant::now();
+        let handles = pool.submit_batch((0..16).map(|_| Fib::new(12)));
+        for h in handles {
+            assert_eq!(h.join(), fib_exact(12), "round {round}");
+        }
+        assert!(
+            t0.elapsed() < latency_ceiling(),
+            "batch stalled {:?} against parked workers",
+            t0.elapsed()
+        );
+    }
+}

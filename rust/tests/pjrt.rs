@@ -3,7 +3,10 @@
 //! runtime, composed with the continuation-stealing scheduler.
 //!
 //! Requires `make artifacts` (skipped with a note otherwise, so
-//! `cargo test` stays green on a fresh checkout).
+//! `cargo test` stays green on a fresh checkout) and the `pjrt` cargo
+//! feature (vendored xla bindings; see Cargo.toml).
+
+#![cfg(feature = "pjrt")]
 
 use rustfork::rt::Pool;
 use rustfork::runtime::{Engine, LEAF_DIM};

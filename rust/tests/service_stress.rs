@@ -1,0 +1,173 @@
+//! Seeded stress tests for the job-service layer: N submitter threads ×
+//! M mixed jobs against one [`JobServer`], asserting
+//!
+//! * every job's result matches its serial oracle,
+//! * the admission bound is respected throughout (backpressure),
+//! * at quiescence the runtime's `signals == steals` invariant
+//!   (rt/worker.rs invariant 3) holds per shard and in aggregate, and
+//!   the `roots` counter equals the number of submitted jobs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rustfork::numa::NumaTopology;
+use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, RoundRobin};
+use rustfork::sync::block_on;
+
+const SUBMITTERS: u64 = 4;
+const JOBS_PER_SUBMITTER: u64 = 150;
+
+/// Drive the server from `SUBMITTERS` threads using a mix of blocking
+/// submit, batched submit and async awaits; returns total mismatches.
+fn hammer(server: &Arc<JobServer>) -> u64 {
+    let failures = Arc::new(AtomicU64::new(0));
+    let mut threads = Vec::new();
+    for t in 0..SUBMITTERS {
+        let server = Arc::clone(server);
+        let failures = Arc::clone(&failures);
+        threads.push(std::thread::spawn(move || {
+            let base = t * JOBS_PER_SUBMITTER;
+            let mut seed = base;
+            while seed < base + JOBS_PER_SUBMITTER {
+                match (seed / 10) % 3 {
+                    // Blocking submit, joined immediately.
+                    0 => {
+                        let h = server.submit(MixedJob::from_seed(seed));
+                        if h.join() != MixedJob::expected(seed) {
+                            failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                        seed += 1;
+                    }
+                    // Batched submit, joined after the whole wave.
+                    1 => {
+                        let wave = (base + JOBS_PER_SUBMITTER - seed).min(10);
+                        let handles = server.submit_batch(
+                            (seed..seed + wave).map(MixedJob::from_seed).collect(),
+                        );
+                        for (s, h) in (seed..seed + wave).zip(handles) {
+                            if h.join() != MixedJob::expected(s) {
+                                failures.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        seed += wave;
+                    }
+                    // Async await through the minimal executor.
+                    _ => {
+                        let h = server.submit(MixedJob::from_seed(seed));
+                        if block_on(h) != MixedJob::expected(seed) {
+                            failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                        seed += 1;
+                    }
+                }
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    failures.load(Ordering::Relaxed)
+}
+
+fn assert_quiescent(server: &JobServer, expected_roots: u64) {
+    assert_eq!(server.in_flight(), 0, "jobs leaked past completion");
+    let stats = server.stats();
+    assert_eq!(stats.submitted, expected_roots);
+    assert_eq!(stats.completed, expected_roots);
+    let mut agg_signals = 0;
+    let mut agg_steals = 0;
+    let mut agg_roots = 0;
+    for s in 0..server.shards() {
+        let m = server.shard_metrics(s);
+        assert_eq!(
+            m.signals, m.steals,
+            "shard {s}: signals != steals at quiescence: {m:?}"
+        );
+        agg_signals += m.signals;
+        agg_steals += m.steals;
+        agg_roots += m.roots;
+    }
+    let total = server.metrics();
+    assert_eq!(total.signals, agg_signals);
+    assert_eq!(total.steals, agg_steals);
+    assert_eq!(total.signals, total.steals, "aggregate join accounting broke");
+    assert_eq!(agg_roots, expected_roots, "roots executed != jobs submitted");
+}
+
+#[test]
+fn stress_round_robin_tight_capacity() {
+    // Capacity far below the offered load: backpressure constantly
+    // active; every submitter alternates blocking/batched/async paths.
+    let server = Arc::new(
+        JobServer::builder()
+            .topology(NumaTopology::synthetic(2, 2))
+            .shards(2)
+            .workers_per_shard(2)
+            .capacity(16)
+            .policy(RoundRobin::new())
+            .build(),
+    );
+    let failures = hammer(&server);
+    assert_eq!(failures, 0, "result mismatches under round-robin");
+    assert_quiescent(&server, SUBMITTERS * JOBS_PER_SUBMITTER);
+}
+
+#[test]
+fn stress_least_loaded_ample_capacity() {
+    let server = Arc::new(
+        JobServer::builder()
+            .topology(NumaTopology::synthetic(2, 2))
+            .shards(2)
+            .workers_per_shard(2)
+            .capacity(512)
+            .policy(LeastLoaded)
+            .build(),
+    );
+    let failures = hammer(&server);
+    assert_eq!(failures, 0, "result mismatches under least-loaded");
+    assert_quiescent(&server, SUBMITTERS * JOBS_PER_SUBMITTER);
+    // With ample capacity and balanced load, both shards must have
+    // actually participated (placement is not degenerate).
+    let stats = server.stats();
+    for s in &stats.shards {
+        assert!(
+            s.completed > 0,
+            "shard {} never received a job: {stats:?}",
+            s.shard
+        );
+    }
+}
+
+#[test]
+fn try_submit_sheds_load_but_never_corrupts() {
+    // Fast-fail submission under overload: rejected jobs are returned
+    // intact and resubmitted later; accepted ones must all be correct.
+    let server = Arc::new(
+        JobServer::builder()
+            .topology(NumaTopology::synthetic(1, 2))
+            .shards(1)
+            .workers_per_shard(2)
+            .capacity(4)
+            .build(),
+    );
+    let mut pending: Vec<(u64, MixedJob)> =
+        (0..200).map(|s| (s, MixedJob::from_seed(s))).collect();
+    let mut handles = Vec::new();
+    while let Some((seed, job)) = pending.pop() {
+        match server.try_submit(job) {
+            Ok(h) => handles.push((seed, h)),
+            Err(job) => {
+                // Shed: park the job again and give the server room.
+                pending.push((seed, job));
+                std::thread::yield_now();
+            }
+        }
+    }
+    for (seed, h) in handles {
+        assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 200);
+    assert!(stats.rejected > 0, "capacity 4 never rejected under 200 jobs");
+    assert_quiescent(&server, 200);
+}
