@@ -1,92 +1,44 @@
-//! Job-service throughput bench: jobs/sec for many small mixed
-//! workloads through the sharded [`JobServer`], comparing
+//! Job-service bench: throughput, tail latency and allocation cost for
+//! many small mixed workloads through the sharded [`JobServer`],
+//! comparing
 //!
 //! * per-job `submit` vs batched `submit_batch` (the wake-sweep and
 //!   MPSC tail-exchange amortization),
 //! * round-robin vs least-loaded placement,
 //! * busy vs lazy sub-pool schedulers.
 //!
+//! Reported per configuration: jobs/sec, closed-loop p50/p99 job
+//! latency, warm steady-state heap allocations per job (should be 0 —
+//! the stack-recycling + fused-root-block layers), and peak heap bytes.
+//!
 //! Env: `RUSTFORK_JOBS` (default 5000), `RUSTFORK_BATCH` (default 64),
-//! `RUSTFORK_REPS` (default 3).
+//! `RUSTFORK_REPS` (default 3), `RUSTFORK_LATENCY_JOBS` (default 1000).
+//! Machine-readable output: `repro bench --json <path>`.
+//!
+//! [`JobServer`]: rustfork::service::JobServer
 
-use rustfork::harness::measure;
-use rustfork::numa::NumaTopology;
-use rustfork::sched::SchedulerKind;
-use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, PlacementPolicy, RoundRobin};
-
-fn env_or(name: &str, default: u64) -> u64 {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-/// Drive `jobs` seeded MixedJobs through `server`, batched (batch > 1)
-/// or one by one (batch == 1); returns the number of result mismatches.
-fn drive(server: &JobServer, jobs: u64, batch: usize) -> u64 {
-    let mut failures = 0;
-    let mut seed = 0u64;
-    while seed < jobs {
-        let wave = batch.min((jobs - seed) as usize) as u64;
-        if batch > 1 {
-            let handles = server
-                .submit_batch((seed..seed + wave).map(MixedJob::from_seed).collect());
-            for (s, h) in (seed..seed + wave).zip(handles) {
-                failures += u64::from(h.join() != MixedJob::expected(s));
-            }
-        } else {
-            let h = server.submit(MixedJob::from_seed(seed));
-            failures += u64::from(h.join() != MixedJob::expected(seed));
-        }
-        seed += wave;
-    }
-    failures
-}
+use rustfork::harness::service_bench::{run, BenchOptions};
 
 fn main() {
-    let jobs = env_or("RUSTFORK_JOBS", 5_000);
-    let batch = env_or("RUSTFORK_BATCH", 64) as usize;
-    let reps = env_or("RUSTFORK_REPS", 3) as usize;
-    let workers = rustfork::numa::available_cpus().clamp(2, 8);
-
-    println!("# service bench: {jobs} mixed jobs, {workers} workers total");
+    let opts = BenchOptions::from_env();
     println!(
-        "{:<34} {:>12} {:>14}",
-        "configuration", "median", "jobs/sec"
+        "# service bench: {} mixed jobs, {} workers total",
+        opts.jobs, opts.workers
     );
-
-    enum Pol {
-        Rr,
-        Least,
-    }
-    let configs: Vec<(&'static str, SchedulerKind, Pol, usize)> = vec![
-        ("lazy + rr, per-job submit", SchedulerKind::Lazy, Pol::Rr, 1),
-        ("lazy + rr, batched", SchedulerKind::Lazy, Pol::Rr, batch),
-        ("lazy + least-loaded, batched", SchedulerKind::Lazy, Pol::Least, batch),
-        ("busy + rr, batched", SchedulerKind::Busy, Pol::Rr, batch),
-    ];
-
-    for (label, sched, policy, batch) in configs {
-        let policy: Box<dyn PlacementPolicy> = match policy {
-            Pol::Rr => Box::new(RoundRobin::new()),
-            Pol::Least => Box::new(LeastLoaded),
-        };
-        // 2 shards on a synthetic 2-node machine: placement + sharding
-        // active even on UMA hosts.
-        let server = JobServer::builder()
-            .topology(NumaTopology::synthetic(2, (workers / 2).max(1)))
-            .shards(2)
-            .workers_per_shard((workers / 2).max(1))
-            .capacity(1024)
-            .scheduler(sched)
-            .policy_boxed(policy)
-            .build();
-        let m = measure(reps, 0.2, || {
-            let failures = drive(&server, jobs, batch);
-            assert_eq!(failures, 0, "result mismatches under {label}");
-        });
+    let report = run(&opts);
+    println!(
+        "{:<34} {:>12} {:>10} {:>10} {:>11} {:>12}",
+        "configuration", "jobs/sec", "p50", "p99", "allocs/job", "peak"
+    );
+    for c in &report.configs {
         println!(
-            "{:<34} {:>12} {:>11.0}/s",
-            label,
-            rustfork::harness::fmt_secs(m.secs),
-            jobs as f64 / m.secs
+            "{:<34} {:>10.0}/s {:>8.1}us {:>8.1}us {:>11.3} {:>12}",
+            c.name,
+            c.jobs_per_sec,
+            c.p50_us,
+            c.p99_us,
+            c.allocs_per_job,
+            rustfork::harness::fmt_bytes(c.peak_bytes),
         );
     }
 }

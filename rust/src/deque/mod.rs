@@ -5,12 +5,16 @@
 //!   thieves steal in FIFO order from the top. The implementation follows
 //!   the weak-memory-model-optimized formulation of Lê, Pop, Cohen &
 //!   Zappa Nardelli (PPoPP '13), which the paper adopts.
-//! * [`submission::SubmissionQueue`] — a lock-free multi-producer,
-//!   single-consumer queue, one per worker, replacing a global submission
-//!   queue; also the mechanism behind explicit scheduling (§III-D1).
+//! * [`submission::FrameQueue`] — a lock-free multi-producer,
+//!   single-consumer queue of task frames, one per worker, replacing a
+//!   global submission queue; also the mechanism behind explicit
+//!   scheduling (§III-D1). Intrusive (links through
+//!   [`crate::frame::FrameHeader::qnext`]) so pushing a frame performs
+//!   no heap allocation. [`submission::SubmissionQueue`] is the
+//!   general-purpose non-intrusive variant of the same algorithm.
 
 pub mod chase_lev;
 pub mod submission;
 
 pub use chase_lev::{Deque, Steal};
-pub use submission::SubmissionQueue;
+pub use submission::{FrameQueue, SubmissionQueue};

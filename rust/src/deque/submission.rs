@@ -6,11 +6,24 @@
 //! *explicit scheduling* (pinning themselves to a specific worker, e.g.
 //! for MPI rank-confinement).
 //!
-//! The implementation is Vyukov's MPSC queue: producers exchange the tail
-//! pointer (wait-free per producer), the consumer chases `next` links.
+//! Two implementations of Vyukov's MPSC queue live here:
+//!
+//! * [`SubmissionQueue<T>`] — the general-purpose variant, one heap node
+//!   per element;
+//! * [`FrameQueue`] — the **intrusive** variant the runtime actually
+//!   uses: it links task frames through [`FrameHeader::qnext`], so
+//!   pushing a root frame performs **zero heap allocations** — the
+//!   load-bearing property of the allocation-free steady state (a heap
+//!   node per `push` would put `O(1)·T_heap` back on the per-job path
+//!   that the stack-recycling layer just removed).
+//!
+//! In both, producers exchange the tail pointer (wait-free per
+//! producer) and the consumer chases `next` links.
 
 use std::ptr;
 use std::sync::atomic::{AtomicPtr, Ordering};
+
+use crate::frame::{FrameHeader, FrameKind, FramePtr, JoinCounter, Transfer};
 
 struct Node<T> {
     next: AtomicPtr<Node<T>>,
@@ -124,6 +137,168 @@ impl<T> Drop for SubmissionQueue<T> {
     }
 }
 
+// ----------------------------------------------------------------------
+// Intrusive frame queue
+// ----------------------------------------------------------------------
+
+/// Resume entry of the stub frame — never executed: the stub circulates
+/// inside the queue and is skipped by `pop`.
+unsafe fn stub_resume(
+    _h: *mut FrameHeader,
+    _w: &mut crate::rt::worker::Worker,
+) -> Transfer {
+    unreachable!("submission-queue stub frame resumed")
+}
+
+/// An **intrusive** Vyukov MPSC queue of task frames, linked through
+/// [`FrameHeader::qnext`]. `push` is wait-free (one tail `swap`) and
+/// performs **no heap allocation**; the only node the queue ever owns is
+/// its stub, allocated once at construction.
+///
+/// Ownership contract (same as [`SubmissionQueue`]): a frame in the
+/// queue is owned by the queue; whoever pops it becomes its exclusive
+/// executor. The `qnext` link belongs to the queue from the moment
+/// `push` is called until the frame is returned by `pop`.
+pub struct FrameQueue {
+    /// Consumer end. Points at the stub, or at the next frame to return.
+    head: AtomicPtr<FrameHeader>,
+    /// Producer end (last pushed node).
+    tail: AtomicPtr<FrameHeader>,
+    /// Queue-owned dummy node (Vyukov's stub), re-pushed by the consumer
+    /// whenever it would otherwise have to return the last real node
+    /// while a producer could still be linking behind it.
+    stub: *mut FrameHeader,
+}
+
+unsafe impl Send for FrameQueue {}
+unsafe impl Sync for FrameQueue {}
+
+impl FrameQueue {
+    /// New empty queue (allocates only the stub node).
+    pub fn new() -> Self {
+        let stub = Box::into_raw(Box::new(FrameHeader {
+            resume: stub_resume,
+            parent: ptr::null_mut(),
+            stack: ptr::null_mut(),
+            alloc_size: 0,
+            kind: FrameKind::Root,
+            steals: 0,
+            join: JoinCounter::new(),
+            root_hot: ptr::null(),
+            qnext: AtomicPtr::new(ptr::null_mut()),
+        }));
+        FrameQueue {
+            head: AtomicPtr::new(stub),
+            tail: AtomicPtr::new(stub),
+            stub,
+        }
+    }
+
+    /// Producer: enqueue from any thread. Wait-free, allocation-free.
+    pub fn push(&self, FramePtr(f): FramePtr) {
+        unsafe {
+            (*f).qnext.store(ptr::null_mut(), Ordering::Relaxed);
+            let prev = self.tail.swap(f, Ordering::AcqRel);
+            // Link the previous tail to us. A consumer arriving between
+            // the swap and this store sees a transient "empty" —
+            // acceptable: the scheduler re-polls.
+            (*prev).qnext.store(f, Ordering::Release);
+        }
+    }
+
+    /// Producer: enqueue a batch with a **single** tail exchange (see
+    /// [`SubmissionQueue::push_batch`] for the publication argument —
+    /// interior links are private until the final `Release` store).
+    pub fn push_batch(&self, frames: impl IntoIterator<Item = FramePtr>) {
+        let mut iter = frames.into_iter();
+        let Some(FramePtr(first)) = iter.next() else {
+            return;
+        };
+        unsafe {
+            (*first).qnext.store(ptr::null_mut(), Ordering::Relaxed);
+            let mut last = first;
+            for FramePtr(f) in iter {
+                (*f).qnext.store(ptr::null_mut(), Ordering::Relaxed);
+                (*last).qnext.store(f, Ordering::Relaxed);
+                last = f;
+            }
+            let prev = self.tail.swap(last, Ordering::AcqRel);
+            (*prev).qnext.store(first, Ordering::Release);
+        }
+    }
+
+    /// Consumer: dequeue in FIFO order. Must only be called by the
+    /// owning worker. May transiently return `None` while a producer is
+    /// between its tail swap and link store (the scheduler re-polls).
+    pub fn pop(&self) -> Option<FramePtr> {
+        unsafe {
+            let stub = self.stub;
+            let mut head = self.head.load(Ordering::Relaxed);
+            let mut next = (*head).qnext.load(Ordering::Acquire);
+            if head == stub {
+                // Skip the stub; it stays detached until re-pushed.
+                if next.is_null() {
+                    return None;
+                }
+                self.head.store(next, Ordering::Relaxed);
+                head = next;
+                next = (*head).qnext.load(Ordering::Acquire);
+            }
+            if !next.is_null() {
+                // A successor exists: `head` can leave the queue.
+                self.head.store(next, Ordering::Relaxed);
+                return Some(FramePtr(head));
+            }
+            // `head` is the last linked node. It may only leave once the
+            // tail no longer points at it (else a producer could link a
+            // successor onto a node we no longer own).
+            let tail = self.tail.load(Ordering::Acquire);
+            if head != tail {
+                // A producer swapped the tail but has not linked yet.
+                return None;
+            }
+            // Park the stub behind `head` so `head` gains a successor.
+            self.push(FramePtr(stub));
+            next = (*head).qnext.load(Ordering::Acquire);
+            if !next.is_null() {
+                self.head.store(next, Ordering::Relaxed);
+                return Some(FramePtr(head));
+            }
+            // Another producer's swap landed between our tail check and
+            // the stub push; its link store is still pending.
+            None
+        }
+    }
+
+    /// True when the consumer observes no pending submissions. Racy by
+    /// nature; used only as a scheduling hint.
+    pub fn is_empty(&self) -> bool {
+        unsafe {
+            let head = self.head.load(Ordering::Relaxed);
+            if head != self.stub {
+                // A real frame is waiting at the head.
+                return false;
+            }
+            (*head).qnext.load(Ordering::Acquire).is_null()
+        }
+    }
+}
+
+impl Default for FrameQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for FrameQueue {
+    fn drop(&mut self) {
+        // Enqueued frames are owned by their stacks / submitters and are
+        // drained by the pool before shutdown; the queue only owns its
+        // stub.
+        unsafe { drop(Box::from_raw(self.stub)) };
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +406,115 @@ mod tests {
         assert!(singles.windows(2).all(|w| w[0] < w[1]), "single order broken");
         assert_eq!(batched.len(), 5000);
         assert_eq!(singles.len(), 5000);
+    }
+
+    /// Heap-box a dummy frame for intrusive-queue tests; `tag` rides in
+    /// `alloc_size` so popped frames are distinguishable.
+    fn dummy_frame(tag: u32) -> *mut FrameHeader {
+        Box::into_raw(Box::new(FrameHeader {
+            resume: super::stub_resume,
+            parent: ptr::null_mut(),
+            stack: ptr::null_mut(),
+            alloc_size: tag,
+            kind: FrameKind::Root,
+            steals: 0,
+            join: JoinCounter::new(),
+            root_hot: ptr::null(),
+            qnext: AtomicPtr::new(ptr::null_mut()),
+        }))
+    }
+
+    unsafe fn free_frame(f: *mut FrameHeader) {
+        drop(Box::from_raw(f));
+    }
+
+    #[test]
+    fn frame_queue_fifo_single_thread() {
+        let q = FrameQueue::new();
+        assert!(q.is_empty());
+        let frames: Vec<_> = (0..100).map(dummy_frame).collect();
+        for &f in &frames {
+            q.push(FramePtr(f));
+        }
+        assert!(!q.is_empty());
+        for i in 0..100u32 {
+            let FramePtr(f) = q.pop().expect("frame");
+            unsafe {
+                assert_eq!((*f).alloc_size, i, "FIFO order broken");
+                free_frame(f);
+            }
+        }
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn frame_queue_interleaved_push_pop_cycles_stub() {
+        // Alternate push/pop so the stub is re-pushed on every pop —
+        // the trickiest path of the intrusive algorithm.
+        let q = FrameQueue::new();
+        for round in 0..50u32 {
+            let f = dummy_frame(round);
+            q.push(FramePtr(f));
+            let FramePtr(got) = q.pop().expect("frame");
+            unsafe {
+                assert_eq!((*got).alloc_size, round);
+                free_frame(got);
+            }
+            assert!(q.pop().is_none());
+            assert!(q.is_empty(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn frame_queue_batch_fifo_and_empty() {
+        let q = FrameQueue::new();
+        q.push_batch(std::iter::empty());
+        assert!(q.is_empty());
+        q.push_batch((0..5).map(|i| FramePtr(dummy_frame(i))));
+        q.push(FramePtr(dummy_frame(5)));
+        q.push_batch((6..10).map(|i| FramePtr(dummy_frame(i))));
+        for i in 0..10u32 {
+            let FramePtr(f) = q.pop().expect("frame");
+            unsafe {
+                assert_eq!((*f).alloc_size, i);
+                free_frame(f);
+            }
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn frame_queue_multi_producer_no_loss() {
+        const PRODUCERS: u32 = 4;
+        const PER: u32 = 2000;
+        let q = Arc::new(FrameQueue::new());
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    q.push(FramePtr(dummy_frame(p * PER + i)));
+                }
+            }));
+        }
+        let mut got = Vec::new();
+        while got.len() < (PRODUCERS * PER) as usize {
+            if let Some(FramePtr(f)) = q.pop() {
+                unsafe {
+                    got.push((*f).alloc_size);
+                    free_frame(f);
+                }
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), (PRODUCERS * PER) as usize);
     }
 
     #[test]

@@ -35,7 +35,7 @@
 //! is back at 0, ready for the next scope, and the (exclusively owned)
 //! steal counter is reset by the resuming worker.
 
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicPtr, Ordering};
 
 use crate::stack::SegmentedStack;
 
@@ -129,12 +129,19 @@ pub struct FrameHeader {
     pub steals: u32,
     /// Wait-free split join counter for the current scope.
     pub join: JoinCounter,
-    /// Completion signal for root tasks (null otherwise). A raw
-    /// `Arc::into_raw` reference to the `rt::pool::RootSignal` shared
-    /// with the submitter's handle; the worker reconstitutes (and
-    /// releases) it in the final awaitable, so the signal outlives
-    /// `complete()` even if the handle is dropped concurrently.
-    pub root_signal: *const crate::rt::pool::RootSignal,
+    /// Completion state for root tasks (null otherwise): the hot part of
+    /// the **fused root block** (`rt::root::RootHot` — signal + 2-count
+    /// refcount + recycle route), placement-allocated in the same stack
+    /// allocation as this header. The worker releases one refcount half
+    /// in the final awaitable, the submitter's handle the other; the
+    /// last release recycles the whole stack (see [`crate::rt::root`]).
+    pub root_hot: *const crate::rt::root::RootHot,
+    /// Intrusive link for the per-worker MPSC submission queue
+    /// ([`crate::deque::FrameQueue`]). Owned by the queue while this
+    /// frame is enqueued (root submission, explicit `ScheduleOn`
+    /// migration); meaningless otherwise. Keeping the link in the header
+    /// makes `submit` node-allocation-free.
+    pub qnext: AtomicPtr<FrameHeader>,
 }
 
 impl FrameHeader {

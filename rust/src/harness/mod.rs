@@ -8,6 +8,7 @@
 //! allocator ([`crate::mem`]) as the MRSS analogue.
 
 pub mod runner;
+pub mod service_bench;
 
 pub use runner::{run_workload, MeasuredRun, WorkloadRun};
 

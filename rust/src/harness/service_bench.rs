@@ -1,0 +1,300 @@
+//! The job-service benchmark driver, shared by `benches/service.rs` and
+//! `repro bench --json`.
+//!
+//! Measures, per configuration (scheduler × placement × batching):
+//!
+//! * **throughput** — jobs/sec over the seeded [`MixedJob`] stream (each
+//!   result checked against its serial oracle);
+//! * **latency** — closed-loop per-job submit→join time, p50/p99;
+//! * **allocs/job** — heap allocation events per job in the warm steady
+//!   state, via [`crate::mem::alloc_count`] deltas (the quantity the
+//!   stack-recycling + fused-root-block layers drive to zero);
+//! * **peak bytes** — [`MemScope`] high-water mark over the throughput
+//!   run.
+//!
+//! [`to_json`] renders the report machine-readably; the launcher's
+//! `repro bench --json <path>` writes it to seed the perf trajectory
+//! (`BENCH_service.json`).
+
+use crate::mem::MemScope;
+use crate::numa::NumaTopology;
+use crate::sched::SchedulerKind;
+use crate::service::{jobs::MixedJob, JobServer, LeastLoaded, PlacementPolicy, RoundRobin};
+
+/// Knobs for one bench invocation (env-overridable through
+/// [`BenchOptions::from_env`]).
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Jobs per throughput measurement.
+    pub jobs: u64,
+    /// Batch size for the batched configurations.
+    pub batch: usize,
+    /// Repetitions per throughput measurement (median reported).
+    pub reps: usize,
+    /// Total workers (split over 2 synthetic shards).
+    pub workers: usize,
+    /// Jobs in the closed-loop latency/alloc pass.
+    pub latency_jobs: u64,
+}
+
+impl BenchOptions {
+    /// Defaults, overridable via `RUSTFORK_JOBS`, `RUSTFORK_BATCH`,
+    /// `RUSTFORK_REPS`, `RUSTFORK_LATENCY_JOBS`.
+    pub fn from_env() -> Self {
+        fn env_or(name: &str, default: u64) -> u64 {
+            std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        }
+        BenchOptions {
+            jobs: env_or("RUSTFORK_JOBS", 5_000),
+            batch: env_or("RUSTFORK_BATCH", 64) as usize,
+            reps: env_or("RUSTFORK_REPS", 3) as usize,
+            workers: crate::numa::available_cpus().clamp(2, 8),
+            latency_jobs: env_or("RUSTFORK_LATENCY_JOBS", 1_000),
+        }
+    }
+}
+
+/// Results for one configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigReport {
+    /// Human-readable configuration label.
+    pub name: String,
+    /// Scheduler flavour ("busy" / "lazy").
+    pub scheduler: &'static str,
+    /// Placement policy name.
+    pub policy: &'static str,
+    /// Batch size (1 == per-job submit).
+    pub batch: usize,
+    /// Median throughput.
+    pub jobs_per_sec: f64,
+    /// Median per-job latency (closed loop), microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile per-job latency, microseconds.
+    pub p99_us: f64,
+    /// Warm steady-state heap allocation events per job.
+    pub allocs_per_job: f64,
+    /// Peak heap bytes above baseline during the throughput run.
+    pub peak_bytes: usize,
+}
+
+/// The whole bench run.
+#[derive(Debug, Clone)]
+pub struct ServiceBenchReport {
+    /// Jobs per throughput measurement.
+    pub jobs: u64,
+    /// Total workers.
+    pub workers: usize,
+    /// Per-configuration results.
+    pub configs: Vec<ConfigReport>,
+}
+
+/// Drive `jobs` seeded MixedJobs through `server`, batched (batch > 1)
+/// or one by one (batch == 1); returns the number of result mismatches.
+pub fn drive(server: &JobServer, jobs: u64, batch: usize) -> u64 {
+    let mut failures = 0;
+    let mut seed = 0u64;
+    while seed < jobs {
+        let wave = batch.min((jobs - seed) as usize) as u64;
+        if batch > 1 {
+            let handles =
+                server.submit_batch((seed..seed + wave).map(MixedJob::from_seed).collect());
+            for (s, h) in (seed..seed + wave).zip(handles) {
+                failures += u64::from(h.join() != MixedJob::expected(s));
+            }
+        } else {
+            let h = server.submit(MixedJob::from_seed(seed));
+            failures += u64::from(h.join() != MixedJob::expected(seed));
+        }
+        seed += wave;
+    }
+    failures
+}
+
+/// Value at quantile `q` (0..=1) of an ascending-sorted sample, with
+/// linear interpolation.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+fn build_server(opts: &BenchOptions, sched: SchedulerKind, least: bool) -> JobServer {
+    let policy: Box<dyn PlacementPolicy> = if least {
+        Box::new(LeastLoaded)
+    } else {
+        Box::new(RoundRobin::new())
+    };
+    // 2 shards on a synthetic 2-node machine: placement + sharding
+    // active even on UMA hosts.
+    let per_shard = (opts.workers / 2).max(1);
+    JobServer::builder()
+        .topology(NumaTopology::synthetic(2, per_shard))
+        .shards(2)
+        .workers_per_shard(per_shard)
+        .capacity(1024)
+        .scheduler(sched)
+        .policy_boxed(policy)
+        .build()
+}
+
+/// Run the full configuration matrix and report.
+pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
+    let configs: Vec<(&'static str, SchedulerKind, bool, usize)> = vec![
+        ("lazy + rr, per-job submit", SchedulerKind::Lazy, false, 1),
+        ("lazy + rr, batched", SchedulerKind::Lazy, false, opts.batch),
+        ("lazy + least-loaded, batched", SchedulerKind::Lazy, true, opts.batch),
+        ("busy + rr, batched", SchedulerKind::Busy, false, opts.batch),
+    ];
+    let mut out = Vec::new();
+    for (label, sched, least, batch) in configs {
+        let server = build_server(opts, sched, least);
+        let scheduler = match sched {
+            SchedulerKind::Busy => "busy",
+            SchedulerKind::Lazy => "lazy",
+        };
+        let policy = if least { "least-loaded" } else { "round-robin" };
+
+        // Throughput (median over reps) + peak memory, warmup included
+        // in measure()'s first call.
+        let scope = MemScope::begin();
+        let m = super::measure(opts.reps, 0.2, || {
+            let failures = drive(&server, opts.jobs, batch);
+            assert_eq!(failures, 0, "result mismatches under {label}");
+        });
+        let peak_bytes = scope.peak_bytes();
+
+        // Closed-loop latency + steady-state allocs/job, measured on the
+        // submission path this configuration actually uses: per-job
+        // configs drive `submit` (the zero-alloc steady state); batched
+        // configs drive `submit_batch` in waves, so their allocs/job
+        // honestly include the batch path's bookkeeping (handle vectors,
+        // per-wave grouping) and a job's latency runs from its wave's
+        // submission to its own join. The throughput run above warmed
+        // every pool (stack shelves, deque buffers). Latencies in µs.
+        let mut lat = Vec::with_capacity(opts.latency_jobs as usize);
+        let alloc_before = crate::mem::alloc_count();
+        let mut seed = 0u64;
+        while seed < opts.latency_jobs {
+            if batch > 1 {
+                let wave = batch.min((opts.latency_jobs - seed) as usize) as u64;
+                let t0 = std::time::Instant::now();
+                let handles = server
+                    .submit_batch((seed..seed + wave).map(MixedJob::from_seed).collect());
+                for (s, h) in (seed..seed + wave).zip(handles) {
+                    let got = h.join();
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(got, MixedJob::expected(s), "latency pass mismatch");
+                }
+                seed += wave;
+            } else {
+                let t0 = std::time::Instant::now();
+                let h = server.submit(MixedJob::from_seed(seed));
+                let got = h.join();
+                lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                assert_eq!(got, MixedJob::expected(seed), "latency pass mismatch");
+                seed += 1;
+            }
+        }
+        let allocs_per_job = (crate::mem::alloc_count() - alloc_before) as f64
+            / opts.latency_jobs.max(1) as f64;
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        out.push(ConfigReport {
+            name: label.to_string(),
+            scheduler,
+            policy,
+            batch,
+            jobs_per_sec: opts.jobs as f64 / m.secs,
+            p50_us: percentile(&lat, 0.50),
+            p99_us: percentile(&lat, 0.99),
+            allocs_per_job,
+            peak_bytes,
+        });
+    }
+    ServiceBenchReport { jobs: opts.jobs, workers: opts.workers, configs: out }
+}
+
+/// Render a report as JSON (hand-rolled — the crate is dependency-free).
+///
+/// `baseline_allocs_per_job` records the pre-recycling cost for
+/// trajectory comparison: 4 heap allocations in `new_root` (stack box +
+/// first stacklet + `Arc<RootSignal>` + boxed result cell) plus one MPSC
+/// node per submission = 5/job before this layer existed.
+pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"service\",\n");
+    s.push_str("  \"schema\": 1,\n");
+    s.push_str(&format!("  \"measured\": {measured},\n"));
+    s.push_str(&format!("  \"jobs\": {},\n", r.jobs));
+    s.push_str(&format!("  \"workers\": {},\n", r.workers));
+    s.push_str("  \"baseline\": {\n");
+    s.push_str("    \"allocs_per_job\": 5.0,\n");
+    s.push_str(
+        "    \"note\": \"pre-recycling cost: 4 heap allocs in new_root (stack box, first stacklet, Arc<RootSignal>, boxed result cell) + 1 MPSC node per submit\"\n",
+    );
+    s.push_str("  },\n");
+    s.push_str("  \"configs\": [\n");
+    for (i, c) in r.configs.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"name\": \"{}\",\n", c.name));
+        s.push_str(&format!("      \"scheduler\": \"{}\",\n", c.scheduler));
+        s.push_str(&format!("      \"policy\": \"{}\",\n", c.policy));
+        s.push_str(&format!("      \"batch\": {},\n", c.batch));
+        s.push_str(&format!("      \"jobs_per_sec\": {:.1},\n", c.jobs_per_sec));
+        s.push_str(&format!("      \"p50_us\": {:.2},\n", c.p50_us));
+        s.push_str(&format!("      \"p99_us\": {:.2},\n", c.p99_us));
+        s.push_str(&format!("      \"allocs_per_job\": {:.3},\n", c.allocs_per_job));
+        s.push_str(&format!("      \"peak_bytes\": {}\n", c.peak_bytes));
+        s.push_str(if i + 1 == r.configs.len() { "    }\n" } else { "    },\n" });
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-9);
+        assert!(percentile(&[], 0.5) == 0.0);
+    }
+
+    #[test]
+    fn tiny_bench_runs_and_serializes() {
+        // Smoke: a minuscule configuration exercises the whole driver.
+        let opts = BenchOptions {
+            jobs: 40,
+            batch: 8,
+            reps: 1,
+            workers: 2,
+            latency_jobs: 10,
+        };
+        let report = run(&opts);
+        assert_eq!(report.configs.len(), 4);
+        for c in &report.configs {
+            assert!(c.jobs_per_sec > 0.0, "{}: zero throughput", c.name);
+            assert!(c.p99_us >= c.p50_us, "{}: p99 < p50", c.name);
+        }
+        let json = to_json(&report, true);
+        assert!(json.contains("\"bench\": \"service\""));
+        assert!(json.contains("\"allocs_per_job\""));
+        // Balanced braces/brackets as a cheap well-formedness check.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+}

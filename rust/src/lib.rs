@@ -17,7 +17,8 @@
 //!   [`task::Coroutine`]s whose frames live on the segmented stacks.
 //! * [`rt`] — the worker trampoline implementing the paper's Algorithms
 //!   3 (fork-awaitable), 4 (join-awaitable) and 5 (final-awaitable),
-//!   including stack-ownership transfer.
+//!   including stack-ownership transfer, plus [`rt::root`] — the fused
+//!   root block behind the allocation-free steady state.
 //! * [`sched`] — the **busy** and **lazy** (adaptive, per-NUMA-node)
 //!   schedulers (§III-D).
 //! * [`numa`] — topology modelling and Eq. (6) victim selection.
@@ -71,6 +72,43 @@
 //! let value = rustfork::sync::block_on(pool.submit(Fib::new(10)));
 //! assert_eq!(value, 55);
 //! ```
+//!
+//! ## Memory: Eq. (5) and the allocation-free steady state
+//!
+//! Eq. (5) bounds `n` frame allocations on a segmented stack at
+//! `n·T_ptr + O(log2 n)·T_heap` — heap traffic amortizes over the
+//! *stack's* lifetime. A job service creates one root per job, so
+//! without recycling every submission restarts that amortization and
+//! pays `O(1)·T_heap` per **job** (stack box + first stacklet +
+//! `Arc<RootSignal>` + boxed result cell + an MPSC node: 5 heap
+//! allocations each way). Three layers remove all of them:
+//!
+//! * **Stack recycling** ([`stack::StackShelf`] + per-worker free
+//!   lists): a quiesced root stack is trimmed to its first stacklet and
+//!   shelved; `Pool::new_root` and the thief-side `fresh_stack` path pop
+//!   recycled stacks instead of allocating. The shelf is shared across a
+//!   [`service::JobServer`]'s shards. Panic-poisoned stacks are never
+//!   recycled (they are leaked; their abandoned frames may still be
+//!   referenced).
+//! * **Fused root blocks** ([`rt::root`]): frame + completion signal +
+//!   result cell + a 2-count intrusive refcount in one placement
+//!   allocation on the recycled stack. The completing worker releases
+//!   one half after firing the signal; the handle releases the other
+//!   when the result leaves the block (`join`, future `Ready`, or
+//!   drop-without-join). The last release pops the block and reshelves
+//!   the stack — so Eq. (5)'s accounting again amortizes over the
+//!   recycling loop's lifetime, not per job.
+//! * **Intrusive submission queues** ([`deque::FrameQueue`]): root
+//!   frames link through their own headers, so `submit` pushes without
+//!   heap nodes.
+//!
+//! The steady-state guarantee — **0 heap allocations per
+//! submit→execute→complete→join cycle once pools are warm** — is
+//! asserted by `rust/tests/alloc_regression.rs` using the counting
+//! global allocator ([`mem::alloc_count`]), and reported per
+//! configuration by `benches/service.rs` / `repro bench --json`
+//! (`stack_pool_hits`/`stack_pool_misses`/`root_blocks_fused` in
+//! [`metrics::MetricsSnapshot`] expose the recycling rates).
 //!
 //! ## Serving traffic
 //!

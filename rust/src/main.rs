@@ -34,7 +34,7 @@ fn main() {
         Some("calibrate") => calibrate(),
         Some("run") => run_one(&args[1..]),
         Some("serve") => serve(&args[1..]),
-        Some("bench") => bench_help(),
+        Some("bench") => bench(&args[1..]),
         _ => usage(),
     }
 }
@@ -362,7 +362,33 @@ fn serve(args: &[String]) {
     }
 }
 
-fn bench_help() {
+/// `repro bench` — without flags, point at the cargo bench targets;
+/// with `--json <path>`, run the service bench matrix and write a
+/// machine-readable report (jobs/sec, p50/p99 latency, allocs/job, peak
+/// bytes) seeding the perf trajectory (`BENCH_service.json`).
+fn bench(args: &[String]) {
+    if let Some(path) = flag_value(args, "--json") {
+        use rustfork::harness::service_bench::{run, to_json, BenchOptions};
+        let opts = BenchOptions::from_env();
+        println!(
+            "# bench --json: {} mixed jobs, {} workers, {} latency jobs",
+            opts.jobs, opts.workers, opts.latency_jobs
+        );
+        let report = run(&opts);
+        for c in &report.configs {
+            println!(
+                "{:<34} {:>10.0}/s  p50 {:>7.1}us  p99 {:>7.1}us  allocs/job {:.3}",
+                c.name, c.jobs_per_sec, c.p50_us, c.p99_us, c.allocs_per_job
+            );
+        }
+        let json = to_json(&report, true);
+        if let Err(e) = std::fs::write(path, &json) {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {path}");
+        return;
+    }
     println!(
         "# benchmark targets (cargo bench --bench <name>)\n\
          classic   — Fig. 5: classic benchmarks, measured + simulated\n\
@@ -370,10 +396,13 @@ fn bench_help() {
          memory    — Fig. 7 + Table II: peak memory power-law fits\n\
          overhead  — §IV-C.1a: T_1/T_s per framework\n\
          micro     — substrate micro-benches (deque/stack/sampler/join)\n\
-         service   — job-service throughput (jobs/sec, batched vs not)\n\
+         service   — job-service throughput/latency/allocs-per-job\n\
+         \n\
+         repro bench --json <path> — run the service matrix and write\n\
+         machine-readable results (jobs/sec, p50/p99, allocs/job, peak)\n\
          \n\
          env: RUSTFORK_REPS, RUSTFORK_SMOKE=1, RUSTFORK_UTS_LARGE=1,\n\
               RUSTFORK_UTS_FULL=1, RUSTFORK_SIM_MAX_P, RUSTFORK_MEM_MAX_P,\n\
-              RUSTFORK_JOBS, RUSTFORK_BATCH"
+              RUSTFORK_JOBS, RUSTFORK_BATCH, RUSTFORK_LATENCY_JOBS"
     );
 }

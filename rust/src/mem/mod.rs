@@ -24,6 +24,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 static LIVE: AtomicUsize = AtomicUsize::new(0);
 /// High-water mark of [`LIVE`] since the last [`reset_peak`].
 static PEAK: AtomicUsize = AtomicUsize::new(0);
+/// Monotone count of allocation events (`alloc` + `realloc`). The
+/// allocs-per-job accounting of the steady-state regression test and
+/// the service bench is a delta of this counter.
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
 
 /// Counting wrapper over the system allocator. Installed as the crate's
 /// `#[global_allocator]`.
@@ -55,6 +59,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
 #[inline]
 fn track_alloc(size: usize) {
+    ALLOCS.fetch_add(1, Ordering::Relaxed);
     let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
     // Lossy peak update: a racing lower store can only under-report by a
     // transient amount; benchmark peaks are dominated by sustained
@@ -72,6 +77,13 @@ pub fn peak_bytes() -> usize {
     PEAK.load(Ordering::Relaxed)
 }
 
+/// Monotone process-wide count of heap allocation events. Subtract two
+/// readings to count allocations in a region (single-threaded regions
+/// only — concurrent threads' allocations land in the same counter).
+pub fn alloc_count() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
 /// Reset the peak to the current live value.
 pub fn reset_peak() {
     PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
@@ -79,22 +91,30 @@ pub fn reset_peak() {
 
 /// Scoped peak measurement: captures the baseline at `begin` and reports
 /// the *additional* peak above it, quantized like GNU time's 4 KiB pages
-/// via [`MemScope::peak_quantized`].
+/// via [`MemScope::peak_quantized`], plus the number of allocation
+/// events in the scope via [`MemScope::allocs`].
 pub struct MemScope {
     baseline: usize,
+    baseline_allocs: usize,
 }
 
 impl MemScope {
     /// Begin a measurement region (resets the global peak).
     pub fn begin() -> Self {
         let baseline = live_bytes();
+        let baseline_allocs = alloc_count();
         reset_peak();
-        MemScope { baseline }
+        MemScope { baseline, baseline_allocs }
     }
 
     /// Peak bytes allocated above the baseline during the scope.
     pub fn peak_bytes(&self) -> usize {
         peak_bytes().saturating_sub(self.baseline)
+    }
+
+    /// Allocation events since the scope began.
+    pub fn allocs(&self) -> usize {
+        alloc_count() - self.baseline_allocs
     }
 
     /// Peak quantized to 4 KiB (the paper's MRSS granularity).
@@ -129,9 +149,21 @@ mod tests {
 
     #[test]
     fn quantized_rounds_up() {
-        let s = MemScope { baseline: 0 };
+        let s = MemScope { baseline: 0, baseline_allocs: 0 };
         // peak is global; just check the rounding rule.
         let q = s.peak_quantized();
         assert_eq!(q % 4096, 0);
+    }
+
+    #[test]
+    fn scope_counts_allocs() {
+        let s = MemScope::begin();
+        let before = s.allocs();
+        let v: Vec<Box<u32>> = (0..10).map(Box::new).collect();
+        std::hint::black_box(&v);
+        drop(v);
+        // ≥ 11 allocation events (10 boxes + the vec buffer); frees do
+        // not decrement the event counter.
+        assert!(s.allocs() - before >= 11, "allocs {}", s.allocs() - before);
     }
 }

@@ -30,6 +30,13 @@ pub struct WorkerCounters {
     pub sleeps: AtomicU64,
     /// Root tasks executed to completion.
     pub roots: AtomicU64,
+    /// `fresh_stack` requests served by the recycling layer (worker
+    /// free-list or shared shelf).
+    pub stack_pool_hits: AtomicU64,
+    /// `fresh_stack` requests that had to heap-allocate a stack.
+    pub stack_pool_misses: AtomicU64,
+    /// Stacks poisoned (and leaked) by workload panics.
+    pub stacks_poisoned: AtomicU64,
 }
 
 macro_rules! bump {
@@ -55,6 +62,9 @@ impl WorkerCounters {
         bump_signals => signals,
         bump_sleeps => sleeps,
         bump_roots => roots,
+        bump_stack_pool_hits => stack_pool_hits,
+        bump_stack_pool_misses => stack_pool_misses,
+        bump_stacks_poisoned => stacks_poisoned,
     }
 }
 
@@ -70,6 +80,15 @@ pub struct MetricsSnapshot {
     pub signals: u64,
     pub sleeps: u64,
     pub roots: u64,
+    /// Stack requests served without touching the allocator (worker
+    /// free-lists + the shelf, both thief-side and submission-side).
+    pub stack_pool_hits: u64,
+    /// Stack requests that heap-allocated.
+    pub stack_pool_misses: u64,
+    /// Fused root blocks created (== roots submitted; pool-level).
+    pub root_blocks_fused: u64,
+    /// Stacks poisoned and leaked by workload panics.
+    pub stacks_poisoned: u64,
 }
 
 impl MetricsSnapshot {
@@ -90,6 +109,10 @@ impl MetricsSnapshot {
         self.signals += other.signals;
         self.sleeps += other.sleeps;
         self.roots += other.roots;
+        self.stack_pool_hits += other.stack_pool_hits;
+        self.stack_pool_misses += other.stack_pool_misses;
+        self.root_blocks_fused += other.root_blocks_fused;
+        self.stacks_poisoned += other.stacks_poisoned;
     }
 
     /// Difference against an earlier snapshot.
@@ -104,6 +127,10 @@ impl MetricsSnapshot {
             signals: self.signals - earlier.signals,
             sleeps: self.sleeps - earlier.sleeps,
             roots: self.roots - earlier.roots,
+            stack_pool_hits: self.stack_pool_hits - earlier.stack_pool_hits,
+            stack_pool_misses: self.stack_pool_misses - earlier.stack_pool_misses,
+            root_blocks_fused: self.root_blocks_fused - earlier.root_blocks_fused,
+            stacks_poisoned: self.stacks_poisoned - earlier.stacks_poisoned,
         }
     }
 }
@@ -143,6 +170,9 @@ impl Metrics {
             s.signals += w.signals.load(Ordering::Relaxed);
             s.sleeps += w.sleeps.load(Ordering::Relaxed);
             s.roots += w.roots.load(Ordering::Relaxed);
+            s.stack_pool_hits += w.stack_pool_hits.load(Ordering::Relaxed);
+            s.stack_pool_misses += w.stack_pool_misses.load(Ordering::Relaxed);
+            s.stacks_poisoned += w.stacks_poisoned.load(Ordering::Relaxed);
         }
         s
     }

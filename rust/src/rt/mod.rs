@@ -5,6 +5,10 @@
 //!   (fork-awaitable), Algorithm 4 (join-awaitable) and Algorithm 5
 //!   (final-awaitable), including segmented-stack ownership transfer.
 //! * [`pool::Pool`] — worker lifecycle, root-task submission, shutdown.
+//! * [`root`] — the **fused root block**: signal + result + refcount +
+//!   frame in one placement allocation on a recycled stack, making the
+//!   steady-state submit→execute→complete→join cycle heap-allocation
+//!   free.
 //!
 //! ## Ownership invariants (load-bearing; see the proofs in worker.rs)
 //!
@@ -21,6 +25,7 @@
 //!    join by the stack-transfer rules).
 
 pub mod pool;
+pub mod root;
 pub mod worker;
 
 pub use pool::{Pool, PoolBuilder};

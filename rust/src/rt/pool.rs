@@ -1,16 +1,18 @@
 //! The worker pool: construction, root-task submission, shutdown.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::deque::{Deque, SubmissionQueue};
+use crate::deque::{Deque, FrameQueue};
 use crate::frame::{FrameHeader, FrameKind, FramePtr, JoinCounter};
 use crate::metrics::{Metrics, MetricsSnapshot};
 use crate::numa::{AliasSampler, NumaTopology};
 use crate::sched::SchedulerKind;
-use crate::stack::SegmentedStack;
-use crate::sync::{CachePadded, Parker};
+use crate::stack::{SegmentedStack, StackShelf};
+use crate::sync::{CachePadded, Parker, SleepBackoff};
 use crate::task::{Coroutine, Frame};
+
+use super::root::{self, RootBlock, RootHot};
 
 /// Completion signal for a root task (non-generic part). The submitter
 /// either parks on it (blocking `join`) or registers a [`Waker`]
@@ -18,6 +20,11 @@ use crate::task::{Coroutine, Frame};
 #[derive(Debug)]
 pub struct RootSignal {
     done: AtomicBool,
+    /// Set (before `done`) when the root was **abandoned** by a workload
+    /// panic instead of completing — the result cell was never written.
+    /// Handles observe this and panic on `join`/`poll` (mirroring
+    /// `JoinHandle` semantics) rather than reading garbage or hanging.
+    abandoned: AtomicBool,
     parker: Parker,
     /// Waker registered by an async awaiter (at most one — `RootHandle`
     /// is not cloneable). Guarded by a mutex rather than an atomic state
@@ -27,9 +34,10 @@ pub struct RootSignal {
 }
 
 impl RootSignal {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         RootSignal {
             done: AtomicBool::new(false),
+            abandoned: AtomicBool::new(false),
             parker: Parker::new(),
             waker: std::sync::Mutex::new(None),
         }
@@ -43,17 +51,38 @@ impl RootSignal {
         // Lock ordering vs `register_waker`: `done` is set before taking
         // the lock here, and `poll` re-checks `done` after releasing it,
         // so either we see the waker or the poller sees completion.
-        let waker = self.waker.lock().unwrap().take();
+        // Poison-tolerant: a waker clone that panicked on the handle
+        // side must not wedge completion.
+        let waker = self.waker.lock().unwrap_or_else(|p| p.into_inner()).take();
         if let Some(w) = waker {
-            w.wake();
+            // `wake` runs user executor code. If it panics, the panic
+            // must not unwind into the runtime: the worker still has to
+            // release its refcount half right after this call — an
+            // escaping panic would leak the finished block and poison an
+            // innocent (already detached, pristine) pooled stack.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| w.wake()));
         }
+    }
+
+    /// Worker side, panic path: publish completion in **abandoned** mode
+    /// — the result was never produced; handles unblock and report the
+    /// panic instead of waiting forever.
+    pub(crate) fn complete_abandoned(&self) {
+        self.abandoned.store(true, Ordering::Release);
+        self.complete();
+    }
+
+    /// True when the root was abandoned by a workload panic (valid after
+    /// [`Self::is_done`] returns true).
+    pub fn is_abandoned(&self) -> bool {
+        self.abandoned.load(Ordering::Acquire)
     }
 
     /// Async side: (re-)register the waker to be called on completion.
     /// The caller must re-check [`Self::is_done`] afterwards to close the
     /// race with a concurrent [`Self::complete`].
     pub fn register_waker(&self, waker: &std::task::Waker) {
-        let mut slot = self.waker.lock().unwrap();
+        let mut slot = self.waker.lock().unwrap_or_else(|p| p.into_inner());
         // Skip the clone when re-registering the same waker.
         match &mut *slot {
             Some(w) if w.will_wake(waker) => {}
@@ -78,8 +107,10 @@ impl RootSignal {
 pub struct Shared {
     /// Per-worker work-stealing deques of continuations.
     pub deques: Vec<Deque<FramePtr>>,
-    /// Per-worker MPSC submission queues (no global queue, §III-D1).
-    pub submissions: Vec<SubmissionQueue<FramePtr>>,
+    /// Per-worker intrusive MPSC submission queues (no global queue,
+    /// §III-D1; links through `FrameHeader::qnext`, so pushes are
+    /// allocation-free).
+    pub submissions: Vec<FrameQueue>,
     /// Per-worker parkers (lazy scheduler sleep/wake).
     pub parkers: Vec<Parker>,
     /// Per-worker Eq. (6) victim samplers.
@@ -106,6 +137,17 @@ pub struct Shared {
     /// Lets a sharded job server place each sub-pool on its own NUMA
     /// node's cores (see [`crate::service`]).
     pub pin_offset: usize,
+    /// Shared recycle shelf for quiesced root stacks. `new_root` pops
+    /// from it; the last refcount release of a fused root block pushes
+    /// back. Shared across the shards of a [`crate::service::JobServer`]
+    /// so stacks recycle across submitters.
+    pub shelf: Arc<StackShelf>,
+    /// Fused root blocks created (== roots submitted through this pool).
+    pub root_blocks: AtomicU64,
+    /// `new_root` stack-shelf hits (submission-side recycling).
+    pub submit_stack_hits: AtomicU64,
+    /// `new_root` stack-shelf misses (heap-allocated a fresh stack).
+    pub submit_stack_misses: AtomicU64,
 }
 
 impl Shared {
@@ -164,6 +206,7 @@ pub struct PoolBuilder {
     first_stacklet: usize,
     seed: u64,
     pin_offset: usize,
+    shelf: Option<Arc<StackShelf>>,
 }
 
 impl PoolBuilder {
@@ -175,6 +218,7 @@ impl PoolBuilder {
             first_stacklet: crate::stack::FIRST_STACKLET,
             seed: 0x5EED,
             pin_offset: 0,
+            shelf: None,
         }
     }
 
@@ -216,6 +260,14 @@ impl PoolBuilder {
         self
     }
 
+    /// Use an existing stack shelf instead of a private one. The sharded
+    /// [`crate::service::JobServer`] passes one shelf to every sub-pool
+    /// so quiesced root stacks recycle across shards and submitters.
+    pub fn stack_shelf(mut self, shelf: Arc<StackShelf>) -> Self {
+        self.shelf = Some(shelf);
+        self
+    }
+
     /// Spawn the workers and return the pool.
     pub fn build(self) -> Pool {
         let p = self.workers;
@@ -236,9 +288,12 @@ impl PoolBuilder {
         for w in 0..p {
             *awake_in_node[topology.node_of(w)].get_mut() += 1;
         }
+        let shelf = self
+            .shelf
+            .unwrap_or_else(|| Arc::new(StackShelf::new((4 * p).max(8))));
         let shared = Arc::new(Shared {
             deques: (0..p).map(|_| Deque::new()).collect(),
-            submissions: (0..p).map(|_| SubmissionQueue::new()).collect(),
+            submissions: (0..p).map(|_| FrameQueue::new()).collect(),
             parkers: (0..p).map(|_| Parker::new()).collect(),
             samplers,
             topology,
@@ -253,6 +308,10 @@ impl PoolBuilder {
                 .collect(),
             first_stacklet: self.first_stacklet,
             pin_offset: self.pin_offset,
+            shelf,
+            root_blocks: AtomicU64::new(0),
+            submit_stack_hits: AtomicU64::new(0),
+            submit_stack_misses: AtomicU64::new(0),
         });
         let mut threads = Vec::with_capacity(p);
         for id in 0..p {
@@ -296,9 +355,21 @@ impl Pool {
         self.shared.deques.len()
     }
 
-    /// Aggregate runtime counters.
+    /// Aggregate runtime counters. Worker counters are merged with the
+    /// pool-level submission-side counters (stack shelf hits/misses,
+    /// fused root blocks).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        let mut s = self.shared.metrics.snapshot();
+        s.root_blocks_fused = self.shared.root_blocks.load(Ordering::Relaxed);
+        s.stack_pool_hits += self.shared.submit_stack_hits.load(Ordering::Relaxed);
+        s.stack_pool_misses += self.shared.submit_stack_misses.load(Ordering::Relaxed);
+        s
+    }
+
+    /// The pool's stack recycle shelf (shared with sibling shards when
+    /// built through [`crate::service::JobServer`]).
+    pub fn stack_shelf(&self) -> &Arc<StackShelf> {
+        &self.shared.shelf
     }
 
     /// Shared state (used by benches to inspect per-worker data).
@@ -327,7 +398,7 @@ impl Pool {
     /// per-job `notify`, amortizing parker and flag traffic on the
     /// submission hot path. Frames are distributed round-robin (same
     /// counter as [`Self::submit`]) but enqueued per worker via
-    /// [`SubmissionQueue::push_batch`] — a single tail exchange per
+    /// [`FrameQueue::push_batch`] — a single tail exchange per
     /// (batch × worker) rather than per job. Handles are returned in
     /// input order.
     pub fn submit_batch<C: Coroutine>(
@@ -367,44 +438,58 @@ impl Pool {
         self.shared.parkers[target].notify();
     }
 
-    /// Allocate a root frame (stack + signal + result cell) for `task`.
+    /// Build a **fused root block** (frame + signal + refcount + result
+    /// cell in one placement allocation) for `task` on a recycled stack.
+    ///
+    /// Steady-state cost: one shelf pop, one bump allocation, zero heap
+    /// traffic. The shelf misses only while cold (or when more jobs are
+    /// in flight than the shelf has ever seen), in which case a fresh
+    /// stack is heap-allocated exactly as before.
     fn new_root<C: Coroutine>(&self, task: C) -> (FramePtr, RootHandle<C::Output>) {
-        // The root gets a fresh stack that travels with the frame.
-        let mut stack = SegmentedStack::with_first_capacity(self.shared.first_stacklet);
-        // The signal is jointly owned: the handle holds one reference,
-        // the frame a second (as a raw Arc clone, released by the worker
-        // in the final awaitable). Joint ownership is load-bearing — a
-        // waiter can observe `done` and free its side while the worker
-        // is still inside `complete()` (parker notify, waker wake), so
-        // single ownership through the handle would be a use-after-free.
-        let signal = Arc::new(RootSignal::new());
-        let result: Box<std::mem::MaybeUninit<C::Output>> =
-            Box::new(std::mem::MaybeUninit::uninit());
-        let result_ptr = Box::into_raw(result);
-        let size = Frame::<C>::alloc_size();
-        let mem = stack.alloc(size) as *mut Frame<C>;
+        let shared = &self.shared;
+        let stack = match shared.shelf.pop() {
+            Some(s) => {
+                shared.submit_stack_hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                shared.submit_stack_misses.fetch_add(1, Ordering::Relaxed);
+                Box::into_raw(SegmentedStack::with_first_capacity(shared.first_stacklet))
+            }
+        };
+        shared.root_blocks.fetch_add(1, Ordering::Relaxed);
+        let size = RootBlock::<C>::alloc_size();
+        let mem = unsafe { (*stack).alloc(size) } as *mut RootBlock<C>;
         unsafe {
-            mem.write(Frame {
+            let hot_ptr = std::ptr::addr_of_mut!((*mem).hot);
+            let result_ptr = std::ptr::addr_of_mut!((*mem).result) as *mut C::Output;
+            std::ptr::addr_of_mut!((*mem).frame).write(Frame {
                 header: FrameHeader {
                     resume: super::worker::resume_shim::<C>,
                     parent: std::ptr::null_mut(),
-                    stack: std::ptr::null_mut(), // patched below
+                    stack,
                     alloc_size: size as u32,
                     kind: FrameKind::Root,
                     steals: 0,
                     join: JoinCounter::new(),
-                    root_signal: Arc::into_raw(Arc::clone(&signal)),
+                    root_hot: hot_ptr,
+                    qnext: std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()),
                 },
-                out: result_ptr as *mut C::Output,
+                out: result_ptr,
                 task,
             });
+            // The block holds one raw Arc reference to the shelf so the
+            // recycle route stays alive even if the handle outlives the
+            // pool; the disposer reconstitutes and drops it.
+            hot_ptr.write(RootHot::new(
+                mem as *mut FrameHeader,
+                Arc::into_raw(Arc::clone(&shared.shelf)),
+            ));
+            (
+                FramePtr(mem as *mut FrameHeader),
+                RootHandle { hot: hot_ptr, result: result_ptr, joined: false },
+            )
         }
-        let stack_ptr = Box::into_raw(stack);
-        unsafe { (*(mem as *mut FrameHeader)).stack = stack_ptr };
-        (
-            FramePtr(mem as *mut FrameHeader),
-            RootHandle { signal, result: result_ptr, joined: false },
-        )
     }
 }
 
@@ -413,10 +498,15 @@ impl Drop for Pool {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.wake_all();
         for t in self.threads.drain(..) {
-            // Keep waking: a worker may re-park between flag store and join.
+            // Keep waking: a worker may re-park between flag store and
+            // join. Back off exponentially (yield → capped sleep) so a
+            // straggling worker does not cost the joiner a spinning core
+            // — a worker parked on its backstop needs up to
+            // `sched::lazy::PARK_BACKSTOP` to notice shutdown anyway.
+            let mut backoff = SleepBackoff::new();
             while !t.is_finished() {
                 self.shared.wake_all();
-                std::thread::yield_now();
+                backoff.snooze();
             }
             let _ = t.join();
         }
@@ -437,36 +527,76 @@ impl Drop for Pool {
 /// by the future's `Ready`, or by the blocking drop path), the worker's
 /// Release store of `done` happens-after the result write, and polling
 /// after completion panics (like `JoinHandle` misuse).
+///
+/// The handle owns one refcount half of the **fused root block**
+/// ([`crate::rt::root`]): signal, result cell and frame live in a single
+/// placement allocation on a recycled stack, so none of the handle's
+/// paths — `join`, the future's `Ready`, or drop-without-join — touch
+/// the heap. The half is released exactly once, after the result leaves
+/// (or is dropped in) the block; if that release is the last, the
+/// handle's thread recycles the job's stack back onto the shelf.
 pub struct RootHandle<T> {
-    signal: Arc<RootSignal>,
-    result: *mut std::mem::MaybeUninit<T>,
+    /// The block's shared hot part (signal + refcount + recycle route).
+    hot: *const RootHot,
+    /// The block's result cell (written by the completing worker before
+    /// the signal's Release store of `done`).
+    result: *mut T,
     joined: bool,
 }
 
 unsafe impl<T: Send> Send for RootHandle<T> {}
 
 impl<T> RootHandle<T> {
+    /// The block's completion signal. Valid until this handle releases
+    /// its refcount half (`joined` guards every release path).
+    fn signal(&self) -> &RootSignal {
+        debug_assert!(!self.joined);
+        unsafe { (*self.hot).signal() }
+    }
+
     /// Block until the task completes and take its result.
+    ///
+    /// # Panics
+    /// Panics if the task's strand panicked (the job was abandoned by
+    /// the runtime's panic containment — like joining a panicked
+    /// `std::thread`).
     pub fn join(mut self) -> T {
-        self.signal.wait();
+        self.signal().wait();
+        if self.signal().is_abandoned() {
+            self.release_abandoned();
+            panic!("root task panicked; job abandoned");
+        }
         unsafe { self.take_result() }
+    }
+
+    /// Release the handle's half of an abandoned block without touching
+    /// the never-written result cell.
+    fn release_abandoned(&mut self) {
+        debug_assert!(!self.joined);
+        self.joined = true;
+        unsafe { root::release(self.hot) };
     }
 
     /// Non-blocking completion check.
     pub fn is_done(&self) -> bool {
-        self.signal.is_done()
+        // After the result was taken this handle's refcount half is
+        // gone and the block may already be recycled — answer from the
+        // handle's own state instead of dereferencing the block.
+        self.joined || self.signal().is_done()
     }
 
-    /// Take ownership of the completed result.
+    /// Move the result out of the block and release the handle's
+    /// refcount half (after which the block must not be touched).
     ///
     /// # Safety
     /// The signal must have completed (`is_done()`), and the result must
     /// not have been taken yet (`!self.joined`).
     unsafe fn take_result(&mut self) -> T {
-        debug_assert!(self.signal.is_done() && !self.joined);
+        debug_assert!(self.signal().is_done() && !self.joined);
         self.joined = true;
-        let b = Box::from_raw(self.result);
-        *b.assume_init()
+        let v = std::ptr::read(self.result);
+        root::release(self.hot);
+        v
     }
 }
 
@@ -477,35 +607,55 @@ impl<T: Send> std::future::Future for RootHandle<T> {
         self: std::pin::Pin<&mut Self>,
         cx: &mut std::task::Context<'_>,
     ) -> std::task::Poll<T> {
-        // All fields are Unpin (Box / raw pointer / bool), so the struct
-        // is Unpin and get_mut is safe.
+        // All fields are Unpin (raw pointers / bool), so the struct is
+        // Unpin and get_mut is safe.
         let this = self.get_mut();
         assert!(!this.joined, "RootHandle polled after completion");
-        if this.signal.is_done() {
-            return std::task::Poll::Ready(unsafe { this.take_result() });
+        if this.signal().is_done() {
+            return std::task::Poll::Ready(this.ready());
         }
-        this.signal.register_waker(cx.waker());
+        this.signal().register_waker(cx.waker());
         // Re-check: completion may have raced between the first check
         // and the registration (complete() takes the same lock, so if it
         // missed our waker it had already set `done`).
-        if this.signal.is_done() {
-            std::task::Poll::Ready(unsafe { this.take_result() })
+        if this.signal().is_done() {
+            std::task::Poll::Ready(this.ready())
         } else {
             std::task::Poll::Pending
         }
     }
 }
 
+impl<T: Send> RootHandle<T> {
+    /// Resolve a completed handle for `poll`. Panics (like `join`) when
+    /// the job was abandoned by a workload panic.
+    fn ready(&mut self) -> T {
+        if self.signal().is_abandoned() {
+            self.release_abandoned();
+            panic!("root task panicked; job abandoned");
+        }
+        unsafe { self.take_result() }
+    }
+}
+
 impl<T> Drop for RootHandle<T> {
     fn drop(&mut self) {
         if !self.joined {
-            // Must wait: the worker writes through `result` and reads the
-            // signal; both must stay alive until completion.
-            self.signal.wait();
+            // Must wait: the worker writes through `result` and fires
+            // the signal; the block must stay alive until completion.
+            self.signal().wait();
+            if self.signal().is_abandoned() {
+                // Workload panic: the result was never written — just
+                // release the handle's half (no panic from drop).
+                self.release_abandoned();
+                return;
+            }
+            self.joined = true;
             unsafe {
-                let b = Box::from_raw(self.result);
-                // Drop the initialized value.
-                drop(b.assume_init());
+                // Drop the never-taken result in place, then release the
+                // handle's half.
+                std::ptr::drop_in_place(self.result);
+                root::release(self.hot);
             }
         }
     }

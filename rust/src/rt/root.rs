@@ -1,0 +1,178 @@
+//! The **fused root block**: signal + result cell + refcount + root
+//! frame in one placement allocation on a recycled segmented stack.
+//!
+//! Before this layer, every root submission performed four heap
+//! allocations (`Box<SegmentedStack>`, its first stacklet,
+//! `Arc<RootSignal>`, `Box<MaybeUninit<T>>`) and the handle/worker pair
+//! freed them one by one — `O(1)·T_heap` per job where Eq. (5) promises
+//! the heap term amortizes away. The fused block removes all four:
+//!
+//! ```text
+//!   recycled stack (from the StackShelf)
+//!   ┌──────────────────────────────────────────────────────────┐
+//!   │ RootBlock<C>                                             │
+//!   │ ┌──────────────┬──────────────────────┬────────────────┐ │
+//!   │ │ Frame<C>     │ RootHot              │ MaybeUninit<T> │ │
+//!   │ │ (header +    │ signal · refs(=2) ·  │ (result cell)  │ │
+//!   │ │  out + task) │ base · shelf         │                │ │
+//!   │ └──────────────┴──────────────────────┴────────────────┘ │
+//!   └──────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! ## Lifecycle (who releases which half)
+//!
+//! The block starts with **two** refcount halves:
+//!
+//! * the **worker half** — released in the final awaitable, *after*
+//!   [`RootSignal::complete`] has fired (so the signal outlives the
+//!   parker notify + waker wake, preserving the use-after-free fix that
+//!   previously required the `Arc`);
+//! * the **handle half** — released by [`RootHandle`] when the result
+//!   leaves the block (`join`, the future's `Ready`) or when the handle
+//!   is dropped un-joined (which waits, then drops the result in place).
+//!
+//! Whichever release observes the count reach zero **disposes**: it runs
+//! the signal's destructor, pops the block off its stack (restoring
+//! `live == 0`) and recycles the stack through the [`StackShelf`] — so
+//! in steady state the stack a job completed on is the stack the next
+//! submission is built on, and neither side ever touches the allocator.
+//!
+//! [`RootHandle`]: crate::rt::pool::RootHandle
+//! [`RootSignal::complete`]: crate::rt::pool::RootSignal::complete
+
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::frame::FrameHeader;
+use crate::stack::{round_up, StackShelf};
+use crate::task::{Coroutine, Frame};
+
+use super::pool::RootSignal;
+
+/// The type-erased hot part of a fused root block: everything the
+/// submitter's handle and the completing worker share. Lives inside the
+/// block's stack allocation, directly after the typed frame.
+pub struct RootHot {
+    signal: RootSignal,
+    /// Two halves: worker + handle. The last release disposes the block
+    /// and recycles its stack.
+    refs: AtomicUsize,
+    /// Base of the whole block allocation (== the frame header), from
+    /// which dispose reads the stack pointer and allocation size.
+    base: *mut FrameHeader,
+    /// Raw `Arc<StackShelf>` reference (the recycle route). Reconstituted
+    /// and dropped by the disposer, so the shelf outlives every
+    /// outstanding handle even after its pool is gone.
+    shelf: *const StackShelf,
+}
+
+impl RootHot {
+    /// Fresh hot part with both halves outstanding. Takes ownership of
+    /// one raw `Arc<StackShelf>` reference.
+    pub(crate) fn new(base: *mut FrameHeader, shelf: *const StackShelf) -> Self {
+        RootHot {
+            signal: RootSignal::new(),
+            refs: AtomicUsize::new(2),
+            base,
+            shelf,
+        }
+    }
+
+    /// The completion signal (done flag + parker + waker slot).
+    #[inline]
+    pub fn signal(&self) -> &RootSignal {
+        &self.signal
+    }
+}
+
+/// The full typed layout of a fused root block. `repr(C)` so the frame
+/// header sits at offset 0 — a `*mut RootBlock<C>` is also a valid
+/// `*mut FrameHeader` (the same prefix rule every frame relies on).
+#[repr(C)]
+pub struct RootBlock<C: Coroutine> {
+    /// The root task's frame (header first).
+    pub frame: Frame<C>,
+    /// Shared completion state.
+    pub hot: RootHot,
+    /// Where the root's `co_return` value lands (`frame.out` points
+    /// here).
+    pub result: MaybeUninit<C::Output>,
+}
+
+impl<C: Coroutine> RootBlock<C> {
+    /// Post-monomorphization guard: the block is placement-allocated at
+    /// [`crate::stack::ALIGN`], so an over-aligned `C`/`C::Output`
+    /// (e.g. `#[repr(align(32))]`) would land misaligned — UB. Fail the
+    /// build for such types instead (the pre-fusion code heap-boxed the
+    /// result, which honored any alignment).
+    const ALIGN_OK: () = assert!(
+        std::mem::align_of::<RootBlock<C>>() <= crate::stack::ALIGN,
+        "RootBlock over-aligned: task/output alignment exceeds the segmented-stack ALIGN",
+    );
+
+    /// Stack allocation size for the whole fused block.
+    pub const fn alloc_size() -> usize {
+        // Force the alignment guard to be evaluated for every C.
+        #[allow(clippy::let_unit_value)]
+        let _ = Self::ALIGN_OK;
+        round_up(std::mem::size_of::<RootBlock<C>>())
+    }
+}
+
+/// Release one refcount half. The last release disposes the block and
+/// recycles its stack through the shelf.
+///
+/// # Safety
+/// `hot` must point at a live `RootHot` inside a root block, and the
+/// caller must own an un-released half. After this call the caller must
+/// not touch the block (signal, result, frame) again.
+pub(crate) unsafe fn release(hot: *const RootHot) {
+    if (*hot).refs.fetch_sub(1, Ordering::Release) != 1 {
+        return;
+    }
+    // Acquire the other side's writes (result store, waker traffic)
+    // before tearing the block down.
+    std::sync::atomic::fence(Ordering::Acquire);
+    dispose(hot as *mut RootHot);
+}
+
+/// Worker-side abandonment after a workload panic: fire the signal in
+/// **abandoned** mode (the result cell was never written — handles
+/// panic on `join`/`poll` and release silently on drop) and release the
+/// worker's half. Only called for submission-originated strands, whose
+/// root frame provably has not completed and cannot complete later (its
+/// scope is missing the panicked frame's signal/return); the block
+/// lives on the already-poisoned, leaked stack, so it stays valid for
+/// the handle.
+///
+/// # Safety
+/// `hot` must be the root of the panicked strand, with the worker's
+/// refcount half still held, and its stack must already be poisoned.
+pub(crate) unsafe fn abandon(hot: *const RootHot) {
+    (*hot).signal.complete_abandoned();
+    release(hot);
+}
+
+/// Tear down a fully-released root block: drop the signal state, pop the
+/// block off its stack and hand the (now empty) stack to the shelf. A
+/// **poisoned** stack (workload panic) still holds the abandoned
+/// strand's frames above the block — deallocating would violate FILO —
+/// so it is leaked wholesale; only the shelf reference is returned.
+unsafe fn dispose(hot: *mut RootHot) {
+    let base = (*hot).base;
+    let shelf_raw = (*hot).shelf;
+    let stack = (*base).stack;
+    let size = (*base).alloc_size as usize;
+    // The signal owns a mutex + possibly a registered waker clone; the
+    // task state and the result were already consumed by the shim and
+    // the handle respectively (neither exists on the abandoned path).
+    std::ptr::drop_in_place(hot);
+    let shelf = Arc::from_raw(shelf_raw);
+    if (*stack).is_poisoned() {
+        return;
+    }
+    (*stack).dealloc(base as *mut u8, size);
+    debug_assert!((*stack).is_empty(), "root stack must quiesce at dispose");
+    shelf.recycle(stack);
+}

@@ -51,6 +51,11 @@ struct LocalCounters {
     pops: u64,
 }
 
+/// Bound on the per-worker stack free-list. Small: a worker only needs
+/// spares to cover concurrently-suspended joins it is the victim of;
+/// overflow drains to the shared shelf (which covers submission reuse).
+const LOCAL_STACK_CAP: usize = 4;
+
 /// Per-thread worker state. Created on the worker thread by the pool.
 pub struct Worker {
     /// Worker id == index into the shared deque/submission/parker arrays.
@@ -60,8 +65,11 @@ pub struct Worker {
     /// Current segmented stack (exclusively owned). Empty whenever the
     /// worker sits in its scheduler loop (invariant 1).
     pub(crate) stack: *mut SegmentedStack,
-    /// Cached empty stack (zero or one).
-    pub(crate) spare: *mut SegmentedStack,
+    /// Bounded LIFO free-list of quiesced stacks (each empty and trimmed
+    /// to its first stacklet). Replaces the old single `spare` slot so
+    /// steal-heavy traffic stops churning the allocator; capacity is
+    /// pre-reserved, so pushes never allocate.
+    pub(crate) stacks: Vec<*mut SegmentedStack>,
     /// Child staged by `Cx::fork`/`Cx::call` awaiting dispatch.
     pub(crate) staged: *mut FrameHeader,
     pub(crate) staged_kind: StageKind,
@@ -81,7 +89,7 @@ impl Worker {
             id,
             shared,
             stack,
-            spare: std::ptr::null_mut(),
+            stacks: Vec::with_capacity(LOCAL_STACK_CAP),
             staged: std::ptr::null_mut(),
             staged_kind: StageKind::Call,
             rng: XorShift64::new(seed),
@@ -125,7 +133,7 @@ impl Worker {
                 }
                 unsafe { self.adopt_stack((*f).stack) };
                 self.enter_active();
-                unsafe { self.execute(f) };
+                self.execute_guarded(f);
                 self.exit_active();
                 backoff.reset();
                 continue;
@@ -136,10 +144,8 @@ impl Worker {
                 // thieves left, strands complete inline (steals == 0 fast
                 // paths), so executing here cannot block.
                 while let Some(FramePtr(f)) = self.shared.submissions[self.id].pop() {
-                    unsafe {
-                        self.adopt_stack((*f).stack);
-                        self.execute(f);
-                    }
+                    unsafe { self.adopt_stack((*f).stack) };
+                    self.execute_guarded(f);
                 }
                 break;
             }
@@ -164,7 +170,7 @@ impl Worker {
                         if !self.shared.deques[victim].is_empty() {
                             self.shared.wake_one(self.id);
                         }
-                        unsafe { self.execute(f) };
+                        self.execute_guarded(f);
                         self.exit_active();
                         backoff.reset();
                         continue;
@@ -203,6 +209,69 @@ impl Worker {
                 Transfer::To(next) => f = next,
                 Transfer::ToScheduler => break,
             }
+        }
+    }
+
+    /// Run a strand, containing workload panics: a panic unwinding out
+    /// of a task's `step` poisons the worker's current stack (whose live
+    /// frames are abandoned — see [`Self::on_workload_panic`]) instead
+    /// of killing the worker thread. Zero-cost unless a panic actually
+    /// occurs (`catch_unwind` only installs a landing pad).
+    fn execute_guarded(&mut self, f: *mut FrameHeader) {
+        // Remember the strand's root when the strand starts at one
+        // (submission pop / shutdown drain): a panic then abandons that
+        // root, so its handle unblocks (and panics) instead of waiting
+        // forever. Stolen continuations may also be roots, but a steal-
+        // originated strand must NOT abandon: the root's stack is not
+        // this worker's current stack, so it would not be poisoned and
+        // dispose would dealloc under the victim's live frames. Panics
+        // inside steal-originated strands therefore still leave the
+        // job's (remote) root waiting forever — a documented limitation.
+        let root_hot = unsafe {
+            if (*f).kind == FrameKind::Root && (*f).stack == self.stack {
+                (*f).root_hot
+            } else {
+                std::ptr::null()
+            }
+        };
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            self.execute(f)
+        }));
+        if caught.is_err() {
+            self.on_workload_panic(root_hot);
+        }
+    }
+
+    /// Contain a workload panic. The current stack holds the panicking
+    /// strand's live frames; they are abandoned where they lie: any
+    /// fork-join scope the strand participated in never joins, but every
+    /// *other* job and the pool itself keep running. The stack is
+    /// **poisoned and leaked** — never recycled, never freed — because
+    /// its fused root block (or frames referenced by a stolen sibling)
+    /// may still be reachable from outside. The worker continues on a
+    /// pooled stack. When the strand started at a root (`hot` non-null),
+    /// that root is **abandoned**: its signal fires in abandoned mode so
+    /// the submitter's handle panics on `join`/`poll` (and releases
+    /// silently on drop) instead of hanging.
+    #[cold]
+    fn on_workload_panic(&mut self, hot: *const crate::rt::root::RootHot) {
+        self.staged = std::ptr::null_mut();
+        // Invariant 2 repair: the strand's unconsumed fork entries (its
+        // own continuations, possibly from outer scopes of the same job)
+        // are still in our deque. Abandon them — a later job's hot-path
+        // pop must not receive a stale parent. Thieves racing this drain
+        // take entries through the normal steal protocol; the scopes
+        // they resume are missing the panicked child's signal and simply
+        // suspend forever (leaked, like the stack).
+        while self.shared.deques[self.id].pop().is_some() {}
+        // Poison strictly before abandoning: the last refcount release
+        // must observe the flag and leak the stack instead of
+        // deallocating under the abandoned frames.
+        unsafe { (*self.stack).poison() };
+        self.shared.metrics.worker(self.id).bump_stacks_poisoned();
+        self.stack = self.fresh_stack();
+        if !hot.is_null() {
+            unsafe { crate::rt::root::abandon(hot) };
         }
     }
 
@@ -293,29 +362,36 @@ impl Worker {
         let parent = (*h).parent;
         let kind = (*h).kind;
         let size = (*h).alloc_size as usize;
-        let root_signal = (*h).root_signal;
         debug_assert_eq!(self.stack, (*h).stack, "invariant 4");
+
+        if kind == FrameKind::Root {
+            // Output was written by the shim; publish completion (flush
+            // first so `pool.metrics()` right after `run()` sees this
+            // strand's counts).
+            self.flush_counters();
+            self.shared.metrics.worker(self.id).bump_roots();
+            let hot = (*h).root_hot;
+            debug_assert!(!hot.is_null(), "root frame without a fused block");
+            // The fused root block is NOT deallocated here: it stays
+            // live on this stack until both refcount halves release
+            // (`rt::root`). Detach the stack first — whichever release
+            // is last will pop the block and recycle it — and continue
+            // on a pooled stack.
+            self.stack = self.fresh_stack();
+            // The worker's half keeps the block alive through
+            // `complete()` — parker notify + async waker — even when the
+            // submitter observes `done` and releases its half
+            // concurrently (the use-after-free the old Arc guarded
+            // against).
+            (*hot).signal().complete();
+            crate::rt::root::release(hot);
+            return Transfer::ToScheduler;
+        }
+
         (*self.stack).dealloc(h as *mut u8, size);
 
         match kind {
-            FrameKind::Root => {
-                // Output was written by the shim; publish completion
-                // (flush first so `pool.metrics()` right after `run()`
-                // sees this strand's counts).
-                self.flush_counters();
-                self.shared.metrics.worker(self.id).bump_roots();
-                // The frame's signal reference is a raw Arc clone
-                // (`Pool::new_root`); reconstituting it keeps the signal
-                // alive through `complete()` — parker notify + async
-                // waker — even when the submitter observes `done` and
-                // drops its handle concurrently.
-                let signal = Arc::from_raw(root_signal);
-                signal.complete();
-                drop(signal);
-                // Root's stack is now empty; keep it as our current.
-                debug_assert!((*self.stack).is_empty());
-                Transfer::ToScheduler
-            }
+            FrameKind::Root => unreachable!("handled above"),
             FrameKind::Called => {
                 // Resolved at compile time in libfork; here the branch is
                 // predictable. Resume the caller directly.
@@ -390,25 +466,44 @@ impl Worker {
         }
     }
 
-    /// Take the spare stack or allocate a new one.
+    /// Take a quiesced stack: local free-list first (LIFO — warmest
+    /// first), then the shared shelf, then (pool-miss) the allocator.
     #[inline]
     pub(crate) fn fresh_stack(&mut self) -> *mut SegmentedStack {
-        if !self.spare.is_null() {
-            std::mem::replace(&mut self.spare, std::ptr::null_mut())
-        } else {
-            Box::into_raw(SegmentedStack::with_first_capacity(
-                self.shared.first_stacklet,
-            ))
+        let counters = self.shared.metrics.worker(self.id);
+        if let Some(s) = self.stacks.pop() {
+            counters.bump_stack_pool_hits();
+            return s;
         }
+        if let Some(s) = self.shared.shelf.pop() {
+            counters.bump_stack_pool_hits();
+            return s;
+        }
+        counters.bump_stack_pool_misses();
+        Box::into_raw(SegmentedStack::with_first_capacity(
+            self.shared.first_stacklet,
+        ))
     }
 
-    /// Cache (or free) an empty stack.
+    /// Recycle an empty stack: trim to its first stacklet and push onto
+    /// the local free-list; overflow drains to the shared shelf (which
+    /// frees past its own bound). Poisoned stacks are leaked — their
+    /// abandoned frames may still be referenced (defensive: the panic
+    /// path leaks before this can see one).
     #[inline]
     unsafe fn release_stack(&mut self, s: *mut SegmentedStack) {
-        if self.spare.is_null() {
-            self.spare = s;
+        // Poison check first: a poisoned stack still holds abandoned
+        // frames, so the emptiness assert below would abort (in debug)
+        // exactly where the defensive leak should run instead.
+        if (*s).is_poisoned() {
+            return;
+        }
+        debug_assert!((*s).is_empty(), "released stacks must be empty");
+        if self.stacks.len() < LOCAL_STACK_CAP {
+            (*s).trim();
+            self.stacks.push(s);
         } else {
-            drop(Box::from_raw(s));
+            self.shared.shelf.recycle(s);
         }
     }
 }
@@ -416,10 +511,15 @@ impl Worker {
 impl Drop for Worker {
     fn drop(&mut self) {
         unsafe {
-            debug_assert!((*self.stack).is_empty(), "worker exited with live frames");
-            drop(Box::from_raw(self.stack));
-            if !self.spare.is_null() {
-                drop(Box::from_raw(self.spare));
+            debug_assert!(
+                (*self.stack).is_empty() || (*self.stack).is_poisoned(),
+                "worker exited with live frames"
+            );
+            if !(*self.stack).is_poisoned() {
+                drop(Box::from_raw(self.stack));
+            }
+            for s in self.stacks.drain(..) {
+                drop(Box::from_raw(s));
             }
         }
     }

@@ -272,7 +272,9 @@ impl JobServerBuilder {
             .unwrap_or_else(|| NumaTopology::detect(crate::numa::available_cpus()));
         let nodes = topology.nodes().max(1);
         let shard_count = self.shards.unwrap_or(nodes).max(1);
-        let mut shards = Vec::with_capacity(shard_count);
+        // Plan every shard's shape first so the shared stack shelf can
+        // be sized to the whole server.
+        let mut plans = Vec::with_capacity(shard_count);
         for s in 0..shard_count {
             let node = s % nodes;
             let cores = topology.cores_in(node);
@@ -288,11 +290,22 @@ impl JobServerBuilder {
                 .or_else(|| cores.first())
                 .copied()
                 .unwrap_or(0);
+            plans.push((node, workers, pin_offset));
+        }
+        // One shelf for the whole server: quiesced root stacks recycle
+        // across shards and submitter threads. Sized so a full
+        // complement of in-flight jobs per worker can park stacks
+        // without overflow frees.
+        let total_workers: usize = plans.iter().map(|&(_, w, _)| w).sum();
+        let shelf = Arc::new(crate::stack::StackShelf::new((4 * total_workers).max(16)));
+        let mut shards = Vec::with_capacity(shard_count);
+        for (s, (node, workers, pin_offset)) in plans.into_iter().enumerate() {
             let pool = Pool::builder()
                 .workers(workers)
                 .scheduler(self.scheduler)
                 .seed(self.seed.wrapping_add(0x9E37 * (1 + s as u64)))
                 .pin_offset(pin_offset)
+                .stack_shelf(Arc::clone(&shelf))
                 // Within a shard the cores are one NUMA node: flat.
                 .topology(NumaTopology::flat(workers))
                 .build();

@@ -18,8 +18,10 @@
 //! ([`crate::rt`]), never concurrently. All operations here are therefore
 //! single-threaded and panic-free on the hot path.
 
+pub mod pool;
 pub mod stacklet;
 
+pub use pool::StackShelf;
 use stacklet::Stacklet;
 
 /// Frame alignment: every allocation is rounded up to this. 16 matches
@@ -64,6 +66,12 @@ pub struct SegmentedStack {
     peak_footprint: usize,
     /// Number of stacklet heap allocations performed over the lifetime.
     heap_allocs: u64,
+    /// Set when a workload panic unwound across live frames on this
+    /// stack. A poisoned stack must never be recycled: its frames were
+    /// abandoned mid-execution and may still be referenced (e.g. a fused
+    /// root block held by a submitter's handle), so the recycling layer
+    /// leaks it instead of reusing or freeing the memory.
+    poisoned: bool,
 }
 
 // Stacks move between workers (ownership handed over at steal/join
@@ -88,6 +96,7 @@ impl SegmentedStack {
             footprint,
             peak_footprint: footprint,
             heap_allocs: 1,
+            poisoned: false,
         })
     }
 
@@ -248,6 +257,40 @@ impl SegmentedStack {
         self.heap_allocs
     }
 
+    /// Trim an **empty** stack down to its first stacklet, freeing the
+    /// cached stacklet (and any others) above it. Called by the
+    /// recycling layer ([`StackShelf`], the per-worker stack pools) so a
+    /// shelved stack holds exactly one stacklet of the configured
+    /// first-stacklet capacity — excess capacity from a deep job decays
+    /// instead of accumulating across recycles. Since stacklets grow
+    /// geometrically, this is also where the `O(log2 n)` heap term of
+    /// Eq. (5) is returned to the allocator.
+    pub fn trim(&mut self) {
+        debug_assert!(self.is_empty(), "trim on a stack with live allocations");
+        unsafe {
+            debug_assert_eq!(self.top, self.first, "empty stack must sit on its first stacklet");
+            let mut cur = (*self.first).next;
+            (*self.first).next = std::ptr::null_mut();
+            while !cur.is_null() {
+                let next = (*cur).next;
+                self.footprint -= (*cur).total_size();
+                Stacklet::free(cur);
+                cur = next;
+            }
+        }
+    }
+
+    /// Mark this stack as panic-poisoned (see the `poisoned` field).
+    pub fn poison(&mut self) {
+        self.poisoned = true;
+    }
+
+    /// True when a workload panic abandoned frames on this stack.
+    #[inline]
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
     /// Number of stacklets currently linked (including the cached one).
     pub fn stacklet_count(&self) -> usize {
         let mut n = 0;
@@ -262,7 +305,10 @@ impl SegmentedStack {
 
 impl Drop for SegmentedStack {
     fn drop(&mut self) {
-        debug_assert!(self.is_empty(), "dropping a segmented stack with live allocations");
+        debug_assert!(
+            self.is_empty() || self.poisoned,
+            "dropping a segmented stack with live allocations"
+        );
         let mut cur = self.first;
         while !cur.is_null() {
             let next = unsafe { (*cur).next };
@@ -446,6 +492,39 @@ mod tests {
         for (p, sz) in ps.into_iter().rev() {
             s.dealloc(p, sz);
         }
+    }
+
+    #[test]
+    fn trim_returns_to_one_stacklet() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        let mut ps = Vec::new();
+        for _ in 0..200 {
+            ps.push((s.alloc(128), 128));
+        }
+        assert!(s.stacklet_count() > 1);
+        for (p, n) in ps.into_iter().rev() {
+            s.dealloc(p, n);
+        }
+        // Empty but still holding the cached stacklet.
+        assert!(s.is_empty());
+        s.trim();
+        assert_eq!(s.stacklet_count(), 1, "trim must leave exactly the first stacklet");
+        // Footprint is back to the first stacklet alone.
+        assert_eq!(s.footprint_bytes(), stacklet::METADATA_SIZE + 64);
+        // The trimmed stack is still fully usable.
+        let p = s.alloc(4096);
+        s.dealloc(p, 4096);
+        s.trim();
+        assert_eq!(s.stacklet_count(), 1);
+    }
+
+    #[test]
+    fn poison_flag_round_trip() {
+        let mut s = SegmentedStack::new();
+        assert!(!s.is_poisoned());
+        s.poison();
+        assert!(s.is_poisoned());
+        // A poisoned-but-empty stack may still be dropped.
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! The **stack shelf**: a shared recycling pool of quiesced segmented
+//! stacks.
+//!
+//! Eq. (5) amortizes stacklet heap traffic over the *lifetime of a
+//! stack* — but a job service creates one stack per root job, so without
+//! recycling the service pays `O(1)·T_heap` per **job** and the paper's
+//! memory result evaporates exactly where it matters. The shelf closes
+//! the loop: when a fused root block releases its last refcount half
+//! (see [`crate::rt::root`]), its stack is trimmed to one stacklet and
+//! shelved here; the next `Pool::new_root` pops it instead of touching
+//! the allocator. Because the shelf is shared (one per [`Pool`], or one
+//! per [`crate::service::JobServer`] spanning all its shards), stacks
+//! recycle across submitter threads and across shards.
+//!
+//! Invariants enforced at `recycle` time:
+//! * the stack is **empty** (`live == 0`) — it must have quiesced;
+//! * it is **trimmed** to its first stacklet (geometric excess freed);
+//! * **panic-poisoned** stacks are never shelved — they are leaked, as
+//!   their abandoned frames may still be referenced by join handles.
+//!
+//! The shelf is bounded: pushes beyond `capacity` free the stack
+//! (allocator traffic on overflow only, never on the steady-state path).
+//! The slot vector is pre-reserved at construction so `recycle` itself
+//! never allocates.
+//!
+//! [`Pool`]: crate::rt::pool::Pool
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::SegmentedStack;
+
+/// A shelved stack. Raw because `SegmentedStack` boxes move between
+/// threads through the shelf; exclusive ownership is re-established by
+/// `pop`.
+struct Shelved(*mut SegmentedStack);
+
+// Stacks on the shelf are quiesced and unaliased; the mutex serializes
+// hand-over.
+unsafe impl Send for Shelved {}
+
+/// Bounded LIFO shelf of recycled (empty, trimmed) segmented stacks.
+#[derive(Debug)]
+pub struct StackShelf {
+    slots: Mutex<Vec<Shelved>>,
+    capacity: usize,
+    /// Stacks accepted by [`Self::recycle`] over the lifetime.
+    recycled: AtomicU64,
+    /// Stacks freed (shelf full) or leaked (poisoned) instead of shelved.
+    dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for Shelved {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Shelved({:p})", self.0)
+    }
+}
+
+impl StackShelf {
+    /// A shelf holding at most `capacity` stacks.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        StackShelf {
+            slots: Mutex::new(Vec::with_capacity(capacity)),
+            capacity,
+            recycled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a recycled stack (LIFO — the hottest stack first).
+    pub fn pop(&self) -> Option<*mut SegmentedStack> {
+        self.slots.lock().unwrap().pop().map(|s| s.0)
+    }
+
+    /// Return a quiesced stack to the shelf: trim to the first stacklet
+    /// and push, or free it when the shelf is full. Poisoned stacks are
+    /// leaked — never reused, never freed (their abandoned frames may
+    /// still be referenced by outstanding handles).
+    ///
+    /// # Safety
+    /// The caller transfers exclusive ownership of `s`, which must have
+    /// been created by `SegmentedStack` boxing (`Box::into_raw`) and must
+    /// be empty unless poisoned.
+    pub unsafe fn recycle(&self, s: *mut SegmentedStack) {
+        if (*s).is_poisoned() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return; // leak: see the module docs
+        }
+        debug_assert!((*s).is_empty(), "recycled stacks must be empty");
+        (*s).trim();
+        let mut slots = self.slots.lock().unwrap();
+        if slots.len() < self.capacity {
+            slots.push(Shelved(s));
+            drop(slots);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            drop(slots);
+            drop(Box::from_raw(s));
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Stacks currently shelved.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when no stack is shelved.
+    pub fn is_empty(&self) -> bool {
+        self.slots.lock().unwrap().is_empty()
+    }
+
+    /// The shelf bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lifetime count of stacks accepted for reuse.
+    pub fn recycled_count(&self) -> u64 {
+        self.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of stacks rejected (overflow frees + poisoned
+    /// leaks).
+    pub fn dropped_count(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for StackShelf {
+    fn drop(&mut self) {
+        for s in self.slots.get_mut().unwrap().drain(..) {
+            unsafe { drop(Box::from_raw(s.0)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_empty_is_none() {
+        let shelf = StackShelf::new(4);
+        assert!(shelf.pop().is_none());
+        assert!(shelf.is_empty());
+    }
+
+    #[test]
+    fn recycle_trims_and_round_trips() {
+        let shelf = StackShelf::new(4);
+        let mut stack = SegmentedStack::with_first_capacity(64);
+        // Grow past the first stacklet, then quiesce.
+        let mut ps = Vec::new();
+        for _ in 0..100 {
+            ps.push((stack.alloc(128), 128));
+        }
+        for (p, n) in ps.into_iter().rev() {
+            stack.dealloc(p, n);
+        }
+        let raw = Box::into_raw(stack);
+        unsafe { shelf.recycle(raw) };
+        assert_eq!(shelf.len(), 1);
+        assert_eq!(shelf.recycled_count(), 1);
+        let back = shelf.pop().expect("shelved stack");
+        assert_eq!(back, raw, "LIFO shelf returns the recycled stack");
+        unsafe {
+            assert!((*back).is_empty(), "recycled stacks are empty");
+            assert_eq!((*back).stacklet_count(), 1, "recycled stacks are trimmed");
+            drop(Box::from_raw(back));
+        }
+    }
+
+    #[test]
+    fn overflow_frees_instead_of_shelving() {
+        let shelf = StackShelf::new(2);
+        for _ in 0..5 {
+            let s = Box::into_raw(SegmentedStack::with_first_capacity(64));
+            unsafe { shelf.recycle(s) };
+        }
+        assert_eq!(shelf.len(), 2);
+        assert_eq!(shelf.recycled_count(), 2);
+        assert_eq!(shelf.dropped_count(), 3);
+    }
+
+    #[test]
+    fn poisoned_stack_is_never_shelved() {
+        let shelf = StackShelf::new(4);
+        let mut stack = SegmentedStack::with_first_capacity(64);
+        stack.poison();
+        let raw = Box::into_raw(stack);
+        unsafe { shelf.recycle(raw) };
+        assert!(shelf.pop().is_none(), "poisoned stack must not be recycled");
+        assert_eq!(shelf.dropped_count(), 1);
+        // The shelf leaked it (on purpose); reclaim it here so the test
+        // itself stays leak-free — safe because this test still owns raw.
+        unsafe { drop(Box::from_raw(raw)) };
+    }
+
+    #[test]
+    fn cross_thread_recycling() {
+        let shelf = std::sync::Arc::new(StackShelf::new(16));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let shelf = std::sync::Arc::clone(&shelf);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let s = match shelf.pop() {
+                        Some(s) => s,
+                        None => Box::into_raw(SegmentedStack::with_first_capacity(64)),
+                    };
+                    unsafe {
+                        let p = (*s).alloc(64);
+                        (*s).dealloc(p, 64);
+                        shelf.recycle(s);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(shelf.len() <= 16);
+        assert!(shelf.recycled_count() > 0);
+    }
+}

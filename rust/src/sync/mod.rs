@@ -147,6 +147,50 @@ impl Default for Backoff {
     }
 }
 
+/// Bounded exponential **sleeping** backoff for coarse waits (pool
+/// shutdown joining stragglers, drain loops). Unlike [`Backoff`], which
+/// spins/yields for latency-critical steal loops, this one escalates
+/// from a few yields to real `thread::sleep`s with exponentially growing
+/// duration, capped — so a waiter never burns a core, and a lost-wakeup
+/// straggler costs at most one cap period per check.
+#[derive(Debug, Default)]
+pub struct SleepBackoff {
+    step: u32,
+}
+
+impl SleepBackoff {
+    /// Yields before the first sleep.
+    const YIELD_LIMIT: u32 = 4;
+    /// First sleep duration; doubles per step up to [`Self::MAX_EXP`].
+    const BASE_SLEEP_US: u64 = 50;
+    /// Cap: 50 µs << 7 = 6.4 ms per sleep.
+    const MAX_EXP: u32 = 7;
+
+    /// Fresh backoff (starts with yields).
+    pub fn new() -> Self {
+        SleepBackoff { step: 0 }
+    }
+
+    /// Wait a little, escalating: yield × 4, then sleep 50 µs, 100 µs, …
+    /// capped at 6.4 ms.
+    pub fn snooze(&mut self) {
+        if self.step < Self::YIELD_LIMIT {
+            std::thread::yield_now();
+        } else {
+            let exp = (self.step - Self::YIELD_LIMIT).min(Self::MAX_EXP);
+            std::thread::sleep(std::time::Duration::from_micros(
+                Self::BASE_SLEEP_US << exp,
+            ));
+        }
+        self.step = self.step.saturating_add(1);
+    }
+
+    /// True once the backoff has reached its sleep cap.
+    pub fn is_capped(&self) -> bool {
+        self.step >= Self::YIELD_LIMIT + Self::MAX_EXP
+    }
+}
+
 /// A monotonically increasing id source for workers / stacks / frames.
 #[derive(Debug, Default)]
 pub struct IdSource {
@@ -222,6 +266,30 @@ mod tests {
         assert!(b.is_completed());
         b.reset();
         assert!(!b.is_completed());
+    }
+
+    #[test]
+    fn sleep_backoff_caps() {
+        let mut b = SleepBackoff::new();
+        assert!(!b.is_capped());
+        // Yields first (cheap), then sleeps; cap reached after
+        // YIELD_LIMIT + MAX_EXP snoozes.
+        for _ in 0..4 {
+            b.snooze(); // yields, no measurable delay
+        }
+        assert!(!b.is_capped());
+        for _ in 0..7 {
+            b.snooze();
+        }
+        assert!(b.is_capped());
+        // A capped snooze sleeps ~6.4 ms — bounded, not unbounded growth.
+        let before = std::time::Instant::now();
+        b.snooze();
+        let took = before.elapsed();
+        assert!(
+            took < std::time::Duration::from_millis(500),
+            "capped snooze took {took:?}"
+        );
     }
 
     #[test]

@@ -154,7 +154,8 @@ impl<'w> Cx<'w> {
                     kind: kind_frame,
                     steals: 0,
                     join: JoinCounter::new(),
-                    root_signal: std::ptr::null(),
+                    root_hot: std::ptr::null(),
+                    qnext: std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()),
                 },
                 out: slot,
                 task: child,

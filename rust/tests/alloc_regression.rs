@@ -1,0 +1,86 @@
+//! Steady-state **allocs/job == 0** regression test (ISSUE 2 acceptance
+//! criterion), asserted with [`rustfork::mem::alloc_count`] deltas from
+//! the crate's counting global allocator.
+//!
+//! Once the recycling layer is warm, a submit→execute→complete→join
+//! cycle must not touch the heap:
+//!
+//! * `Pool::new_root` pops a recycled stack from the shelf and
+//!   placement-allocates the fused root block on it (no stack box, no
+//!   stacklet, no `Arc`, no result box);
+//! * the intrusive submission queue links through `FrameHeader::qnext`
+//!   (no MPSC node);
+//! * task frames bump-allocate on segmented stacks;
+//! * at completion the worker detaches onto a pooled stack and the last
+//!   refcount release recycles the job's stack back to the shelf.
+//!
+//! This file holds a single `#[test]` so no sibling test thread pollutes
+//! the process-global allocation counter. The CI allocation-regression
+//! job runs it under `--release`; it passes in debug builds too (the
+//! paths are identical), which `cargo test -q` covers.
+
+use rustfork::mem::alloc_count;
+use rustfork::numa::NumaTopology;
+use rustfork::rt::Pool;
+use rustfork::service::JobServer;
+use rustfork::workloads::fib::{fib_exact, Fib};
+
+/// Drive `jobs` sequential fib jobs and return the allocation-event
+/// delta across the window. `fib(10)` forks ~88 tasks per job — enough
+/// to exercise fork/join and (multi-worker) steal paths.
+fn window<F: FnMut(u64) -> u64>(jobs: u64, submit_join: &mut F) -> usize {
+    let before = alloc_count();
+    for seed in 0..jobs {
+        assert_eq!(submit_join(seed), fib_exact(10), "job {seed} wrong result");
+    }
+    alloc_count() - before
+}
+
+/// Warm the scenario, then require a 100-job window with **zero**
+/// allocation events within a few attempts. The retry absorbs the two
+/// benign non-determinisms that can grow the stack high-water mark just
+/// after warmup: steal timing (multi-worker), and a job's dispose
+/// lagging its join (the next submit then cold-misses once and the extra
+/// stack is banked on the shelf — self-correcting).
+fn assert_reaches_zero<F: FnMut(u64) -> u64>(label: &str, warmup: u64, mut submit: F) {
+    for seed in 0..warmup {
+        assert_eq!(submit(seed), fib_exact(10), "{label}: warmup job {seed}");
+    }
+    let mut last = usize::MAX;
+    for _attempt in 0..5 {
+        last = window(100, &mut submit);
+        if last == 0 {
+            return;
+        }
+    }
+    panic!("{label}: never reached a zero-allocation window (last: {last} allocs / 100 jobs)");
+}
+
+#[test]
+fn steady_state_is_allocation_free() {
+    // 1 worker: near-deterministic — the first window is almost always
+    // already zero.
+    {
+        let pool = Pool::builder().workers(1).build();
+        assert_reaches_zero("single-worker pool", 64, |_| pool.run(Fib::new(10)));
+    }
+
+    // Multi-worker pool: steal paths (thief-side fresh_stack, victim
+    // release) must also be served by the recycling layer.
+    {
+        let pool = Pool::builder().workers(4).build();
+        assert_reaches_zero("4-worker pool", 256, |_| pool.run(Fib::new(10)));
+    }
+
+    // Sharded job server: the submit→join path through admission,
+    // placement and the shared shelf must also quiesce to zero.
+    {
+        let server = JobServer::builder()
+            .topology(NumaTopology::synthetic(2, 2))
+            .shards(2)
+            .workers_per_shard(2)
+            .capacity(64)
+            .build();
+        assert_reaches_zero("job server", 256, |_| server.submit(Fib::new(10)).join());
+    }
+}

@@ -1,0 +1,215 @@
+//! Stack-recycling invariants (ISSUE 2 satellite): recycled stacks are
+//! empty and trimmed to one stacklet, poisoned stacks are never
+//! recycled, the shelf round-trips across pools/shards, and a workload
+//! panic is contained — the affected job is abandoned but the pool (and
+//! every other job) keeps running.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rustfork::numa::NumaTopology;
+use rustfork::rt::Pool;
+use rustfork::service::{jobs::MixedJob, JobServer};
+use rustfork::stack::{SegmentedStack, StackShelf};
+use rustfork::task::FnTask;
+use rustfork::workloads::fib::{fib_exact, Fib};
+
+#[test]
+fn recycled_stacks_are_empty_and_trimmed() {
+    let shelf = StackShelf::new(8);
+    // Grow a stack well past its first stacklet, quiesce, recycle.
+    let mut s = SegmentedStack::with_first_capacity(128);
+    let mut live = Vec::new();
+    for _ in 0..64 {
+        live.push((s.alloc(256), 256));
+    }
+    assert!(s.stacklet_count() > 1, "test must actually grow the stack");
+    for (p, n) in live.into_iter().rev() {
+        s.dealloc(p, n);
+    }
+    unsafe { shelf.recycle(Box::into_raw(s)) };
+    let back = shelf.pop().expect("recycled stack");
+    unsafe {
+        assert!((*back).is_empty(), "recycled stacks must have live == 0");
+        assert_eq!((*back).stacklet_count(), 1, "recycled stacks must be trimmed");
+        drop(Box::from_raw(back));
+    }
+}
+
+#[test]
+fn poisoned_stack_never_recycled() {
+    let shelf = StackShelf::new(8);
+    let mut s = SegmentedStack::with_first_capacity(128);
+    s.poison();
+    let raw = Box::into_raw(s);
+    unsafe { shelf.recycle(raw) };
+    assert_eq!(shelf.len(), 0, "poisoned stack must not reach the shelf");
+    assert_eq!(shelf.dropped_count(), 1);
+    // recycle() leaked it deliberately; this test still owns raw.
+    unsafe { drop(Box::from_raw(raw)) };
+}
+
+#[test]
+fn pool_recycles_root_stacks_through_shelf() {
+    let pool = Pool::builder().workers(1).build();
+    // Sequential jobs: after the first completes, every subsequent
+    // submission should find a recycled stack on the shelf.
+    for _ in 0..32 {
+        assert_eq!(pool.run(Fib::new(10)), fib_exact(10));
+    }
+    let m = pool.metrics();
+    assert_eq!(m.root_blocks_fused, 32, "every root uses a fused block");
+    // Each job makes two stack requests (submission side + the worker's
+    // detach at root completion) = 64 total. Only the cold start — and
+    // the rare race where a submit lands before the previous job's last
+    // refcount half released — may miss.
+    assert!(
+        m.stack_pool_hits >= 48,
+        "sequential jobs must recycle stacks: {m:?}"
+    );
+    assert!(
+        m.stack_pool_misses <= 8,
+        "steady sequential traffic must not churn the allocator: {m:?}"
+    );
+}
+
+#[test]
+fn shelf_recycles_across_shards() {
+    // A 2-shard server shares one shelf; drive both shards and verify
+    // the recycling layer served most submissions.
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 2))
+        .shards(2)
+        .workers_per_shard(2)
+        .capacity(64)
+        .build();
+    for round in 0..8 {
+        let handles = server.submit_batch((0..16).map(MixedJob::from_seed).collect());
+        for (seed, h) in (0..16).zip(handles) {
+            assert_eq!(h.join(), MixedJob::expected(seed), "round {round}");
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.root_blocks_fused, 8 * 16);
+    assert!(
+        m.stack_pool_hits > m.stack_pool_misses,
+        "recycling must dominate once warm: {m:?}"
+    );
+}
+
+/// A forked leaf that panics before its final return — so the parent's
+/// continuation entry is still sitting, unconsumed, in the worker's
+/// deque when the panic unwinds (the hot-path pop never happens).
+struct PanicChild;
+impl rustfork::task::Coroutine for PanicChild {
+    type Output = u64;
+    fn step(&mut self, _cx: &mut rustfork::task::Cx<'_>) -> rustfork::task::Step<u64> {
+        panic!("child panics inside an open fork-join scope")
+    }
+}
+
+/// Root that forks [`PanicChild`] — its own continuation becomes the
+/// stale deque entry the panic path must drain (invariant 2).
+struct ScopeWithPanickingChild {
+    state: u8,
+    slot: u64,
+}
+impl rustfork::task::Coroutine for ScopeWithPanickingChild {
+    type Output = u64;
+    fn step(&mut self, cx: &mut rustfork::task::Cx<'_>) -> rustfork::task::Step<u64> {
+        match self.state {
+            0 => {
+                self.state = 1;
+                cx.fork(&mut self.slot, PanicChild);
+                rustfork::task::Step::Dispatch
+            }
+            1 => {
+                self.state = 2;
+                rustfork::task::Step::Join
+            }
+            _ => rustfork::task::Step::Return(self.slot),
+        }
+    }
+}
+
+#[test]
+fn workload_panic_is_contained() {
+    // Suppress the panic backtrace spew from the worker threads. Both
+    // panic scenarios share this one test so the hook swap cannot race
+    // a sibling test.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+
+    // Scenario 1: a leaf root panics (no fork-join scope open). The job
+    // is abandoned: join() must panic (not hang), drop must return.
+    {
+        let pool = Pool::builder().workers(1).build();
+        let h = pool.submit(FnTask::new(|| -> u64 { panic!("workload bug") }));
+        let joined =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || h.join()));
+        assert!(joined.is_err(), "join on a panicked job must panic, not hang");
+        // Drop-without-join on an abandoned job must return promptly.
+        let h2 = pool.submit(FnTask::new(|| -> u64 { panic!("again") }));
+        drop(h2);
+        // The pool must keep serving other jobs on a fresh stack.
+        for n in [8u64, 12, 16] {
+            assert_eq!(pool.run(Fib::new(n)), fib_exact(n), "pool dead after panic");
+        }
+        let m = pool.metrics();
+        assert_eq!(m.stacks_poisoned, 2, "each panic must poison exactly one stack");
+    }
+
+    // Scenario 2: a forked child panics while its parent's continuation
+    // may still be in the worker's deque. The panic path must drain such
+    // stale entries — otherwise, once a thief consumes a later job's
+    // entry, that job's hot-path pop would receive the abandoned parent
+    // (invariant 2 violation: wrong resume + a lost join signal). Two
+    // workers + fork-heavy follow-up traffic exercise exactly that
+    // steal/pop mix; in debug builds a surviving stale entry also trips
+    // the `debug_assert_eq!(p, parent)` in the final awaitable.
+    {
+        let pool = Pool::builder().workers(2).build();
+        let h = pool.submit(ScopeWithPanickingChild { state: 0, slot: 0 });
+        let joined =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || h.join()));
+        assert!(joined.is_err(), "fork-scope panic must abandon the root");
+        for round in 0..32 {
+            assert_eq!(
+                pool.run(Fib::new(12)),
+                fib_exact(12),
+                "round {round}: stale deque entry corrupted a later job"
+            );
+        }
+        let m = pool.metrics();
+        assert_eq!(m.stacks_poisoned, 1, "fork-scope panic must poison one stack");
+    }
+
+    std::panic::set_hook(prev_hook);
+}
+
+#[test]
+fn handle_drop_without_join_recycles() {
+    // Dropping an un-joined handle must wait for completion, drop the
+    // result in place and release the handle's refcount half — after
+    // which the job's stack recycles like any other.
+    struct CountsDrops(Arc<AtomicU64>);
+    impl Drop for CountsDrops {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    let drops = Arc::new(AtomicU64::new(0));
+    let pool = Pool::builder().workers(2).build();
+    for _ in 0..16 {
+        let d = Arc::clone(&drops);
+        let h = pool.submit(FnTask::new(move || CountsDrops(d)));
+        drop(h); // never joined
+    }
+    assert_eq!(drops.load(Ordering::SeqCst), 16, "results must be dropped in place");
+    // The dropped-handle path must recycle too: later jobs hit the pool.
+    for _ in 0..8 {
+        assert_eq!(pool.run(Fib::new(8)), fib_exact(8));
+    }
+    let m = pool.metrics();
+    assert!(m.stack_pool_hits > 0, "drop-without-join path must recycle: {m:?}");
+}
