@@ -5,7 +5,11 @@
 //! * per-job `submit` vs batched `submit_batch` (the wake-sweep and
 //!   MPSC tail-exchange amortization),
 //! * round-robin vs least-loaded placement,
-//! * busy vs lazy sub-pool schedulers.
+//! * busy vs lazy sub-pool schedulers,
+//! * **skewed placement** (every job pinned to shard 0, a 256-job
+//!   window in flight) with cross-shard migration disabled vs enabled —
+//!   the overflow-spout layer should recover most of the idle shard's
+//!   throughput (target: ≥1.5x jobs/sec) while keeping allocs/job at 0.
 //!
 //! Reported per configuration: jobs/sec, closed-loop p50/p99 job
 //! latency, warm steady-state heap allocations per job (should be 0 —
@@ -39,6 +43,15 @@ fn main() {
             c.p99_us,
             c.allocs_per_job,
             rustfork::harness::fmt_bytes(c.peak_bytes),
+        );
+    }
+    let off = report.configs.iter().find(|c| c.name.contains("no migration"));
+    let on = report.configs.iter().find(|c| c.name.contains("+ migration"));
+    if let (Some(off), Some(on)) = (off, on) {
+        println!(
+            "# skewed-placement migration speedup: {:.2}x ({} jobs migrated, target >= 1.5x)",
+            on.jobs_per_sec / off.jobs_per_sec.max(1e-9),
+            on.jobs_migrated,
         );
     }
 }

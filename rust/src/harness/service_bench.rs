@@ -19,7 +19,9 @@
 use crate::mem::MemScope;
 use crate::numa::NumaTopology;
 use crate::sched::SchedulerKind;
-use crate::service::{jobs::MixedJob, JobServer, LeastLoaded, PlacementPolicy, RoundRobin};
+use crate::service::{
+    jobs::MixedJob, JobServer, LeastLoaded, PinnedShard, PlacementPolicy, RoundRobin,
+};
 
 /// Knobs for one bench invocation (env-overridable through
 /// [`BenchOptions::from_env`]).
@@ -75,6 +77,11 @@ pub struct ConfigReport {
     pub allocs_per_job: f64,
     /// Peak heap bytes above baseline during the throughput run.
     pub peak_bytes: usize,
+    /// Whether cross-shard migration was enabled.
+    pub migration: bool,
+    /// Jobs claimed by a non-home shard over the whole configuration
+    /// run (the migration traffic behind any skewed-placement win).
+    pub jobs_migrated: u64,
 }
 
 /// The whole bench run.
@@ -110,6 +117,30 @@ pub fn drive(server: &JobServer, jobs: u64, batch: usize) -> u64 {
     failures
 }
 
+/// Open-window driver: keep `window` jobs in flight through per-job
+/// `submit`, join the window, repeat. Unlike the closed loop of
+/// [`drive`] with `batch == 1`, this sustains real concurrency on the
+/// server — required for the skewed-placement configurations, where
+/// migration only has something to move while a shard is saturated.
+/// The handle buffer is pre-reserved, so the steady-state path stays
+/// allocation-free. Returns the number of result mismatches.
+pub fn drive_windowed(server: &JobServer, jobs: u64, window: usize) -> u64 {
+    let mut failures = 0;
+    let mut handles = Vec::with_capacity(window.max(1));
+    let mut seed = 0u64;
+    while seed < jobs {
+        let wave = (window.max(1) as u64).min(jobs - seed);
+        for s in seed..seed + wave {
+            handles.push((s, server.submit(MixedJob::from_seed(s))));
+        }
+        for (s, h) in handles.drain(..) {
+            failures += u64::from(h.join() != MixedJob::expected(s));
+        }
+        seed += wave;
+    }
+    failures
+}
+
 /// Value at quantile `q` (0..=1) of an ascending-sorted sample, with
 /// linear interpolation.
 fn percentile(sorted: &[f64], q: f64) -> f64 {
@@ -126,12 +157,47 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-fn build_server(opts: &BenchOptions, sched: SchedulerKind, least: bool) -> JobServer {
-    let policy: Box<dyn PlacementPolicy> = if least {
-        Box::new(LeastLoaded)
-    } else {
-        Box::new(RoundRobin::new())
-    };
+/// Placement flavour of one bench configuration.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum PolicyKind {
+    RoundRobin,
+    LeastLoaded,
+    /// All jobs pinned to shard 0 — the skewed-placement scenario the
+    /// migration layer exists for.
+    Pinned0,
+}
+
+impl PolicyKind {
+    fn name(self) -> &'static str {
+        match self {
+            PolicyKind::RoundRobin => "round-robin",
+            PolicyKind::LeastLoaded => "least-loaded",
+            PolicyKind::Pinned0 => "pinned",
+        }
+    }
+
+    fn boxed(self) -> Box<dyn PlacementPolicy> {
+        match self {
+            PolicyKind::RoundRobin => Box::new(RoundRobin::new()),
+            PolicyKind::LeastLoaded => Box::new(LeastLoaded),
+            PolicyKind::Pinned0 => Box::new(PinnedShard(0)),
+        }
+    }
+}
+
+/// One row of the configuration matrix.
+struct BenchConfig {
+    label: &'static str,
+    sched: SchedulerKind,
+    policy: PolicyKind,
+    /// Batch size for the batched driver (ignored when `window` set).
+    batch: usize,
+    /// `Some(w)`: open-window driver with `w` in-flight jobs.
+    window: Option<usize>,
+    migration: bool,
+}
+
+fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
     // 2 shards on a synthetic 2-node machine: placement + sharding
     // active even on UMA hosts.
     let per_shard = (opts.workers / 2).max(1);
@@ -140,51 +206,133 @@ fn build_server(opts: &BenchOptions, sched: SchedulerKind, least: bool) -> JobSe
         .shards(2)
         .workers_per_shard(per_shard)
         .capacity(1024)
-        .scheduler(sched)
-        .policy_boxed(policy)
+        .scheduler(cfg.sched)
+        .policy_boxed(cfg.policy.boxed())
+        .migration(cfg.migration)
+        // Skewed configurations should demonstrate migration promptly.
+        .migration_hysteresis(if cfg.policy == PolicyKind::Pinned0 {
+            2
+        } else {
+            crate::service::DEFAULT_MIGRATION_HYSTERESIS
+        })
         .build()
 }
 
+/// In-flight window for the skewed-placement configurations.
+const SKEW_WINDOW: usize = 256;
+
 /// Run the full configuration matrix and report.
 pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
-    let configs: Vec<(&'static str, SchedulerKind, bool, usize)> = vec![
-        ("lazy + rr, per-job submit", SchedulerKind::Lazy, false, 1),
-        ("lazy + rr, batched", SchedulerKind::Lazy, false, opts.batch),
-        ("lazy + least-loaded, batched", SchedulerKind::Lazy, true, opts.batch),
-        ("busy + rr, batched", SchedulerKind::Busy, false, opts.batch),
+    let configs: Vec<BenchConfig> = vec![
+        BenchConfig {
+            label: "lazy + rr, per-job submit",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::RoundRobin,
+            batch: 1,
+            window: None,
+            migration: true,
+        },
+        BenchConfig {
+            label: "lazy + rr, batched",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::RoundRobin,
+            batch: opts.batch,
+            window: None,
+            migration: true,
+        },
+        BenchConfig {
+            label: "lazy + least-loaded, batched",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::LeastLoaded,
+            batch: opts.batch,
+            window: None,
+            migration: true,
+        },
+        BenchConfig {
+            label: "busy + rr, batched",
+            sched: SchedulerKind::Busy,
+            policy: PolicyKind::RoundRobin,
+            batch: opts.batch,
+            window: None,
+            migration: true,
+        },
+        // The skewed pair: identical traffic (everything placed on
+        // shard 0, SKEW_WINDOW jobs in flight), migration off vs on —
+        // the headline comparison for the cross-shard spouts.
+        BenchConfig {
+            label: "skewed shard0, no migration",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::Pinned0,
+            batch: 1,
+            window: Some(SKEW_WINDOW),
+            migration: false,
+        },
+        BenchConfig {
+            label: "skewed shard0 + migration",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::Pinned0,
+            batch: 1,
+            window: Some(SKEW_WINDOW),
+            migration: true,
+        },
     ];
     let mut out = Vec::new();
-    for (label, sched, least, batch) in configs {
-        let server = build_server(opts, sched, least);
-        let scheduler = match sched {
+    for cfg in &configs {
+        let label = cfg.label;
+        let server = build_server(opts, cfg);
+        let scheduler = match cfg.sched {
             SchedulerKind::Busy => "busy",
             SchedulerKind::Lazy => "lazy",
         };
-        let policy = if least { "least-loaded" } else { "round-robin" };
+        let policy = cfg.policy.name();
 
         // Throughput (median over reps) + peak memory, warmup included
         // in measure()'s first call.
         let scope = MemScope::begin();
         let m = super::measure(opts.reps, 0.2, || {
-            let failures = drive(&server, opts.jobs, batch);
+            let failures = match cfg.window {
+                Some(w) => drive_windowed(&server, opts.jobs, w),
+                None => drive(&server, opts.jobs, cfg.batch),
+            };
             assert_eq!(failures, 0, "result mismatches under {label}");
         });
         let peak_bytes = scope.peak_bytes();
 
-        // Closed-loop latency + steady-state allocs/job, measured on the
-        // submission path this configuration actually uses: per-job
-        // configs drive `submit` (the zero-alloc steady state); batched
+        // Latency + steady-state allocs/job, measured on the submission
+        // path this configuration actually uses: per-job configs drive
+        // `submit` closed-loop (the zero-alloc steady state); batched
         // configs drive `submit_batch` in waves, so their allocs/job
         // honestly include the batch path's bookkeeping (handle vectors,
         // per-wave grouping) and a job's latency runs from its wave's
-        // submission to its own join. The throughput run above warmed
-        // every pool (stack shelves, deque buffers). Latencies in µs.
+        // submission to its own join; windowed (skewed) configs measure
+        // each job from its own submit to its own join with the window
+        // in flight — and with all buffers pre-reserved, so the alloc
+        // figure isolates the migration machinery (spout push, claim,
+        // cross-shard execute), which must stay at 0. The throughput
+        // run above warmed every pool. Latencies in µs.
         let mut lat = Vec::with_capacity(opts.latency_jobs as usize);
+        let mut window_buf: Vec<(u64, std::time::Instant, crate::rt::pool::RootHandle<u64>)> =
+            Vec::with_capacity(cfg.window.unwrap_or(0));
         let alloc_before = crate::mem::alloc_count();
         let mut seed = 0u64;
         while seed < opts.latency_jobs {
-            if batch > 1 {
-                let wave = batch.min((opts.latency_jobs - seed) as usize) as u64;
+            if let Some(w) = cfg.window {
+                let wave = (w as u64).min(opts.latency_jobs - seed);
+                for s in seed..seed + wave {
+                    window_buf.push((
+                        s,
+                        std::time::Instant::now(),
+                        server.submit(MixedJob::from_seed(s)),
+                    ));
+                }
+                for (s, t0, h) in window_buf.drain(..) {
+                    let got = h.join();
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(got, MixedJob::expected(s), "latency pass mismatch");
+                }
+                seed += wave;
+            } else if cfg.batch > 1 {
+                let wave = cfg.batch.min((opts.latency_jobs - seed) as usize) as u64;
                 let t0 = std::time::Instant::now();
                 let handles = server
                     .submit_batch((seed..seed + wave).map(MixedJob::from_seed).collect());
@@ -211,12 +359,14 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             name: label.to_string(),
             scheduler,
             policy,
-            batch,
+            batch: cfg.window.map_or(cfg.batch, |_| 1),
             jobs_per_sec: opts.jobs as f64 / m.secs,
             p50_us: percentile(&lat, 0.50),
             p99_us: percentile(&lat, 0.99),
             allocs_per_job,
             peak_bytes,
+            migration: server.migration_enabled(),
+            jobs_migrated: server.metrics().jobs_migrated,
         });
     }
     ServiceBenchReport { jobs: opts.jobs, workers: opts.workers, configs: out }
@@ -249,6 +399,8 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
         s.push_str(&format!("      \"scheduler\": \"{}\",\n", c.scheduler));
         s.push_str(&format!("      \"policy\": \"{}\",\n", c.policy));
         s.push_str(&format!("      \"batch\": {},\n", c.batch));
+        s.push_str(&format!("      \"migration\": {},\n", c.migration));
+        s.push_str(&format!("      \"jobs_migrated\": {},\n", c.jobs_migrated));
         s.push_str(&format!("      \"jobs_per_sec\": {:.1},\n", c.jobs_per_sec));
         s.push_str(&format!("      \"p50_us\": {:.2},\n", c.p50_us));
         s.push_str(&format!("      \"p99_us\": {:.2},\n", c.p99_us));
@@ -285,14 +437,20 @@ mod tests {
             latency_jobs: 10,
         };
         let report = run(&opts);
-        assert_eq!(report.configs.len(), 4);
+        assert_eq!(report.configs.len(), 6);
         for c in &report.configs {
             assert!(c.jobs_per_sec > 0.0, "{}: zero throughput", c.name);
             assert!(c.p99_us >= c.p50_us, "{}: p99 < p50", c.name);
         }
+        // The skewed pair must exist with migration off/on respectively.
+        let off = report.configs.iter().find(|c| c.name.contains("no migration"));
+        let on = report.configs.iter().find(|c| c.name.contains("+ migration"));
+        assert!(off.is_some_and(|c| !c.migration));
+        assert!(on.is_some_and(|c| c.migration));
         let json = to_json(&report, true);
         assert!(json.contains("\"bench\": \"service\""));
         assert!(json.contains("\"allocs_per_job\""));
+        assert!(json.contains("\"jobs_migrated\""));
         // Balanced braces/brackets as a cheap well-formedness check.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());

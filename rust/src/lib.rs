@@ -35,8 +35,9 @@
 //!   (`pjrt` feature; requires vendored xla bindings).
 //! * [`service`] — the **job-service layer**: an asynchronous, batched,
 //!   NUMA-sharded [`service::JobServer`] over the pool, with pluggable
-//!   placement (round-robin / least-loaded) and bounded-admission
-//!   backpressure.
+//!   placement (round-robin / least-loaded / pinned), bounded-admission
+//!   backpressure, and **cross-shard work migration** (hysteresis-gated
+//!   overflow spouts claimed by starved shards in NUMA victim order).
 //!
 //! ## Quickstart
 //!
@@ -126,6 +127,42 @@
 //!     assert_eq!(h.join(), MixedJob::expected(seed));
 //! }
 //! ```
+//!
+//! ### Cross-shard migration
+//!
+//! Shards are NUMA-local sub-pools, so intra-job steals never cross a
+//! node — but a skewed placement stream could saturate one shard while
+//! another idles. The migration layer (on by default for multi-shard
+//! servers) keeps the shards' isolation for the common case and opens a
+//! relief valve under **sustained** imbalance: when a placement's shard
+//! exceeds the emptiest shard's in-flight count by the hysteresis
+//! margin ([`service::JobServerBuilder::migration_hysteresis`]) for
+//! several consecutive placements, the job is parked in the shard's
+//! bounded **overflow spout** — an intrusive MPSC linking root frames
+//! through `FrameHeader::qnext`, so diversion performs zero heap
+//! allocations. Idle workers poll the spouts *before parking*, their
+//! own shard's first, then siblings nearest-first per
+//! [`numa::NumaTopology::node_distance`] (the paper's hierarchical
+//! NUMA-aware stealing, lifted from cores to shards). `jobs_migrated`
+//! and `migration_misses` in [`metrics::MetricsSnapshot`] expose the
+//! traffic; the skewed-placement configurations of `benches/service.rs`
+//! measure the throughput recovery, with allocs/job still 0.
+//!
+//! ## Panic containment
+//!
+//! A panic unwinding out of a workload's `step` never kills a worker: a
+//! panicking strand's stack is poisoned and **quarantined** (reclaimed
+//! when the pool's stack shelf drops — no permanent leak), its stale
+//! deque entries are drained, and its job's **root** — found by walking
+//! the panicked frame's parent chain, so this works for both
+//! submission- and steal-originated strands, even when the root lives
+//! on a remote victim's stack — is **abandoned** exactly once: the
+//! handle unblocks and panics on `join`/`poll` (like joining a panicked
+//! `std::thread`) instead of hanging, and drop releases silently. Pools
+//! can attach an abandonment hook
+//! ([`rt::pool::PoolBuilder::abandon_hook`]); the job server uses it to
+//! release the panicked job's admission slot and per-shard load charge,
+//! so capacity is never leaked by failing jobs.
 
 pub mod algo;
 pub mod analysis;

@@ -35,8 +35,18 @@ pub struct WorkerCounters {
     pub stack_pool_hits: AtomicU64,
     /// `fresh_stack` requests that had to heap-allocate a stack.
     pub stack_pool_misses: AtomicU64,
-    /// Stacks poisoned (and leaked) by workload panics.
+    /// Stacks poisoned (and quarantined) by workload panics.
     pub stacks_poisoned: AtomicU64,
+    /// Root jobs this worker claimed from **another shard's** overflow
+    /// spout (cross-shard work migration; see `service::JobServer`).
+    /// Claims from the worker's own shard's spout are not migrations
+    /// and are not counted.
+    pub jobs_migrated: AtomicU64,
+    /// Spout polls that observed divertible work but failed to claim it
+    /// (consumer lock contended, or a producer's push was still in
+    /// flight). A high miss:migration ratio means thieves are fighting
+    /// over a trickle of diverted work.
+    pub migration_misses: AtomicU64,
 }
 
 macro_rules! bump {
@@ -65,6 +75,8 @@ impl WorkerCounters {
         bump_stack_pool_hits => stack_pool_hits,
         bump_stack_pool_misses => stack_pool_misses,
         bump_stacks_poisoned => stacks_poisoned,
+        bump_jobs_migrated => jobs_migrated,
+        bump_migration_misses => migration_misses,
     }
 }
 
@@ -87,8 +99,18 @@ pub struct MetricsSnapshot {
     pub stack_pool_misses: u64,
     /// Fused root blocks created (== roots submitted; pool-level).
     pub root_blocks_fused: u64,
-    /// Stacks poisoned and leaked by workload panics.
+    /// Stacks poisoned by workload panics (quarantined on the shelf's
+    /// poison bin, reclaimed when the last pool/handle releases it).
     pub stacks_poisoned: u64,
+    /// Root jobs executed by a shard other than the one they were
+    /// placed on (claimed from a sibling shard's overflow spout). At
+    /// quiescence every migrated entry was executed exactly once: it is
+    /// counted here by the claiming worker and in `roots` by the same
+    /// strand's completion.
+    pub jobs_migrated: u64,
+    /// Spout polls that saw divertible work but lost the claim race
+    /// (see `WorkerCounters::migration_misses`).
+    pub migration_misses: u64,
 }
 
 impl MetricsSnapshot {
@@ -113,6 +135,8 @@ impl MetricsSnapshot {
         self.stack_pool_misses += other.stack_pool_misses;
         self.root_blocks_fused += other.root_blocks_fused;
         self.stacks_poisoned += other.stacks_poisoned;
+        self.jobs_migrated += other.jobs_migrated;
+        self.migration_misses += other.migration_misses;
     }
 
     /// Difference against an earlier snapshot.
@@ -131,6 +155,8 @@ impl MetricsSnapshot {
             stack_pool_misses: self.stack_pool_misses - earlier.stack_pool_misses,
             root_blocks_fused: self.root_blocks_fused - earlier.root_blocks_fused,
             stacks_poisoned: self.stacks_poisoned - earlier.stacks_poisoned,
+            jobs_migrated: self.jobs_migrated - earlier.jobs_migrated,
+            migration_misses: self.migration_misses - earlier.migration_misses,
         }
     }
 }
@@ -173,6 +199,8 @@ impl Metrics {
             s.stack_pool_hits += w.stack_pool_hits.load(Ordering::Relaxed);
             s.stack_pool_misses += w.stack_pool_misses.load(Ordering::Relaxed);
             s.stacks_poisoned += w.stacks_poisoned.load(Ordering::Relaxed);
+            s.jobs_migrated += w.jobs_migrated.load(Ordering::Relaxed);
+            s.migration_misses += w.migration_misses.load(Ordering::Relaxed);
         }
         s
     }

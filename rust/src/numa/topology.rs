@@ -134,6 +134,29 @@ impl NumaTopology {
         }
     }
 
+    /// Topological distance between two NUMA **nodes** (the
+    /// machine→node→core tree of [`Self::distance`] viewed one level
+    /// up): 0 within a node, 2 across nodes. Drives the hierarchical
+    /// victim order of cross-shard work migration
+    /// ([`crate::service::JobServer`]): shards on the same node are
+    /// polled before remote ones, mirroring Eq. (6)'s locality bias.
+    pub fn node_distance(&self, a: usize, b: usize) -> u32 {
+        if a == b {
+            0
+        } else {
+            2
+        }
+    }
+
+    /// Full node×node distance matrix (row `a`, column `b` =
+    /// [`Self::node_distance`]`(a, b)`). Consumed by the shard-migration
+    /// layer to precompute per-shard victim orders.
+    pub fn node_distance_matrix(&self) -> Vec<Vec<u32>> {
+        (0..self.nodes)
+            .map(|a| (0..self.nodes).map(|b| self.node_distance(a, b)).collect())
+            .collect()
+    }
+
     /// Eq. (6) victim weights for thief `i` over all other cores:
     /// `w_ij = 1/(n_ij · r_ij²)` where `n_ij` counts cores at distance
     /// `r_ij` from `i`. Entry `i` itself gets weight 0.
@@ -238,6 +261,18 @@ mod tests {
             (0..112).filter(|&j| t.distance(3, j) == 2).map(|j| w[j]).sum();
         assert!((local - 1.0).abs() < 1e-9);
         assert!((remote - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_distances_and_matrix() {
+        let t = NumaTopology::synthetic(2, 2);
+        assert_eq!(t.node_distance(0, 0), 0);
+        assert_eq!(t.node_distance(0, 1), 2);
+        assert_eq!(t.node_distance(1, 0), t.node_distance(0, 1), "symmetric");
+        let m = t.node_distance_matrix();
+        assert_eq!(m, vec![vec![0, 2], vec![2, 0]]);
+        let flat = NumaTopology::flat(4);
+        assert_eq!(flat.node_distance_matrix(), vec![vec![0]]);
     }
 
     #[test]

@@ -103,6 +103,60 @@ impl RootSignal {
     }
 }
 
+/// A pool-external source of ready-to-run **root frames**, polled by
+/// idle workers after their own submission queue and a steal attempt
+/// both came up empty — i.e. strictly before parking. This is the
+/// pool-level entry point for cross-shard work migration: the sharded
+/// [`crate::service::JobServer`] installs one source per shard that
+/// claims diverted roots from the server's overflow spouts
+/// (own shard first, then siblings in NUMA-hierarchical victim order).
+///
+/// Contract:
+/// * `poll` hands over **exclusive ownership** of the returned frame —
+///   the claiming worker adopts its stack and executes it exactly like
+///   a popped submission, so all deque/stack invariants hold unchanged
+///   (the frame has never started executing; it enters the runtime
+///   through the same door as a submitted root).
+/// * Frames must be roots created by a pool sharing this pool's stack
+///   shelf (the job server guarantees this), so completion recycles
+///   through the common shelf.
+/// * The source must be drained before the pools polling it shut down
+///   ([`crate::service::JobServer`] re-injects leftover frames into
+///   their home shard on drop); otherwise their handles would hang.
+pub trait ExternalWork: Send + Sync {
+    /// Try to claim one external root frame for this pool.
+    fn poll(&self) -> ExternalPoll;
+}
+
+/// Result of polling an [`ExternalWork`] source.
+pub enum ExternalPoll {
+    /// A frame was claimed; the worker must execute it now.
+    Job(ExternalJob),
+    /// Work was visible but the claim was lost (consumer contention or
+    /// an in-flight producer push). Poll again soon; counted as a
+    /// `migration_misses` event.
+    Retry,
+    /// Nothing to claim.
+    Empty,
+}
+
+/// A claimed external root frame.
+pub struct ExternalJob {
+    /// The root frame; ownership transfers to the claiming worker.
+    pub frame: FramePtr,
+    /// True when the frame crossed shards (claimed from a sibling
+    /// shard's spout) — counted as `jobs_migrated`.
+    pub migrated: bool,
+}
+
+/// Hook invoked (at most once per root) when a workload panic abandons
+/// a root task, with the root's submission tag. The sharded job server
+/// uses it to release the job's admission slot and per-shard load
+/// charge — the fix for the PR 2 leak where a panicked `Tracked` job
+/// never ran its completion hook. Runs strictly before the abandoned
+/// signal fires, so server accounting is settled when `join` unblocks.
+pub type AbandonHook = dyn Fn(u64) + Send + Sync;
+
 /// State shared by all workers of a pool.
 pub struct Shared {
     /// Per-worker work-stealing deques of continuations.
@@ -148,6 +202,12 @@ pub struct Shared {
     pub submit_stack_hits: AtomicU64,
     /// `new_root` stack-shelf misses (heap-allocated a fresh stack).
     pub submit_stack_misses: AtomicU64,
+    /// Cross-pool work source polled by idle workers before parking
+    /// (see [`ExternalWork`]). `None` for standalone pools.
+    pub external: Option<Arc<dyn ExternalWork>>,
+    /// Abandonment hook (see [`AbandonHook`]). `None` for standalone
+    /// pools.
+    pub on_abandon: Option<Arc<AbandonHook>>,
 }
 
 impl Shared {
@@ -207,6 +267,8 @@ pub struct PoolBuilder {
     seed: u64,
     pin_offset: usize,
     shelf: Option<Arc<StackShelf>>,
+    external: Option<Arc<dyn ExternalWork>>,
+    on_abandon: Option<Arc<AbandonHook>>,
 }
 
 impl PoolBuilder {
@@ -219,6 +281,8 @@ impl PoolBuilder {
             seed: 0x5EED,
             pin_offset: 0,
             shelf: None,
+            external: None,
+            on_abandon: None,
         }
     }
 
@@ -268,6 +332,21 @@ impl PoolBuilder {
         self
     }
 
+    /// Install a cross-pool work source polled by idle workers before
+    /// they park (see [`ExternalWork`]). Used by the sharded
+    /// [`crate::service::JobServer`] for inter-shard work migration.
+    pub fn external_work(mut self, source: Arc<dyn ExternalWork>) -> Self {
+        self.external = Some(source);
+        self
+    }
+
+    /// Install a hook invoked when a workload panic abandons a root
+    /// (see [`AbandonHook`]).
+    pub fn abandon_hook(mut self, hook: Arc<AbandonHook>) -> Self {
+        self.on_abandon = Some(hook);
+        self
+    }
+
     /// Spawn the workers and return the pool.
     pub fn build(self) -> Pool {
         let p = self.workers;
@@ -312,6 +391,8 @@ impl PoolBuilder {
             root_blocks: AtomicU64::new(0),
             submit_stack_hits: AtomicU64::new(0),
             submit_stack_misses: AtomicU64::new(0),
+            external: self.external,
+            on_abandon: self.on_abandon,
         });
         let mut threads = Vec::with_capacity(p);
         for id in 0..p {
@@ -387,11 +468,40 @@ impl Pool {
     /// Root tasks are distributed round-robin over the per-worker
     /// submission queues.
     pub fn submit<C: Coroutine>(&self, task: C) -> RootHandle<C::Output> {
-        let (frame, handle) = self.new_root(task);
+        self.submit_tagged(task, 0)
+    }
+
+    /// [`Self::submit`] with a caller-supplied tag carried to the
+    /// pool's abandonment hook (the job server stores the placement
+    /// shard here).
+    pub(crate) fn submit_tagged<C: Coroutine>(
+        &self,
+        task: C,
+        tag: u64,
+    ) -> RootHandle<C::Output> {
+        let (frame, handle) = self.new_root(task, tag);
+        self.submit_frame(frame);
+        handle
+    }
+
+    /// Build a fused root block without enqueueing it; the caller takes
+    /// responsibility for routing the frame (the job server's migration
+    /// layer pushes it to an overflow spout instead of a worker queue).
+    pub(crate) fn make_root<C: Coroutine>(
+        &self,
+        task: C,
+        tag: u64,
+    ) -> (FramePtr, RootHandle<C::Output>) {
+        self.new_root(task, tag)
+    }
+
+    /// Enqueue an already-built root frame on the next round-robin
+    /// worker and wake it. Used by `submit` and by the job server's
+    /// shutdown path re-injecting drained spout frames.
+    pub(crate) fn submit_frame(&self, frame: FramePtr) {
         let target = self.next_target();
         self.shared.submissions[target].push(frame);
         self.wake_target(target);
-        handle
     }
 
     /// Submit a batch of root tasks with one wake sweep instead of a
@@ -405,11 +515,22 @@ impl Pool {
         &self,
         tasks: impl IntoIterator<Item = C>,
     ) -> Vec<RootHandle<C::Output>> {
+        self.submit_batch_tagged(tasks, 0)
+    }
+
+    /// [`Self::submit_batch`] with an abandonment tag shared by the
+    /// whole batch (the job server batches per placement shard, so one
+    /// tag per call suffices).
+    pub(crate) fn submit_batch_tagged<C: Coroutine>(
+        &self,
+        tasks: impl IntoIterator<Item = C>,
+        tag: u64,
+    ) -> Vec<RootHandle<C::Output>> {
         let p = self.workers();
         let mut groups: Vec<Vec<FramePtr>> = (0..p).map(|_| Vec::new()).collect();
         let mut handles = Vec::new();
         for task in tasks {
-            let (frame, handle) = self.new_root(task);
+            let (frame, handle) = self.new_root(task, tag);
             groups[self.next_target()].push(frame);
             handles.push(handle);
         }
@@ -445,7 +566,7 @@ impl Pool {
     /// traffic. The shelf misses only while cold (or when more jobs are
     /// in flight than the shelf has ever seen), in which case a fresh
     /// stack is heap-allocated exactly as before.
-    fn new_root<C: Coroutine>(&self, task: C) -> (FramePtr, RootHandle<C::Output>) {
+    fn new_root<C: Coroutine>(&self, task: C, tag: u64) -> (FramePtr, RootHandle<C::Output>) {
         let shared = &self.shared;
         let stack = match shared.shelf.pop() {
             Some(s) => {
@@ -484,6 +605,7 @@ impl Pool {
             hot_ptr.write(RootHot::new(
                 mem as *mut FrameHeader,
                 Arc::into_raw(Arc::clone(&shared.shelf)),
+                tag,
             ));
             (
                 FramePtr(mem as *mut FrameHeader),

@@ -41,14 +41,14 @@
 //! [`RootSignal::complete`]: crate::rt::pool::RootSignal::complete
 
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::frame::FrameHeader;
 use crate::stack::{round_up, StackShelf};
 use crate::task::{Coroutine, Frame};
 
-use super::pool::RootSignal;
+use super::pool::{AbandonHook, RootSignal};
 
 /// The type-erased hot part of a fused root block: everything the
 /// submitter's handle and the completing worker share. Lives inside the
@@ -58,6 +58,13 @@ pub struct RootHot {
     /// Two halves: worker + handle. The last release disposes the block
     /// and recycles its stack.
     refs: AtomicUsize,
+    /// Set (exactly once, by the winning [`abandon`] call) when a
+    /// workload panic abandoned this root. The disposer then
+    /// quarantines the block's stack instead of recycling it — the root
+    /// frame (and possibly abandoned ancestors of the panicked frame)
+    /// are still allocated on it, and sibling strands of the job may
+    /// still be running against it.
+    abandoned: AtomicBool,
     /// Base of the whole block allocation (== the frame header), from
     /// which dispose reads the stack pointer and allocation size.
     base: *mut FrameHeader,
@@ -65,17 +72,25 @@ pub struct RootHot {
     /// and dropped by the disposer, so the shelf outlives every
     /// outstanding handle even after its pool is gone.
     shelf: *const StackShelf,
+    /// Caller-supplied label carried from submission to the pool's
+    /// abandonment hook (the sharded job server stores the placement
+    /// shard here, so a panicked job's admission slot is released
+    /// against the right shard even when the job migrated). Zero for
+    /// plain submissions.
+    tag: u64,
 }
 
 impl RootHot {
     /// Fresh hot part with both halves outstanding. Takes ownership of
     /// one raw `Arc<StackShelf>` reference.
-    pub(crate) fn new(base: *mut FrameHeader, shelf: *const StackShelf) -> Self {
+    pub(crate) fn new(base: *mut FrameHeader, shelf: *const StackShelf, tag: u64) -> Self {
         RootHot {
             signal: RootSignal::new(),
             refs: AtomicUsize::new(2),
+            abandoned: AtomicBool::new(false),
             base,
             shelf,
+            tag,
         }
     }
 
@@ -140,36 +155,61 @@ pub(crate) unsafe fn release(hot: *const RootHot) {
 /// Worker-side abandonment after a workload panic: fire the signal in
 /// **abandoned** mode (the result cell was never written — handles
 /// panic on `join`/`poll` and release silently on drop) and release the
-/// worker's half. Only called for submission-originated strands, whose
-/// root frame provably has not completed and cannot complete later (its
-/// scope is missing the panicked frame's signal/return); the block
-/// lives on the already-poisoned, leaked stack, so it stays valid for
-/// the handle.
+/// worker's half on the job's behalf. Reached for both submission- and
+/// steal-originated strands: the panic handler walks the panicked
+/// frame's parent chain to the root, so a panic on a thief abandons the
+/// job's **remote** root too (the PR 2 containment hole). The root
+/// provably has not completed and cannot complete later — its scope is
+/// missing the panicked frame's signal/return — so the worker half is
+/// still held and releasing it here is sound.
+///
+/// Idempotent: two strands of the same job can panic concurrently and
+/// both walk to the same root; only the winner of the `abandoned` swap
+/// fires the signal, runs the pool's abandonment `hook` (strictly
+/// *before* the signal, mirroring the completion-hook ordering — the
+/// job server's accounting is settled by the time `join` unblocks) and
+/// releases the worker half.
 ///
 /// # Safety
-/// `hot` must be the root of the panicked strand, with the worker's
-/// refcount half still held, and its stack must already be poisoned.
-pub(crate) unsafe fn abandon(hot: *const RootHot) {
+/// `hot` must be the root of the panicked strand's job. The caller must
+/// not touch the block after this call (the release may dispose it).
+pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>) {
+    if (*hot).abandoned.swap(true, Ordering::AcqRel) {
+        return; // another strand of this job already abandoned the root
+    }
+    if let Some(h) = hook {
+        let tag = (*hot).tag;
+        // Hook code is outside the runtime (job-server accounting); a
+        // panic there must not unwind into panic containment itself.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h(tag)));
+    }
     (*hot).signal.complete_abandoned();
     release(hot);
 }
 
 /// Tear down a fully-released root block: drop the signal state, pop the
 /// block off its stack and hand the (now empty) stack to the shelf. A
-/// **poisoned** stack (workload panic) still holds the abandoned
-/// strand's frames above the block — deallocating would violate FILO —
-/// so it is leaked wholesale; only the shelf reference is returned.
+/// **poisoned** stack (workload panic on the stack itself) or an
+/// **abandoned** root (the root frame never completed, so it is still
+/// allocated — possibly on a pristine stack owned by a remote victim)
+/// still holds live frames above/at the block: deallocating would
+/// violate FILO and free memory other strands of the job may still
+/// touch. Such stacks are handed to the shelf's poison bin, which frees
+/// them once every pool and root block sharing the shelf is gone.
 unsafe fn dispose(hot: *mut RootHot) {
     let base = (*hot).base;
     let shelf_raw = (*hot).shelf;
     let stack = (*base).stack;
     let size = (*base).alloc_size as usize;
+    // Read before dropping the hot part (the flag lives inside it).
+    let abandoned = (*hot).abandoned.load(Ordering::Acquire);
     // The signal owns a mutex + possibly a registered waker clone; the
     // task state and the result were already consumed by the shim and
     // the handle respectively (neither exists on the abandoned path).
     std::ptr::drop_in_place(hot);
     let shelf = Arc::from_raw(shelf_raw);
-    if (*stack).is_poisoned() {
+    if abandoned || (*stack).is_poisoned() {
+        shelf.quarantine(stack);
         return;
     }
     (*stack).dealloc(base as *mut u8, size);

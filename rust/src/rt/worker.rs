@@ -36,7 +36,7 @@ use crate::stack::SegmentedStack;
 use crate::sync::{Backoff, XorShift64};
 use crate::task::{Coroutine, Cx, Frame, StageKind, Step};
 
-use super::pool::Shared;
+use super::pool::{ExternalPoll, Shared};
 
 /// Hot-path event counters kept worker-local (plain increments) and
 /// flushed to the shared atomics at strand boundaries — fork/call/pop
@@ -77,6 +77,11 @@ pub struct Worker {
     pub(crate) rng: XorShift64,
     /// Hot-path counters, flushed at strand boundaries.
     local: LocalCounters,
+    /// Frame currently being resumed by the trampoline (null between
+    /// strands). On a workload panic this is where the unwind started:
+    /// panic containment walks its parent chain to find the job's root,
+    /// so steal-originated strands can abandon a **remote** root.
+    current: *mut FrameHeader,
 }
 
 impl Worker {
@@ -94,6 +99,7 @@ impl Worker {
             staged_kind: StageKind::Call,
             rng: XorShift64::new(seed),
             local: LocalCounters::default(),
+            current: std::ptr::null_mut(),
         }
     }
 
@@ -185,6 +191,41 @@ impl Worker {
                 }
             }
 
+            // 2b. Cross-shard migration: before idling, try to claim a
+            // diverted root from the pool's external source (the job
+            // server's overflow spouts — own shard first, then siblings
+            // nearest-first). A claimed frame enters execution exactly
+            // like a popped submission, so the deque/stack invariants
+            // are untouched.
+            let claimed = match &self.shared.external {
+                Some(source) => source.poll(),
+                None => ExternalPoll::Empty,
+            };
+            match claimed {
+                ExternalPoll::Job(job) => {
+                    let FramePtr(f) = job.frame;
+                    if job.migrated {
+                        self.shared.metrics.worker(self.id).bump_jobs_migrated();
+                    }
+                    unsafe { self.adopt_stack((*f).stack) };
+                    self.enter_active();
+                    self.execute_guarded(f);
+                    self.exit_active();
+                    backoff.reset();
+                    continue;
+                }
+                ExternalPoll::Retry => {
+                    // Lost claim race or a producer push in flight: fall
+                    // through to the idle policy rather than hot-spinning
+                    // here — the winning claimer (or the producer's
+                    // post-push wake, or the park backstop) brings us
+                    // back, exactly like a transiently-empty submission
+                    // queue.
+                    self.shared.metrics.worker(self.id).bump_migration_misses();
+                }
+                ExternalPoll::Empty => {}
+            }
+
             // 3. Idle policy.
             match self.shared.scheduler {
                 crate::sched::SchedulerKind::Busy => backoff.snooze(),
@@ -202,14 +243,18 @@ impl Worker {
 
     /// Trampoline: resume frames via symmetric transfer until the strand
     /// is exhausted. Uses no OS stack per transfer (a loop, not
-    /// recursion) — the analogue of C++ symmetric transfer.
+    /// recursion) — the analogue of C++ symmetric transfer. Tracks the
+    /// in-flight frame in `self.current` so panic containment knows
+    /// where an unwind started (one pointer store per resume).
     pub(crate) unsafe fn execute(&mut self, mut f: *mut FrameHeader) {
         loop {
+            self.current = f;
             match ((*f).resume)(f, self) {
                 Transfer::To(next) => f = next,
                 Transfer::ToScheduler => break,
             }
         }
+        self.current = std::ptr::null_mut();
     }
 
     /// Run a strand, containing workload panics: a panic unwinding out
@@ -218,27 +263,11 @@ impl Worker {
     /// of killing the worker thread. Zero-cost unless a panic actually
     /// occurs (`catch_unwind` only installs a landing pad).
     fn execute_guarded(&mut self, f: *mut FrameHeader) {
-        // Remember the strand's root when the strand starts at one
-        // (submission pop / shutdown drain): a panic then abandons that
-        // root, so its handle unblocks (and panics) instead of waiting
-        // forever. Stolen continuations may also be roots, but a steal-
-        // originated strand must NOT abandon: the root's stack is not
-        // this worker's current stack, so it would not be poisoned and
-        // dispose would dealloc under the victim's live frames. Panics
-        // inside steal-originated strands therefore still leave the
-        // job's (remote) root waiting forever — a documented limitation.
-        let root_hot = unsafe {
-            if (*f).kind == FrameKind::Root && (*f).stack == self.stack {
-                (*f).root_hot
-            } else {
-                std::ptr::null()
-            }
-        };
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             self.execute(f)
         }));
         if caught.is_err() {
-            self.on_workload_panic(root_hot);
+            self.on_workload_panic();
         }
     }
 
@@ -246,32 +275,74 @@ impl Worker {
     /// strand's live frames; they are abandoned where they lie: any
     /// fork-join scope the strand participated in never joins, but every
     /// *other* job and the pool itself keep running. The stack is
-    /// **poisoned and leaked** — never recycled, never freed — because
-    /// its fused root block (or frames referenced by a stolen sibling)
-    /// may still be reachable from outside. The worker continues on a
-    /// pooled stack. When the strand started at a root (`hot` non-null),
-    /// that root is **abandoned**: its signal fires in abandoned mode so
-    /// the submitter's handle panics on `join`/`poll` (and releases
-    /// silently on drop) instead of hanging.
+    /// **poisoned and quarantined** — never recycled, reclaimed only
+    /// when the shelf (and thus every pool and root block sharing it)
+    /// drops — because its frames may still be referenced from outside.
+    /// The worker continues on a pooled stack.
+    ///
+    /// The job's **root** is found by walking the panicked frame's
+    /// parent chain and is always abandoned — whether the strand
+    /// started at a submitted root on this worker or at a **stolen**
+    /// continuation whose root lives on a remote victim's stack (the
+    /// PR 2 hole: such jobs used to hang their handles forever). The
+    /// walk is sound because every ancestor's scope is missing the
+    /// panicked frame's signal/return, so no ancestor can reach its
+    /// final return and free itself; `parent`/`kind`/`root_hot` are
+    /// immutable after frame creation. Abandoning marks the root's
+    /// block so its disposer quarantines the root's stack instead of
+    /// deallocating under the victim's live frames.
     #[cold]
-    fn on_workload_panic(&mut self, hot: *const crate::rt::root::RootHot) {
+    fn on_workload_panic(&mut self) {
         self.staged = std::ptr::null_mut();
+        // Locate the job's root first (reads only immutable header
+        // fields of frames that provably stay allocated, see above).
+        let mut root = self.current;
+        self.current = std::ptr::null_mut();
+        unsafe {
+            while !root.is_null() && !(*root).parent.is_null() {
+                root = (*root).parent;
+            }
+        }
         // Invariant 2 repair: the strand's unconsumed fork entries (its
         // own continuations, possibly from outer scopes of the same job)
         // are still in our deque. Abandon them — a later job's hot-path
         // pop must not receive a stale parent. Thieves racing this drain
         // take entries through the normal steal protocol; the scopes
         // they resume are missing the panicked child's signal and simply
-        // suspend forever (leaked, like the stack).
+        // suspend forever (reclaimed with the quarantined stacks).
         while self.shared.deques[self.id].pop().is_some() {}
         // Poison strictly before abandoning: the last refcount release
-        // must observe the flag and leak the stack instead of
+        // must observe the flag and quarantine the stack instead of
         // deallocating under the abandoned frames.
         unsafe { (*self.stack).poison() };
         self.shared.metrics.worker(self.id).bump_stacks_poisoned();
+        let poisoned = self.stack;
         self.stack = self.fresh_stack();
+        let hot = unsafe {
+            if !root.is_null() && (*root).kind == FrameKind::Root {
+                (*root).root_hot
+            } else {
+                std::ptr::null()
+            }
+        };
+        // Reclaim route for the poisoned stack: when the job's root
+        // block lives on it, the block's disposer quarantines it after
+        // the last refcount release. Otherwise (steal-originated strand
+        // on a thief's own stack) no release path will ever see this
+        // stack — hand it to the shelf's poison bin directly.
+        let root_stack =
+            unsafe { if hot.is_null() { std::ptr::null_mut() } else { (*root).stack } };
+        if root_stack != poisoned {
+            unsafe { self.shared.shelf.quarantine(poisoned) };
+        }
         if !hot.is_null() {
-            unsafe { crate::rt::root::abandon(hot) };
+            // Abandon the root (idempotent across concurrently panicking
+            // strands of the same job): runs the pool's abandonment hook
+            // and fires the signal so the handle unblocks-and-panics
+            // instead of waiting forever.
+            unsafe {
+                crate::rt::root::abandon(hot, self.shared.on_abandon.as_deref())
+            };
         }
     }
 

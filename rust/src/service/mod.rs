@@ -28,20 +28,39 @@
 //!   both a blocking join handle and a `Future` (waker plumbing through
 //!   [`crate::rt::pool::RootSignal`]), so callers can `.await` results
 //!   on any executor — e.g. [`crate::sync::block_on`].
+//! * **Cross-shard migration** — shards are no longer fully isolated
+//!   sub-pools: each shard owns a bounded intrusive **overflow spout**
+//!   (a [`FrameQueue`] linking diverted root frames through
+//!   `FrameHeader::qnext`, so migration allocates nothing). When
+//!   placement detects **sustained** imbalance — the chosen shard's
+//!   in-flight count exceeds the emptiest shard's by at least the
+//!   hysteresis threshold for several consecutive placements — the job
+//!   is parked in the chosen shard's spout instead of a worker queue.
+//!   Starved shards poll the spouts **before parking**, in a
+//!   hierarchical victim order derived from
+//!   [`NumaTopology::node_distance`]: their own spout first (not a
+//!   migration), then same-node siblings, then remote nodes — the
+//!   paper's NUMA-aware stealing rule lifted one level up, and the
+//!   composable cross-pool stealing of Kvik. `jobs_migrated` /
+//!   `migration_misses` in [`MetricsSnapshot`] expose the traffic.
 //!
 //! The quiescence invariant of the runtime (`signals == steals`,
 //! `rt::worker` invariant 3) holds per shard and therefore for the
 //! aggregated [`JobServer::metrics`], which the service stress tests
-//! assert after draining traffic.
+//! assert after draining traffic. Migration preserves it: a diverted
+//! frame enters the claiming pool exactly like a submitted root, so its
+//! strand's deque traffic stays inside that pool.
 
 pub mod jobs;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 
+use crate::deque::FrameQueue;
+use crate::frame::FramePtr;
 use crate::metrics::MetricsSnapshot;
 use crate::numa::NumaTopology;
-use crate::rt::pool::{Pool, RootHandle};
+use crate::rt::pool::{ExternalJob, ExternalPoll, ExternalWork, Pool, RootHandle, Shared};
 use crate::sched::SchedulerKind;
 use crate::sync::CachePadded;
 use crate::task::{Coroutine, Cx, Step};
@@ -124,6 +143,23 @@ impl PlacementPolicy for LeastLoaded {
     }
 }
 
+/// Pin every job to one shard. Deliberately skewed — the worst case a
+/// placement policy can produce — used by the migration benchmarks and
+/// tests to demonstrate that the overflow spouts let idle shards rescue
+/// a saturated one. Also useful for soft tenant isolation experiments.
+#[derive(Debug, Clone, Copy)]
+pub struct PinnedShard(pub usize);
+
+impl PlacementPolicy for PinnedShard {
+    fn place(&self, loads: &ShardLoads<'_>) -> usize {
+        self.0.min(loads.len().saturating_sub(1))
+    }
+
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+}
+
 /// Per-shard load accounting (placement input + stats).
 #[derive(Debug)]
 struct ShardLoad {
@@ -145,6 +181,9 @@ struct ServerCore {
     submitted: AtomicU64,
     completed: AtomicU64,
     rejected: AtomicU64,
+    /// Jobs abandoned by workload panics (their admission slots were
+    /// released through the abandonment hook, not the completion hook).
+    abandoned: AtomicU64,
 }
 
 impl ServerCore {
@@ -154,8 +193,27 @@ impl ServerCore {
         self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
         self.loads[shard].completed.fetch_add(1, Ordering::Relaxed);
         self.completed.fetch_add(1, Ordering::Relaxed);
+        self.release_slot();
+    }
+
+    /// Abandonment hook: runs (via the pool's [`AbandonHook`], at most
+    /// once per job) when a workload panic abandons a job's root. The
+    /// job never reaches its `Tracked` completion hook, so the
+    /// admission slot and the placement shard's load charge must be
+    /// released here — otherwise every panicking job would permanently
+    /// shrink the server's capacity (the PR 2 leak).
+    ///
+    /// [`AbandonHook`]: crate::rt::pool::AbandonHook
+    fn abandon(&self, shard: usize) {
+        let shard = shard.min(self.loads.len().saturating_sub(1));
+        self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
+        self.abandoned.fetch_add(1, Ordering::Relaxed);
+        self.release_slot();
+    }
+
+    fn release_slot(&self) {
         let mut admitted = self.admitted.lock().unwrap();
-        debug_assert!(*admitted > 0, "completion without admission");
+        debug_assert!(*admitted > 0, "slot release without admission");
         *admitted -= 1;
         drop(admitted);
         self.space.notify_one();
@@ -191,6 +249,218 @@ struct Shard {
     node: usize,
 }
 
+// ----------------------------------------------------------------------
+// Cross-shard migration (overflow spouts + hierarchical claiming)
+// ----------------------------------------------------------------------
+
+/// Consecutive imbalanced placements required before diversion starts —
+/// the "sustained, not noise" gate in front of the hysteresis margin.
+const MIGRATION_STREAK_GATE: u32 = 4;
+
+/// Default hysteresis margin: the chosen shard must have at least this
+/// many more in-flight jobs than the emptiest shard before a placement
+/// counts as imbalanced.
+pub const DEFAULT_MIGRATION_HYSTERESIS: usize = 8;
+
+/// Default per-shard spout bound; a full spout falls back to direct
+/// pool submission (backpressure still comes from the admission bound).
+const DEFAULT_SPOUT_CAP: usize = 256;
+
+/// One shard's overflow spout: a bounded intrusive MPSC of diverted
+/// root frames. Producers (submitters) push lock-free through
+/// `FrameHeader::qnext`; the consumer side is serialized by `claim` so
+/// workers of *any* shard can pop without violating the queue's
+/// single-consumer contract.
+struct Spout {
+    queue: FrameQueue,
+    /// Frames pushed and not yet claimed (claim gate + spout bound).
+    len: AtomicUsize,
+    /// Serializes consumers; `try_lock` so contended thieves retry
+    /// instead of blocking (they are idle anyway).
+    claim: Mutex<()>,
+    /// Consecutive imbalanced placements charged to **this** shard
+    /// (reset by a balanced placement to this shard). Per-shard so a
+    /// tenant skewing one shard cannot have its streak erased by other
+    /// tenants' balanced placements elsewhere.
+    streak: AtomicU32,
+}
+
+/// Outcome of one spout claim attempt.
+enum Claimed {
+    /// Exclusive ownership of a diverted frame.
+    Frame(FramePtr),
+    /// Work was visible but the claim lost (lock contention or an
+    /// in-flight producer push).
+    Contended,
+}
+
+/// The server-wide migration state shared by every shard's
+/// [`ExternalWork`] source: the spouts, the per-shard hierarchical
+/// victim orders, and wake routes into the shard pools.
+struct MigrationHub {
+    spouts: Vec<CachePadded<Spout>>,
+    /// `victims[s]` = the other shards, nearest first (same NUMA node
+    /// before remote, index-ordered within a distance class) — the
+    /// shard-level analogue of Eq. (6)'s distance bias.
+    victims: Vec<Vec<usize>>,
+    /// Weak wake routes into each shard's pool (weak: the pools' shared
+    /// state holds the hub through its `ExternalWork` source, so strong
+    /// references here would leak the whole server).
+    wakers: OnceLock<Vec<Weak<Shared>>>,
+    /// Hysteresis margin on the in-flight imbalance.
+    hysteresis: usize,
+    /// Per-spout bound.
+    cap: usize,
+    /// Frames routed through spouts over the lifetime.
+    diverted: AtomicU64,
+}
+
+impl MigrationHub {
+    fn new(
+        shard_nodes: &[usize],
+        topology: &NumaTopology,
+        hysteresis: usize,
+        cap: usize,
+    ) -> Self {
+        let n = shard_nodes.len();
+        let victims = (0..n)
+            .map(|s| {
+                let mut order: Vec<usize> = (0..n).filter(|&o| o != s).collect();
+                order.sort_by_key(|&o| {
+                    (topology.node_distance(shard_nodes[s], shard_nodes[o]), o)
+                });
+                order
+            })
+            .collect();
+        MigrationHub {
+            spouts: (0..n)
+                .map(|_| {
+                    CachePadded::new(Spout {
+                        queue: FrameQueue::new(),
+                        len: AtomicUsize::new(0),
+                        claim: Mutex::new(()),
+                        streak: AtomicU32::new(0),
+                    })
+                })
+                .collect(),
+            victims,
+            wakers: OnceLock::new(),
+            hysteresis: hysteresis.max(1),
+            cap: cap.max(1),
+            diverted: AtomicU64::new(0),
+        }
+    }
+
+    /// Frames that still fit in `shard`'s spout. Soft bound: racing
+    /// producers may each see the same room, so `len` can transiently
+    /// overshoot `cap` by the number of concurrent submitters — the
+    /// bound shapes steady-state behaviour, it is not a hard limit.
+    fn spout_room(&self, shard: usize) -> usize {
+        self.cap.saturating_sub(self.spouts[shard].len.load(Ordering::Relaxed))
+    }
+
+    /// Park one diverted frame in `shard`'s spout and wake a starved
+    /// sibling. Allocation-free: the frame links through its own header.
+    fn divert(&self, shard: usize, frame: FramePtr) {
+        self.spouts[shard].len.fetch_add(1, Ordering::Release);
+        self.diverted.fetch_add(1, Ordering::Relaxed);
+        self.spouts[shard].queue.push(frame);
+        self.wake_starved(shard);
+    }
+
+    /// Batch variant: one tail exchange for the whole group, one wake.
+    fn divert_batch(&self, shard: usize, frames: Vec<FramePtr>) {
+        if frames.is_empty() {
+            return;
+        }
+        self.spouts[shard].len.fetch_add(frames.len(), Ordering::Release);
+        self.diverted.fetch_add(frames.len() as u64, Ordering::Relaxed);
+        self.spouts[shard].queue.push_batch(frames);
+        self.wake_starved(shard);
+    }
+
+    /// Try to take one frame out of shard `s`'s spout.
+    fn try_claim(&self, s: usize) -> Option<Claimed> {
+        let spout = &self.spouts[s];
+        if spout.len.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let Ok(_guard) = spout.claim.try_lock() else {
+            return Some(Claimed::Contended);
+        };
+        match spout.queue.pop() {
+            Some(frame) => {
+                spout.len.fetch_sub(1, Ordering::AcqRel);
+                Some(Claimed::Frame(frame))
+            }
+            // A producer swapped the tail but has not linked yet; the
+            // frame will be visible on the next poll.
+            None => Some(Claimed::Contended),
+        }
+    }
+
+    /// Claim work on behalf of `shard`'s pool: own spout first (not a
+    /// migration — the saturated shard drains its own overflow), then
+    /// siblings nearest-first.
+    fn claim_for(&self, shard: usize) -> ExternalPoll {
+        match self.try_claim(shard) {
+            Some(Claimed::Frame(frame)) => {
+                return ExternalPoll::Job(ExternalJob { frame, migrated: false })
+            }
+            Some(Claimed::Contended) => return ExternalPoll::Retry,
+            None => {}
+        }
+        for &victim in &self.victims[shard] {
+            match self.try_claim(victim) {
+                Some(Claimed::Frame(frame)) => {
+                    return ExternalPoll::Job(ExternalJob { frame, migrated: true })
+                }
+                Some(Claimed::Contended) => return ExternalPoll::Retry,
+                None => {}
+            }
+        }
+        ExternalPoll::Empty
+    }
+
+    /// After a divert, make sure somebody will come looking: wake one
+    /// parked worker in the nearest shard that has sleepers. Workers
+    /// that are merely idle (not parked) find the spout through their
+    /// pre-park poll; fully parked ones are also bounded by the lazy
+    /// scheduler's `PARK_BACKSTOP` timeout, so a lost wake costs at
+    /// most one backstop period.
+    fn wake_starved(&self, home: usize) {
+        let Some(wakers) = self.wakers.get() else { return };
+        for &victim in &self.victims[home] {
+            if let Some(shared) = wakers[victim].upgrade() {
+                if shared.sleepers.load(Ordering::Relaxed) > 0 {
+                    shared.wake_one(0);
+                    return;
+                }
+            }
+        }
+        // No remote sleepers: the home shard drains its own spout when
+        // it next idles (or its own sleepers are woken by submissions).
+        if let Some(shared) = wakers[home].upgrade() {
+            if shared.sleepers.load(Ordering::Relaxed) > 0 {
+                shared.wake_one(0);
+            }
+        }
+    }
+}
+
+/// Per-shard adapter installing the hub as a pool's [`ExternalWork`]
+/// source.
+struct ShardSource {
+    hub: Arc<MigrationHub>,
+    shard: usize,
+}
+
+impl ExternalWork for ShardSource {
+    fn poll(&self) -> ExternalPoll {
+        self.hub.claim_for(self.shard)
+    }
+}
+
 /// Builder for [`JobServer`].
 pub struct JobServerBuilder {
     shards: Option<usize>,
@@ -200,6 +470,9 @@ pub struct JobServerBuilder {
     topology: Option<NumaTopology>,
     policy: Box<dyn PlacementPolicy>,
     seed: u64,
+    migration: bool,
+    hysteresis: usize,
+    spout_cap: usize,
 }
 
 impl JobServerBuilder {
@@ -213,6 +486,9 @@ impl JobServerBuilder {
             topology: None,
             policy: Box::new(RoundRobin::new()),
             seed: 0x5EED,
+            migration: true,
+            hysteresis: DEFAULT_MIGRATION_HYSTERESIS,
+            spout_cap: DEFAULT_SPOUT_CAP,
         }
     }
 
@@ -265,6 +541,32 @@ impl JobServerBuilder {
         self
     }
 
+    /// Enable or disable cross-shard work migration (default: enabled
+    /// whenever the server has more than one shard).
+    pub fn migration(mut self, enabled: bool) -> Self {
+        self.migration = enabled;
+        self
+    }
+
+    /// Hysteresis margin for migration: a placement is *imbalanced*
+    /// when the chosen shard's in-flight count exceeds the emptiest
+    /// shard's by at least this many jobs, and only
+    /// [`MIGRATION_STREAK_GATE`](self) consecutive imbalanced
+    /// placements open the diversion valve — so migration reacts to
+    /// sustained skew, not to scheduling noise. Default
+    /// [`DEFAULT_MIGRATION_HYSTERESIS`]; minimum 1.
+    pub fn migration_hysteresis(mut self, margin: usize) -> Self {
+        self.hysteresis = margin.max(1);
+        self
+    }
+
+    /// Per-shard overflow-spout bound (default 256). A full spout falls
+    /// back to direct pool submission.
+    pub fn spout_capacity(mut self, frames: usize) -> Self {
+        self.spout_cap = frames.max(1);
+        self
+    }
+
     /// Build the server, spawning every shard's workers.
     pub fn build(self) -> JobServer {
         let topology = self
@@ -293,24 +595,19 @@ impl JobServerBuilder {
             plans.push((node, workers, pin_offset));
         }
         // One shelf for the whole server: quiesced root stacks recycle
-        // across shards and submitter threads. Sized so a full
-        // complement of in-flight jobs per worker can park stacks
-        // without overflow frees.
+        // across shards and submitter threads. Sized to the admission
+        // bound (capped): with open-window traffic — up to `capacity`
+        // jobs in flight — a whole window's worth of stacks can quiesce
+        // between submission bursts, and every one of them must find a
+        // slot or the next burst pays a heap allocation per job. The
+        // slots are pre-reserved pointers; the stacks a busy server
+        // banks here would exist (in flight) at peak anyway.
         let total_workers: usize = plans.iter().map(|&(_, w, _)| w).sum();
-        let shelf = Arc::new(crate::stack::StackShelf::new((4 * total_workers).max(16)));
-        let mut shards = Vec::with_capacity(shard_count);
-        for (s, (node, workers, pin_offset)) in plans.into_iter().enumerate() {
-            let pool = Pool::builder()
-                .workers(workers)
-                .scheduler(self.scheduler)
-                .seed(self.seed.wrapping_add(0x9E37 * (1 + s as u64)))
-                .pin_offset(pin_offset)
-                .stack_shelf(Arc::clone(&shelf))
-                // Within a shard the cores are one NUMA node: flat.
-                .topology(NumaTopology::flat(workers))
-                .build();
-            shards.push(Shard { pool, node });
-        }
+        let shelf_cap = (4 * total_workers).max(16).max(self.capacity.min(4096));
+        let shelf = Arc::new(crate::stack::StackShelf::new(shelf_cap));
+        // The core exists before the pools: each pool's abandonment
+        // hook (panic containment releasing admission slots) closes
+        // over it.
         let core = Arc::new(ServerCore {
             loads: (0..shard_count)
                 .map(|_| {
@@ -326,8 +623,43 @@ impl JobServerBuilder {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
         });
-        JobServer { shards, core, policy: self.policy }
+        let shard_nodes: Vec<usize> = plans.iter().map(|&(n, _, _)| n).collect();
+        let hub = (self.migration && shard_count > 1).then(|| {
+            Arc::new(MigrationHub::new(
+                &shard_nodes,
+                &topology,
+                self.hysteresis,
+                self.spout_cap,
+            ))
+        });
+        let mut shards = Vec::with_capacity(shard_count);
+        for (s, (node, workers, pin_offset)) in plans.into_iter().enumerate() {
+            let hook_core = Arc::clone(&core);
+            let mut builder = Pool::builder()
+                .workers(workers)
+                .scheduler(self.scheduler)
+                .seed(self.seed.wrapping_add(0x9E37 * (1 + s as u64)))
+                .pin_offset(pin_offset)
+                .stack_shelf(Arc::clone(&shelf))
+                // Within a shard the cores are one NUMA node: flat.
+                .topology(NumaTopology::flat(workers))
+                .abandon_hook(Arc::new(move |tag| hook_core.abandon(tag as usize)));
+            if let Some(hub) = &hub {
+                builder = builder
+                    .external_work(Arc::new(ShardSource { hub: Arc::clone(hub), shard: s }));
+            }
+            shards.push(Shard { pool: builder.build(), node });
+        }
+        if let Some(hub) = &hub {
+            // Weak wake routes into every shard (set once; the hub is
+            // reachable from each pool's ExternalWork source, so strong
+            // references here would cycle).
+            let routes = shards.iter().map(|s| Arc::downgrade(s.pool.shared())).collect();
+            let _ = hub.wakers.set(routes);
+        }
+        JobServer { shards, core, policy: self.policy, hub }
     }
 }
 
@@ -340,6 +672,14 @@ pub struct ServerStats {
     pub completed: u64,
     /// `try_submit` calls bounced by backpressure.
     pub rejected: u64,
+    /// Jobs abandoned by workload panics (slots released through the
+    /// abandonment hook). `submitted == completed + abandoned` at
+    /// quiescence.
+    pub abandoned: u64,
+    /// Jobs routed through the migration spouts (diverted at placement;
+    /// executed by whichever shard claimed them — `jobs_migrated` in
+    /// [`MetricsSnapshot`] counts the cross-shard subset).
+    pub diverted: u64,
     /// Currently admitted (queued + running) jobs.
     pub in_flight: usize,
     /// The admission bound.
@@ -369,6 +709,8 @@ pub struct JobServer {
     shards: Vec<Shard>,
     core: Arc<ServerCore>,
     policy: Box<dyn PlacementPolicy>,
+    /// Cross-shard migration state (`None`: single shard or disabled).
+    hub: Option<Arc<MigrationHub>>,
 }
 
 impl JobServer {
@@ -405,6 +747,11 @@ impl JobServer {
     /// The active placement policy's name.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// True when cross-shard work migration is active.
+    pub fn migration_enabled(&self) -> bool {
+        self.hub.is_some()
     }
 
     // ----------------------------------------------------------------
@@ -453,13 +800,53 @@ impl JobServer {
         Tracked { inner: job, core: Arc::clone(&self.core), shard, done: false }
     }
 
+    /// Decide whether the job just charged to `shard` should be parked
+    /// in the migration spout (claimable by any shard) instead of going
+    /// straight into the shard's pool. True only under **sustained**
+    /// imbalance: the shard's in-flight count exceeds the emptiest
+    /// shard's by at least the hysteresis margin, the streak gate has
+    /// filled, and the spout has room.
+    fn should_divert(&self, shard: usize) -> bool {
+        let Some(hub) = &self.hub else { return false };
+        let own = self.core.loads[shard].in_flight.load(Ordering::Relaxed);
+        let min = (0..self.core.loads.len())
+            .map(|s| self.core.loads[s].in_flight.load(Ordering::Relaxed))
+            .min()
+            .unwrap_or(0);
+        // The streak is per shard: other tenants placing balanced
+        // traffic on other shards must not mask this shard's skew.
+        let streak = &hub.spouts[shard].streak;
+        if own < min + hub.hysteresis {
+            streak.store(0, Ordering::Relaxed);
+            return false;
+        }
+        let streak = streak.fetch_add(1, Ordering::Relaxed).saturating_add(1);
+        streak >= MIGRATION_STREAK_GATE && hub.spout_room(shard) > 0
+    }
+
     /// Submit one job, blocking while the server is at capacity.
     /// The returned handle joins or `.await`s the result.
     pub fn submit<C: Coroutine>(&self, job: C) -> RootHandle<C::Output> {
         self.admit_blocking();
         self.core.submitted.fetch_add(1, Ordering::Relaxed);
         let shard = self.place();
-        self.shards[shard].pool.submit(self.wrap(job, shard))
+        self.route(job, shard)
+    }
+
+    /// Route an admitted, placed job: divert to the migration spout on
+    /// sustained imbalance, else submit directly to the shard's pool.
+    /// The tag carried to the abandonment hook is the placement shard.
+    fn route<C: Coroutine>(&self, job: C, shard: usize) -> RootHandle<C::Output> {
+        let tracked = self.wrap(job, shard);
+        if self.should_divert(shard) {
+            let hub = self.hub.as_ref().expect("divert without a migration hub");
+            let (frame, handle) =
+                self.shards[shard].pool.make_root(tracked, shard as u64);
+            hub.divert(shard, frame);
+            handle
+        } else {
+            self.shards[shard].pool.submit_tagged(tracked, shard as u64)
+        }
     }
 
     /// Submit one job unless the server is at capacity; on rejection the
@@ -471,7 +858,7 @@ impl JobServer {
         }
         self.core.submitted.fetch_add(1, Ordering::Relaxed);
         let shard = self.place();
-        Ok(self.shards[shard].pool.submit(self.wrap(job, shard)))
+        Ok(self.route(job, shard))
     }
 
     /// Submit a batch. Jobs are admitted in capacity-bounded waves
@@ -502,9 +889,30 @@ impl JobServer {
                 if group.is_empty() {
                     continue;
                 }
+                let mut direct = group;
+                if self.should_divert(shard) {
+                    // Park as much of the group as the spout bound
+                    // allows (one tail exchange, one wake) so starved
+                    // shards can claim it; the overflow past the bound
+                    // goes straight into the home pool below.
+                    let hub = self.hub.as_ref().expect("divert without a migration hub");
+                    let take = hub.spout_room(shard).min(direct.len());
+                    let mut frames = Vec::with_capacity(take);
+                    for (idx, task) in direct.drain(..take) {
+                        let (frame, handle) =
+                            self.shards[shard].pool.make_root(task, shard as u64);
+                        frames.push(frame);
+                        out[idx] = Some(handle);
+                    }
+                    hub.divert_batch(shard, frames);
+                }
+                if direct.is_empty() {
+                    continue;
+                }
                 let (idxs, tasks): (Vec<usize>, Vec<Tracked<C>>) =
-                    group.into_iter().unzip();
-                let handles = self.shards[shard].pool.submit_batch(tasks);
+                    direct.into_iter().unzip();
+                let handles =
+                    self.shards[shard].pool.submit_batch_tagged(tasks, shard as u64);
                 for (idx, handle) in idxs.into_iter().zip(handles) {
                     out[idx] = Some(handle);
                 }
@@ -524,6 +932,11 @@ impl JobServer {
             submitted: self.core.submitted.load(Ordering::Relaxed),
             completed: self.core.completed.load(Ordering::Relaxed),
             rejected: self.core.rejected.load(Ordering::Relaxed),
+            abandoned: self.core.abandoned.load(Ordering::Relaxed),
+            diverted: self
+                .hub
+                .as_ref()
+                .map_or(0, |h| h.diverted.load(Ordering::Relaxed)),
             in_flight: self.in_flight(),
             capacity: self.core.capacity,
             shards: self
@@ -555,6 +968,31 @@ impl JobServer {
             total.merge(&s.pool.metrics());
         }
         total
+    }
+}
+
+impl Drop for JobServer {
+    /// Flush still-parked spout frames back into their home shards
+    /// before the pools shut down, so every outstanding handle
+    /// completes (the pools' shutdown drain executes re-injected
+    /// submissions inline). Without this, a frame diverted but never
+    /// claimed would strand its handle forever.
+    fn drop(&mut self) {
+        let Some(hub) = &self.hub else { return };
+        for shard in 0..self.shards.len() {
+            loop {
+                match hub.try_claim(shard) {
+                    Some(Claimed::Frame(frame)) => {
+                        self.shards[shard].pool.submit_frame(frame);
+                    }
+                    // A worker holds the claim lock or a push is in
+                    // flight; it (or the next iteration) will finish the
+                    // hand-off.
+                    Some(Claimed::Contended) => std::thread::yield_now(),
+                    None => break,
+                }
+            }
+        }
     }
 }
 
@@ -593,6 +1031,55 @@ mod tests {
         let view = ShardLoads { loads: &loads };
         let picks: Vec<usize> = (0..6).map(|_| p.place(&view)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn pinned_shard_clamps_and_pins() {
+        let p = PinnedShard(1);
+        let loads = loads_of(&[0, 9, 0]);
+        let view = ShardLoads { loads: &loads };
+        assert_eq!(p.place(&view), 1, "pinned ignores load");
+        assert_eq!(p.name(), "pinned");
+        let clamped = PinnedShard(7);
+        assert_eq!(clamped.place(&view), 2, "out-of-range pins clamp");
+    }
+
+    #[test]
+    fn migration_victim_order_prefers_same_node() {
+        // 4 shards round-robined over 2 nodes (shard s → node s % 2):
+        // a shard's victim list must start with its node-mate.
+        let topo = NumaTopology::synthetic(2, 2);
+        let hub = MigrationHub::new(&[0, 1, 0, 1], &topo, 4, 16);
+        assert_eq!(hub.victims[0], vec![2, 1, 3]);
+        assert_eq!(hub.victims[1], vec![3, 0, 2]);
+        assert_eq!(hub.victims[2], vec![0, 1, 3]);
+        assert_eq!(hub.victims[3], vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn skewed_placement_migrates_and_completes() {
+        // Every job pinned to shard 0 with a tiny hysteresis: shard 1
+        // must rescue work through the spout, results must stay exact.
+        let server = JobServer::builder()
+            .topology(NumaTopology::synthetic(2, 2))
+            .shards(2)
+            .workers_per_shard(2)
+            .capacity(128)
+            .policy(PinnedShard(0))
+            .migration_hysteresis(1)
+            .build();
+        assert!(server.migration_enabled());
+        let mut handles = Vec::with_capacity(96);
+        for seed in 0..96u64 {
+            handles.push((seed, server.submit(MixedJob::from_seed(seed))));
+        }
+        for (seed, h) in handles {
+            assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+        }
+        let stats = server.stats();
+        assert_eq!(stats.completed, 96);
+        assert!(stats.diverted > 0, "sustained skew must divert: {stats:?}");
+        assert_eq!(server.in_flight(), 0);
     }
 
     #[test]

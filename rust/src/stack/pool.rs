@@ -15,13 +15,23 @@
 //! Invariants enforced at `recycle` time:
 //! * the stack is **empty** (`live == 0`) — it must have quiesced;
 //! * it is **trimmed** to its first stacklet (geometric excess freed);
-//! * **panic-poisoned** stacks are never shelved — they are leaked, as
-//!   their abandoned frames may still be referenced by join handles.
+//! * **panic-poisoned** stacks are never shelved — they are
+//!   [`StackShelf::quarantine`]d instead: their abandoned frames may
+//!   still be referenced (by join handles, or by sibling strands of the
+//!   same job), so the memory must outlive every pool and every root
+//!   block that shares this shelf. The poison bin is freed when the
+//!   shelf itself drops — which happens only after every pool's
+//!   `Shared` and every outstanding fused root block has released its
+//!   `Arc` reference, i.e. exactly when nothing can touch the abandoned
+//!   frames anymore. (The frames' task states never run their
+//!   destructors — anything they own on the heap stays leaked; only the
+//!   stacklet memory is reclaimed.)
 //!
 //! The shelf is bounded: pushes beyond `capacity` free the stack
 //! (allocator traffic on overflow only, never on the steady-state path).
 //! The slot vector is pre-reserved at construction so `recycle` itself
-//! never allocates.
+//! never allocates. `quarantine` may allocate (bin growth) — it only
+//! runs on the cold panic-containment path.
 //!
 //! [`Pool`]: crate::rt::pool::Pool
 
@@ -44,10 +54,16 @@ unsafe impl Send for Shelved {}
 pub struct StackShelf {
     slots: Mutex<Vec<Shelved>>,
     capacity: usize,
+    /// Custody list of poisoned / abandonment-leaked stacks. Never
+    /// popped — only drained (freed) when the shelf drops, at which
+    /// point no pool, handle or root block can reference them.
+    poisoned: Mutex<Vec<Shelved>>,
     /// Stacks accepted by [`Self::recycle`] over the lifetime.
     recycled: AtomicU64,
-    /// Stacks freed (shelf full) or leaked (poisoned) instead of shelved.
+    /// Stacks freed because the shelf was full.
     dropped: AtomicU64,
+    /// Stacks taken into the poison bin over the lifetime.
+    quarantined: AtomicU64,
 }
 
 impl std::fmt::Debug for Shelved {
@@ -63,8 +79,10 @@ impl StackShelf {
         StackShelf {
             slots: Mutex::new(Vec::with_capacity(capacity)),
             capacity,
+            poisoned: Mutex::new(Vec::new()),
             recycled: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         }
     }
 
@@ -75,8 +93,9 @@ impl StackShelf {
 
     /// Return a quiesced stack to the shelf: trim to the first stacklet
     /// and push, or free it when the shelf is full. Poisoned stacks are
-    /// leaked — never reused, never freed (their abandoned frames may
-    /// still be referenced by outstanding handles).
+    /// never reused — they go to the poison bin (reclaimed when the
+    /// shelf drops; their abandoned frames may still be referenced by
+    /// outstanding handles or sibling strands until then).
     ///
     /// # Safety
     /// The caller transfers exclusive ownership of `s`, which must have
@@ -84,8 +103,8 @@ impl StackShelf {
     /// be empty unless poisoned.
     pub unsafe fn recycle(&self, s: *mut SegmentedStack) {
         if (*s).is_poisoned() {
-            self.dropped.fetch_add(1, Ordering::Relaxed);
-            return; // leak: see the module docs
+            self.quarantine(s);
+            return;
         }
         debug_assert!((*s).is_empty(), "recycled stacks must be empty");
         (*s).trim();
@@ -99,6 +118,28 @@ impl StackShelf {
             drop(Box::from_raw(s));
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Take custody of a poisoned (or abandonment-leaked) stack so its
+    /// memory is reclaimed when the shelf drops, instead of leaking
+    /// forever (the PR 2 behaviour). Called from the panic-containment
+    /// path (`rt::worker`) for the panicking strand's own stack, and
+    /// from the root-block disposer (`rt::root`) for the stack an
+    /// abandoned root block lives on once both refcount halves are
+    /// released. Each stack must be quarantined **at most once**.
+    ///
+    /// # Safety
+    /// The caller transfers custody (not access: abandoned frames on
+    /// `s` may still be read by live strands of the same job while the
+    /// owning pools run — the bin only frees after every shelf
+    /// reference, hence every pool and root block, is gone). `s` must
+    /// have been created by `Box::into_raw` and must not be reachable
+    /// from any other reclaim path.
+    pub unsafe fn quarantine(&self, s: *mut SegmentedStack) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        let mut bin = self.poisoned.lock().unwrap_or_else(|p| p.into_inner());
+        debug_assert!(!bin.iter().any(|q| q.0 == s), "stack quarantined twice");
+        bin.push(Shelved(s));
     }
 
     /// Stacks currently shelved.
@@ -121,10 +162,20 @@ impl StackShelf {
         self.recycled.load(Ordering::Relaxed)
     }
 
-    /// Lifetime count of stacks rejected (overflow frees + poisoned
-    /// leaks).
+    /// Lifetime count of stacks freed because the shelf was full.
     pub fn dropped_count(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of stacks taken into the poison bin.
+    pub fn quarantined_count(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Stacks currently held in the poison bin (reclaimed at shelf
+    /// drop).
+    pub fn poisoned_len(&self) -> usize {
+        self.poisoned.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 }
 
@@ -132,6 +183,22 @@ impl Drop for StackShelf {
     fn drop(&mut self) {
         for s in self.slots.get_mut().unwrap().drain(..) {
             unsafe { drop(Box::from_raw(s.0)) };
+        }
+        // The shelf dropping means every pool `Shared` and every fused
+        // root block that shared it is gone: no strand can run and no
+        // handle can dereference a block, so the quarantined stacks'
+        // abandoned frames are unreachable and their memory can finally
+        // be returned (`SegmentedStack::drop` accepts poisoned stacks).
+        for s in self.poisoned.get_mut().unwrap_or_else(|p| p.into_inner()).drain(..) {
+            unsafe {
+                // An abandonment-leaked stack may hold live (abandoned)
+                // frames without carrying the poison flag — it could not
+                // be set remotely without racing the then-live owner.
+                // Now that we are exclusive, mark it so the stack's drop
+                // assertion recognizes the abandoned-frames case.
+                (*s.0).poison();
+                drop(Box::from_raw(s.0));
+            }
         }
     }
 }
@@ -189,13 +256,26 @@ mod tests {
         let shelf = StackShelf::new(4);
         let mut stack = SegmentedStack::with_first_capacity(64);
         stack.poison();
-        let raw = Box::into_raw(stack);
-        unsafe { shelf.recycle(raw) };
+        unsafe { shelf.recycle(Box::into_raw(stack)) };
         assert!(shelf.pop().is_none(), "poisoned stack must not be recycled");
-        assert_eq!(shelf.dropped_count(), 1);
-        // The shelf leaked it (on purpose); reclaim it here so the test
-        // itself stays leak-free — safe because this test still owns raw.
-        unsafe { drop(Box::from_raw(raw)) };
+        assert_eq!(shelf.quarantined_count(), 1);
+        assert_eq!(shelf.poisoned_len(), 1);
+        // Dropping the shelf reclaims the quarantined stack — no manual
+        // cleanup, no leak (asserted end-to-end in tests/stack_pool.rs).
+        drop(shelf);
+    }
+
+    #[test]
+    fn quarantine_takes_custody_until_drop() {
+        let shelf = StackShelf::new(2);
+        for _ in 0..3 {
+            let mut s = SegmentedStack::with_first_capacity(64);
+            s.poison();
+            unsafe { shelf.quarantine(Box::into_raw(s)) };
+        }
+        assert_eq!(shelf.quarantined_count(), 3);
+        assert_eq!(shelf.poisoned_len(), 3, "bin is not bounded by the shelf capacity");
+        assert!(shelf.pop().is_none(), "the bin must never feed reuse");
     }
 
     #[test]

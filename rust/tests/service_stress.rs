@@ -13,6 +13,7 @@ use std::sync::Arc;
 use rustfork::numa::NumaTopology;
 use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, RoundRobin};
 use rustfork::sync::block_on;
+use rustfork::task::FnTask;
 
 const SUBMITTERS: u64 = 4;
 const JOBS_PER_SUBMITTER: u64 = 150;
@@ -136,6 +137,63 @@ fn stress_least_loaded_ample_capacity() {
             s.shard
         );
     }
+}
+
+#[test]
+fn admission_capacity_recovers_after_panics() {
+    // ISSUE 4 satellite regression: a panicked job never runs its
+    // `Tracked` completion hook, so before the abandonment hook its
+    // admission slot leaked forever — 16 panics against capacity 4
+    // would deadlock the 5th submit. The hook releases the slot
+    // strictly before the abandoned signal fires, so accounting is
+    // settled the moment join unblocks.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(1, 2))
+        .shards(1)
+        .workers_per_shard(2)
+        .capacity(4)
+        .build();
+    const PANICS: u64 = 16;
+    for round in 0..PANICS {
+        // Blocking submit: would hang at round 4 if slots leaked.
+        let h = server.submit(FnTask::new(|| -> u64 { panic!("job bug") }));
+        let joined =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || h.join()));
+        assert!(joined.is_err(), "round {round}: abandoned join must panic");
+        assert_eq!(
+            server.in_flight(),
+            0,
+            "round {round}: slot not released on abandonment"
+        );
+    }
+    let stats = server.stats();
+    assert_eq!(stats.abandoned, PANICS);
+    assert_eq!(stats.completed, 0);
+
+    // Full capacity is available again: fill it via try_submit, then
+    // drain correctly.
+    let mut handles = Vec::new();
+    for seed in 0..4u64 {
+        match server.try_submit(MixedJob::from_seed(seed)) {
+            Ok(h) => handles.push((seed, h)),
+            Err(_) => panic!("slot {seed} still leaked after panics"),
+        }
+    }
+    for (seed, h) in handles {
+        assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+    }
+    assert_eq!(server.stats().completed, 4);
+    assert_eq!(server.in_flight(), 0);
+    assert_eq!(
+        server.metrics().stacks_poisoned,
+        PANICS,
+        "each panic poisons exactly one stack"
+    );
+
+    std::panic::set_hook(prev_hook);
 }
 
 #[test]

@@ -1,11 +1,14 @@
-//! Stack-recycling invariants (ISSUE 2 satellite): recycled stacks are
-//! empty and trimmed to one stacklet, poisoned stacks are never
-//! recycled, the shelf round-trips across pools/shards, and a workload
-//! panic is contained — the affected job is abandoned but the pool (and
-//! every other job) keeps running.
+//! Stack-recycling invariants (ISSUE 2 satellite, extended by ISSUE 4):
+//! recycled stacks are empty and trimmed to one stacklet, poisoned
+//! stacks are never recycled (they are quarantined and reclaimed when
+//! the shelf drops), the shelf round-trips across pools/shards, and a
+//! workload panic is contained — the affected job is abandoned (even
+//! when the panic happens in a *steal-originated* strand whose root
+//! lives on a remote stack) but the pool and every other job keep
+//! running.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use rustfork::numa::NumaTopology;
 use rustfork::rt::Pool;
@@ -13,6 +16,10 @@ use rustfork::service::{jobs::MixedJob, JobServer};
 use rustfork::stack::{SegmentedStack, StackShelf};
 use rustfork::task::FnTask;
 use rustfork::workloads::fib::{fib_exact, Fib};
+
+/// Serializes tests that swap the process-global panic hook (each also
+/// silences the expected workload-panic backtraces).
+static PANIC_HOOK_LOCK: Mutex<()> = Mutex::new(());
 
 #[test]
 fn recycled_stacks_are_empty_and_trimmed() {
@@ -41,12 +48,13 @@ fn poisoned_stack_never_recycled() {
     let shelf = StackShelf::new(8);
     let mut s = SegmentedStack::with_first_capacity(128);
     s.poison();
-    let raw = Box::into_raw(s);
-    unsafe { shelf.recycle(raw) };
+    unsafe { shelf.recycle(Box::into_raw(s)) };
     assert_eq!(shelf.len(), 0, "poisoned stack must not reach the shelf");
-    assert_eq!(shelf.dropped_count(), 1);
-    // recycle() leaked it deliberately; this test still owns raw.
-    unsafe { drop(Box::from_raw(raw)) };
+    assert_eq!(shelf.quarantined_count(), 1, "poisoned stack must be quarantined");
+    assert_eq!(shelf.poisoned_len(), 1);
+    // Dropping the shelf reclaims the quarantined stack's memory (the
+    // end-to-end balance is asserted in poisoned_stacks_reclaimed_*).
+    drop(shelf);
 }
 
 #[test]
@@ -132,11 +140,61 @@ impl rustfork::task::Coroutine for ScopeWithPanickingChild {
     }
 }
 
+/// Leaf that spins until released — pins its worker so the parent's
+/// continuation must be claimed by the other worker.
+struct SpinChild(Arc<AtomicBool>);
+impl rustfork::task::Coroutine for SpinChild {
+    type Output = u64;
+    fn step(&mut self, _cx: &mut rustfork::task::Cx<'_>) -> rustfork::task::Step<u64> {
+        while !self.0.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        rustfork::task::Step::Return(1)
+    }
+}
+
+/// Root whose continuation is stolen mid-scope, after which the *thief*
+/// forks a panicking child: the panic unwinds inside a steal-originated
+/// strand while the root's frame lives on the victim worker's stack.
+struct StolenScopePanic {
+    state: u8,
+    release: Arc<AtomicBool>,
+    a: u64,
+    b: u64,
+}
+impl rustfork::task::Coroutine for StolenScopePanic {
+    type Output = u64;
+    fn step(&mut self, cx: &mut rustfork::task::Cx<'_>) -> rustfork::task::Step<u64> {
+        match self.state {
+            0 => {
+                self.state = 1;
+                // Occupies the submitting worker; our continuation goes
+                // to its deque and is stolen by the idle second worker.
+                cx.fork(&mut self.a, SpinChild(Arc::clone(&self.release)));
+                rustfork::task::Step::Dispatch
+            }
+            1 => {
+                self.state = 2;
+                // Now running on the thief: the panicking child executes
+                // inside the steal-originated strand.
+                cx.fork(&mut self.b, PanicChild);
+                rustfork::task::Step::Dispatch
+            }
+            2 => {
+                self.state = 3;
+                rustfork::task::Step::Join
+            }
+            _ => rustfork::task::Step::Return(self.a + self.b),
+        }
+    }
+}
+
 #[test]
 fn workload_panic_is_contained() {
-    // Suppress the panic backtrace spew from the worker threads. Both
-    // panic scenarios share this one test so the hook swap cannot race
-    // a sibling test.
+    // Suppress the panic backtrace spew from the worker threads. All
+    // panic scenarios share this one test (plus the hook lock) so the
+    // hook swap cannot race a sibling test.
+    let _hook_guard = PANIC_HOOK_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let prev_hook = std::panic::take_hook();
     std::panic::set_hook(Box::new(|_| {}));
 
@@ -183,6 +241,85 @@ fn workload_panic_is_contained() {
         let m = pool.metrics();
         assert_eq!(m.stacks_poisoned, 1, "fork-scope panic must poison one stack");
     }
+
+    // Scenario 3 (ISSUE 4 regression): a panic inside a *steal-
+    // originated* strand. PR 2 only abandoned submission-originated
+    // roots, so this job's handle would hang forever; the containment
+    // path must now walk the panicked frame's parent chain to the
+    // root — which lives on the *victim's* stack — and abandon it
+    // without deallocating under the victim's live frames.
+    {
+        let pool = Pool::builder().workers(2).build();
+        let release = Arc::new(AtomicBool::new(false));
+        let h = pool.submit(StolenScopePanic {
+            state: 0,
+            release: Arc::clone(&release),
+            a: 0,
+            b: 0,
+        });
+        // join() must unblock (and panic) — not hang — even though the
+        // panic happened on the thief.
+        let joined =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || h.join()));
+        assert!(
+            joined.is_err(),
+            "steal-originated panic must abandon the job's remote root"
+        );
+        // Let the spinning sibling finish, then verify the pool still
+        // serves fresh jobs correctly.
+        release.store(true, Ordering::Release);
+        for round in 0..16 {
+            assert_eq!(
+                pool.run(Fib::new(12)),
+                fib_exact(12),
+                "round {round}: pool corrupted after steal-originated panic"
+            );
+        }
+        let m = pool.metrics();
+        assert_eq!(
+            m.stacks_poisoned, 1,
+            "only the thief's stack is poisoned (the root's stack is \
+             quarantined by the block disposer): {m:?}"
+        );
+    }
+
+    std::panic::set_hook(prev_hook);
+}
+
+#[test]
+fn poisoned_stacks_reclaimed_at_pool_drop() {
+    // ISSUE 4: panic-poisoned stacks used to be leaked forever. They
+    // are now quarantined and freed once the pool (and with it the
+    // shelf and all root blocks) is gone. Big first stacklets make the
+    // pre-fix leak (~64 KiB per panic) tower over concurrent test
+    // noise in the process-wide live-bytes counter.
+    let _hook_guard = PANIC_HOOK_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+
+    const BIG: usize = 64 * 1024;
+    const ROUNDS: usize = 12;
+    let before = rustfork::mem::live_bytes();
+    for _ in 0..ROUNDS {
+        let pool = Pool::builder().workers(1).first_stacklet(BIG).build();
+        let h = pool.submit(FnTask::new(|| -> u64 { panic!("leak me") }));
+        let joined =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || h.join()));
+        assert!(joined.is_err());
+        // The disposer quarantines on whichever thread releases the
+        // block's last refcount half; the worker's release can lag the
+        // join by a few instructions.
+        while pool.stack_shelf().quarantined_count() == 0 {
+            std::thread::yield_now();
+        }
+        drop(pool); // shelf drops with it → quarantined stack freed
+    }
+    let growth = rustfork::mem::live_bytes().saturating_sub(before);
+    assert!(
+        growth < (ROUNDS / 2) * BIG,
+        "poisoned stacks must be reclaimed at pool drop: \
+         {growth} live bytes grown over {ROUNDS} panics"
+    );
 
     std::panic::set_hook(prev_hook);
 }
