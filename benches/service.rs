@@ -2,18 +2,23 @@
 //! many small mixed workloads through the sharded [`JobServer`],
 //! comparing
 //!
-//! * per-job `submit` vs batched `submit_batch` (the wake-sweep and
-//!   MPSC tail-exchange amortization),
+//! * per-job `submit` vs batched `submit_batch_into` (the wake-sweep,
+//!   MPSC tail-exchange and submitter-arena amortizations),
 //! * round-robin vs least-loaded placement,
 //! * busy vs lazy sub-pool schedulers,
 //! * **skewed placement** (every job pinned to shard 0, a 256-job
 //!   window in flight) with cross-shard migration disabled vs enabled —
 //!   the overflow-spout layer should recover most of the idle shard's
-//!   throughput (target: ≥1.5x jobs/sec) while keeping allocs/job at 0.
+//!   throughput (target: ≥1.5x jobs/sec) while keeping allocs/job at 0,
+//! * **deep jobs** (2000-frame call chains, ~160 KiB of live stack per
+//!   job) with adaptive stacklet sizing disabled vs enabled — the
+//!   feedback-tuning layer should drive stacklet grows/job from ≥1 to
+//!   ~0 after warmup while keeping allocs/job at 0.
 //!
 //! Reported per configuration: jobs/sec, closed-loop p50/p99 job
 //! latency, warm steady-state heap allocations per job (should be 0 —
-//! the stack-recycling + fused-root-block layers), and peak heap bytes.
+//! the stack-recycling + fused-root-block layers), stacklet grows per
+//! job (should be ~0 with adaptive sizing), and peak heap bytes.
 //!
 //! Env: `RUSTFORK_JOBS` (default 5000), `RUSTFORK_BATCH` (default 64),
 //! `RUSTFORK_REPS` (default 3), `RUSTFORK_LATENCY_JOBS` (default 1000).
@@ -31,17 +36,18 @@ fn main() {
     );
     let report = run(&opts);
     println!(
-        "{:<34} {:>12} {:>10} {:>10} {:>11} {:>12}",
-        "configuration", "jobs/sec", "p50", "p99", "allocs/job", "peak"
+        "{:<34} {:>12} {:>10} {:>10} {:>11} {:>10} {:>12}",
+        "configuration", "jobs/sec", "p50", "p99", "allocs/job", "grows/job", "peak"
     );
     for c in &report.configs {
         println!(
-            "{:<34} {:>10.0}/s {:>8.1}us {:>8.1}us {:>11.3} {:>12}",
+            "{:<34} {:>10.0}/s {:>8.1}us {:>8.1}us {:>11.3} {:>10.3} {:>12}",
             c.name,
             c.jobs_per_sec,
             c.p50_us,
             c.p99_us,
             c.allocs_per_job,
+            c.stacklet_grows_per_job,
             rustfork::harness::fmt_bytes(c.peak_bytes),
         );
     }
@@ -52,6 +58,17 @@ fn main() {
             "# skewed-placement migration speedup: {:.2}x ({} jobs migrated, target >= 1.5x)",
             on.jobs_per_sec / off.jobs_per_sec.max(1e-9),
             on.jobs_migrated,
+        );
+    }
+    let fixed = report.configs.iter().find(|c| c.name.contains("fixed stacklets"));
+    let adaptive = report.configs.iter().find(|c| c.name.contains("adaptive stacklets"));
+    if let (Some(fixed), Some(adaptive)) = (fixed, adaptive) {
+        println!(
+            "# deep-job adaptive sizing: {:.3} -> {:.3} stacklet grows/job \
+             (hot size {} bytes, target ~0 after warmup)",
+            fixed.stacklet_grows_per_job,
+            adaptive.stacklet_grows_per_job,
+            adaptive.hot_stacklet_bytes,
         );
     }
 }

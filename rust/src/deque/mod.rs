@@ -9,9 +9,11 @@
 //!   single-consumer queue of task frames, one per worker, replacing a
 //!   global submission queue; also the mechanism behind explicit
 //!   scheduling (§III-D1). Intrusive (links through
-//!   [`crate::frame::FrameHeader::qnext`]) so pushing a frame performs
-//!   no heap allocation. [`submission::SubmissionQueue`] is the
-//!   general-purpose non-intrusive variant of the same algorithm.
+//!   [`crate::frame::FrameHeader::qnext_store`], overlaying the idle
+//!   join counter) so pushing a frame performs no heap allocation and
+//!   costs the header no extra field. [`submission::SubmissionQueue`]
+//!   is the general-purpose non-intrusive variant of the same
+//!   algorithm.
 
 pub mod chase_lev;
 pub mod submission;

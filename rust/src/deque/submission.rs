@@ -11,7 +11,8 @@
 //! * [`SubmissionQueue<T>`] — the general-purpose variant, one heap node
 //!   per element;
 //! * [`FrameQueue`] — the **intrusive** variant the runtime actually
-//!   uses: it links task frames through [`FrameHeader::qnext`], so
+//!   uses: it links task frames through their own headers (the link
+//!   overlays the idle join counter, [`FrameHeader::qnext_store`]), so
 //!   pushing a root frame performs **zero heap allocations** — the
 //!   load-bearing property of the allocation-free steady state (a heap
 //!   node per `push` would put `O(1)·T_heap` back on the per-job path
@@ -151,14 +152,17 @@ unsafe fn stub_resume(
 }
 
 /// An **intrusive** Vyukov MPSC queue of task frames, linked through
-/// [`FrameHeader::qnext`]. `push` is wait-free (one tail `swap`) and
-/// performs **no heap allocation**; the only node the queue ever owns is
-/// its stub, allocated once at construction.
+/// [`FrameHeader::qnext_store`] — the link word overlays each frame's
+/// join counter, which is provably idle while the frame is enqueued.
+/// `push` is wait-free (one tail `swap`) and performs **no heap
+/// allocation**; the only node the queue ever owns is its stub,
+/// allocated once at construction.
 ///
 /// Ownership contract (same as [`SubmissionQueue`]): a frame in the
 /// queue is owned by the queue; whoever pops it becomes its exclusive
-/// executor. The `qnext` link belongs to the queue from the moment
-/// `push` is called until the frame is returned by `pop`.
+/// executor. The overlaid link belongs to the queue from the moment
+/// `push` is called until the frame is returned by `pop`, which
+/// re-zeroes it.
 pub struct FrameQueue {
     /// Consumer end. Points at the stub, or at the next frame to return.
     head: AtomicPtr<FrameHeader>,
@@ -185,7 +189,6 @@ impl FrameQueue {
             steals: 0,
             join: JoinCounter::new(),
             root_hot: ptr::null(),
-            qnext: AtomicPtr::new(ptr::null_mut()),
         }));
         FrameQueue {
             head: AtomicPtr::new(stub),
@@ -195,14 +198,16 @@ impl FrameQueue {
     }
 
     /// Producer: enqueue from any thread. Wait-free, allocation-free.
+    /// The link overlays the frame's (idle) join counter — see
+    /// [`FrameHeader::qnext_store`].
     pub fn push(&self, FramePtr(f): FramePtr) {
         unsafe {
-            (*f).qnext.store(ptr::null_mut(), Ordering::Relaxed);
+            (*f).qnext_store(ptr::null_mut(), Ordering::Relaxed);
             let prev = self.tail.swap(f, Ordering::AcqRel);
             // Link the previous tail to us. A consumer arriving between
             // the swap and this store sees a transient "empty" —
             // acceptable: the scheduler re-polls.
-            (*prev).qnext.store(f, Ordering::Release);
+            (*prev).qnext_store(f, Ordering::Release);
         }
     }
 
@@ -215,26 +220,28 @@ impl FrameQueue {
             return;
         };
         unsafe {
-            (*first).qnext.store(ptr::null_mut(), Ordering::Relaxed);
+            (*first).qnext_store(ptr::null_mut(), Ordering::Relaxed);
             let mut last = first;
             for FramePtr(f) in iter {
-                (*f).qnext.store(ptr::null_mut(), Ordering::Relaxed);
-                (*last).qnext.store(f, Ordering::Relaxed);
+                (*f).qnext_store(ptr::null_mut(), Ordering::Relaxed);
+                (*last).qnext_store(f, Ordering::Relaxed);
                 last = f;
             }
             let prev = self.tail.swap(last, Ordering::AcqRel);
-            (*prev).qnext.store(first, Ordering::Release);
+            (*prev).qnext_store(first, Ordering::Release);
         }
     }
 
     /// Consumer: dequeue in FIFO order. Must only be called by the
     /// owning worker. May transiently return `None` while a producer is
     /// between its tail swap and link store (the scheduler re-polls).
+    /// Returned frames have their overlaid link **re-zeroed**, restoring
+    /// the join counter's scope-idle value before the frame resumes.
     pub fn pop(&self) -> Option<FramePtr> {
         unsafe {
             let stub = self.stub;
             let mut head = self.head.load(Ordering::Relaxed);
-            let mut next = (*head).qnext.load(Ordering::Acquire);
+            let mut next = (*head).qnext_load(Ordering::Acquire);
             if head == stub {
                 // Skip the stub; it stays detached until re-pushed.
                 if next.is_null() {
@@ -242,11 +249,12 @@ impl FrameQueue {
                 }
                 self.head.store(next, Ordering::Relaxed);
                 head = next;
-                next = (*head).qnext.load(Ordering::Acquire);
+                next = (*head).qnext_load(Ordering::Acquire);
             }
             if !next.is_null() {
                 // A successor exists: `head` can leave the queue.
                 self.head.store(next, Ordering::Relaxed);
+                (*head).qnext_clear();
                 return Some(FramePtr(head));
             }
             // `head` is the last linked node. It may only leave once the
@@ -259,9 +267,10 @@ impl FrameQueue {
             }
             // Park the stub behind `head` so `head` gains a successor.
             self.push(FramePtr(stub));
-            next = (*head).qnext.load(Ordering::Acquire);
+            next = (*head).qnext_load(Ordering::Acquire);
             if !next.is_null() {
                 self.head.store(next, Ordering::Relaxed);
+                (*head).qnext_clear();
                 return Some(FramePtr(head));
             }
             // Another producer's swap landed between our tail check and
@@ -279,7 +288,7 @@ impl FrameQueue {
                 // A real frame is waiting at the head.
                 return false;
             }
-            (*head).qnext.load(Ordering::Acquire).is_null()
+            (*head).qnext_load(Ordering::Acquire).is_null()
         }
     }
 }
@@ -420,7 +429,6 @@ mod tests {
             steals: 0,
             join: JoinCounter::new(),
             root_hot: ptr::null(),
-            qnext: AtomicPtr::new(ptr::null_mut()),
         }))
     }
 

@@ -35,7 +35,7 @@
 //! is back at 0, ready for the next scope, and the (exclusively owned)
 //! steal counter is reset by the resuming worker.
 
-use std::sync::atomic::{AtomicI64, AtomicPtr, Ordering};
+use std::sync::atomic::{AtomicI64, Ordering};
 
 use crate::stack::SegmentedStack;
 
@@ -100,6 +100,46 @@ impl JoinCounter {
     pub fn raw(&self) -> i64 {
         self.0.load(Ordering::SeqCst)
     }
+
+    // ------------------------------------------------------------------
+    // Queue-link overlay
+    // ------------------------------------------------------------------
+    //
+    // While a frame sits in an intrusive MPSC submission queue
+    // ([`crate::deque::FrameQueue`]) its join counter is provably idle:
+    // roots have not started executing and explicitly-rescheduled frames
+    // are outside any fork-join scope, so the counter is 0 in both
+    // cases. The same 8 bytes therefore double as the queue's `next`
+    // link — the link belongs to the queue from `push` until the frame
+    // is returned by `pop`, which re-zeroes the word so the counter is
+    // back at its scope-idle value before the frame resumes. This
+    // restores the pre-intrusive-queue frame size (the link used to be
+    // a ninth header field).
+
+    /// Store the overlaid queue link (queue-side only; see above).
+    /// Goes through the expose-provenance APIs rather than bare `as`
+    /// casts so the pointer round trip through the integer atomic stays
+    /// legal under Miri / strict-provenance analysis — this queue is
+    /// the crate's most safety-critical structure and must remain
+    /// checkable by those tools.
+    #[inline]
+    pub fn link_store(&self, p: *mut FrameHeader, order: Ordering) {
+        self.0.store(p.expose_provenance() as i64, order)
+    }
+
+    /// Load the overlaid queue link (queue-side only).
+    #[inline]
+    pub fn link_load(&self, order: Ordering) -> *mut FrameHeader {
+        std::ptr::with_exposed_provenance_mut(self.0.load(order) as usize)
+    }
+
+    /// Re-zero the word after the frame leaves a queue, restoring the
+    /// scope-idle counter value. The popping worker is the one that
+    /// will execute (or re-route) the frame, so relaxed suffices.
+    #[inline]
+    pub fn link_clear(&self) {
+        self.0.store(0, Ordering::Relaxed)
+    }
 }
 
 impl Default for JoinCounter {
@@ -127,7 +167,10 @@ pub struct FrameHeader {
     /// executing (or having just stolen) the frame touches it; ownership
     /// hand-offs synchronize via the deque CAS / join counter.
     pub steals: u32,
-    /// Wait-free split join counter for the current scope.
+    /// Wait-free split join counter for the current scope. While the
+    /// frame sits in an intrusive submission queue the counter is idle
+    /// (scope at 0) and this word doubles as the queue link — see
+    /// [`Self::qnext_store`].
     pub join: JoinCounter,
     /// Completion state for root tasks (null otherwise): the hot part of
     /// the **fused root block** (`rt::root::RootHot` — signal + 2-count
@@ -136,13 +179,17 @@ pub struct FrameHeader {
     /// in the final awaitable, the submitter's handle the other; the
     /// last release recycles the whole stack (see [`crate::rt::root`]).
     pub root_hot: *const crate::rt::root::RootHot,
-    /// Intrusive link for the per-worker MPSC submission queue
-    /// ([`crate::deque::FrameQueue`]). Owned by the queue while this
-    /// frame is enqueued (root submission, explicit `ScheduleOn`
-    /// migration); meaningless otherwise. Keeping the link in the header
-    /// makes `submit` node-allocation-free.
-    pub qnext: AtomicPtr<FrameHeader>,
 }
+
+/// The header must stay at its pre-intrusive-queue size: the MPSC
+/// submission link is **overlaid** on the join counter (unused while a
+/// frame is enqueued, re-zeroed at pop — see [`JoinCounter::link_store`])
+/// instead of costing every frame a ninth 8-byte field.
+#[cfg(target_pointer_width = "64")]
+const _: () = assert!(
+    std::mem::size_of::<FrameHeader>() == 56,
+    "FrameHeader grew: the submission-queue link must overlay the join counter",
+);
 
 impl FrameHeader {
     /// Number of signals expected at the next join = continuation steals
@@ -150,6 +197,32 @@ impl FrameHeader {
     #[inline]
     pub fn expected_signals(&self) -> u32 {
         self.steals
+    }
+
+    /// Intrusive link for the per-worker MPSC submission queue
+    /// ([`crate::deque::FrameQueue`]), **overlaid on the join counter**
+    /// (idle while a frame is enqueued: roots have not started and
+    /// rescheduled frames are outside any fork-join scope). Owned by the
+    /// queue from `push` until `pop` returns the frame; `pop` re-zeroes
+    /// it. Keeping the link inside the header makes `submit`
+    /// node-allocation-free without growing the frame.
+    #[inline]
+    pub fn qnext_store(&self, p: *mut FrameHeader, order: Ordering) {
+        self.join.link_store(p, order)
+    }
+
+    /// Load the overlaid submission-queue link (see
+    /// [`Self::qnext_store`]).
+    #[inline]
+    pub fn qnext_load(&self, order: Ordering) -> *mut FrameHeader {
+        self.join.link_load(order)
+    }
+
+    /// Restore the join counter to its scope-idle value after this frame
+    /// left a submission queue.
+    #[inline]
+    pub fn qnext_clear(&self) {
+        self.join.link_clear()
     }
 }
 
@@ -262,7 +335,24 @@ mod tests {
     #[test]
     fn header_layout_reasonable() {
         // The header should stay compact — it is per-task overhead
-        // (paper: "average task size is a few hundred bytes").
-        assert!(std::mem::size_of::<FrameHeader>() <= 64);
+        // (paper: "average task size is a few hundred bytes"). The
+        // submission-queue link overlays the join counter, so the header
+        // must not exceed its pre-intrusive-queue 56 bytes (also
+        // asserted at compile time on 64-bit targets).
+        assert!(std::mem::size_of::<FrameHeader>() <= 56);
+    }
+
+    #[test]
+    fn join_counter_link_overlay_round_trips() {
+        let j = JoinCounter::new();
+        let mut dummy = 0u64;
+        let p = &mut dummy as *mut u64 as *mut FrameHeader;
+        j.link_store(p, Ordering::Release);
+        assert_eq!(j.link_load(Ordering::Acquire), p);
+        j.link_clear();
+        assert_eq!(j.link_load(Ordering::Acquire), std::ptr::null_mut());
+        // After the clear the counter is back at its scope-idle value.
+        assert!(!j.signal());
+        assert!(j.arrive(1));
     }
 }

@@ -1,7 +1,8 @@
 //! The job-service benchmark driver, shared by `benches/service.rs` and
 //! `repro bench --json`.
 //!
-//! Measures, per configuration (scheduler × placement × batching):
+//! Measures, per configuration (scheduler × placement × batching ×
+//! tuning):
 //!
 //! * **throughput** — jobs/sec over the seeded [`MixedJob`] stream (each
 //!   result checked against its serial oracle);
@@ -9,8 +10,16 @@
 //! * **allocs/job** — heap allocation events per job in the warm steady
 //!   state, via [`crate::mem::alloc_count`] deltas (the quantity the
 //!   stack-recycling + fused-root-block layers drive to zero);
+//! * **stacklet grows/job** — stacklet-overflow heap allocations per
+//!   job over the measured pass (the adaptive-sizing feedback signal;
+//!   ~0 after warmup with the tuner on, ≥1 for deep jobs with it off);
 //! * **peak bytes** — [`MemScope`] high-water mark over the throughput
 //!   run.
+//!
+//! The **deep-job pair** drives [`DeepJob`] chains whose stack
+//! footprint dwarfs the default first stacklet, with adaptive stacklet
+//! sizing off vs on — the headline comparison for the feedback-tuning
+//! layer, mirroring how the skewed pair showcases migration.
 //!
 //! [`to_json`] renders the report machine-readably; the launcher's
 //! `repro bench --json <path>` writes it to seed the perf trajectory
@@ -18,9 +27,11 @@
 
 use crate::mem::MemScope;
 use crate::numa::NumaTopology;
+use crate::rt::pool::RootHandle;
 use crate::sched::SchedulerKind;
 use crate::service::{
-    jobs::MixedJob, JobServer, LeastLoaded, PinnedShard, PlacementPolicy, RoundRobin,
+    jobs::DeepJob, jobs::MixedJob, JobServer, LeastLoaded, PinnedShard, PlacementPolicy,
+    RoundRobin,
 };
 
 /// Knobs for one bench invocation (env-overridable through
@@ -75,6 +86,15 @@ pub struct ConfigReport {
     pub p99_us: f64,
     /// Warm steady-state heap allocation events per job.
     pub allocs_per_job: f64,
+    /// Stacklet-overflow (grow) heap allocations per job over the
+    /// measured latency pass — the adaptive-sizing signal.
+    pub stacklet_grows_per_job: f64,
+    /// Gauge: the hot first-stacklet capacity adaptive sizing settled
+    /// on (0 with the tuner off).
+    pub hot_stacklet_bytes: u64,
+    /// Park-aware routed wakes that lost their flag race over the whole
+    /// configuration run.
+    pub wake_misses: u64,
     /// Peak heap bytes above baseline during the throughput run.
     pub peak_bytes: usize,
     /// Whether cross-shard migration was enabled.
@@ -97,15 +117,19 @@ pub struct ServiceBenchReport {
 
 /// Drive `jobs` seeded MixedJobs through `server`, batched (batch > 1)
 /// or one by one (batch == 1); returns the number of result mismatches.
+/// Batched waves go through [`JobServer::submit_batch_into`] with
+/// reused buffers, so the steady-state wave allocates nothing.
 pub fn drive(server: &JobServer, jobs: u64, batch: usize) -> u64 {
     let mut failures = 0;
+    let mut wave_jobs: Vec<MixedJob> = Vec::with_capacity(batch.max(1));
+    let mut handles: Vec<RootHandle<u64>> = Vec::with_capacity(batch.max(1));
     let mut seed = 0u64;
     while seed < jobs {
         let wave = batch.min((jobs - seed) as usize) as u64;
         if batch > 1 {
-            let handles =
-                server.submit_batch((seed..seed + wave).map(MixedJob::from_seed).collect());
-            for (s, h) in (seed..seed + wave).zip(handles) {
+            wave_jobs.extend((seed..seed + wave).map(MixedJob::from_seed));
+            server.submit_batch_into(&mut wave_jobs, &mut handles);
+            for (s, h) in (seed..seed + wave).zip(handles.drain(..)) {
                 failures += u64::from(h.join() != MixedJob::expected(s));
             }
         } else {
@@ -137,6 +161,28 @@ pub fn drive_windowed(server: &JobServer, jobs: u64, window: usize) -> u64 {
             failures += u64::from(h.join() != MixedJob::expected(s));
         }
         seed += wave;
+    }
+    failures
+}
+
+/// Deep-chain driver: `window` [`DeepJob`]s of `depth` nested frames in
+/// flight at a time. The per-job stack footprint (~80 bytes × depth)
+/// dwarfs the default first stacklet, so each job re-grows its stack
+/// unless adaptive sizing keeps recycled stacks hot. Returns the number
+/// of result mismatches.
+pub fn drive_deep(server: &JobServer, jobs: u64, window: usize, depth: u32) -> u64 {
+    let mut failures = 0;
+    let mut handles = Vec::with_capacity(window.max(1));
+    let mut done = 0u64;
+    while done < jobs {
+        let wave = (window.max(1) as u64).min(jobs - done);
+        for _ in 0..wave {
+            handles.push(server.submit(DeepJob::new(depth)));
+        }
+        for h in handles.drain(..) {
+            failures += u64::from(h.join() != DeepJob::expected(depth));
+        }
+        done += wave;
     }
     failures
 }
@@ -195,6 +241,12 @@ struct BenchConfig {
     /// `Some(w)`: open-window driver with `w` in-flight jobs.
     window: Option<usize>,
     migration: bool,
+    /// `Some(depth)`: drive [`DeepJob`] chains instead of MixedJobs
+    /// (uses the window driver; `window` must be set).
+    deep: Option<u32>,
+    /// Adaptive stacklet sizing on/off (the deep pair toggles this; all
+    /// other configurations run with the tuners at their defaults).
+    adaptive_stacklets: bool,
 }
 
 fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
@@ -209,6 +261,7 @@ fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
         .scheduler(cfg.sched)
         .policy_boxed(cfg.policy.boxed())
         .migration(cfg.migration)
+        .adaptive_stacklets(cfg.adaptive_stacklets)
         // Skewed configurations should demonstrate migration promptly.
         .migration_hysteresis(if cfg.policy == PolicyKind::Pinned0 {
             2
@@ -221,6 +274,15 @@ fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
 /// In-flight window for the skewed-placement configurations.
 const SKEW_WINDOW: usize = 256;
 
+/// In-flight window for the deep-job configurations (small: the point
+/// is stack depth, not queue pressure).
+const DEEP_WINDOW: usize = 16;
+
+/// Nested-call depth of the deep-job configurations: ~80 bytes/frame ×
+/// 2000 ≈ 160 KiB of live stack per job, 40× the default first
+/// stacklet.
+const DEEP_DEPTH: u32 = 2_000;
+
 /// Run the full configuration matrix and report.
 pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
     let configs: Vec<BenchConfig> = vec![
@@ -231,6 +293,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             batch: 1,
             window: None,
             migration: true,
+            deep: None,
+            adaptive_stacklets: true,
         },
         BenchConfig {
             label: "lazy + rr, batched",
@@ -239,6 +303,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             batch: opts.batch,
             window: None,
             migration: true,
+            deep: None,
+            adaptive_stacklets: true,
         },
         BenchConfig {
             label: "lazy + least-loaded, batched",
@@ -247,6 +313,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             batch: opts.batch,
             window: None,
             migration: true,
+            deep: None,
+            adaptive_stacklets: true,
         },
         BenchConfig {
             label: "busy + rr, batched",
@@ -255,6 +323,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             batch: opts.batch,
             window: None,
             migration: true,
+            deep: None,
+            adaptive_stacklets: true,
         },
         // The skewed pair: identical traffic (everything placed on
         // shard 0, SKEW_WINDOW jobs in flight), migration off vs on —
@@ -266,6 +336,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             batch: 1,
             window: Some(SKEW_WINDOW),
             migration: false,
+            deep: None,
+            adaptive_stacklets: true,
         },
         BenchConfig {
             label: "skewed shard0 + migration",
@@ -274,6 +346,31 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             batch: 1,
             window: Some(SKEW_WINDOW),
             migration: true,
+            deep: None,
+            adaptive_stacklets: true,
+        },
+        // The deep pair: identical deep-chain traffic, adaptive
+        // stacklet sizing off vs on — the headline comparison for the
+        // feedback-tuning layer (stacklet_grows/job ≥ 1 vs ~0).
+        BenchConfig {
+            label: "deep jobs, fixed stacklets",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::RoundRobin,
+            batch: 1,
+            window: Some(DEEP_WINDOW),
+            migration: true,
+            deep: Some(DEEP_DEPTH),
+            adaptive_stacklets: false,
+        },
+        BenchConfig {
+            label: "deep jobs + adaptive stacklets",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::RoundRobin,
+            batch: 1,
+            window: Some(DEEP_WINDOW),
+            migration: true,
+            deep: Some(DEEP_DEPTH),
+            adaptive_stacklets: true,
         },
     ];
     let mut out = Vec::new();
@@ -290,33 +387,54 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
         // in measure()'s first call.
         let scope = MemScope::begin();
         let m = super::measure(opts.reps, 0.2, || {
-            let failures = match cfg.window {
-                Some(w) => drive_windowed(&server, opts.jobs, w),
-                None => drive(&server, opts.jobs, cfg.batch),
+            let failures = match (cfg.deep, cfg.window) {
+                (Some(depth), w) => drive_deep(&server, opts.jobs, w.unwrap_or(1), depth),
+                (None, Some(w)) => drive_windowed(&server, opts.jobs, w),
+                (None, None) => drive(&server, opts.jobs, cfg.batch),
             };
             assert_eq!(failures, 0, "result mismatches under {label}");
         });
         let peak_bytes = scope.peak_bytes();
 
-        // Latency + steady-state allocs/job, measured on the submission
-        // path this configuration actually uses: per-job configs drive
-        // `submit` closed-loop (the zero-alloc steady state); batched
-        // configs drive `submit_batch` in waves, so their allocs/job
-        // honestly include the batch path's bookkeeping (handle vectors,
-        // per-wave grouping) and a job's latency runs from its wave's
-        // submission to its own join; windowed (skewed) configs measure
-        // each job from its own submit to its own join with the window
-        // in flight — and with all buffers pre-reserved, so the alloc
-        // figure isolates the migration machinery (spout push, claim,
-        // cross-shard execute), which must stay at 0. The throughput
-        // run above warmed every pool. Latencies in µs.
+        // Latency + steady-state allocs/job + stacklet grows/job,
+        // measured on the submission path this configuration actually
+        // uses: per-job configs drive `submit` closed-loop (the
+        // zero-alloc steady state); batched configs drive
+        // `submit_batch_into` in waves with reused buffers, so their
+        // allocs/job honestly measure the arena-backed batch path and a
+        // job's latency runs from its wave's submission to its own
+        // join; windowed (skewed / deep) configs measure each job from
+        // its own submit to its own join with the window in flight —
+        // all buffers pre-reserved, so the alloc figure isolates the
+        // machinery under test (migration spouts, adaptive sizing),
+        // which must stay at 0 once warm. The throughput run above
+        // warmed every pool and tuner register. Latencies in µs.
         let mut lat = Vec::with_capacity(opts.latency_jobs as usize);
-        let mut window_buf: Vec<(u64, std::time::Instant, crate::rt::pool::RootHandle<u64>)> =
+        let mut window_buf: Vec<(u64, std::time::Instant, RootHandle<u64>)> =
             Vec::with_capacity(cfg.window.unwrap_or(0));
+        let mut wave_jobs: Vec<MixedJob> = Vec::with_capacity(cfg.batch);
+        let mut wave_handles: Vec<RootHandle<u64>> = Vec::with_capacity(cfg.batch);
+        let grows_before = server.metrics().stacklet_grows;
         let alloc_before = crate::mem::alloc_count();
         let mut seed = 0u64;
         while seed < opts.latency_jobs {
-            if let Some(w) = cfg.window {
+            if let Some(depth) = cfg.deep {
+                let w = cfg.window.unwrap_or(1);
+                let wave = (w as u64).min(opts.latency_jobs - seed);
+                for _ in 0..wave {
+                    window_buf.push((
+                        depth as u64,
+                        std::time::Instant::now(),
+                        server.submit(DeepJob::new(depth)),
+                    ));
+                }
+                for (d, t0, h) in window_buf.drain(..) {
+                    let got = h.join();
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(got, d + 1, "deep latency pass mismatch");
+                }
+                seed += wave;
+            } else if let Some(w) = cfg.window {
                 let wave = (w as u64).min(opts.latency_jobs - seed);
                 for s in seed..seed + wave {
                     window_buf.push((
@@ -334,9 +452,9 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             } else if cfg.batch > 1 {
                 let wave = cfg.batch.min((opts.latency_jobs - seed) as usize) as u64;
                 let t0 = std::time::Instant::now();
-                let handles = server
-                    .submit_batch((seed..seed + wave).map(MixedJob::from_seed).collect());
-                for (s, h) in (seed..seed + wave).zip(handles) {
+                wave_jobs.extend((seed..seed + wave).map(MixedJob::from_seed));
+                server.submit_batch_into(&mut wave_jobs, &mut wave_handles);
+                for (s, h) in (seed..seed + wave).zip(wave_handles.drain(..)) {
                     let got = h.join();
                     lat.push(t0.elapsed().as_secs_f64() * 1e6);
                     assert_eq!(got, MixedJob::expected(s), "latency pass mismatch");
@@ -353,6 +471,9 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
         }
         let allocs_per_job = (crate::mem::alloc_count() - alloc_before) as f64
             / opts.latency_jobs.max(1) as f64;
+        let end_metrics = server.metrics();
+        let stacklet_grows_per_job = (end_metrics.stacklet_grows - grows_before) as f64
+            / opts.latency_jobs.max(1) as f64;
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
         out.push(ConfigReport {
@@ -364,9 +485,12 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             p50_us: percentile(&lat, 0.50),
             p99_us: percentile(&lat, 0.99),
             allocs_per_job,
+            stacklet_grows_per_job,
+            hot_stacklet_bytes: end_metrics.hot_stacklet_bytes,
+            wake_misses: end_metrics.wake_misses,
             peak_bytes,
             migration: server.migration_enabled(),
-            jobs_migrated: server.metrics().jobs_migrated,
+            jobs_migrated: end_metrics.jobs_migrated,
         });
     }
     ServiceBenchReport { jobs: opts.jobs, workers: opts.workers, configs: out }
@@ -382,7 +506,7 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"service\",\n");
-    s.push_str("  \"schema\": 1,\n");
+    s.push_str("  \"schema\": 2,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str(&format!("  \"jobs\": {},\n", r.jobs));
     s.push_str(&format!("  \"workers\": {},\n", r.workers));
@@ -405,6 +529,15 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
         s.push_str(&format!("      \"p50_us\": {:.2},\n", c.p50_us));
         s.push_str(&format!("      \"p99_us\": {:.2},\n", c.p99_us));
         s.push_str(&format!("      \"allocs_per_job\": {:.3},\n", c.allocs_per_job));
+        s.push_str(&format!(
+            "      \"stacklet_grows_per_job\": {:.3},\n",
+            c.stacklet_grows_per_job
+        ));
+        s.push_str(&format!(
+            "      \"hot_stacklet_bytes\": {},\n",
+            c.hot_stacklet_bytes
+        ));
+        s.push_str(&format!("      \"wake_misses\": {},\n", c.wake_misses));
         s.push_str(&format!("      \"peak_bytes\": {}\n", c.peak_bytes));
         s.push_str(if i + 1 == r.configs.len() { "    }\n" } else { "    },\n" });
     }
@@ -437,7 +570,7 @@ mod tests {
             latency_jobs: 10,
         };
         let report = run(&opts);
-        assert_eq!(report.configs.len(), 6);
+        assert_eq!(report.configs.len(), 8);
         for c in &report.configs {
             assert!(c.jobs_per_sec > 0.0, "{}: zero throughput", c.name);
             assert!(c.p99_us >= c.p50_us, "{}: p99 < p50", c.name);
@@ -447,10 +580,20 @@ mod tests {
         let on = report.configs.iter().find(|c| c.name.contains("+ migration"));
         assert!(off.is_some_and(|c| !c.migration));
         assert!(on.is_some_and(|c| c.migration));
+        // The deep pair must exist with adaptive sizing off/on: the
+        // "off" side reports no hot size, the "on" side a learned one.
+        let fixed = report.configs.iter().find(|c| c.name.contains("fixed stacklets"));
+        let adaptive =
+            report.configs.iter().find(|c| c.name.contains("adaptive stacklets"));
+        assert!(fixed.is_some_and(|c| c.hot_stacklet_bytes == 0));
+        assert!(adaptive.is_some_and(|c| c.hot_stacklet_bytes > 0));
         let json = to_json(&report, true);
         assert!(json.contains("\"bench\": \"service\""));
         assert!(json.contains("\"allocs_per_job\""));
         assert!(json.contains("\"jobs_migrated\""));
+        assert!(json.contains("\"stacklet_grows_per_job\""));
+        assert!(json.contains("\"hot_stacklet_bytes\""));
+        assert!(json.contains("\"wake_misses\""));
         // Balanced braces/brackets as a cheap well-formedness check.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());

@@ -148,6 +148,48 @@
 //! traffic; the skewed-placement configurations of `benches/service.rs`
 //! measure the throughput recovery, with allocs/job still 0.
 //!
+//! ## Feedback tuning
+//!
+//! Static knobs assume the workload: a fixed first-stacklet size
+//! assumes shallow jobs, a fixed migration hysteresis assumes one skew
+//! profile, index-ordered wakes assume any parked worker is as good as
+//! another. [`rt::tune`] closes three feedback loops over cheap
+//! per-worker signals — **plain atomics, no heap, no locks** on any hot
+//! path, so the steady state stays at 0 allocs/job with every tuner on:
+//!
+//! * **Adaptive stacklet sizing** (signal: per-job peak stack footprint
+//!   and stacklet-grow events, sampled at root completion → actuator:
+//!   the [`stack::StackShelf`] reshapes recycled stacks to the learned
+//!   p99 **hot size**, and `Pool::new_root` / the thief-side
+//!   `fresh_stack` request it for fresh stacks). Without it a recycled
+//!   stack is always trimmed back to the default first stacklet, so
+//!   every *deep* job re-pays Eq. (5)'s `O(log2 n)` geometric growth —
+//!   per job instead of amortized. After warmup `stacklet_grows`/job
+//!   drops to ~0 (`benches/service.rs` deep-job pair; regression-gated
+//!   by the deep scenario in `rust/tests/alloc_regression.rs`).
+//!   Disable: [`rt::pool::PoolBuilder::adaptive_stacklets`] /
+//!   [`service::JobServerBuilder::adaptive_stacklets`].
+//! * **Self-tuning migration hysteresis** (signal: the spout-claim
+//!   miss : cross-shard claim ratio → actuator: the diversion margin
+//!   moves within [`service::JobServerBuilder::migration_hysteresis_bounds`]).
+//!   Misses dominating widens the margin (diversion was thrash); clean
+//!   claim flow tightens it (react to skew sooner). Disable:
+//!   [`service::JobServerBuilder::self_tuning_hysteresis`].
+//! * **Park-aware wake routing** (signal: per-worker park timestamps →
+//!   actuator: `wake_one`, per-job submission targeting and the
+//!   migration hub's spout wakes prefer the **longest-parked**
+//!   worker/shard within each NUMA distance class — Eq. (6)'s locality
+//!   hierarchy applied to wakes). A routed wake only ever targets a
+//!   worker that was parked at decision time; `wake_misses` counts the
+//!   ones that raced awake. Disable:
+//!   [`rt::pool::PoolBuilder::park_aware_wakes`] /
+//!   [`service::JobServerBuilder::park_aware_wakes`].
+//!
+//! With all three tuners off the runtime is behaviourally the untuned
+//! runtime (asserted by `rust/tests/tune.rs` conformance checksums).
+//! `stacklet_grows`, `hot_stacklet_bytes` and `wake_misses` in
+//! [`metrics::MetricsSnapshot`] expose the loops' state.
+//!
 //! ## Panic containment
 //!
 //! A panic unwinding out of a workload's `step` never kills a worker: a

@@ -111,6 +111,23 @@ pub struct MetricsSnapshot {
     /// Spout polls that saw divertible work but lost the claim race
     /// (see `WorkerCounters::migration_misses`).
     pub migration_misses: u64,
+    /// Stacklet-overflow (grow) heap allocations observed at root
+    /// completion — the adaptive-sizing feedback signal
+    /// ([`crate::rt::tune::FootprintTuner`]). Sourced from the stack
+    /// shelf, which sibling shards of a job server share: the server
+    /// reports it once, not per shard. Adaptive sizing drives this to
+    /// ~0 per job after warmup.
+    pub stacklet_grows: u64,
+    /// Gauge: the hot first-stacklet capacity adaptive sizing currently
+    /// targets (0 while the actuator is disabled). [`Self::merge`]
+    /// takes the max and [`Self::since`] keeps the current value —
+    /// gauges do not difference.
+    pub hot_stacklet_bytes: u64,
+    /// Park-aware routed wakes whose chosen worker was no longer parked
+    /// by notify time (lost the flag CAS; see `rt::tune`). A high rate
+    /// means wake routing is racing itself — the fallback scan still
+    /// wakes someone, so this costs retries, not correctness.
+    pub wake_misses: u64,
 }
 
 impl MetricsSnapshot {
@@ -137,6 +154,9 @@ impl MetricsSnapshot {
         self.stacks_poisoned += other.stacks_poisoned;
         self.jobs_migrated += other.jobs_migrated;
         self.migration_misses += other.migration_misses;
+        self.stacklet_grows += other.stacklet_grows;
+        self.hot_stacklet_bytes = self.hot_stacklet_bytes.max(other.hot_stacklet_bytes);
+        self.wake_misses += other.wake_misses;
     }
 
     /// Difference against an earlier snapshot.
@@ -157,6 +177,9 @@ impl MetricsSnapshot {
             stacks_poisoned: self.stacks_poisoned - earlier.stacks_poisoned,
             jobs_migrated: self.jobs_migrated - earlier.jobs_migrated,
             migration_misses: self.migration_misses - earlier.migration_misses,
+            stacklet_grows: self.stacklet_grows - earlier.stacklet_grows,
+            hot_stacklet_bytes: self.hot_stacklet_bytes,
+            wake_misses: self.wake_misses - earlier.wake_misses,
         }
     }
 }

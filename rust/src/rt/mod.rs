@@ -9,6 +9,10 @@
 //!   frame in one placement allocation on a recycled stack, making the
 //!   steady-state submit→execute→complete→join cycle heap-allocation
 //!   free.
+//! * [`tune`] — feedback tuning: per-worker signals (job stack
+//!   footprints, stacklet grows, migration miss ratios, park
+//!   timestamps) sampled into plain-atomic EMA registers and fed back
+//!   into stacklet sizing, migration hysteresis and wake routing.
 //!
 //! ## Ownership invariants (load-bearing; see the proofs in worker.rs)
 //!
@@ -26,6 +30,7 @@
 
 pub mod pool;
 pub mod root;
+pub mod tune;
 pub mod worker;
 
 pub use pool::{Pool, PoolBuilder};

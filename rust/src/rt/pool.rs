@@ -162,8 +162,8 @@ pub struct Shared {
     /// Per-worker work-stealing deques of continuations.
     pub deques: Vec<Deque<FramePtr>>,
     /// Per-worker intrusive MPSC submission queues (no global queue,
-    /// §III-D1; links through `FrameHeader::qnext`, so pushes are
-    /// allocation-free).
+    /// §III-D1; links overlay each frame's idle join counter, so pushes
+    /// are allocation-free without growing the header).
     pub submissions: Vec<FrameQueue>,
     /// Per-worker parkers (lazy scheduler sleep/wake).
     pub parkers: Vec<Parker>,
@@ -208,6 +208,24 @@ pub struct Shared {
     /// Abandonment hook (see [`AbandonHook`]). `None` for standalone
     /// pools.
     pub on_abandon: Option<Arc<AbandonHook>>,
+    /// Pool construction instant — the epoch the park timestamps below
+    /// are measured against.
+    pub epoch: std::time::Instant,
+    /// Per-worker park timestamps: µs since [`Self::epoch`] (never 0)
+    /// while the worker is parked, 0 while awake. Written by the lazy
+    /// idle policy around its park; read by the park-aware wake routing
+    /// ([`crate::rt::tune::pick_coldest`]) — the smallest stamp is the
+    /// longest-parked (coldest) worker.
+    pub park_since: Vec<CachePadded<AtomicU64>>,
+    /// Park-aware wake routing actuator gate
+    /// ([`PoolBuilder::park_aware_wakes`]). When false every wake takes
+    /// the pre-tuning index-ordered scan and submission targets stay
+    /// purely round-robin.
+    pub park_aware: bool,
+    /// Routed (park-aware) wake attempts whose chosen worker was no
+    /// longer parked by notify time (lost the flag CAS) — the
+    /// `wake_misses` metric.
+    pub wake_misses: AtomicU64,
 }
 
 impl Shared {
@@ -225,6 +243,15 @@ impl Shared {
     fn wake_one_slow(&self, from: usize) {
         let node = self.topology.node_of(from);
         let p = self.deques.len();
+        if self.park_aware {
+            // Prefer the longest-parked worker (coldest deque) within
+            // each locality class — Eq. (6)'s hierarchy applied to wake
+            // routing (rt::tune). Falls through to the plain scan when
+            // the chosen workers lose their flag CAS (racing wakes).
+            if self.wake_coldest_in(Some(node)) || self.wake_coldest_in(None) {
+                return;
+            }
+        }
         // Same node first, then the rest.
         for w in (0..p).filter(|&w| self.topology.node_of(w) == node) {
             if self.try_wake(w) {
@@ -236,6 +263,73 @@ impl Shared {
                 return;
             }
         }
+    }
+
+    /// Park-aware targeted wake: pick the longest-parked worker (on
+    /// `node`, or anywhere when `None`) and wake it. At most two
+    /// attempts — a chosen worker that lost its parked flag in the
+    /// meantime counts a `wake_misses` and the pick re-runs once.
+    /// Returns false when no parked candidate exists (never wakes a
+    /// non-parked worker).
+    fn wake_coldest_in(&self, node: Option<usize>) -> bool {
+        for _attempt in 0..2 {
+            let Some(w) = crate::rt::tune::pick_coldest(
+                self.park_since.len(),
+                |i| self.park_since[i].load(Ordering::Relaxed),
+                |i| node.is_none_or(|n| self.topology.node_of(i) == n),
+            ) else {
+                return false;
+            };
+            if self.try_wake(w) {
+                return true;
+            }
+            self.wake_misses.fetch_add(1, Ordering::Relaxed);
+            // The stale stamp would re-elect the same worker: clear it
+            // (the owner re-publishes on its next park).
+            self.park_since[w].store(0, Ordering::Relaxed);
+        }
+        false
+    }
+
+    /// Park-aware wake with no locality preference, for external wake
+    /// sources (the job server's spout routing): wake the pool's
+    /// longest-parked worker. Returns false when nobody is parked.
+    pub fn wake_coldest(&self) -> bool {
+        if self.sleepers.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        self.wake_coldest_in(None)
+    }
+
+    /// Smallest (oldest) park stamp over this pool's workers, if any —
+    /// how long the pool's coldest worker has been parked. Used by the
+    /// job server to rank shards for park-aware spout wakes.
+    pub fn coldest_park_stamp(&self) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for ts in &self.park_since {
+            let t = ts.load(Ordering::Relaxed);
+            if t != 0 && best.is_none_or(|b| t < b) {
+                best = Some(t);
+            }
+        }
+        best
+    }
+
+    /// Wake `target` after pushing directly to its submission queue.
+    /// The eager flag clear keeps `wake_one` from wasting its CAS on a
+    /// worker that is already being woken; the latched parker closes
+    /// the race with a concurrent park; the park-stamp clear steers the
+    /// next park-aware pick to another worker (the owner re-publishes
+    /// on its next park). Used by the pool's submission paths and by
+    /// the job server's home-drain fast path, which must wake **every**
+    /// worker it pushed to (submission queues are single-consumer, so a
+    /// frame on a still-parked worker would otherwise wait out that
+    /// worker's park backstop).
+    #[inline]
+    pub(crate) fn wake_submission_target(&self, target: usize) {
+        self.park_since[target].store(0, Ordering::Relaxed);
+        self.parked_flag[target].store(false, Ordering::Release);
+        self.parkers[target].notify();
     }
 
     fn try_wake(&self, w: usize) -> bool {
@@ -269,6 +363,8 @@ pub struct PoolBuilder {
     shelf: Option<Arc<StackShelf>>,
     external: Option<Arc<dyn ExternalWork>>,
     on_abandon: Option<Arc<AbandonHook>>,
+    adaptive_stacklets: bool,
+    park_aware: bool,
 }
 
 impl PoolBuilder {
@@ -283,6 +379,8 @@ impl PoolBuilder {
             shelf: None,
             external: None,
             on_abandon: None,
+            adaptive_stacklets: true,
+            park_aware: true,
         }
     }
 
@@ -347,6 +445,28 @@ impl PoolBuilder {
         self
     }
 
+    /// Enable or disable **adaptive stacklet sizing** (default: on).
+    /// When on, the pool's stack shelf learns the p99 per-job stack
+    /// footprint from root completions and recycled/fresh stacks carry
+    /// a first stacklet of that hot size, so steady-state deep jobs
+    /// stop re-growing their stacks (see [`crate::rt::tune`]). Only
+    /// applies to the pool's private shelf — a shelf passed through
+    /// [`Self::stack_shelf`] carries its own tuner configuration.
+    pub fn adaptive_stacklets(mut self, enabled: bool) -> Self {
+        self.adaptive_stacklets = enabled;
+        self
+    }
+
+    /// Enable or disable **park-aware wake routing** (default: on).
+    /// When on, `wake_one` and per-job submission targeting prefer the
+    /// longest-parked worker (coldest deque) instead of the lowest
+    /// index / plain round-robin (see [`crate::rt::tune`]). When off,
+    /// wake and submission routing behave exactly as before.
+    pub fn park_aware_wakes(mut self, enabled: bool) -> Self {
+        self.park_aware = enabled;
+        self
+    }
+
     /// Spawn the workers and return the pool.
     pub fn build(self) -> Pool {
         let p = self.workers;
@@ -367,9 +487,13 @@ impl PoolBuilder {
         for w in 0..p {
             *awake_in_node[topology.node_of(w)].get_mut() += 1;
         }
-        let shelf = self
-            .shelf
-            .unwrap_or_else(|| Arc::new(StackShelf::new((4 * p).max(8))));
+        let shelf = self.shelf.unwrap_or_else(|| {
+            Arc::new(StackShelf::new_tuned(
+                (4 * p).max(8),
+                self.adaptive_stacklets,
+                self.first_stacklet,
+            ))
+        });
         let shared = Arc::new(Shared {
             deques: (0..p).map(|_| Deque::new()).collect(),
             submissions: (0..p).map(|_| FrameQueue::new()).collect(),
@@ -393,6 +517,10 @@ impl PoolBuilder {
             submit_stack_misses: AtomicU64::new(0),
             external: self.external,
             on_abandon: self.on_abandon,
+            epoch: std::time::Instant::now(),
+            park_since: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            park_aware: self.park_aware,
+            wake_misses: AtomicU64::new(0),
         });
         let mut threads = Vec::with_capacity(p);
         for id in 0..p {
@@ -420,6 +548,62 @@ pub struct Pool {
     next_submit: AtomicUsize,
 }
 
+/// Submitter-local scratch arena for the batch submission paths: the
+/// per-worker frame groups keep their capacity across calls, so batched
+/// submission stops allocating per wave once the arena is warm.
+/// Thread-local (not pool-owned) because submissions arrive from
+/// arbitrary client threads and the groups must not be shared.
+///
+/// The buffer is **taken out** of the slot for the duration of a batch
+/// call (see [`BatchGuard`]) rather than borrowed across it: user code
+/// (the caller's task iterator) runs between pushes, so a held
+/// `RefCell` borrow would panic on reentrant submission, and a panic
+/// in user code must not leave half-built frames behind for an
+/// unrelated later call (or pool) to flush.
+thread_local! {
+    static SUBMIT_SCRATCH: std::cell::RefCell<Vec<Vec<FramePtr>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Owns the scratch groups for one batch call. On drop — **normal
+/// return or unwind** — every grouped frame is flushed into this pool's
+/// submission queues (the frames were built by this pool, so their
+/// handles complete even if the caller's task iterator panicked
+/// mid-batch) and the buffer's capacity is returned to the thread-local
+/// slot. Twin of `service::WaveGuard` (same take-out / flush-on-drop
+/// protocol, per-worker instead of per-shard flush targets): protocol
+/// changes must land in both.
+struct BatchGuard<'a> {
+    pool: &'a Pool,
+    groups: Vec<Vec<FramePtr>>,
+}
+
+impl<'a> BatchGuard<'a> {
+    /// Take the thread-local buffer (a reentrant caller finds an empty
+    /// slot and allocates its own) and size it for `pool`.
+    fn new(pool: &'a Pool) -> Self {
+        let mut groups = SUBMIT_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        let p = pool.workers();
+        if groups.len() < p {
+            groups.resize_with(p, Vec::new);
+        }
+        BatchGuard { pool, groups }
+    }
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        let p = self.pool.workers().min(self.groups.len());
+        for (w, group) in self.groups.iter_mut().enumerate().take(p) {
+            if !group.is_empty() {
+                self.pool.shared.submissions[w].push_batch(group.drain(..));
+                self.pool.wake_target(w);
+            }
+        }
+        SUBMIT_SCRATCH.with(|s| *s.borrow_mut() = std::mem::take(&mut self.groups));
+    }
+}
+
 impl Pool {
     /// Start building a pool.
     pub fn builder() -> PoolBuilder {
@@ -438,12 +622,19 @@ impl Pool {
 
     /// Aggregate runtime counters. Worker counters are merged with the
     /// pool-level submission-side counters (stack shelf hits/misses,
-    /// fused root blocks).
+    /// fused root blocks, routed-wake misses) and the stack shelf's
+    /// tuning signals. Note the shelf-sourced values (`stacklet_grows`,
+    /// `hot_stacklet_bytes`) describe the **shelf**, which sibling
+    /// shards of a job server share — the server overwrites them once
+    /// after merging so they are not double-counted.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut s = self.shared.metrics.snapshot();
         s.root_blocks_fused = self.shared.root_blocks.load(Ordering::Relaxed);
         s.stack_pool_hits += self.shared.submit_stack_hits.load(Ordering::Relaxed);
         s.stack_pool_misses += self.shared.submit_stack_misses.load(Ordering::Relaxed);
+        s.wake_misses = self.shared.wake_misses.load(Ordering::Relaxed);
+        s.stacklet_grows = self.shared.shelf.tuner().grows_count();
+        s.hot_stacklet_bytes = self.shared.shelf.tuner().hot_bytes_gauge();
         s
     }
 
@@ -495,11 +686,14 @@ impl Pool {
         self.new_root(task, tag)
     }
 
-    /// Enqueue an already-built root frame on the next round-robin
-    /// worker and wake it. Used by `submit` and by the job server's
-    /// shutdown path re-injecting drained spout frames.
+    /// Enqueue an already-built root frame and wake its worker. With
+    /// park-aware routing on and at least one worker parked, the target
+    /// is the **longest-parked** worker (its deque is certainly empty
+    /// and it is the cheapest to hand fresh work per Eq. (6)); otherwise
+    /// round-robin, exactly as before. Used by `submit` and by the job
+    /// server's shutdown path re-injecting drained spout frames.
     pub(crate) fn submit_frame(&self, frame: FramePtr) {
-        let target = self.next_target();
+        let target = self.park_aware_target().unwrap_or_else(|| self.next_target());
         self.shared.submissions[target].push(frame);
         self.wake_target(target);
     }
@@ -507,10 +701,11 @@ impl Pool {
     /// Submit a batch of root tasks with one wake sweep instead of a
     /// per-job `notify`, amortizing parker and flag traffic on the
     /// submission hot path. Frames are distributed round-robin (same
-    /// counter as [`Self::submit`]) but enqueued per worker via
-    /// [`FrameQueue::push_batch`] — a single tail exchange per
-    /// (batch × worker) rather than per job. Handles are returned in
-    /// input order.
+    /// counter as [`Self::submit`]; deliberately *not* park-aware — a
+    /// batch routed at one cold worker would serialize on its queue) but
+    /// enqueued per worker via [`FrameQueue::push_batch`] — a single
+    /// tail exchange per (batch × worker) rather than per job. Handles
+    /// are returned in input order.
     pub fn submit_batch<C: Coroutine>(
         &self,
         tasks: impl IntoIterator<Item = C>,
@@ -520,27 +715,52 @@ impl Pool {
 
     /// [`Self::submit_batch`] with an abandonment tag shared by the
     /// whole batch (the job server batches per placement shard, so one
-    /// tag per call suffices).
+    /// tag per call suffices). Frame grouping runs through the
+    /// submitter-local scratch arena, so the only allocation left on
+    /// this path is the returned handle vector itself (callers that
+    /// want zero allocations per wave go through the job server's
+    /// `submit_batch_into`, which reuses the caller's buffers).
     pub(crate) fn submit_batch_tagged<C: Coroutine>(
         &self,
         tasks: impl IntoIterator<Item = C>,
         tag: u64,
     ) -> Vec<RootHandle<C::Output>> {
-        let p = self.workers();
-        let mut groups: Vec<Vec<FramePtr>> = (0..p).map(|_| Vec::new()).collect();
         let mut handles = Vec::new();
+        self.submit_batch_tagged_into(tasks, tag, &mut handles);
+        handles
+    }
+
+    /// Core batch path: build every root, group the frames per worker in
+    /// the submitter-local scratch arena (no allocation once the arena
+    /// is warm), then one tail exchange + one wake per touched worker
+    /// (performed by the [`BatchGuard`] drop, so a panic in the caller's
+    /// task iterator still routes every already-built frame into this
+    /// pool — no stranded handles, no stale scratch). Handles are
+    /// appended to `out` in input order.
+    pub(crate) fn submit_batch_tagged_into<C: Coroutine>(
+        &self,
+        tasks: impl IntoIterator<Item = C>,
+        tag: u64,
+        out: &mut Vec<RootHandle<C::Output>>,
+    ) {
+        let mut guard = BatchGuard::new(self);
         for task in tasks {
             let (frame, handle) = self.new_root(task, tag);
-            groups[self.next_target()].push(frame);
-            handles.push(handle);
+            guard.groups[self.next_target()].push(frame);
+            out.push(handle);
         }
-        for (w, group) in groups.into_iter().enumerate() {
-            if !group.is_empty() {
-                self.shared.submissions[w].push_batch(group);
-                self.wake_target(w);
-            }
+        // Normal path: the guard's drop flushes and returns the buffer.
+    }
+
+    /// Route a group of already-built root frames (the job server's
+    /// non-diverted remainder): round-robin per frame, one tail
+    /// exchange + one wake per touched worker, scratch-arena grouped —
+    /// no allocation once the arena is warm.
+    pub(crate) fn submit_frames(&self, frames: impl Iterator<Item = FramePtr>) {
+        let mut guard = BatchGuard::new(self);
+        for frame in frames {
+            guard.groups[self.next_target()].push(frame);
         }
-        handles
     }
 
     /// Round-robin submission target.
@@ -549,14 +769,27 @@ impl Pool {
         self.next_submit.fetch_add(1, Ordering::Relaxed) % self.workers()
     }
 
-    /// Wake `target` after pushing to its submission queue. The eager
-    /// flag clear keeps `wake_one` from wasting its CAS on a worker that
-    /// is already being woken; the latched parker closes the race with a
-    /// concurrent park.
+    /// Park-aware submission target: the longest-parked worker, or
+    /// `None` when routing is disabled or nobody is parked (then the
+    /// round-robin counter decides, exactly as before). Only ever
+    /// returns a worker that was parked at decision time.
+    #[inline]
+    fn park_aware_target(&self) -> Option<usize> {
+        if !self.shared.park_aware || self.shared.sleepers.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        crate::rt::tune::pick_coldest(
+            self.shared.park_since.len(),
+            |i| self.shared.park_since[i].load(Ordering::Relaxed),
+            |_| true,
+        )
+    }
+
+    /// Wake `target` after pushing to its submission queue (see
+    /// [`Shared::wake_submission_target`]).
     #[inline]
     fn wake_target(&self, target: usize) {
-        self.shared.parked_flag[target].store(false, Ordering::Release);
-        self.shared.parkers[target].notify();
+        self.shared.wake_submission_target(target);
     }
 
     /// Build a **fused root block** (frame + signal + refcount + result
@@ -575,7 +808,13 @@ impl Pool {
             }
             None => {
                 shared.submit_stack_misses.fetch_add(1, Ordering::Relaxed);
-                Box::into_raw(SegmentedStack::with_first_capacity(shared.first_stacklet))
+                // Cold miss: with adaptive sizing on, fresh stacks are
+                // born at the learned hot size so they never re-grow
+                // (rt::tune); otherwise the configured first-stacklet
+                // capacity, as before.
+                Box::into_raw(SegmentedStack::with_first_capacity(
+                    shared.shelf.hot_first_capacity(shared.first_stacklet),
+                ))
             }
         };
         shared.root_blocks.fetch_add(1, Ordering::Relaxed);
@@ -594,7 +833,6 @@ impl Pool {
                     steals: 0,
                     join: JoinCounter::new(),
                     root_hot: hot_ptr,
-                    qnext: std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()),
                 },
                 out: result_ptr,
                 task,

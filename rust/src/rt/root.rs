@@ -214,5 +214,11 @@ unsafe fn dispose(hot: *mut RootHot) {
     }
     (*stack).dealloc(base as *mut u8, size);
     debug_assert!((*stack).is_empty(), "root stack must quiesce at dispose");
+    // Feedback signal for adaptive stacklet sizing (rt::tune): this
+    // job's peak live bytes and stacklet-grow count on its root stack —
+    // exactly one sample per job, taken at the moment the stack
+    // quiesces. Two relaxed atomics; the recycle below then trims (and,
+    // if the learned hot size moved, reshapes) the stack.
+    shelf.observe_root_quiesce((*stack).peak_live_bytes(), (*stack).grows_since_trim());
     shelf.recycle(stack);
 }

@@ -1,0 +1,480 @@
+//! Runtime **feedback tuning**: cheap per-worker signals sampled into
+//! EMA registers and fed back into three hot paths.
+//!
+//! The paper's cost model assumes the runtime's static knobs match the
+//! workload: Eq. (5)'s memory bound assumes stacklets are sized so the
+//! common job never re-grows its stack, and Eq. (6)'s locality hierarchy
+//! assumes wake/steal targets are chosen with current placement state in
+//! mind. A service faces shifting traffic, so this module closes the
+//! loop with **plain-atomic** registers (no heap, no locks on any hot
+//! path) and three independently disable-able actuators:
+//!
+//! | signal                                   | register            | actuator |
+//! |------------------------------------------|---------------------|----------|
+//! | per-job peak stack footprint, sampled at | [`FootprintTuner`]  | recycled stacks are reshaped to the learned **hot size**; fresh stacks are born hot ([`crate::stack::StackShelf`], `Pool::new_root`, thief-side `fresh_stack`) |
+//! | root completion + stacklet-grow events   |                     | |
+//! | `migration_misses` : `jobs_migrated`     | [`HysteresisTuner`] | the job server's diversion hysteresis margin moves within builder-set bounds (`service::MigrationHub`) |
+//! | per-worker park timestamps               | `Shared::park_since`| submission targets and spout wakes prefer the longest-parked (coldest) worker/shard ([`pick_coldest`]) |
+//!
+//! ## Register shapes
+//!
+//! * **Footprint** uses an *asymmetric* EMA: a sample above the register
+//!   replaces it outright (a deep job must widen the hot size
+//!   immediately — under-sizing costs a heap allocation per job), while
+//!   a sample below decays the register by `1/2^`[`FOOTPRINT_DECAY_SHIFT`]
+//!   of the gap (a workload shift back to shallow jobs releases the
+//!   memory over a few hundred jobs). This tracks a high quantile
+//!   (≈p99) of the job-footprint distribution without histograms.
+//! * **Hysteresis** uses windowed deltas: every
+//!   [`HYSTERESIS_TUNE_WINDOW`] placements the tuner compares the
+//!   spout-claim misses and successful cross-shard claims accumulated
+//!   since the last window. The two counters have different units —
+//!   misses accrue once per contended *poll*, claims once per claimed
+//!   *frame*, and several idle thieves can easily rack up a few polls
+//!   per claim while migration is perfectly healthy — so the widen
+//!   condition requires misses to exceed **4×** the claims (plus a
+//!   noise floor) before concluding the thieves are fighting over a
+//!   trickle of diverted work; only then does the margin double.
+//!   Claims flowing with proportionally few misses mean migration is
+//!   productive — the margin tightens by ~25% so the valve reacts to
+//!   skew sooner. Doubling up / proportional (~25%) decrease keeps the
+//!   controller responsive upward (thrash costs immediately) and
+//!   damped downward (no oscillation at the bounds).
+//! * **Park timestamps** are microsecond stamps (0 = not parked): the
+//!   longest-parked worker has the *smallest* stamp. Its deque is
+//!   certainly empty and its cache is cold — per Eq. (6)'s hierarchy it
+//!   is the cheapest worker to hand fresh work, and routing to it evens
+//!   the wake load so no parked worker starves on its backstop timer.
+//!
+//! Every register is a bare atomic: sampling never allocates, so the
+//! steady state stays at 0 allocs/job with all tuners enabled.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Decay shift of the footprint register: a below-register sample closes
+/// `1/2^8` of the gap, so the register forgets a one-off deep job over a
+/// few hundred subsequent shallow jobs.
+pub const FOOTPRINT_DECAY_SHIFT: u32 = 8;
+
+/// Upper bound on the learned hot first-stacklet capacity (bytes of
+/// usable space). A pathological job cannot make every recycled stack
+/// reserve more than this.
+pub const MAX_HOT_STACKLET: usize = 8 * 1024 * 1024;
+
+/// Placements per hysteresis-retune window.
+pub const HYSTERESIS_TUNE_WINDOW: u64 = 128;
+
+// ----------------------------------------------------------------------
+// Adaptive stacklet sizing
+// ----------------------------------------------------------------------
+
+/// Learns the p99-ish per-job stack footprint from root-completion
+/// samples and derives the **hot first-stacklet capacity** recycled and
+/// fresh stacks should carry so steady-state jobs never overflow their
+/// first stacklet. Owned by [`crate::stack::StackShelf`] (one per pool,
+/// or one per job server spanning its shards).
+#[derive(Debug)]
+pub struct FootprintTuner {
+    /// Actuator gate: when false the tuner still samples (the metrics
+    /// stay live) but [`Self::hot_first_capacity`] pins to the floor, so
+    /// recycling behaves exactly as before.
+    enabled: bool,
+    /// Configured first-stacklet capacity — the hot size never shrinks
+    /// below it.
+    floor: usize,
+    /// Asymmetric EMA of per-job peak live bytes (see module docs).
+    hot_live: AtomicUsize,
+    /// Lifetime stacklet-grow (overflow heap-allocation) events observed
+    /// at job completion — the `stacklet_grows` metric.
+    grows: AtomicU64,
+    /// Jobs sampled.
+    jobs: AtomicU64,
+}
+
+impl FootprintTuner {
+    /// A tuner with the given actuator gate and first-stacklet floor.
+    pub fn new(enabled: bool, floor: usize) -> Self {
+        FootprintTuner {
+            enabled,
+            floor: floor.max(crate::stack::ALIGN),
+            hot_live: AtomicUsize::new(0),
+            grows: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether the sizing actuator is live.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one quiesced root job: its peak live bytes since the
+    /// stack was last trimmed, and how many stacklet-overflow heap
+    /// allocations it performed. Lock-free; racy lost updates between
+    /// concurrent completions only slow convergence.
+    pub fn record_job(&self, peak_live: usize, grows: u64) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        if grows > 0 {
+            self.grows.fetch_add(grows, Ordering::Relaxed);
+        }
+        let cur = self.hot_live.load(Ordering::Relaxed);
+        let next = if peak_live >= cur {
+            peak_live
+        } else {
+            cur - ((cur - peak_live) >> FOOTPRINT_DECAY_SHIFT)
+        };
+        if next != cur {
+            self.hot_live.store(next, Ordering::Relaxed);
+        }
+    }
+
+    /// The learned hot first-stacklet capacity: the footprint envelope
+    /// plus headroom (rounding slack accumulates per frame), quantized
+    /// to a power of two for stability, clamped to
+    /// `[floor, `[`MAX_HOT_STACKLET`]`]`. Returns the floor while cold
+    /// or when the actuator is disabled.
+    pub fn hot_first_capacity(&self) -> usize {
+        if !self.enabled {
+            return self.floor;
+        }
+        let live = self.hot_live.load(Ordering::Relaxed).min(MAX_HOT_STACKLET);
+        if live == 0 {
+            return self.floor;
+        }
+        let want = live + live / 8 + 64;
+        want.next_power_of_two().min(MAX_HOT_STACKLET).max(self.floor)
+    }
+
+    /// Decide whether a recycled stack whose first stacklet holds
+    /// `current_first` usable bytes should be reshaped, and to what
+    /// capacity. `None` when the stack is already hot-sized (within the
+    /// 4× decay band) or the actuator is disabled — reshaping touches
+    /// the allocator, so it must fire only while the hot size is
+    /// actually moving (warmup, workload shift), never in steady state.
+    pub fn reshape_target(&self, current_first: usize) -> Option<usize> {
+        if !self.enabled {
+            return None;
+        }
+        let hot = self.hot_first_capacity();
+        if current_first < hot {
+            return Some(hot);
+        }
+        if current_first > hot.saturating_mul(4) {
+            return Some(hot);
+        }
+        None
+    }
+
+    /// Lifetime stacklet-grow events observed (`stacklet_grows`).
+    pub fn grows_count(&self) -> u64 {
+        self.grows.load(Ordering::Relaxed)
+    }
+
+    /// Jobs sampled so far.
+    pub fn jobs_observed(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    /// Gauge for the `hot_stacklet_bytes` metric: the capacity the
+    /// actuator currently targets, 0 while disabled.
+    pub fn hot_bytes_gauge(&self) -> u64 {
+        if self.enabled {
+            self.hot_first_capacity() as u64
+        } else {
+            0
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Self-tuning migration hysteresis
+// ----------------------------------------------------------------------
+
+/// Moves the job server's diversion hysteresis margin within
+/// builder-set bounds, driven by the spout-claim miss : cross-shard
+/// claim ratio (see module docs for the controller shape). All state is
+/// plain atomics; `note_*` calls are single relaxed increments.
+#[derive(Debug)]
+pub struct HysteresisTuner {
+    /// Actuator gate: when false the margin never moves.
+    enabled: bool,
+    /// Inclusive lower bound on the margin.
+    min: usize,
+    /// Inclusive upper bound on the margin.
+    max: usize,
+    /// The live margin consulted by every placement.
+    margin: AtomicUsize,
+    /// Placements seen (windowing counter).
+    placements: AtomicU64,
+    /// Successful cross-shard spout claims (lifetime).
+    claims: AtomicU64,
+    /// Contended/lost spout-claim attempts (lifetime).
+    misses: AtomicU64,
+    /// Claim snapshot at the last retune.
+    last_claims: AtomicU64,
+    /// Miss snapshot at the last retune.
+    last_misses: AtomicU64,
+}
+
+impl HysteresisTuner {
+    /// A tuner starting at `initial`, constrained to `[min, max]`.
+    /// Bounds are sanitized (`min >= 1`, `max >= min`) and the initial
+    /// margin is clamped into them.
+    pub fn new(initial: usize, min: usize, max: usize, enabled: bool) -> Self {
+        let min = min.max(1);
+        let max = max.max(min);
+        HysteresisTuner {
+            enabled,
+            min,
+            max,
+            margin: AtomicUsize::new(initial.clamp(min, max)),
+            placements: AtomicU64::new(0),
+            claims: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            last_claims: AtomicU64::new(0),
+            last_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether the margin is allowed to move.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The live hysteresis margin.
+    pub fn margin(&self) -> usize {
+        self.margin.load(Ordering::Relaxed)
+    }
+
+    /// The builder-set `[min, max]` bounds.
+    pub fn bounds(&self) -> (usize, usize) {
+        (self.min, self.max)
+    }
+
+    /// Record one successful cross-shard spout claim.
+    pub fn note_claim(&self) {
+        self.claims.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one contended / lost spout-claim attempt.
+    pub fn note_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one placement; every [`HYSTERESIS_TUNE_WINDOW`]-th
+    /// placement re-evaluates the margin from the window's miss/claim
+    /// deltas. O(1), allocation-free, and a no-op when disabled.
+    pub fn note_placement(&self) {
+        if !self.enabled {
+            return;
+        }
+        let n = self.placements.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % HYSTERESIS_TUNE_WINDOW != 0 {
+            return;
+        }
+        self.retune();
+    }
+
+    /// One controller step (see module docs). Concurrent retunes are
+    /// benign: the swaps hand each racer a disjoint delta window.
+    fn retune(&self) {
+        let claims = self.claims.load(Ordering::Relaxed);
+        let misses = self.misses.load(Ordering::Relaxed);
+        let dc = claims.saturating_sub(self.last_claims.swap(claims, Ordering::Relaxed));
+        let dm = misses.saturating_sub(self.last_misses.swap(misses, Ordering::Relaxed));
+        let cur = self.margin.load(Ordering::Relaxed);
+        let next = if dm > 4 * dc + 4 {
+            // Misses dwarf claims even after allowing a few contended
+            // polls per claimed frame (the counters' unit mismatch, see
+            // the module docs): thieves thrash on a trickle of diverted
+            // work — divert later.
+            (cur.saturating_mul(2)).min(self.max)
+        } else if dc > 0 && dm * 2 <= dc {
+            // Migration flows cleanly: react to skew sooner.
+            cur.saturating_sub(1 + cur / 4).max(self.min)
+        } else {
+            cur
+        };
+        if next != cur {
+            self.margin.store(next, Ordering::Relaxed);
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Park-aware wake routing
+// ----------------------------------------------------------------------
+
+/// Microsecond park stamp relative to `epoch`; never 0 (0 means "not
+/// parked"), so a worker parking within the epoch's first microsecond is
+/// still visibly parked.
+#[inline]
+pub fn park_stamp(epoch: std::time::Instant) -> u64 {
+    (epoch.elapsed().as_micros() as u64) | 1
+}
+
+/// Pick the **longest-parked** candidate: the eligible index with the
+/// smallest nonzero park stamp. Indices whose stamp reads 0 are not
+/// parked and are **never** returned — the routed wake can only target a
+/// worker that was parked at decision time (the actual notify still goes
+/// through the parked-flag CAS, so a lost race never wakes anyone
+/// spuriously).
+pub fn pick_coldest(
+    candidates: usize,
+    park_since: impl Fn(usize) -> u64,
+    eligible: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    let mut best: Option<(u64, usize)> = None;
+    for i in 0..candidates {
+        let ts = park_since(i);
+        if ts == 0 || !eligible(i) {
+            continue;
+        }
+        if best.is_none_or(|(b, _)| ts < b) {
+            best = Some((ts, i));
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_jumps_up_and_decays_down() {
+        let t = FootprintTuner::new(true, 4096);
+        assert_eq!(t.hot_first_capacity(), 4096, "cold tuner pins to the floor");
+        t.record_job(200_000, 5);
+        // A deep job widens the hot size immediately.
+        let hot = t.hot_first_capacity();
+        assert!(hot >= 200_000, "hot {hot} must cover the sample");
+        assert_eq!(hot, hot.next_power_of_two(), "hot size is quantized");
+        assert_eq!(t.grows_count(), 5);
+        // Shallow jobs decay the register slowly...
+        for _ in 0..10 {
+            t.record_job(1_000, 0);
+        }
+        assert!(t.hot_first_capacity() >= 128 * 1024, "10 samples must not collapse it");
+        // ...but thousands of them bring it back toward the floor.
+        for _ in 0..20_000 {
+            t.record_job(1_000, 0);
+        }
+        assert!(t.hot_first_capacity() <= 8 * 1024, "register never converged down");
+        assert_eq!(t.jobs_observed(), 20_011);
+    }
+
+    #[test]
+    fn footprint_disabled_pins_to_floor() {
+        let t = FootprintTuner::new(false, 4096);
+        t.record_job(1 << 20, 7);
+        assert_eq!(t.hot_first_capacity(), 4096, "disabled actuator must not move");
+        assert_eq!(t.reshape_target(4096), None);
+        assert_eq!(t.hot_bytes_gauge(), 0, "gauge reads 0 while disabled");
+        assert_eq!(t.grows_count(), 7, "signals stay live for metrics");
+    }
+
+    #[test]
+    fn reshape_only_outside_the_band() {
+        let t = FootprintTuner::new(true, 4096);
+        t.record_job(60_000, 3);
+        let hot = t.hot_first_capacity();
+        assert_eq!(t.reshape_target(4096), Some(hot), "undersized stacks reshape up");
+        assert_eq!(t.reshape_target(hot), None, "hot-sized stacks are left alone");
+        assert_eq!(t.reshape_target(2 * hot), None, "within the 4x decay band");
+        assert_eq!(t.reshape_target(8 * hot), Some(hot), "oversized stacks reshape down");
+    }
+
+    #[test]
+    fn footprint_cap_bounds_pathological_jobs() {
+        let t = FootprintTuner::new(true, 4096);
+        t.record_job(usize::MAX / 2, 1);
+        assert!(t.hot_first_capacity() <= MAX_HOT_STACKLET);
+    }
+
+    #[test]
+    fn hysteresis_moves_only_within_bounds() {
+        let t = HysteresisTuner::new(8, 2, 32, true);
+        assert_eq!(t.margin(), 8);
+        assert_eq!(t.bounds(), (2, 32));
+        // Saturate with misses: margin must widen but never exceed max.
+        for _ in 0..6 {
+            for _ in 0..200 {
+                t.note_miss();
+            }
+            for _ in 0..HYSTERESIS_TUNE_WINDOW {
+                t.note_placement();
+            }
+            assert!(t.margin() <= 32, "margin {} above max", t.margin());
+            assert!(t.margin() >= 2, "margin {} below min", t.margin());
+        }
+        assert_eq!(t.margin(), 32, "sustained thrash must reach the upper bound");
+        // Clean migration flow: margin tightens back toward min.
+        for _ in 0..20 {
+            for _ in 0..200 {
+                t.note_claim();
+            }
+            for _ in 0..HYSTERESIS_TUNE_WINDOW {
+                t.note_placement();
+            }
+        }
+        assert_eq!(t.margin(), 2, "productive migration must reach the lower bound");
+    }
+
+    #[test]
+    fn hysteresis_tolerates_healthy_poll_contention() {
+        // Misses accrue per contended poll, claims per claimed frame: a
+        // few polls per claim is ordinary multi-thief contention while
+        // migration is fully productive — the margin must not widen.
+        let t = HysteresisTuner::new(8, 2, 32, true);
+        for _ in 0..10 {
+            for _ in 0..100 {
+                t.note_claim();
+            }
+            for _ in 0..300 {
+                t.note_miss();
+            }
+            for _ in 0..HYSTERESIS_TUNE_WINDOW {
+                t.note_placement();
+            }
+            assert_eq!(t.margin(), 8, "healthy 3:1 poll contention moved the margin");
+        }
+    }
+
+    #[test]
+    fn hysteresis_disabled_never_moves() {
+        let t = HysteresisTuner::new(8, 2, 32, false);
+        for _ in 0..1000 {
+            t.note_miss();
+            t.note_placement();
+        }
+        assert_eq!(t.margin(), 8);
+    }
+
+    #[test]
+    fn hysteresis_bounds_sanitized() {
+        let t = HysteresisTuner::new(100, 0, 0, true);
+        assert_eq!(t.bounds(), (1, 1));
+        assert_eq!(t.margin(), 1, "initial margin clamps into the bounds");
+    }
+
+    #[test]
+    fn pick_coldest_prefers_longest_parked_and_skips_awake() {
+        let ts = [0u64, 500, 300, 0, 900];
+        let pick = pick_coldest(ts.len(), |i| ts[i], |_| true);
+        assert_eq!(pick, Some(2), "smallest nonzero stamp = parked longest");
+        // Eligibility filter restricts the candidate set.
+        let pick = pick_coldest(ts.len(), |i| ts[i], |i| i != 2);
+        assert_eq!(pick, Some(1));
+        // Nobody parked: no target — a routed wake must never hit an
+        // awake worker.
+        let awake = [0u64; 4];
+        assert_eq!(pick_coldest(awake.len(), |i| awake[i], |_| true), None);
+    }
+
+    #[test]
+    fn park_stamp_is_never_zero() {
+        let epoch = std::time::Instant::now();
+        assert_ne!(park_stamp(epoch), 0);
+    }
+}

@@ -551,8 +551,12 @@ impl Worker {
             return s;
         }
         counters.bump_stack_pool_misses();
+        // Pool miss: with adaptive sizing on, thief-side stacks are also
+        // born at the learned hot size (a stolen subtree can be as deep
+        // as the job that taught the tuner); otherwise the configured
+        // first-stacklet capacity, as before.
         Box::into_raw(SegmentedStack::with_first_capacity(
-            self.shared.first_stacklet,
+            self.shared.shelf.hot_first_capacity(self.shared.first_stacklet),
         ))
     }
 
@@ -561,6 +565,13 @@ impl Worker {
     /// frees past its own bound). Poisoned stacks are leaked — their
     /// abandoned frames may still be referenced (defensive: the panic
     /// path leaks before this can see one).
+    ///
+    /// Local-list stacks follow the same adaptive-sizing rule as the
+    /// shelf: a thief's next `fresh_stack` hit may host a **stolen deep
+    /// subtree**, so a cold (pre-warmup) stack cycling through the LIFO
+    /// would re-pay the geometric growth chain on every steal. The
+    /// reshape fires only while the learned hot size is moving, so the
+    /// steady state stays allocation-free.
     #[inline]
     unsafe fn release_stack(&mut self, s: *mut SegmentedStack) {
         // Poison check first: a poisoned stack still holds abandoned
@@ -572,6 +583,11 @@ impl Worker {
         debug_assert!((*s).is_empty(), "released stacks must be empty");
         if self.stacks.len() < LOCAL_STACK_CAP {
             (*s).trim();
+            if let Some(target) =
+                self.shared.shelf.tuner().reshape_target((*s).first_capacity())
+            {
+                (*s).reshape_first(target);
+            }
             self.stacks.push(s);
         } else {
             self.shared.shelf.recycle(s);

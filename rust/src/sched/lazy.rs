@@ -48,6 +48,16 @@ pub fn idle(w: &mut Worker) {
     shared.metrics.worker(w.id).bump_sleeps();
     shared.sleepers.fetch_add(1, Ordering::SeqCst);
     shared.parked_flag[w.id].store(true, Ordering::Release);
+    // Publish the park stamp *after* the flag: a nonzero stamp implies
+    // the flag was set, so park-aware wake routing (rt::tune) never
+    // elects a worker that has not reached its flag store yet. One
+    // stamp per park attempt — a worker bouncing on its backstop
+    // re-polls for work in between, so "parked since the last re-poll"
+    // is the honest coldness measure.
+    if shared.park_aware {
+        shared.park_since[w.id]
+            .store(crate::rt::tune::park_stamp(shared.epoch), Ordering::Relaxed);
+    }
 
     // Re-check for work between flag-set and park (close the race with
     // wake_one's flag CAS).
@@ -57,6 +67,9 @@ pub fn idle(w: &mut Worker) {
         shared.parkers[w.id].park_timeout(PARK_BACKSTOP);
     }
 
+    // Clear the stamp before the flag so routing never sees a stale
+    // "parked" stamp on an awake worker.
+    shared.park_since[w.id].store(0, Ordering::Relaxed);
     shared.parked_flag[w.id].store(false, Ordering::Release);
     shared.sleepers.fetch_sub(1, Ordering::SeqCst);
     awake.fetch_add(1, Ordering::SeqCst);

@@ -79,6 +79,56 @@ impl Coroutine for MixedJob {
     }
 }
 
+/// A **deep** service job: a call-only chain of `depth` nested frames,
+/// all live at once on the executing worker's segmented stack. Unlike
+/// [`MixedJob`] (wide fork trees, shallow stacks), this is the workload
+/// whose per-job stack footprint dwarfs the default first stacklet —
+/// the case adaptive stacklet sizing ([`crate::rt::tune`]) exists for:
+/// without it every recycled stack is trimmed back to the default
+/// first stacklet and each job re-pays the geometric growth chain;
+/// with it, recycled stacks stay hot-sized and `stacklet_grows` drops
+/// to ~0 per job after warmup. Call-only means a single strand, so the
+/// footprint lands deterministically on one stack.
+///
+/// Output: `depth + 1` (each frame adds 1), oracle via
+/// [`DeepJob::expected`].
+pub struct DeepJob {
+    depth: u32,
+    child: u64,
+    state: u8,
+}
+
+impl DeepJob {
+    /// A chain of `depth` nested calls below the root frame.
+    pub fn new(depth: u32) -> Self {
+        DeepJob { depth, child: 0, state: 0 }
+    }
+
+    /// The serial expectation for [`DeepJob::new`]`(depth)`.
+    pub fn expected(depth: u32) -> u64 {
+        depth as u64 + 1
+    }
+}
+
+impl Coroutine for DeepJob {
+    type Output = u64;
+
+    fn step(&mut self, cx: &mut Cx<'_>) -> Step<u64> {
+        match self.state {
+            0 => {
+                if self.depth == 0 {
+                    return Step::Return(1);
+                }
+                self.state = 1;
+                let slot = &mut self.child as *mut u64;
+                cx.call(slot, DeepJob::new(self.depth - 1));
+                Step::Dispatch
+            }
+            _ => Step::Return(self.child + 1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +149,14 @@ mod tests {
         let handles = pool.submit_batch((0..30).map(MixedJob::from_seed));
         for (seed, h) in (0..30).zip(handles) {
             assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn deep_job_matches_oracle() {
+        let pool = Pool::with_workers(1);
+        for depth in [0u32, 1, 7, 500, 3000] {
+            assert_eq!(pool.run(DeepJob::new(depth)), DeepJob::expected(depth), "depth {depth}");
         }
     }
 }

@@ -30,19 +30,30 @@
 //!   on any executor — e.g. [`crate::sync::block_on`].
 //! * **Cross-shard migration** — shards are no longer fully isolated
 //!   sub-pools: each shard owns a bounded intrusive **overflow spout**
-//!   (a [`FrameQueue`] linking diverted root frames through
-//!   `FrameHeader::qnext`, so migration allocates nothing). When
-//!   placement detects **sustained** imbalance — the chosen shard's
-//!   in-flight count exceeds the emptiest shard's by at least the
-//!   hysteresis threshold for several consecutive placements — the job
-//!   is parked in the chosen shard's spout instead of a worker queue.
-//!   Starved shards poll the spouts **before parking**, in a
-//!   hierarchical victim order derived from
-//!   [`NumaTopology::node_distance`]: their own spout first (not a
-//!   migration), then same-node siblings, then remote nodes — the
-//!   paper's NUMA-aware stealing rule lifted one level up, and the
-//!   composable cross-pool stealing of Kvik. `jobs_migrated` /
-//!   `migration_misses` in [`MetricsSnapshot`] expose the traffic.
+//!   (a [`FrameQueue`] linking diverted root frames through their own
+//!   headers, so migration allocates nothing). When placement detects
+//!   **sustained** imbalance — the chosen shard's in-flight count
+//!   exceeds the emptiest shard's by at least the hysteresis threshold
+//!   for several consecutive placements — the job is parked in the
+//!   chosen shard's spout instead of a worker queue. Starved shards
+//!   poll the spouts **before parking**, in a hierarchical victim
+//!   order derived from [`NumaTopology::node_distance`]: their own
+//!   spout first (not a migration — with a fast path that drains a run
+//!   into the home pool's submission queues when no sibling is
+//!   starved, bypassing the spout's consumer lock), then same-node
+//!   siblings, then remote nodes — the paper's NUMA-aware stealing
+//!   rule lifted one level up, and the composable cross-pool stealing
+//!   of Kvik. `jobs_migrated` / `migration_misses` in
+//!   [`MetricsSnapshot`] expose the traffic.
+//! * **Feedback tuning** ([`crate::rt::tune`]) — three self-tuning
+//!   loops, each individually disable-able from the builder: the shared
+//!   stack shelf learns the p99 job footprint and keeps recycled stacks
+//!   **hot-sized** ([`JobServerBuilder::adaptive_stacklets`]); the
+//!   migration hysteresis margin moves within builder bounds, driven by
+//!   the spout miss:claim ratio
+//!   ([`JobServerBuilder::self_tuning_hysteresis`]); and submission /
+//!   spout wakes prefer the longest-parked worker and shard
+//!   ([`JobServerBuilder::park_aware_wakes`]).
 //!
 //! The quiescence invariant of the runtime (`signals == steals`,
 //! `rt::worker` invariant 3) holds per shard and therefore for the
@@ -61,6 +72,7 @@ use crate::frame::FramePtr;
 use crate::metrics::MetricsSnapshot;
 use crate::numa::NumaTopology;
 use crate::rt::pool::{ExternalJob, ExternalPoll, ExternalWork, Pool, RootHandle, Shared};
+use crate::rt::tune::HysteresisTuner;
 use crate::sched::SchedulerKind;
 use crate::sync::CachePadded;
 use crate::task::{Coroutine, Cx, Step};
@@ -249,6 +261,56 @@ struct Shard {
     node: usize,
 }
 
+thread_local! {
+    /// Submitter-local arena for [`JobServer::submit_batch_into`]: the
+    /// per-shard frame groups keep their capacity across calls, so a
+    /// warm submitter thread's waves allocate nothing. Thread-local
+    /// because batches arrive from arbitrary client threads; taken out
+    /// per wave (see [`WaveGuard`]) rather than borrowed across it, so
+    /// a reentrant or panicking [`PlacementPolicy`] cannot double-borrow
+    /// or strand half-built frames.
+    static BATCH_SCRATCH: std::cell::RefCell<Vec<Vec<FramePtr>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Owns the per-shard frame groups for one batch wave. On drop —
+/// normal return or unwind — every frame still grouped under shard `s`
+/// is submitted directly into shard `s`'s pool (each frame was built by
+/// that pool, so this is always a correct route and its handle
+/// completes even if the placement policy panicked mid-wave), and the
+/// buffer's capacity is returned to the thread-local slot. The normal
+/// path relies on this drop as the direct-submission flush; only the
+/// diverted prefix is taken out explicitly beforehand. Twin of
+/// `rt::pool::BatchGuard` (same take-out / flush-on-drop protocol,
+/// per-shard instead of per-worker flush targets): protocol changes
+/// must land in both.
+struct WaveGuard<'a> {
+    server: &'a JobServer,
+    groups: Vec<Vec<FramePtr>>,
+}
+
+impl<'a> WaveGuard<'a> {
+    fn new(server: &'a JobServer) -> Self {
+        let mut groups = BATCH_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+        if groups.len() < server.shards.len() {
+            groups.resize_with(server.shards.len(), Vec::new);
+        }
+        WaveGuard { server, groups }
+    }
+}
+
+impl Drop for WaveGuard<'_> {
+    fn drop(&mut self) {
+        let n = self.server.shards.len().min(self.groups.len());
+        for (shard, group) in self.groups.iter_mut().enumerate().take(n) {
+            if !group.is_empty() {
+                self.server.shards[shard].pool.submit_frames(group.drain(..));
+            }
+        }
+        BATCH_SCRATCH.with(|s| *s.borrow_mut() = std::mem::take(&mut self.groups));
+    }
+}
+
 // ----------------------------------------------------------------------
 // Cross-shard migration (overflow spouts + hierarchical claiming)
 // ----------------------------------------------------------------------
@@ -259,18 +321,29 @@ const MIGRATION_STREAK_GATE: u32 = 4;
 
 /// Default hysteresis margin: the chosen shard must have at least this
 /// many more in-flight jobs than the emptiest shard before a placement
-/// counts as imbalanced.
+/// counts as imbalanced. With self-tuning on (the default) this is only
+/// the **starting** margin — the live margin moves within the builder's
+/// bounds, driven by the spout miss:claim ratio (see
+/// [`crate::rt::tune::HysteresisTuner`]).
 pub const DEFAULT_MIGRATION_HYSTERESIS: usize = 8;
 
 /// Default per-shard spout bound; a full spout falls back to direct
 /// pool submission (backpressure still comes from the admission bound).
 const DEFAULT_SPOUT_CAP: usize = 256;
 
+/// Frames the home-shard fast path moves from its spout into the home
+/// pool's submission queues per claim-lock acquisition, when no sibling
+/// shard is starved. Amortizes the consumer `try_lock`: the follow-up
+/// frames are executed straight from the (single-consumer, lock-free)
+/// submission queues, bypassing the spout and its lock entirely.
+const HOME_DRAIN_RUN: usize = 8;
+
 /// One shard's overflow spout: a bounded intrusive MPSC of diverted
-/// root frames. Producers (submitters) push lock-free through
-/// `FrameHeader::qnext`; the consumer side is serialized by `claim` so
-/// workers of *any* shard can pop without violating the queue's
-/// single-consumer contract.
+/// root frames. Producers (submitters) push lock-free through the
+/// frames' own headers (`FrameHeader::qnext_store`, overlaying the idle
+/// join counter); the consumer side is serialized by `claim` so workers
+/// of *any* shard can pop without violating the queue's single-consumer
+/// contract.
 struct Spout {
     queue: FrameQueue,
     /// Frames pushed and not yet claimed (claim gate + spout bound).
@@ -296,39 +369,52 @@ enum Claimed {
 
 /// The server-wide migration state shared by every shard's
 /// [`ExternalWork`] source: the spouts, the per-shard hierarchical
-/// victim orders, and wake routes into the shard pools.
+/// victim orders, the self-tuning hysteresis, and wake routes into the
+/// shard pools.
 struct MigrationHub {
     spouts: Vec<CachePadded<Spout>>,
-    /// `victims[s]` = the other shards, nearest first (same NUMA node
-    /// before remote, index-ordered within a distance class) — the
-    /// shard-level analogue of Eq. (6)'s distance bias.
-    victims: Vec<Vec<usize>>,
+    /// `victims[s]` = the other shards with their node distance from
+    /// `s`, nearest first (same NUMA node before remote, index-ordered
+    /// within a distance class) — the shard-level analogue of Eq. (6)'s
+    /// distance bias. Distances kept so park-aware wake routing can
+    /// rank shards *within* one distance class by coldness.
+    victims: Vec<Vec<(usize, u32)>>,
     /// Weak wake routes into each shard's pool (weak: the pools' shared
     /// state holds the hub through its `ExternalWork` source, so strong
     /// references here would leak the whole server).
     wakers: OnceLock<Vec<Weak<Shared>>>,
-    /// Hysteresis margin on the in-flight imbalance.
-    hysteresis: usize,
+    /// Self-tuning hysteresis margin on the in-flight imbalance
+    /// ([`crate::rt::tune::HysteresisTuner`]): consulted by every
+    /// placement, moved within the builder's bounds by the spout
+    /// miss:claim ratio (fixed when self-tuning is disabled).
+    tuner: HysteresisTuner,
     /// Per-spout bound.
     cap: usize,
     /// Frames routed through spouts over the lifetime.
     diverted: AtomicU64,
+    /// Park-aware spout-wake routing gate (see [`Self::wake_starved`]).
+    park_aware: bool,
+    /// Round-robin cursor for the home drain fast path's submission
+    /// spreading (see [`Self::try_claim_home`]).
+    drain_rr: AtomicUsize,
 }
 
 impl MigrationHub {
     fn new(
         shard_nodes: &[usize],
         topology: &NumaTopology,
-        hysteresis: usize,
+        tuner: HysteresisTuner,
         cap: usize,
+        park_aware: bool,
     ) -> Self {
         let n = shard_nodes.len();
         let victims = (0..n)
             .map(|s| {
-                let mut order: Vec<usize> = (0..n).filter(|&o| o != s).collect();
-                order.sort_by_key(|&o| {
-                    (topology.node_distance(shard_nodes[s], shard_nodes[o]), o)
-                });
+                let mut order: Vec<(usize, u32)> = (0..n)
+                    .filter(|&o| o != s)
+                    .map(|o| (o, topology.node_distance(shard_nodes[s], shard_nodes[o])))
+                    .collect();
+                order.sort_by_key(|&(o, d)| (d, o));
                 order
             })
             .collect();
@@ -345,9 +431,11 @@ impl MigrationHub {
                 .collect(),
             victims,
             wakers: OnceLock::new(),
-            hysteresis: hysteresis.max(1),
+            tuner,
             cap: cap.max(1),
             diverted: AtomicU64::new(0),
+            park_aware,
+            drain_rr: AtomicUsize::new(0),
         }
     }
 
@@ -369,18 +457,47 @@ impl MigrationHub {
     }
 
     /// Batch variant: one tail exchange for the whole group, one wake.
-    fn divert_batch(&self, shard: usize, frames: Vec<FramePtr>) {
-        if frames.is_empty() {
+    /// Takes an exact-size iterator (e.g. a `Vec::drain`) so the batch
+    /// path can feed it straight from the submitter-local arena without
+    /// materializing a fresh vector per wave.
+    fn divert_batch(&self, shard: usize, frames: impl ExactSizeIterator<Item = FramePtr>) {
+        let n = frames.len();
+        if n == 0 {
             return;
         }
-        self.spouts[shard].len.fetch_add(frames.len(), Ordering::Release);
-        self.diverted.fetch_add(frames.len() as u64, Ordering::Relaxed);
+        self.spouts[shard].len.fetch_add(n, Ordering::Release);
+        self.diverted.fetch_add(n as u64, Ordering::Relaxed);
         self.spouts[shard].queue.push_batch(frames);
         self.wake_starved(shard);
     }
 
-    /// Try to take one frame out of shard `s`'s spout.
+    /// Try to take one frame out of shard `s`'s spout (sibling-claim
+    /// flavour: no drain).
     fn try_claim(&self, s: usize) -> Option<Claimed> {
+        self.claim_impl(s, false)
+    }
+
+    /// Home-shard claim with the drain fast path enabled (see
+    /// [`Self::claim_impl`]).
+    fn try_claim_home(&self, s: usize) -> Option<Claimed> {
+        self.claim_impl(s, true)
+    }
+
+    /// The one claim protocol both flavours share: len fast-exit,
+    /// consumer `try_lock` (Contended on loss), pop-else-Contended.
+    ///
+    /// With `home_drain` set (the claiming worker belongs to shard `s`)
+    /// and **no sibling shard starved**, up to [`HOME_DRAIN_RUN`]
+    /// follow-up frames are moved into the home pool's own (lock-free,
+    /// single-consumer) submission queues under the same lock
+    /// acquisition — they then execute straight off the submission
+    /// queues, bypassing the spout's consumer `try_lock` entirely.
+    /// Every worker that received a frame is woken individually
+    /// (submission queues are single-consumer: a frame parked on a
+    /// sleeping worker would otherwise wait out that worker's park
+    /// backstop). With starved siblings the spout is left intact so
+    /// they can claim their share.
+    fn claim_impl(&self, s: usize, home_drain: bool) -> Option<Claimed> {
         let spout = &self.spouts[s];
         if spout.len.load(Ordering::Acquire) == 0 {
             return None;
@@ -388,34 +505,76 @@ impl MigrationHub {
         let Ok(_guard) = spout.claim.try_lock() else {
             return Some(Claimed::Contended);
         };
-        match spout.queue.pop() {
+        let first = match spout.queue.pop() {
             Some(frame) => {
                 spout.len.fetch_sub(1, Ordering::AcqRel);
-                Some(Claimed::Frame(frame))
+                frame
             }
             // A producer swapped the tail but has not linked yet; the
             // frame will be visible on the next poll.
-            None => Some(Claimed::Contended),
+            None => return Some(Claimed::Contended),
+        };
+        if home_drain
+            && spout.len.load(Ordering::Acquire) > 0
+            && self.no_sibling_starved(s)
+        {
+            if let Some(home) = self.wakers.get().and_then(|w| w[s].upgrade()) {
+                let workers = home.submissions.len();
+                let mut moved = 0;
+                while moved < HOME_DRAIN_RUN {
+                    let Some(frame) = spout.queue.pop() else { break };
+                    spout.len.fetch_sub(1, Ordering::AcqRel);
+                    let w = self.drain_rr.fetch_add(1, Ordering::Relaxed) % workers;
+                    home.submissions[w].push(frame);
+                    home.wake_submission_target(w);
+                    moved += 1;
+                }
+            }
         }
+        Some(Claimed::Frame(first))
+    }
+
+    /// True when no sibling shard of `home` has a parked worker — i.e.
+    /// nobody else is starved enough to come claiming from `home`'s
+    /// spout right now.
+    fn no_sibling_starved(&self, home: usize) -> bool {
+        let Some(wakers) = self.wakers.get() else { return false };
+        for &(v, _) in &self.victims[home] {
+            if let Some(shared) = wakers[v].upgrade() {
+                if shared.sleepers.load(Ordering::Relaxed) > 0 {
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     /// Claim work on behalf of `shard`'s pool: own spout first (not a
-    /// migration — the saturated shard drains its own overflow), then
-    /// siblings nearest-first.
+    /// migration — the saturated shard drains its own overflow, with
+    /// the [`Self::try_claim_home`] fast path), then siblings
+    /// nearest-first. Feeds the hysteresis tuner: contended polls count
+    /// as misses, cross-shard claims as productive migrations.
     fn claim_for(&self, shard: usize) -> ExternalPoll {
-        match self.try_claim(shard) {
+        match self.try_claim_home(shard) {
             Some(Claimed::Frame(frame)) => {
                 return ExternalPoll::Job(ExternalJob { frame, migrated: false })
             }
-            Some(Claimed::Contended) => return ExternalPoll::Retry,
+            Some(Claimed::Contended) => {
+                self.tuner.note_miss();
+                return ExternalPoll::Retry;
+            }
             None => {}
         }
-        for &victim in &self.victims[shard] {
+        for &(victim, _) in &self.victims[shard] {
             match self.try_claim(victim) {
                 Some(Claimed::Frame(frame)) => {
+                    self.tuner.note_claim();
                     return ExternalPoll::Job(ExternalJob { frame, migrated: true })
                 }
-                Some(Claimed::Contended) => return ExternalPoll::Retry,
+                Some(Claimed::Contended) => {
+                    self.tuner.note_miss();
+                    return ExternalPoll::Retry;
+                }
                 None => {}
             }
         }
@@ -428,9 +587,54 @@ impl MigrationHub {
     /// pre-park poll; fully parked ones are also bounded by the lazy
     /// scheduler's `PARK_BACKSTOP` timeout, so a lost wake costs at
     /// most one backstop period.
+    ///
+    /// With park-aware routing on, shards *within one distance class*
+    /// are ranked by how long their coldest worker has been parked
+    /// (Eq. (6)'s hierarchy still decides between classes), and the wake
+    /// lands on that shard's longest-parked worker. Park stamps are
+    /// measured against each pool's own build instant; a server builds
+    /// its shards back-to-back, so cross-shard comparisons are off by at
+    /// most the few-ms build skew — noise at parking timescales.
     fn wake_starved(&self, home: usize) {
         let Some(wakers) = self.wakers.get() else { return };
-        for &victim in &self.victims[home] {
+        if self.park_aware {
+            let victims = &self.victims[home];
+            let mut i = 0;
+            while i < victims.len() {
+                let class = victims[i].1;
+                // Coldest shard within this distance class.
+                let mut best: Option<(u64, std::sync::Arc<Shared>)> = None;
+                while i < victims.len() && victims[i].1 == class {
+                    let (v, _) = victims[i];
+                    i += 1;
+                    let Some(shared) = wakers[v].upgrade() else { continue };
+                    if shared.sleepers.load(Ordering::Relaxed) == 0 {
+                        continue;
+                    }
+                    if let Some(ts) = shared.coldest_park_stamp() {
+                        if best.as_ref().is_none_or(|(b, _)| ts < *b) {
+                            best = Some((ts, shared));
+                        }
+                    }
+                }
+                if let Some((_, shared)) = best {
+                    if !shared.wake_coldest() {
+                        // Raced awake between the rank and the wake:
+                        // fall back to the plain scan (no-op if nobody
+                        // sleeps anymore).
+                        shared.wake_one(0);
+                    }
+                    return;
+                }
+            }
+            if let Some(shared) = wakers[home].upgrade() {
+                if shared.sleepers.load(Ordering::Relaxed) > 0 && !shared.wake_coldest() {
+                    shared.wake_one(0);
+                }
+            }
+            return;
+        }
+        for &(victim, _) in &self.victims[home] {
             if let Some(shared) = wakers[victim].upgrade() {
                 if shared.sleepers.load(Ordering::Relaxed) > 0 {
                     shared.wake_one(0);
@@ -472,7 +676,11 @@ pub struct JobServerBuilder {
     seed: u64,
     migration: bool,
     hysteresis: usize,
+    hyst_bounds: Option<(usize, usize)>,
+    hyst_tune: bool,
     spout_cap: usize,
+    adaptive_stacklets: bool,
+    park_aware: bool,
 }
 
 impl JobServerBuilder {
@@ -488,7 +696,11 @@ impl JobServerBuilder {
             seed: 0x5EED,
             migration: true,
             hysteresis: DEFAULT_MIGRATION_HYSTERESIS,
+            hyst_bounds: None,
+            hyst_tune: true,
             spout_cap: DEFAULT_SPOUT_CAP,
+            adaptive_stacklets: true,
+            park_aware: true,
         }
     }
 
@@ -555,8 +767,53 @@ impl JobServerBuilder {
     /// placements open the diversion valve — so migration reacts to
     /// sustained skew, not to scheduling noise. Default
     /// [`DEFAULT_MIGRATION_HYSTERESIS`]; minimum 1.
+    ///
+    /// With self-tuning on (the default, see
+    /// [`Self::self_tuning_hysteresis`]) this sets the **starting**
+    /// margin; the live margin then moves within
+    /// [`Self::migration_hysteresis_bounds`].
     pub fn migration_hysteresis(mut self, margin: usize) -> Self {
         self.hysteresis = margin.max(1);
+        self
+    }
+
+    /// Bounds for the self-tuning hysteresis margin (inclusive). The
+    /// live margin never leaves `[min, max]` regardless of what the
+    /// feedback says. Defaults to `[max(1, margin/4), margin*4]` around
+    /// the configured starting margin.
+    pub fn migration_hysteresis_bounds(mut self, min: usize, max: usize) -> Self {
+        self.hyst_bounds = Some((min.max(1), max.max(min.max(1))));
+        self
+    }
+
+    /// Enable or disable **self-tuning hysteresis** (default: on). When
+    /// on, the margin adapts within the builder bounds, driven by the
+    /// spout-claim miss : cross-shard claim ratio — misses dominating
+    /// widens the margin (diversion was unproductive thrash), clean
+    /// claim flow tightens it (react to skew sooner); see
+    /// [`crate::rt::tune::HysteresisTuner`]. When off the margin is the
+    /// static [`Self::migration_hysteresis`] value, exactly as before.
+    pub fn self_tuning_hysteresis(mut self, enabled: bool) -> Self {
+        self.hyst_tune = enabled;
+        self
+    }
+
+    /// Enable or disable **adaptive stacklet sizing** for the server's
+    /// shared stack shelf (default: on): the shelf learns the p99
+    /// per-job stack footprint and recycled/fresh stacks carry a first
+    /// stacklet of that hot size, so steady-state deep jobs stop
+    /// re-growing their stacks (see [`crate::rt::tune`]).
+    pub fn adaptive_stacklets(mut self, enabled: bool) -> Self {
+        self.adaptive_stacklets = enabled;
+        self
+    }
+
+    /// Enable or disable **park-aware wake routing** (default: on), for
+    /// both the shard pools (submission targeting, `wake_one`) and the
+    /// migration hub's spout wakes (prefer the shard/worker parked
+    /// longest within each NUMA distance class).
+    pub fn park_aware_wakes(mut self, enabled: bool) -> Self {
+        self.park_aware = enabled;
         self
     }
 
@@ -604,7 +861,11 @@ impl JobServerBuilder {
         // banks here would exist (in flight) at peak anyway.
         let total_workers: usize = plans.iter().map(|&(_, w, _)| w).sum();
         let shelf_cap = (4 * total_workers).max(16).max(self.capacity.min(4096));
-        let shelf = Arc::new(crate::stack::StackShelf::new(shelf_cap));
+        let shelf = Arc::new(crate::stack::StackShelf::new_tuned(
+            shelf_cap,
+            self.adaptive_stacklets,
+            crate::stack::FIRST_STACKLET,
+        ));
         // The core exists before the pools: each pool's abandonment
         // hook (panic containment releasing admission slots) closes
         // over it.
@@ -627,11 +888,15 @@ impl JobServerBuilder {
         });
         let shard_nodes: Vec<usize> = plans.iter().map(|&(n, _, _)| n).collect();
         let hub = (self.migration && shard_count > 1).then(|| {
+            let (hmin, hmax) = self
+                .hyst_bounds
+                .unwrap_or(((self.hysteresis / 4).max(1), self.hysteresis.saturating_mul(4)));
             Arc::new(MigrationHub::new(
                 &shard_nodes,
                 &topology,
-                self.hysteresis,
+                HysteresisTuner::new(self.hysteresis, hmin, hmax, self.hyst_tune),
                 self.spout_cap,
+                self.park_aware,
             ))
         });
         let mut shards = Vec::with_capacity(shard_count);
@@ -643,6 +908,7 @@ impl JobServerBuilder {
                 .seed(self.seed.wrapping_add(0x9E37 * (1 + s as u64)))
                 .pin_offset(pin_offset)
                 .stack_shelf(Arc::clone(&shelf))
+                .park_aware_wakes(self.park_aware)
                 // Within a shard the cores are one NUMA node: flat.
                 .topology(NumaTopology::flat(workers))
                 .abandon_hook(Arc::new(move |tag| hook_core.abandon(tag as usize)));
@@ -754,6 +1020,19 @@ impl JobServer {
         self.hub.is_some()
     }
 
+    /// The **live** migration hysteresis margin (`None` without
+    /// migration). Moves within [`Self::migration_hysteresis_bounds`]
+    /// when self-tuning is on; pinned to the configured value otherwise.
+    pub fn migration_hysteresis(&self) -> Option<usize> {
+        self.hub.as_ref().map(|h| h.tuner.margin())
+    }
+
+    /// The `[min, max]` bounds the self-tuning hysteresis is confined
+    /// to (`None` without migration).
+    pub fn migration_hysteresis_bounds(&self) -> Option<(usize, usize)> {
+        self.hub.as_ref().map(|h| h.tuner.bounds())
+    }
+
     // ----------------------------------------------------------------
     // Admission (backpressure)
     // ----------------------------------------------------------------
@@ -788,11 +1067,17 @@ impl JobServer {
     // Placement + submission
     // ----------------------------------------------------------------
 
-    /// Run the policy and charge the chosen shard's load counter.
+    /// Run the policy and charge the chosen shard's load counter. Every
+    /// placement — per-job and batch path alike — advances the
+    /// hysteresis tuner's retune window here, so the self-tuning margin
+    /// reacts at the same per-job rate regardless of submission style.
     fn place(&self) -> usize {
         let view = ShardLoads { loads: &self.core.loads };
         let shard = self.policy.place(&view).min(self.shards.len() - 1);
         self.core.loads[shard].in_flight.fetch_add(1, Ordering::AcqRel);
+        if let Some(hub) = &self.hub {
+            hub.tuner.note_placement();
+        }
         shard
     }
 
@@ -804,10 +1089,13 @@ impl JobServer {
     /// in the migration spout (claimable by any shard) instead of going
     /// straight into the shard's pool. True only under **sustained**
     /// imbalance: the shard's in-flight count exceeds the emptiest
-    /// shard's by at least the hysteresis margin, the streak gate has
-    /// filled, and the spout has room.
+    /// shard's by at least the (self-tuning) hysteresis margin, the
+    /// streak gate has filled, and the spout has room.
     fn should_divert(&self, shard: usize) -> bool {
         let Some(hub) = &self.hub else { return false };
+        // The retune window is fed per placement in `place()`; here we
+        // only read the live margin.
+        let margin = hub.tuner.margin();
         let own = self.core.loads[shard].in_flight.load(Ordering::Relaxed);
         let min = (0..self.core.loads.len())
             .map(|s| self.core.loads[s].in_flight.load(Ordering::Relaxed))
@@ -816,7 +1104,7 @@ impl JobServer {
         // The streak is per shard: other tenants placing balanced
         // traffic on other shards must not mask this shard's skew.
         let streak = &hub.spouts[shard].streak;
-        if own < min + hub.hysteresis {
+        if own < min + margin {
             streak.store(0, Ordering::Relaxed);
             return false;
         }
@@ -863,63 +1151,68 @@ impl JobServer {
 
     /// Submit a batch. Jobs are admitted in capacity-bounded waves
     /// (blocking between waves while the server is full); each wave is
-    /// grouped by placement shard and forwarded through
-    /// [`Pool::submit_batch`] — one MPSC tail exchange and one wake
-    /// sweep per (wave × shard). Handles are returned in input order.
+    /// grouped by placement shard in the submitter-local arena and
+    /// routed with one MPSC tail exchange and one wake sweep per
+    /// (wave × shard). Handles are returned in input order.
+    ///
+    /// Allocates only the returned vector; callers that reuse buffers
+    /// across waves should prefer [`Self::submit_batch_into`], which
+    /// allocates nothing once its buffers are warm.
     pub fn submit_batch<C: Coroutine>(
         &self,
-        batch: Vec<C>,
+        mut batch: Vec<C>,
     ) -> Vec<RootHandle<C::Output>> {
-        let total = batch.len();
-        let mut out: Vec<Option<RootHandle<C::Output>>> =
-            (0..total).map(|_| None).collect();
-        let mut jobs = batch.into_iter().enumerate();
-        let mut remaining = total;
+        let mut out = Vec::with_capacity(batch.len());
+        self.submit_batch_into(&mut batch, &mut out);
+        out
+    }
+
+    /// [`Self::submit_batch`], arena style: drains `batch` and appends
+    /// one handle per job to `out` in input order. Per-wave bookkeeping
+    /// (the per-shard frame groups) lives in a submitter-local
+    /// thread-local arena whose capacity survives across calls, so a
+    /// warm submitter thread pays **zero heap allocations per wave** —
+    /// the batch-path analogue of the recycled-stack steady state.
+    pub fn submit_batch_into<C: Coroutine>(
+        &self,
+        batch: &mut Vec<C>,
+        out: &mut Vec<RootHandle<C::Output>>,
+    ) {
+        out.reserve(batch.len());
+        let mut jobs = batch.drain(..);
+        let mut remaining = jobs.len();
         while remaining > 0 {
             let wave = self.admit_up_to(remaining);
             self.core.submitted.fetch_add(wave as u64, Ordering::Relaxed);
-            let mut groups: Vec<Vec<(usize, Tracked<C>)>> =
-                (0..self.shards.len()).map(|_| Vec::new()).collect();
+            let mut guard = WaveGuard::new(self);
+            // Build every root in input order; handles go straight to
+            // `out`, frames into the per-shard groups.
             for _ in 0..wave {
-                let (idx, job) = jobs.next().expect("wave exceeded batch");
+                let job = jobs.next().expect("wave exceeded batch");
                 let shard = self.place();
-                groups[shard].push((idx, self.wrap(job, shard)));
+                let tracked = self.wrap(job, shard);
+                let (frame, handle) =
+                    self.shards[shard].pool.make_root(tracked, shard as u64);
+                guard.groups[shard].push(frame);
+                out.push(handle);
             }
-            for (shard, group) in groups.into_iter().enumerate() {
-                if group.is_empty() {
+            // Park as much of each group as the spout bound allows (one
+            // tail exchange, one wake) so starved shards can claim it;
+            // the remainder is flushed straight into the home pools by
+            // the guard's drop (which also covers the unwind path).
+            for shard in 0..self.shards.len() {
+                if guard.groups[shard].is_empty() || !self.should_divert(shard) {
                     continue;
                 }
-                let mut direct = group;
-                if self.should_divert(shard) {
-                    // Park as much of the group as the spout bound
-                    // allows (one tail exchange, one wake) so starved
-                    // shards can claim it; the overflow past the bound
-                    // goes straight into the home pool below.
-                    let hub = self.hub.as_ref().expect("divert without a migration hub");
-                    let take = hub.spout_room(shard).min(direct.len());
-                    let mut frames = Vec::with_capacity(take);
-                    for (idx, task) in direct.drain(..take) {
-                        let (frame, handle) =
-                            self.shards[shard].pool.make_root(task, shard as u64);
-                        frames.push(frame);
-                        out[idx] = Some(handle);
-                    }
-                    hub.divert_batch(shard, frames);
-                }
-                if direct.is_empty() {
-                    continue;
-                }
-                let (idxs, tasks): (Vec<usize>, Vec<Tracked<C>>) =
-                    direct.into_iter().unzip();
-                let handles =
-                    self.shards[shard].pool.submit_batch_tagged(tasks, shard as u64);
-                for (idx, handle) in idxs.into_iter().zip(handles) {
-                    out[idx] = Some(handle);
+                let hub = self.hub.as_ref().expect("divert without a migration hub");
+                let take = hub.spout_room(shard).min(guard.groups[shard].len());
+                if take > 0 {
+                    hub.divert_batch(shard, guard.groups[shard].drain(..take));
                 }
             }
+            drop(guard);
             remaining -= wave;
         }
-        out.into_iter().map(|h| h.expect("unplaced job")).collect()
     }
 
     // ----------------------------------------------------------------
@@ -966,6 +1259,14 @@ impl JobServer {
         let mut total = MetricsSnapshot::default();
         for s in &self.shards {
             total.merge(&s.pool.metrics());
+        }
+        // The stack shelf is shared by every shard, so the merge above
+        // accumulated the same shelf's tuning signals once per shard —
+        // overwrite with the single source of truth.
+        if let Some(first) = self.shards.first() {
+            let tuner = first.pool.stack_shelf().tuner();
+            total.stacklet_grows = tuner.grows_count();
+            total.hot_stacklet_bytes = tuner.hot_bytes_gauge();
         }
         total
     }
@@ -1049,11 +1350,22 @@ mod tests {
         // 4 shards round-robined over 2 nodes (shard s → node s % 2):
         // a shard's victim list must start with its node-mate.
         let topo = NumaTopology::synthetic(2, 2);
-        let hub = MigrationHub::new(&[0, 1, 0, 1], &topo, 4, 16);
-        assert_eq!(hub.victims[0], vec![2, 1, 3]);
-        assert_eq!(hub.victims[1], vec![3, 0, 2]);
-        assert_eq!(hub.victims[2], vec![0, 1, 3]);
-        assert_eq!(hub.victims[3], vec![1, 0, 2]);
+        let hub = MigrationHub::new(
+            &[0, 1, 0, 1],
+            &topo,
+            HysteresisTuner::new(4, 1, 16, true),
+            16,
+            true,
+        );
+        let order = |s: usize| hub.victims[s].iter().map(|&(v, _)| v).collect::<Vec<_>>();
+        assert_eq!(order(0), vec![2, 1, 3]);
+        assert_eq!(order(1), vec![3, 0, 2]);
+        assert_eq!(order(2), vec![0, 1, 3]);
+        assert_eq!(order(3), vec![1, 0, 2]);
+        // Distances are carried for the park-aware class ranking: the
+        // node-mate sits at distance 0, remote shards further out.
+        assert_eq!(hub.victims[0][0].1, 0);
+        assert!(hub.victims[0][1].1 > 0);
     }
 
     #[test]

@@ -66,6 +66,12 @@ pub struct SegmentedStack {
     peak_footprint: usize,
     /// Number of stacklet heap allocations performed over the lifetime.
     heap_allocs: u64,
+    /// `heap_allocs` snapshot taken at the last [`Self::trim`] /
+    /// [`Self::reshape_first`]: the delta ([`Self::grows_since_trim`])
+    /// is the number of stacklet-overflow events the *current tenancy*
+    /// (one recycled job, typically) paid — the grow signal the
+    /// feedback tuner ([`crate::rt::tune`]) samples at root completion.
+    allocs_at_trim: u64,
     /// Set when a workload panic unwound across live frames on this
     /// stack. A poisoned stack must never be recycled: its frames were
     /// abandoned mid-execution and may still be referenced (e.g. a fused
@@ -96,6 +102,7 @@ impl SegmentedStack {
             footprint,
             peak_footprint: footprint,
             heap_allocs: 1,
+            allocs_at_trim: 1,
             poisoned: false,
         })
     }
@@ -231,7 +238,9 @@ impl SegmentedStack {
         self.live
     }
 
-    /// High-water mark of live allocations.
+    /// High-water mark of live allocations since the last
+    /// [`Self::trim`] (the current tenancy's footprint — per-job for
+    /// recycled root stacks).
     #[inline]
     pub fn peak_live_bytes(&self) -> usize {
         self.peak_live
@@ -260,11 +269,17 @@ impl SegmentedStack {
     /// Trim an **empty** stack down to its first stacklet, freeing the
     /// cached stacklet (and any others) above it. Called by the
     /// recycling layer ([`StackShelf`], the per-worker stack pools) so a
-    /// shelved stack holds exactly one stacklet of the configured
-    /// first-stacklet capacity — excess capacity from a deep job decays
-    /// instead of accumulating across recycles. Since stacklets grow
-    /// geometrically, this is also where the `O(log2 n)` heap term of
-    /// Eq. (5) is returned to the allocator.
+    /// shelved stack holds exactly one stacklet of its first-stacklet
+    /// capacity — excess capacity from a deep job decays instead of
+    /// accumulating across recycles. Since stacklets grow geometrically,
+    /// this is also where the `O(log2 n)` heap term of Eq. (5) is
+    /// returned to the allocator.
+    ///
+    /// Trimming also opens a fresh **tenancy window**: the live/footprint
+    /// peaks and the grow baseline reset, so the next occupant's
+    /// [`Self::peak_live_bytes`] / [`Self::grows_since_trim`] describe
+    /// that occupant alone — the per-job signals the feedback tuner
+    /// ([`crate::rt::tune::FootprintTuner`]) samples at root completion.
     pub fn trim(&mut self) {
         debug_assert!(self.is_empty(), "trim on a stack with live allocations");
         unsafe {
@@ -278,6 +293,48 @@ impl SegmentedStack {
                 cur = next;
             }
         }
+        self.peak_live = 0;
+        self.peak_footprint = self.footprint;
+        self.allocs_at_trim = self.heap_allocs;
+    }
+
+    /// Usable capacity of the first (bottom) stacklet — the size a
+    /// recycled stack is reborn with after [`Self::trim`].
+    #[inline]
+    pub fn first_capacity(&self) -> usize {
+        unsafe { (*self.first).capacity() }
+    }
+
+    /// Stacklet-overflow heap allocations since the last trim — how many
+    /// times the current tenancy had to grow the stack. The adaptive
+    /// sizing loop drives this to ~0 per job.
+    #[inline]
+    pub fn grows_since_trim(&self) -> u64 {
+        self.heap_allocs - self.allocs_at_trim
+    }
+
+    /// Replace the first stacklet of an **empty, trimmed** stack with a
+    /// single stacklet of `cap` usable bytes — the adaptive-sizing
+    /// actuator ([`crate::rt::tune::FootprintTuner::reshape_target`]).
+    /// One heap free + one heap allocation; the recycling layer calls
+    /// this only while the learned hot size is moving (warmup or a
+    /// workload shift), so the steady state stays allocation-free.
+    pub fn reshape_first(&mut self, cap: usize) {
+        debug_assert!(self.is_empty(), "reshape on a stack with live allocations");
+        debug_assert_eq!(self.top, self.first, "reshape requires a trimmed stack");
+        debug_assert!(unsafe { (*self.first).next.is_null() }, "reshape requires a trimmed stack");
+        unsafe {
+            self.footprint -= (*self.first).total_size();
+            Stacklet::free(self.first);
+            let first = Stacklet::alloc(round_up(cap.max(ALIGN)));
+            self.first = first;
+            self.top = first;
+            self.footprint += (*first).total_size();
+        }
+        self.heap_allocs += 1;
+        self.peak_live = 0;
+        self.peak_footprint = self.footprint;
+        self.allocs_at_trim = self.heap_allocs;
     }
 
     /// Mark this stack as panic-poisoned (see the `poisoned` field).
@@ -516,6 +573,54 @@ mod tests {
         s.dealloc(p, 4096);
         s.trim();
         assert_eq!(s.stacklet_count(), 1);
+    }
+
+    #[test]
+    fn trim_resets_tenancy_signals() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        let mut ps = Vec::new();
+        for _ in 0..100 {
+            ps.push((s.alloc(128), 128));
+        }
+        for (p, n) in ps.into_iter().rev() {
+            s.dealloc(p, n);
+        }
+        assert!(s.grows_since_trim() > 0, "a deep tenancy must have grown");
+        assert!(s.peak_live_bytes() >= 100 * 128);
+        s.trim();
+        assert_eq!(s.grows_since_trim(), 0, "trim opens a fresh grow window");
+        assert_eq!(s.peak_live_bytes(), 0, "trim opens a fresh peak window");
+        // A shallow follow-up tenancy reports only its own signals.
+        let p = s.alloc(32);
+        s.dealloc(p, 32);
+        assert_eq!(s.grows_since_trim(), 0);
+        assert_eq!(s.peak_live_bytes(), 32);
+    }
+
+    #[test]
+    fn reshape_first_resizes_in_both_directions() {
+        let mut s = SegmentedStack::with_first_capacity(64);
+        assert_eq!(s.first_capacity(), 64);
+        s.reshape_first(16 * 1024);
+        assert_eq!(s.first_capacity(), 16 * 1024);
+        assert_eq!(s.stacklet_count(), 1);
+        assert_eq!(s.grows_since_trim(), 0, "the reshape itself is not a grow");
+        // A tenancy that fits the hot size never grows.
+        let mut ps = Vec::new();
+        for _ in 0..100 {
+            ps.push((s.alloc(128), 128));
+        }
+        assert_eq!(s.grows_since_trim(), 0, "hot-sized stack must not overflow");
+        for (p, n) in ps.into_iter().rev() {
+            s.dealloc(p, n);
+        }
+        // Reshape down (workload shifted back to shallow jobs).
+        s.trim();
+        s.reshape_first(64);
+        assert_eq!(s.first_capacity(), 64);
+        let p = s.alloc(32);
+        s.dealloc(p, 32);
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -30,13 +30,19 @@
 //! The shelf is bounded: pushes beyond `capacity` free the stack
 //! (allocator traffic on overflow only, never on the steady-state path).
 //! The slot vector is pre-reserved at construction so `recycle` itself
-//! never allocates. `quarantine` may allocate (bin growth) — it only
-//! runs on the cold panic-containment path.
+//! never allocates in steady state; with **adaptive stacklet sizing**
+//! enabled ([`crate::rt::tune::FootprintTuner`]) it additionally
+//! reshapes a stack whose first stacklet misses the learned hot size —
+//! one free + one allocation, paid only while the hot size is moving.
+//! `quarantine` may allocate (bin growth) — it only runs on the cold
+//! panic-containment path.
 //!
 //! [`Pool`]: crate::rt::pool::Pool
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::rt::tune::FootprintTuner;
 
 use super::SegmentedStack;
 
@@ -64,6 +70,11 @@ pub struct StackShelf {
     dropped: AtomicU64,
     /// Stacks taken into the poison bin over the lifetime.
     quarantined: AtomicU64,
+    /// Adaptive stacklet sizing: learns the p99 per-job footprint from
+    /// the root-completion samples ([`Self::observe_root_quiesce`]) and
+    /// tells [`Self::recycle`] what first-stacklet capacity shelved
+    /// stacks should carry (see [`crate::rt::tune`]).
+    tuner: FootprintTuner,
 }
 
 impl std::fmt::Debug for Shelved {
@@ -73,8 +84,20 @@ impl std::fmt::Debug for Shelved {
 }
 
 impl StackShelf {
-    /// A shelf holding at most `capacity` stacks.
+    /// A shelf holding at most `capacity` stacks, with adaptive sizing
+    /// **off** (recycled stacks keep their first-stacklet capacity,
+    /// exactly the pre-tuning behaviour).
     pub fn new(capacity: usize) -> Self {
+        Self::new_tuned(capacity, false, super::FIRST_STACKLET)
+    }
+
+    /// A shelf holding at most `capacity` stacks. When `adaptive` is
+    /// set, the shelf's [`FootprintTuner`] learns the p99 job footprint
+    /// from root completions and [`Self::recycle`] reshapes shelved
+    /// stacks to that hot size; `floor` is the first-stacklet capacity
+    /// the hot size never shrinks below (the pool's configured
+    /// `first_stacklet`).
+    pub fn new_tuned(capacity: usize, adaptive: bool, floor: usize) -> Self {
         let capacity = capacity.max(1);
         StackShelf {
             slots: Mutex::new(Vec::with_capacity(capacity)),
@@ -83,6 +106,33 @@ impl StackShelf {
             recycled: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
+            tuner: FootprintTuner::new(adaptive, floor),
+        }
+    }
+
+    /// The shelf's footprint tuner (signals stay live even when the
+    /// sizing actuator is disabled — they feed the `stacklet_grows` /
+    /// `hot_stacklet_bytes` metrics).
+    pub fn tuner(&self) -> &FootprintTuner {
+        &self.tuner
+    }
+
+    /// Sample one quiesced root job into the tuner: its peak live bytes
+    /// and stacklet-grow count since the stack's last trim. Called by
+    /// the fused-root-block disposer ([`crate::rt::root`]) right before
+    /// it recycles the job's stack.
+    pub fn observe_root_quiesce(&self, peak_live: usize, grows: u64) {
+        self.tuner.record_job(peak_live, grows);
+    }
+
+    /// First-stacklet capacity fresh stacks should be born with:
+    /// the learned hot size, or `fallback` while cold / when adaptive
+    /// sizing is disabled.
+    pub fn hot_first_capacity(&self, fallback: usize) -> usize {
+        if self.tuner.enabled() {
+            self.tuner.hot_first_capacity().max(fallback)
+        } else {
+            fallback
         }
     }
 
@@ -97,6 +147,13 @@ impl StackShelf {
     /// shelf drops; their abandoned frames may still be referenced by
     /// outstanding handles or sibling strands until then).
     ///
+    /// With adaptive sizing enabled, a trimmed stack whose first
+    /// stacklet does not match the learned hot size (undersized, or more
+    /// than 4× oversized) is **reshaped** to it — one free + one
+    /// allocation, paid only while the hot size is moving (warmup or a
+    /// workload shift). In steady state every shelved stack is already
+    /// hot-sized and `recycle` performs no heap traffic, as before.
+    ///
     /// # Safety
     /// The caller transfers exclusive ownership of `s`, which must have
     /// been created by `SegmentedStack` boxing (`Box::into_raw`) and must
@@ -108,6 +165,9 @@ impl StackShelf {
         }
         debug_assert!((*s).is_empty(), "recycled stacks must be empty");
         (*s).trim();
+        if let Some(target) = self.tuner.reshape_target((*s).first_capacity()) {
+            (*s).reshape_first(target);
+        }
         let mut slots = self.slots.lock().unwrap();
         if slots.len() < self.capacity {
             slots.push(Shelved(s));
@@ -276,6 +336,59 @@ mod tests {
         assert_eq!(shelf.quarantined_count(), 3);
         assert_eq!(shelf.poisoned_len(), 3, "bin is not bounded by the shelf capacity");
         assert!(shelf.pop().is_none(), "the bin must never feed reuse");
+    }
+
+    #[test]
+    fn adaptive_recycle_reshapes_to_hot_size() {
+        let shelf = StackShelf::new_tuned(4, true, 64);
+        // A deep tenancy teaches the shelf its footprint...
+        let mut stack = SegmentedStack::with_first_capacity(64);
+        let mut ps = Vec::new();
+        for _ in 0..200 {
+            ps.push((stack.alloc(128), 128));
+        }
+        for (p, n) in ps.into_iter().rev() {
+            stack.dealloc(p, n);
+        }
+        shelf.observe_root_quiesce(stack.peak_live_bytes(), stack.grows_since_trim());
+        assert!(shelf.tuner().grows_count() > 0);
+        let hot = shelf.tuner().hot_first_capacity();
+        assert!(hot >= 200 * 128, "hot size {hot} must cover the sample");
+        // ...and recycling reshapes the stack to that hot size.
+        unsafe { shelf.recycle(Box::into_raw(stack)) };
+        let back = shelf.pop().expect("shelved stack");
+        unsafe {
+            assert_eq!((*back).first_capacity(), hot, "recycled stack must be hot-sized");
+            assert_eq!((*back).stacklet_count(), 1);
+            // The next deep tenancy fits without a single grow.
+            let mut ps = Vec::new();
+            for _ in 0..200 {
+                ps.push(((*back).alloc(128), 128));
+            }
+            assert_eq!((*back).grows_since_trim(), 0, "hot-sized tenancy must not grow");
+            for (p, n) in ps.into_iter().rev() {
+                (*back).dealloc(p, n);
+            }
+            drop(Box::from_raw(back));
+        }
+        // `hot_first_capacity` feeds fresh-stack sizing too.
+        assert_eq!(shelf.hot_first_capacity(64), hot);
+    }
+
+    #[test]
+    fn non_adaptive_shelf_keeps_first_capacity() {
+        let shelf = StackShelf::new(4);
+        shelf.observe_root_quiesce(1 << 20, 9);
+        assert_eq!(shelf.hot_first_capacity(64), 64, "disabled tuner pins to fallback");
+        let stack = SegmentedStack::with_first_capacity(64);
+        unsafe { shelf.recycle(Box::into_raw(stack)) };
+        let back = shelf.pop().expect("shelved stack");
+        unsafe {
+            assert_eq!((*back).first_capacity(), 64, "no reshape with the tuner off");
+            drop(Box::from_raw(back));
+        }
+        // The grow/footprint signals stay live for the metrics.
+        assert_eq!(shelf.tuner().grows_count(), 9);
     }
 
     #[test]

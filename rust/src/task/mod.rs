@@ -155,7 +155,6 @@ impl<'w> Cx<'w> {
                     steals: 0,
                     join: JoinCounter::new(),
                     root_hot: std::ptr::null(),
-                    qnext: std::sync::atomic::AtomicPtr::new(std::ptr::null_mut()),
                 },
                 out: slot,
                 task: child,

@@ -22,6 +22,7 @@
 use rustfork::mem::alloc_count;
 use rustfork::numa::NumaTopology;
 use rustfork::rt::Pool;
+use rustfork::service::jobs::DeepJob;
 use rustfork::service::{JobServer, PinnedShard};
 use rustfork::workloads::fib::{fib_exact, Fib};
 
@@ -139,6 +140,51 @@ fn steady_state_is_allocation_free() {
             "the measured windows must include real migrations: \
              before {migrated_before}, after {}: {m:?}",
             m.jobs_migrated
+        );
+    }
+
+    // Deep workload with the feedback tuners on (ISSUE 5): each job is
+    // a 2000-frame call chain (~160 KiB of live stack, 40× the default
+    // first stacklet). During warmup the adaptive-sizing loop pays the
+    // growth chain and a one-off reshape per shelved stack; after that,
+    // every recycled stack is hot-sized, so the steady state performs
+    // zero heap allocations AND zero stacklet grows per job — without
+    // the tuner, every deep job would re-pay the geometric growth (see
+    // tests/tune.rs for that control).
+    {
+        const DEPTH: u32 = 2_000;
+        let pool = Pool::builder().workers(1).build(); // tuners default on
+        let mut submit = |_seed: u64| {
+            assert_eq!(pool.run(DeepJob::new(DEPTH)), DeepJob::expected(DEPTH));
+        };
+        for seed in 0..32 {
+            submit(seed);
+        }
+        let mut last = usize::MAX;
+        let mut window_grows = u64::MAX;
+        for _attempt in 0..5 {
+            // Grow accounting per attempt: the retry loop tolerates
+            // residual warmup allocations in early attempts, so the
+            // zero-grow requirement is asserted over the same window
+            // that achieved the zero-alloc result.
+            let grows_before = pool.metrics().stacklet_grows;
+            let before = alloc_count();
+            for seed in 0..100 {
+                submit(seed);
+            }
+            last = alloc_count() - before;
+            window_grows = pool.metrics().stacklet_grows - grows_before;
+            if last == 0 {
+                break;
+            }
+        }
+        assert_eq!(
+            last, 0,
+            "deep workload with adaptive sizing never reached a zero-allocation window"
+        );
+        assert_eq!(
+            window_grows, 0,
+            "hot-sized steady state must not grow stacklets"
         );
     }
 }

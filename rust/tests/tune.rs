@@ -1,0 +1,264 @@
+//! Feedback-tuning end-to-end tests (ISSUE 5 tentpole):
+//!
+//! * **adaptive stacklet sizing** — the footprint register converges on
+//!   a deep workload and recycled stacks stop growing after warmup
+//!   (vs. ≥1 grow per job with the tuner off);
+//! * **self-tuning hysteresis** — the live margin never leaves the
+//!   builder bounds under sustained skew, and never moves with the
+//!   tuner off;
+//! * **park-aware wake routing** — the chooser never returns a
+//!   non-parked worker, and a park-aware pool/server stays exact;
+//! * **all tuners off** — results remain bit-identical to the serial
+//!   oracles and the quiescence invariant holds, i.e. the untuned
+//!   server is today's server.
+
+use rustfork::numa::NumaTopology;
+use rustfork::rt::tune::pick_coldest;
+use rustfork::rt::Pool;
+use rustfork::service::{jobs::DeepJob, jobs::MixedJob, JobServer, PinnedShard};
+
+/// Deep enough that each job's live stack (~80 bytes/frame) dwarfs the
+/// 4 KiB default first stacklet many times over.
+const DEPTH: u32 = 2_000;
+
+#[test]
+fn adaptive_sizing_stops_stacklet_growth_after_warmup() {
+    // Single worker: the whole call chain lands on the root stack, so
+    // the footprint sample is deterministic.
+    let pool = Pool::builder().workers(1).build(); // tuners default on
+    for _ in 0..16 {
+        assert_eq!(pool.run(DeepJob::new(DEPTH)), DeepJob::expected(DEPTH));
+    }
+    // The register has converged: the hot size covers the ~160 KiB
+    // chain and every shelved stack has been reshaped to it.
+    let warm = pool.metrics();
+    assert!(
+        warm.hot_stacklet_bytes >= 160_000,
+        "footprint EMA must converge on the deep job: hot = {} bytes",
+        warm.hot_stacklet_bytes
+    );
+    assert!(warm.stacklet_grows > 0, "warmup itself pays the growth chain");
+    // Steady state: 50 more deep jobs, zero stacklet grows.
+    let jobs = 50u64;
+    for _ in 0..jobs {
+        assert_eq!(pool.run(DeepJob::new(DEPTH)), DeepJob::expected(DEPTH));
+    }
+    let after = pool.metrics();
+    assert_eq!(
+        after.stacklet_grows - warm.stacklet_grows,
+        0,
+        "recycled stacks must stop growing once hot-sized"
+    );
+    // The hot size is stable under constant traffic (quantized register).
+    assert_eq!(after.hot_stacklet_bytes, warm.hot_stacklet_bytes);
+}
+
+#[test]
+fn fixed_sizing_regrows_every_deep_job() {
+    // Control: tuner off — every recycled stack is trimmed back to the
+    // default first stacklet, so every deep job re-pays the geometric
+    // growth chain (the libseff hidden cost this PR removes).
+    let pool = Pool::builder().workers(1).adaptive_stacklets(false).build();
+    for _ in 0..8 {
+        assert_eq!(pool.run(DeepJob::new(DEPTH)), DeepJob::expected(DEPTH));
+    }
+    let warm = pool.metrics();
+    assert_eq!(warm.hot_stacklet_bytes, 0, "disabled tuner reports no hot size");
+    let jobs = 50u64;
+    for _ in 0..jobs {
+        assert_eq!(pool.run(DeepJob::new(DEPTH)), DeepJob::expected(DEPTH));
+    }
+    let after = pool.metrics();
+    assert!(
+        after.stacklet_grows - warm.stacklet_grows >= jobs,
+        "without adaptive sizing each deep job must grow at least once: {} grows / {} jobs",
+        after.stacklet_grows - warm.stacklet_grows,
+        jobs
+    );
+}
+
+#[test]
+fn adaptive_sizing_decays_after_workload_shift() {
+    // After the deep tenant leaves, thousands of shallow jobs must pull
+    // the hot size back down (the asymmetric EMA's decay side).
+    let pool = Pool::builder().workers(1).build();
+    for _ in 0..4 {
+        assert_eq!(pool.run(DeepJob::new(DEPTH)), DeepJob::expected(DEPTH));
+    }
+    let hot_deep = pool.metrics().hot_stacklet_bytes;
+    assert!(hot_deep >= 160_000);
+    for _ in 0..4_000 {
+        assert_eq!(pool.run(DeepJob::new(1)), DeepJob::expected(1));
+    }
+    let hot_shallow = pool.metrics().hot_stacklet_bytes;
+    assert!(
+        hot_shallow < hot_deep,
+        "the hot size must decay once deep jobs stop: {hot_deep} -> {hot_shallow}"
+    );
+}
+
+fn skewed_server(bounds: Option<(usize, usize)>, tune: bool) -> JobServer {
+    let mut b = JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 2))
+        .shards(2)
+        .workers_per_shard(2)
+        .capacity(256)
+        .policy(PinnedShard(0))
+        .migration_hysteresis(4)
+        .self_tuning_hysteresis(tune);
+    if let Some((lo, hi)) = bounds {
+        b = b.migration_hysteresis_bounds(lo, hi);
+    }
+    b.build()
+}
+
+/// Open-window skewed drive asserting checksums; returns nothing —
+/// callers sample the live margin between windows.
+fn drive_window(server: &JobServer, jobs: u64, window: usize) {
+    let mut handles = Vec::with_capacity(window);
+    let mut seed = 0u64;
+    while seed < jobs {
+        let wave = (window as u64).min(jobs - seed);
+        for s in seed..seed + wave {
+            handles.push((s, server.submit(MixedJob::from_seed(s))));
+        }
+        for (s, h) in handles.drain(..) {
+            assert_eq!(h.join(), MixedJob::expected(s), "seed {s}");
+        }
+        seed += wave;
+    }
+}
+
+#[test]
+fn hysteresis_stays_within_builder_bounds_under_skew() {
+    let server = skewed_server(Some((2, 16)), true);
+    assert_eq!(server.migration_hysteresis_bounds(), Some((2, 16)));
+    assert_eq!(server.migration_hysteresis(), Some(4), "starts at the configured margin");
+    // Sustained skew: sample the live margin between windows — it may
+    // move, but never outside the bounds.
+    for round in 0..12 {
+        drive_window(&server, 128, 32);
+        let margin = server.migration_hysteresis().expect("migration on");
+        assert!(
+            (2..=16).contains(&margin),
+            "round {round}: margin {margin} escaped the builder bounds [2, 16]"
+        );
+    }
+    // The traffic was genuinely skewed and exact throughout.
+    let stats = server.stats();
+    assert_eq!(stats.completed, 12 * 128);
+    assert!(stats.diverted > 0, "pinned placement must divert: {stats:?}");
+}
+
+#[test]
+fn static_hysteresis_never_moves() {
+    let server = skewed_server(Some((1, 64)), false);
+    for _ in 0..6 {
+        drive_window(&server, 128, 32);
+        assert_eq!(
+            server.migration_hysteresis(),
+            Some(4),
+            "self-tuning off: the margin must stay at the configured value"
+        );
+    }
+}
+
+#[test]
+fn wake_routing_never_picks_a_non_parked_worker() {
+    // Property over synthetic park tables: the chooser only ever
+    // returns an eligible index whose stamp is nonzero (= parked), and
+    // among those it picks the smallest stamp (= parked longest).
+    let tables: &[&[u64]] = &[
+        &[0, 0, 0, 0],
+        &[5, 0, 3, 0],
+        &[1],
+        &[0],
+        &[9, 8, 7, 6, 5],
+        &[0, 0, 42, 0, 0],
+    ];
+    for (t, ts) in tables.iter().enumerate() {
+        for mask in 0..(1u32 << ts.len()) {
+            let eligible = |i: usize| mask & (1 << i) != 0;
+            match pick_coldest(ts.len(), |i| ts[i], eligible) {
+                Some(w) => {
+                    assert!(ts[w] != 0, "table {t} mask {mask}: woke non-parked worker {w}");
+                    assert!(eligible(w), "table {t} mask {mask}: ineligible worker {w}");
+                    for i in 0..ts.len() {
+                        if ts[i] != 0 && eligible(i) {
+                            assert!(
+                                ts[w] <= ts[i],
+                                "table {t} mask {mask}: {w} is not the longest-parked"
+                            );
+                        }
+                    }
+                }
+                None => {
+                    assert!(
+                        (0..ts.len()).all(|i| ts[i] == 0 || !eligible(i)),
+                        "table {t} mask {mask}: parked candidate ignored"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn park_aware_server_stays_exact() {
+    // End-to-end smoke with park-aware routing live on a lazy server:
+    // bursty traffic with idle gaps (so workers actually park between
+    // windows) must stay exact and quiesce cleanly.
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 2))
+        .shards(2)
+        .workers_per_shard(2)
+        .capacity(64)
+        .park_aware_wakes(true)
+        .build();
+    for _ in 0..4 {
+        drive_window(&server, 96, 24);
+        std::thread::sleep(std::time::Duration::from_millis(5)); // let workers park
+    }
+    let m = server.metrics();
+    assert_eq!(m.roots, 4 * 96);
+    assert_eq!(m.signals, m.steals, "park-aware routing broke quiescence: {m:?}");
+}
+
+#[test]
+fn all_tuners_off_matches_serial_checksums() {
+    // The conformance anchor: with every tuner disabled the server is
+    // behaviourally today's server — same checksums, same quiescence
+    // accounting, no tuning artifacts in the metrics.
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 2))
+        .shards(2)
+        .workers_per_shard(2)
+        .capacity(128)
+        .adaptive_stacklets(false)
+        .self_tuning_hysteresis(false)
+        .park_aware_wakes(false)
+        .build();
+    // Per-job submits...
+    for seed in 0..96u64 {
+        assert_eq!(
+            server.submit(MixedJob::from_seed(seed)).join(),
+            MixedJob::expected(seed),
+            "seed {seed}"
+        );
+    }
+    // ...and batched waves, in input order.
+    let handles = server.submit_batch((0..128).map(MixedJob::from_seed).collect());
+    for (seed, h) in (0..128).zip(handles) {
+        assert_eq!(h.join(), MixedJob::expected(seed), "batched seed {seed}");
+    }
+    let m = server.metrics();
+    assert_eq!(m.roots, 96 + 128);
+    assert_eq!(m.signals, m.steals, "{m:?}");
+    assert_eq!(m.hot_stacklet_bytes, 0, "no hot size with the tuner off");
+    assert_eq!(m.wake_misses, 0, "no routed wakes with park-aware off");
+    assert_eq!(
+        server.migration_hysteresis(),
+        Some(rustfork::service::DEFAULT_MIGRATION_HYSTERESIS),
+        "static margin with self-tuning off"
+    );
+}
