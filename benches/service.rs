@@ -22,11 +22,14 @@
 //!
 //! Env: `RUSTFORK_JOBS` (default 5000), `RUSTFORK_BATCH` (default 64),
 //! `RUSTFORK_REPS` (default 3), `RUSTFORK_LATENCY_JOBS` (default 1000).
-//! Machine-readable output: `repro bench --json <path>`.
+//! `RUSTFORK_SCALING=1` appends the per-P scaling curve (strong/weak
+//! throughput + submit ns/job; see `repro bench scaling` for the gated
+//! CLI form and its env knobs). Machine-readable output:
+//! `repro bench --json <path>`.
 //!
 //! [`JobServer`]: rustfork::service::JobServer
 
-use rustfork::harness::service_bench::{run, BenchOptions};
+use rustfork::harness::service_bench::{run, run_scaling, BenchOptions, ScalingOptions};
 
 fn main() {
     let opts = BenchOptions::from_env();
@@ -70,5 +73,24 @@ fn main() {
             adaptive.stacklet_grows_per_job,
             adaptive.hot_stacklet_bytes,
         );
+    }
+    if std::env::var("RUSTFORK_SCALING").is_ok_and(|v| v == "1") {
+        let sopts = ScalingOptions::from_env();
+        println!("# scaling curve: P = 1..{}", sopts.max_workers);
+        let sc = run_scaling(&sopts);
+        println!(
+            "{:>4} {:>14} {:>17} {:>14} {:>11}",
+            "P", "strong jobs/s", "weak jobs/s/wkr", "submit ns/job", "wake misses"
+        );
+        for p in &sc.points {
+            println!(
+                "{:>4} {:>14.0} {:>17.0} {:>14.1} {:>11}",
+                p.workers,
+                p.strong_jobs_per_sec,
+                p.weak_jobs_per_sec_per_worker,
+                p.submit_ns_per_job,
+                p.wake_misses
+            );
+        }
     }
 }

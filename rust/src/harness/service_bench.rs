@@ -21,8 +21,18 @@
 //! sizing off vs on — the headline comparison for the feedback-tuning
 //! layer, mirroring how the skewed pair showcases migration.
 //!
-//! [`to_json`] renders the report machine-readably; the launcher's
-//! `repro bench --json <path>` writes it to seed the perf trajectory
+//! [`run_scaling`] is the **scaling-curve mode** (`repro bench
+//! scaling`): per-P throughput at P = 1, 2, 4, …, max workers, strong
+//! scaling (fixed total work), weak scaling (work ∝ P) and the
+//! submit-side cost per job — the pSTL-Bench-style measurement model
+//! where the *curve shape*, not a single point, is the regression
+//! signal. The routed-submit cost must stay flat in P now that the
+//! park-aware paths are indexed by the parked bitmask (O(1) in worker
+//! count); `repro bench scaling --check` gates exactly that.
+//!
+//! [`to_json`] renders the report machine-readably (schema 3 embeds the
+//! scaling curve when one was measured); the launcher's `repro bench
+//! --json <path>` writes it to seed the perf trajectory
 //! (`BENCH_service.json`).
 
 use crate::mem::MemScope;
@@ -50,13 +60,14 @@ pub struct BenchOptions {
     pub latency_jobs: u64,
 }
 
+fn env_or(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 impl BenchOptions {
     /// Defaults, overridable via `RUSTFORK_JOBS`, `RUSTFORK_BATCH`,
     /// `RUSTFORK_REPS`, `RUSTFORK_LATENCY_JOBS`.
     pub fn from_env() -> Self {
-        fn env_or(name: &str, default: u64) -> u64 {
-            std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-        }
         BenchOptions {
             jobs: env_or("RUSTFORK_JOBS", 5_000),
             batch: env_or("RUSTFORK_BATCH", 64) as usize,
@@ -113,6 +124,74 @@ pub struct ServiceBenchReport {
     pub workers: usize,
     /// Per-configuration results.
     pub configs: Vec<ConfigReport>,
+    /// Scaling curve (see [`run_scaling`]); `None` when the matrix ran
+    /// without the scaling pass.
+    pub scaling: Option<ScalingReport>,
+}
+
+/// Knobs for one scaling-curve run (env-overridable through
+/// [`ScalingOptions::from_env`]).
+#[derive(Debug, Clone)]
+pub struct ScalingOptions {
+    /// Largest worker count; the curve samples P = 1, 2, 4, … up to and
+    /// including this value.
+    pub max_workers: usize,
+    /// Total jobs of the strong-scaling pass (fixed across P).
+    pub jobs: u64,
+    /// Jobs **per worker** of the weak-scaling pass (total ∝ P).
+    pub jobs_per_worker: u64,
+    /// In-flight window of the open-window driver.
+    pub window: usize,
+    /// Repetitions per measurement (median reported).
+    pub reps: usize,
+}
+
+impl ScalingOptions {
+    /// Defaults, overridable via `RUSTFORK_SCALING_MAX_P`,
+    /// `RUSTFORK_JOBS`, `RUSTFORK_SCALING_JOBS_PER_P`,
+    /// `RUSTFORK_SCALING_WINDOW`, `RUSTFORK_REPS`.
+    pub fn from_env() -> Self {
+        ScalingOptions {
+            max_workers: env_or(
+                "RUSTFORK_SCALING_MAX_P",
+                crate::numa::available_cpus().clamp(2, 8) as u64,
+            ) as usize,
+            jobs: env_or("RUSTFORK_JOBS", 5_000),
+            jobs_per_worker: env_or("RUSTFORK_SCALING_JOBS_PER_P", 1_000),
+            window: env_or("RUSTFORK_SCALING_WINDOW", 64) as usize,
+            reps: env_or("RUSTFORK_REPS", 3) as usize,
+        }
+    }
+}
+
+/// One point of the scaling curve.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    /// Worker count of this point.
+    pub workers: usize,
+    /// Strong scaling: jobs/sec over the fixed total workload.
+    pub strong_jobs_per_sec: f64,
+    /// Weak scaling: jobs/sec **per worker** over the ∝-P workload
+    /// (flat curve = perfect weak scaling).
+    pub weak_jobs_per_sec_per_worker: f64,
+    /// Submit-side cost: wall ns per `submit` call with joins excluded
+    /// from the timed region — the routed-placement cost the parked
+    /// bitmask keeps flat in P.
+    pub submit_ns_per_job: f64,
+    /// Routed-wake misses accumulated by this point's server.
+    pub wake_misses: u64,
+}
+
+/// The scaling-curve report (`repro bench scaling`, bench JSON
+/// schema 3).
+#[derive(Debug, Clone)]
+pub struct ScalingReport {
+    /// Strong-scaling total jobs.
+    pub jobs: u64,
+    /// Weak-scaling jobs per worker.
+    pub jobs_per_worker: u64,
+    /// Curve points, ascending in worker count.
+    pub points: Vec<ScalingPoint>,
 }
 
 /// Drive `jobs` seeded MixedJobs through `server`, batched (batch > 1)
@@ -493,7 +572,91 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             jobs_migrated: end_metrics.jobs_migrated,
         });
     }
-    ServiceBenchReport { jobs: opts.jobs, workers: opts.workers, configs: out }
+    ServiceBenchReport { jobs: opts.jobs, workers: opts.workers, configs: out, scaling: None }
+}
+
+/// The sampled worker counts: 1, 2, 4, … plus `max` itself when it is
+/// not a power of two.
+fn scaling_ps(max: usize) -> Vec<usize> {
+    let max = max.max(1);
+    let mut ps = Vec::new();
+    let mut p = 1;
+    while p <= max {
+        ps.push(p);
+        p *= 2;
+    }
+    if *ps.last().expect("at least P=1") != max {
+        ps.push(max);
+    }
+    ps
+}
+
+/// A lazy, park-aware server for one scaling point: two shards when the
+/// worker count splits evenly (sharding + migration live, as in the
+/// matrix configurations), one otherwise. Capacity covers the
+/// submit-cost pass so admission never blocks inside the timed region.
+fn scaling_server(workers: usize) -> JobServer {
+    let (shards, per) =
+        if workers >= 2 && workers % 2 == 0 { (2, workers / 2) } else { (1, workers) };
+    JobServer::builder()
+        .topology(NumaTopology::synthetic(shards, per))
+        .shards(shards)
+        .workers_per_shard(per)
+        .capacity(4096)
+        .scheduler(SchedulerKind::Lazy)
+        .build()
+}
+
+/// Jobs of the submit-cost pass (bounded so the pre-reserved handle
+/// buffer and the server capacity cover it).
+const SUBMIT_COST_JOBS: u64 = 2_048;
+
+/// Measure the scaling curve: for each P in 1, 2, 4, …, max, a strong
+/// pass (fixed total jobs), a weak pass (jobs ∝ P, reported per
+/// worker) and a submit-cost pass (per-`submit` wall time, joins
+/// outside the timed region). Every result is checked against its
+/// serial oracle.
+pub fn run_scaling(opts: &ScalingOptions) -> ScalingReport {
+    let mut points = Vec::new();
+    for p in scaling_ps(opts.max_workers) {
+        let server = scaling_server(p);
+        let strong = super::measure(opts.reps, 0.1, || {
+            let failures = drive_windowed(&server, opts.jobs, opts.window);
+            assert_eq!(failures, 0, "strong-scaling mismatches at P={p}");
+        });
+        let weak_jobs = opts.jobs_per_worker.max(1) * p as u64;
+        let weak = super::measure(opts.reps, 0.1, || {
+            let failures = drive_windowed(&server, weak_jobs, opts.window);
+            assert_eq!(failures, 0, "weak-scaling mismatches at P={p}");
+        });
+        // Submit-side cost: time the submissions alone — the routed
+        // placement decision (park-aware target, wake) is what the
+        // bitmask keeps O(1) in P. Joins drain outside the timed
+        // region; the handle buffer is pre-reserved.
+        let n = opts.jobs.clamp(1, SUBMIT_COST_JOBS);
+        let mut handles = Vec::with_capacity(n as usize);
+        let t0 = std::time::Instant::now();
+        for s in 0..n {
+            handles.push(server.submit(MixedJob::from_seed(s)));
+        }
+        let submit_secs = t0.elapsed().as_secs_f64();
+        for (s, h) in (0..n).zip(handles) {
+            assert_eq!(h.join(), MixedJob::expected(s), "submit-cost pass mismatch at P={p}");
+        }
+        let m = server.metrics();
+        points.push(ScalingPoint {
+            workers: p,
+            strong_jobs_per_sec: opts.jobs as f64 / strong.secs,
+            weak_jobs_per_sec_per_worker: weak_jobs as f64 / weak.secs / p as f64,
+            submit_ns_per_job: submit_secs * 1e9 / n as f64,
+            wake_misses: m.wake_misses,
+        });
+    }
+    ScalingReport {
+        jobs: opts.jobs,
+        jobs_per_worker: opts.jobs_per_worker,
+        points,
+    }
 }
 
 /// Render a report as JSON (hand-rolled — the crate is dependency-free).
@@ -506,7 +669,7 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"service\",\n");
-    s.push_str("  \"schema\": 2,\n");
+    s.push_str("  \"schema\": 3,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str(&format!("  \"jobs\": {},\n", r.jobs));
     s.push_str(&format!("  \"workers\": {},\n", r.workers));
@@ -541,9 +704,104 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
         s.push_str(&format!("      \"peak_bytes\": {}\n", c.peak_bytes));
         s.push_str(if i + 1 == r.configs.len() { "    }\n" } else { "    },\n" });
     }
-    s.push_str("  ]\n");
+    s.push_str("  ],\n");
+    match &r.scaling {
+        Some(sc) => {
+            s.push_str("  \"scaling\": ");
+            push_scaling_object(&mut s, sc, "  ");
+            s.push('\n');
+        }
+        None => s.push_str("  \"scaling\": null\n"),
+    }
     s.push_str("}\n");
     s
+}
+
+/// Append the scaling-curve JSON object at `indent` (no trailing
+/// newline; shared by [`to_json`] and [`scaling_to_json`]).
+fn push_scaling_object(s: &mut String, r: &ScalingReport, indent: &str) {
+    s.push_str("{\n");
+    s.push_str(&format!("{indent}  \"jobs\": {},\n", r.jobs));
+    s.push_str(&format!("{indent}  \"jobs_per_worker\": {},\n", r.jobs_per_worker));
+    s.push_str(&format!("{indent}  \"points\": [\n"));
+    for (i, p) in r.points.iter().enumerate() {
+        s.push_str(&format!("{indent}    {{\n"));
+        s.push_str(&format!("{indent}      \"workers\": {},\n", p.workers));
+        s.push_str(&format!(
+            "{indent}      \"strong_jobs_per_sec\": {:.1},\n",
+            p.strong_jobs_per_sec
+        ));
+        s.push_str(&format!(
+            "{indent}      \"weak_jobs_per_sec_per_worker\": {:.1},\n",
+            p.weak_jobs_per_sec_per_worker
+        ));
+        s.push_str(&format!(
+            "{indent}      \"submit_ns_per_job\": {:.1},\n",
+            p.submit_ns_per_job
+        ));
+        s.push_str(&format!("{indent}      \"wake_misses\": {}\n", p.wake_misses));
+        s.push_str(&format!(
+            "{indent}    }}{}\n",
+            if i + 1 == r.points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str(&format!("{indent}  ]\n"));
+    s.push_str(&format!("{indent}}}"));
+}
+
+/// Render a standalone scaling report as JSON (`repro bench scaling
+/// --json`).
+pub fn scaling_to_json(r: &ScalingReport, measured: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"service-scaling\",\n");
+    s.push_str("  \"schema\": 3,\n");
+    s.push_str(&format!("  \"measured\": {measured},\n"));
+    s.push_str("  \"scaling\": ");
+    push_scaling_object(&mut s, r, "  ");
+    s.push('\n');
+    s.push_str("}\n");
+    s
+}
+
+/// Extract `(measured, [(workers, strong_jobs_per_sec)])` from a
+/// committed bench JSON (either [`to_json`] or [`scaling_to_json`]
+/// output). Hand-rolled scanning — the crate is dependency-free and
+/// this only ever parses its own known output. Returns `None` when the
+/// file has no parseable scaling curve (e.g. the unmeasured
+/// placeholder's `null` values); the `--check` gate then skips the
+/// curve comparison rather than guessing.
+pub fn parse_scaling_snapshot(json: &str) -> Option<(bool, Vec<(usize, f64)>)> {
+    let measured = scan_after(json, "\"measured\"")?.trim_start().starts_with("true");
+    let scaling = &json[json.find("\"scaling\"")?..];
+    let mut points = Vec::new();
+    let mut rest = scaling;
+    while let Some(i) = rest.find("\"workers\"") {
+        rest = &rest[i..];
+        let w = scan_number(scan_after(rest, "\"workers\"")?)?;
+        let s = scan_number(scan_after(rest, "\"strong_jobs_per_sec\"")?)?;
+        points.push((w as usize, s));
+        rest = &rest["\"workers\"".len()..];
+    }
+    if points.is_empty() {
+        return None;
+    }
+    Some((measured, points))
+}
+
+/// The text following `key":` (whitespace included), or `None`.
+fn scan_after<'a>(json: &'a str, key: &str) -> Option<&'a str> {
+    let at = json.find(key)? + key.len();
+    let rest = json[at..].trim_start();
+    rest.strip_prefix(':').map(str::trim_start)
+}
+
+/// Leading JSON number of `s`, or `None` (e.g. `null`).
+fn scan_number(s: &str) -> Option<f64> {
+    let end = s
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+        .unwrap_or(s.len());
+    s[..end].parse().ok()
 }
 
 #[cfg(test)]
@@ -589,13 +847,85 @@ mod tests {
         assert!(adaptive.is_some_and(|c| c.hot_stacklet_bytes > 0));
         let json = to_json(&report, true);
         assert!(json.contains("\"bench\": \"service\""));
+        assert!(json.contains("\"schema\": 3"));
         assert!(json.contains("\"allocs_per_job\""));
         assert!(json.contains("\"jobs_migrated\""));
         assert!(json.contains("\"stacklet_grows_per_job\""));
         assert!(json.contains("\"hot_stacklet_bytes\""));
         assert!(json.contains("\"wake_misses\""));
+        assert!(json.contains("\"scaling\": null"), "matrix-only run embeds no curve");
         // Balanced braces/brackets as a cheap well-formedness check.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn tiny_scaling_runs_and_serializes() {
+        let opts = ScalingOptions {
+            max_workers: 2,
+            jobs: 60,
+            jobs_per_worker: 30,
+            window: 16,
+            reps: 1,
+        };
+        let report = run_scaling(&opts);
+        assert_eq!(
+            report.points.iter().map(|p| p.workers).collect::<Vec<_>>(),
+            vec![1, 2],
+            "P = 1, 2 for max_workers = 2"
+        );
+        for p in &report.points {
+            assert!(p.strong_jobs_per_sec > 0.0, "P={}: zero strong throughput", p.workers);
+            assert!(
+                p.weak_jobs_per_sec_per_worker > 0.0,
+                "P={}: zero weak throughput",
+                p.workers
+            );
+            assert!(p.submit_ns_per_job > 0.0, "P={}: zero submit cost", p.workers);
+        }
+        // Both serializations are well-formed and the snapshot parser
+        // round-trips the curve it will be gated against in CI.
+        let standalone = scaling_to_json(&report, true);
+        let mut full = ServiceBenchReport {
+            jobs: opts.jobs,
+            workers: opts.max_workers,
+            configs: Vec::new(),
+            scaling: Some(report.clone()),
+        };
+        let embedded = to_json(&full, true);
+        for json in [standalone.as_str(), embedded.as_str()] {
+            assert!(json.contains("\"schema\": 3"));
+            assert!(json.contains("\"strong_jobs_per_sec\""));
+            assert!(json.contains("\"weak_jobs_per_sec_per_worker\""));
+            assert!(json.contains("\"submit_ns_per_job\""));
+            assert_eq!(json.matches('{').count(), json.matches('}').count());
+            assert_eq!(json.matches('[').count(), json.matches(']').count());
+            let (measured, points) =
+                parse_scaling_snapshot(json).expect("own output must parse");
+            assert!(measured);
+            assert_eq!(points.len(), report.points.len());
+            for (got, want) in points.iter().zip(&report.points) {
+                assert_eq!(got.0, want.workers);
+                assert!(
+                    (got.1 - want.strong_jobs_per_sec).abs()
+                        <= 0.05 + want.strong_jobs_per_sec * 1e-3,
+                    "parsed {} vs reported {}",
+                    got.1,
+                    want.strong_jobs_per_sec
+                );
+            }
+        }
+        // The unmeasured placeholder (null metrics) yields no curve.
+        full.scaling = None;
+        assert_eq!(parse_scaling_snapshot(&to_json(&full, false)), None);
+    }
+
+    #[test]
+    fn scaling_ps_covers_powers_of_two_and_max() {
+        assert_eq!(scaling_ps(1), vec![1]);
+        assert_eq!(scaling_ps(2), vec![1, 2]);
+        assert_eq!(scaling_ps(8), vec![1, 2, 4, 8]);
+        assert_eq!(scaling_ps(6), vec![1, 2, 4, 6]);
+        assert_eq!(scaling_ps(0), vec![1]);
     }
 }

@@ -179,16 +179,32 @@
 //!   actuator: `wake_one`, per-job submission targeting and the
 //!   migration hub's spout wakes prefer the **longest-parked**
 //!   worker/shard within each NUMA distance class — Eq. (6)'s locality
-//!   hierarchy applied to wakes). A routed wake only ever targets a
-//!   worker that was parked at decision time; `wake_misses` counts the
-//!   ones that raced awake. Disable:
+//!   hierarchy applied to wakes). The parked population is indexed by a
+//!   packed **parked bitmask** ([`rt::tune::ParkedSet`], one cache-padded
+//!   64-bit word per ≤64-worker group, grouped by NUMA node), so the
+//!   submit and wake paths find the coldest candidate by iterating only
+//!   *set* bits — O(#parked in one word) instead of the former O(P)
+//!   `park_since` scan, which is what keeps routed submission flat on
+//!   wide pools (`repro bench scaling` gates this curve in CI). A routed
+//!   wake only ever targets a worker that was parked at decision time;
+//!   when the target raced awake (lost the parked-flag CAS, counted as
+//!   `wake_misses`) the picker **retries until it has drained every
+//!   parked candidate** — an early version retried only once, leaving a
+//!   lost-wake window where a queued job could outwait all parked
+//!   workers until the backstop (regression-hammered in
+//!   `rust/tests/lazy_wake.rs`). Sustained misses feed a backoff
+//!   ([`rt::tune::WakeRouteTuner`]): when over half a window of routed
+//!   attempts miss, routing is suspended for a cool-down of plain-sweep
+//!   wakes (the suspension period is the re-enable hysteresis), counted
+//!   as `wake_backoffs`. Disable:
 //!   [`rt::pool::PoolBuilder::park_aware_wakes`] /
 //!   [`service::JobServerBuilder::park_aware_wakes`].
 //!
 //! With all three tuners off the runtime is behaviourally the untuned
 //! runtime (asserted by `rust/tests/tune.rs` conformance checksums).
-//! `stacklet_grows`, `hot_stacklet_bytes` and `wake_misses` in
-//! [`metrics::MetricsSnapshot`] expose the loops' state.
+//! `stacklet_grows`, `hot_stacklet_bytes`, `wake_misses` and
+//! `wake_backoffs` in [`metrics::MetricsSnapshot`] expose the loops'
+//! state.
 //!
 //! ## Panic containment
 //!

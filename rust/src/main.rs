@@ -13,7 +13,10 @@
 //!                 --framework busy --scale scaled`
 //! * `serve`     — job-service throughput: `repro serve --jobs 10000
 //!                 --shards 2 --policy least --batch 64`
-//! * `bench`     — pointers to the cargo bench targets per figure/table
+//! * `bench`     — pointers to the cargo bench targets per figure/table;
+//!                 `bench --json <path>` writes the service matrix +
+//!                 scaling curve; `bench scaling` runs the per-P curve
+//!                 alone with an optional `--check` regression gate
 
 use rustfork::config::FrameworkKind;
 use rustfork::harness::{fmt_secs, measure, runner};
@@ -48,6 +51,7 @@ fn usage() {
          repro sim [--family classic|uts] [--max-p N] [--numa-ablation]\n\
          repro serve [--jobs N] [--batch N] [--shards N] [--workers N]\n\
          \x20          [--capacity N] [--policy rr|least] [--scheduler busy|lazy]\n\
+         repro bench scaling [--max-p N] [--json path] [--check baseline.json]\n\
          workloads: fib integrate matmul nqueens T1 T1L T1XXL T3 T3L T3XXL\n\
          frameworks: busy lazy tbb openmp taskflow serial"
     );
@@ -363,23 +367,37 @@ fn serve(args: &[String]) {
 }
 
 /// `repro bench` — without flags, point at the cargo bench targets;
-/// with `--json <path>`, run the service bench matrix and write a
-/// machine-readable report (jobs/sec, p50/p99 latency, allocs/job, peak
-/// bytes) seeding the perf trajectory (`BENCH_service.json`).
+/// with `--json <path>`, run the service bench matrix plus the scaling
+/// curve and write a machine-readable report (jobs/sec, p50/p99
+/// latency, allocs/job, peak bytes, per-P scaling) seeding the perf
+/// trajectory (`BENCH_service.json`). `repro bench scaling` runs the
+/// scaling curve alone (see [`bench_scaling`]).
 fn bench(args: &[String]) {
+    if args.first().map(|s| s.as_str()) == Some("scaling") {
+        bench_scaling(&args[1..]);
+        return;
+    }
     if let Some(path) = flag_value(args, "--json") {
-        use rustfork::harness::service_bench::{run, to_json, BenchOptions};
+        use rustfork::harness::service_bench::{
+            run, run_scaling, to_json, BenchOptions, ScalingOptions,
+        };
         let opts = BenchOptions::from_env();
         println!(
             "# bench --json: {} mixed jobs, {} workers, {} latency jobs",
             opts.jobs, opts.workers, opts.latency_jobs
         );
-        let report = run(&opts);
+        let mut report = run(&opts);
         for c in &report.configs {
             println!(
                 "{:<34} {:>10.0}/s  p50 {:>7.1}us  p99 {:>7.1}us  allocs/job {:.3}",
                 c.name, c.jobs_per_sec, c.p50_us, c.p99_us, c.allocs_per_job
             );
+        }
+        let sopts = ScalingOptions::from_env();
+        println!("# scaling curve: P = 1..{}", sopts.max_workers);
+        report.scaling = Some(run_scaling(&sopts));
+        if let Some(sc) = &report.scaling {
+            print_scaling(sc);
         }
         let json = to_json(&report, true);
         if let Err(e) = std::fs::write(path, &json) {
@@ -398,11 +416,155 @@ fn bench(args: &[String]) {
          micro     — substrate micro-benches (deque/stack/sampler/join)\n\
          service   — job-service throughput/latency/allocs-per-job\n\
          \n\
-         repro bench --json <path> — run the service matrix and write\n\
-         machine-readable results (jobs/sec, p50/p99, allocs/job, peak)\n\
+         repro bench --json <path> — run the service matrix + scaling\n\
+         curve and write machine-readable results (schema 3)\n\
+         repro bench scaling [--max-p N] [--json <path>] [--check <baseline.json>]\n\
+         \x20   — per-P strong/weak scaling + submit cost; --check gates\n\
+         \x20     submit-cost flatness and (when the baseline is measured)\n\
+         \x20     the normalized throughput curve\n\
          \n\
          env: RUSTFORK_REPS, RUSTFORK_SMOKE=1, RUSTFORK_UTS_LARGE=1,\n\
               RUSTFORK_UTS_FULL=1, RUSTFORK_SIM_MAX_P, RUSTFORK_MEM_MAX_P,\n\
-              RUSTFORK_JOBS, RUSTFORK_BATCH, RUSTFORK_LATENCY_JOBS"
+              RUSTFORK_JOBS, RUSTFORK_BATCH, RUSTFORK_LATENCY_JOBS,\n\
+              RUSTFORK_SCALING_MAX_P, RUSTFORK_SCALING_JOBS_PER_P,\n\
+              RUSTFORK_SCALING_WINDOW, RUSTFORK_SCALING_TOL,\n\
+              RUSTFORK_SUBMIT_FLAT_TOL"
     );
+}
+
+fn print_scaling(sc: &rustfork::harness::service_bench::ScalingReport) {
+    println!(
+        "{:>4}  {:>14}  {:>16}  {:>14}  {:>11}",
+        "P", "strong jobs/s", "weak jobs/s/wkr", "submit ns/job", "wake misses"
+    );
+    for p in &sc.points {
+        println!(
+            "{:>4}  {:>14.0}  {:>16.0}  {:>14.1}  {:>11}",
+            p.workers,
+            p.strong_jobs_per_sec,
+            p.weak_jobs_per_sec_per_worker,
+            p.submit_ns_per_job,
+            p.wake_misses
+        );
+    }
+}
+
+/// `repro bench scaling [--max-p N] [--json <path>] [--check <path>]` —
+/// the per-P scaling curve (strong scaling at fixed total work, weak
+/// scaling at work ∝ P, submit-side ns/job).
+///
+/// `--check <baseline.json>` is the CI regression gate:
+///
+/// * **submit-cost flatness** (always): each point's submit ns/job must
+///   stay within `RUSTFORK_SUBMIT_FLAT_TOL`× (default 3×, plus a fixed
+///   500 ns noise floor) of the P=1 cost — the routed submit path is
+///   O(1) in worker count, so growth in P is a regression;
+/// * **curve shape** (when the baseline file says `"measured": true`):
+///   both curves are normalized to their own P=1 throughput and each
+///   per-P speedup must not fall more than `RUSTFORK_SCALING_TOL`
+///   (default 0.20 = 20%) below the baseline's. Normalizing makes the
+///   gate machine-independent — it compares scaling shape, not absolute
+///   jobs/sec. An unmeasured baseline (the placeholder the authoring
+///   container commits — it has no toolchain to measure with) skips
+///   this half with a notice.
+fn bench_scaling(args: &[String]) {
+    use rustfork::harness::service_bench::{
+        parse_scaling_snapshot, run_scaling, scaling_to_json, ScalingOptions,
+    };
+    let mut opts = ScalingOptions::from_env();
+    if let Some(n) = flag_value(args, "--max-p").and_then(|v| v.parse().ok()) {
+        opts.max_workers = n;
+    }
+    println!(
+        "# bench scaling: P up to {}, {} strong jobs, {} weak jobs/worker",
+        opts.max_workers, opts.jobs, opts.jobs_per_worker
+    );
+    let report = run_scaling(&opts);
+    print_scaling(&report);
+    if let Some(path) = flag_value(args, "--json") {
+        let json = scaling_to_json(&report, true);
+        if let Err(e) = std::fs::write(path, &json) {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {path}");
+    }
+    let Some(base_path) = flag_value(args, "--check") else { return };
+    let mut failed = false;
+
+    // Gate 1: submit-cost flatness in P (no baseline needed).
+    let flat_tol: f64 = std::env::var("RUSTFORK_SUBMIT_FLAT_TOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3.0);
+    if let Some(p1) = report.points.iter().find(|p| p.workers == 1) {
+        for p in &report.points {
+            let ceiling = p1.submit_ns_per_job * flat_tol + 500.0;
+            if p.submit_ns_per_job > ceiling {
+                eprintln!(
+                    "FAIL: submit cost not flat in P: {:.1} ns/job at P={} vs {:.1} at P=1 \
+                     (ceiling {:.1})",
+                    p.submit_ns_per_job, p.workers, p1.submit_ns_per_job, ceiling
+                );
+                failed = true;
+            }
+        }
+    }
+
+    // Gate 2: normalized throughput curve vs the committed baseline.
+    let tol: f64 = std::env::var("RUSTFORK_SCALING_TOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.20);
+    match std::fs::read_to_string(base_path)
+        .ok()
+        .and_then(|s| parse_scaling_snapshot(&s))
+    {
+        Some((true, base)) => {
+            let base1 = base.iter().find(|&&(w, _)| w == 1).map(|&(_, t)| t);
+            let cur1 = report
+                .points
+                .iter()
+                .find(|p| p.workers == 1)
+                .map(|p| p.strong_jobs_per_sec);
+            match (base1, cur1) {
+                (Some(b1), Some(c1)) if b1 > 0.0 && c1 > 0.0 => {
+                    for p in &report.points {
+                        let Some(&(_, bt)) =
+                            base.iter().find(|&&(w, _)| w == p.workers)
+                        else {
+                            continue;
+                        };
+                        let base_speedup = bt / b1;
+                        let cur_speedup = p.strong_jobs_per_sec / c1;
+                        if cur_speedup < base_speedup * (1.0 - tol) {
+                            eprintln!(
+                                "FAIL: scaling regression at P={}: speedup {:.2}x vs \
+                                 baseline {:.2}x (tolerance {:.0}%)",
+                                p.workers,
+                                cur_speedup,
+                                base_speedup,
+                                tol * 100.0
+                            );
+                            failed = true;
+                        }
+                    }
+                    println!("check: curve compared against {base_path} (tol {tol})");
+                }
+                _ => println!("check: baseline {base_path} lacks a P=1 point — shape gate skipped"),
+            }
+        }
+        Some((false, _)) => println!(
+            "check: baseline {base_path} is unmeasured — shape gate skipped \
+             (submit-flatness gate still applied)"
+        ),
+        None => println!(
+            "check: no parseable scaling curve in {base_path} — shape gate skipped \
+             (submit-flatness gate still applied)"
+        ),
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("check: scaling gates passed");
 }

@@ -128,6 +128,10 @@ pub struct MetricsSnapshot {
     /// means wake routing is racing itself — the fallback scan still
     /// wakes someone, so this costs retries, not correctness.
     pub wake_misses: u64,
+    /// Times the wake-route miss backoff suspended park-aware routing
+    /// (sustained `wake_misses` over a window; see
+    /// `rt::tune::WakeRouteTuner`). Pool-sourced like `wake_misses`.
+    pub wake_backoffs: u64,
 }
 
 impl MetricsSnapshot {
@@ -157,6 +161,7 @@ impl MetricsSnapshot {
         self.stacklet_grows += other.stacklet_grows;
         self.hot_stacklet_bytes = self.hot_stacklet_bytes.max(other.hot_stacklet_bytes);
         self.wake_misses += other.wake_misses;
+        self.wake_backoffs += other.wake_backoffs;
     }
 
     /// Difference against an earlier snapshot.
@@ -180,6 +185,7 @@ impl MetricsSnapshot {
             stacklet_grows: self.stacklet_grows - earlier.stacklet_grows,
             hot_stacklet_bytes: self.hot_stacklet_bytes,
             wake_misses: self.wake_misses - earlier.wake_misses,
+            wake_backoffs: self.wake_backoffs - earlier.wake_backoffs,
         }
     }
 }

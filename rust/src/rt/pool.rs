@@ -214,9 +214,16 @@ pub struct Shared {
     /// Per-worker park timestamps: µs since [`Self::epoch`] (never 0)
     /// while the worker is parked, 0 while awake. Written by the lazy
     /// idle policy around its park; read by the park-aware wake routing
-    /// ([`crate::rt::tune::pick_coldest`]) — the smallest stamp is the
-    /// longest-parked (coldest) worker.
+    /// as the **tie-break within a mask word** ([`Self::parked`]) — the
+    /// smallest stamp is the longest-parked (coldest) worker.
     pub park_since: Vec<CachePadded<AtomicU64>>,
+    /// Packed parked-worker bitmask ([`crate::rt::tune::ParkedSet`]):
+    /// the O(1) index the submit and wake paths consult instead of
+    /// scanning `park_since`. Publication order is flag → stamp → mask
+    /// bit (reversed on clear, see [`Self::publish_parked`] /
+    /// [`Self::clear_parked`]), so a set bit always implies a published
+    /// stamp and flag.
+    pub parked: crate::rt::tune::ParkedSet,
     /// Park-aware wake routing actuator gate
     /// ([`PoolBuilder::park_aware_wakes`]). When false every wake takes
     /// the pre-tuning index-ordered scan and submission targets stay
@@ -226,6 +233,11 @@ pub struct Shared {
     /// longer parked by notify time (lost the flag CAS) — the
     /// `wake_misses` metric.
     pub wake_misses: AtomicU64,
+    /// Miss-rate backoff for the park-aware router
+    /// ([`crate::rt::tune::WakeRouteTuner`]): sustained `wake_misses`
+    /// suspend routed targeting in favour of the plain wake sweep, with
+    /// the suspension period as re-enable hysteresis.
+    pub wake_router: crate::rt::tune::WakeRouteTuner,
 }
 
 impl Shared {
@@ -243,11 +255,11 @@ impl Shared {
     fn wake_one_slow(&self, from: usize) {
         let node = self.topology.node_of(from);
         let p = self.deques.len();
-        if self.park_aware {
+        if self.park_aware && self.wake_router.should_route() {
             // Prefer the longest-parked worker (coldest deque) within
             // each locality class — Eq. (6)'s hierarchy applied to wake
             // routing (rt::tune). Falls through to the plain scan when
-            // the chosen workers lose their flag CAS (racing wakes).
+            // every parked candidate loses its flag CAS (racing wakes).
             if self.wake_coldest_in(Some(node)) || self.wake_coldest_in(None) {
                 return;
             }
@@ -266,26 +278,33 @@ impl Shared {
     }
 
     /// Park-aware targeted wake: pick the longest-parked worker (on
-    /// `node`, or anywhere when `None`) and wake it. At most two
-    /// attempts — a chosen worker that lost its parked flag in the
-    /// meantime counts a `wake_misses` and the pick re-runs once.
+    /// `node`, or anywhere when `None`) via the parked bitmask and wake
+    /// it. Retries until the mask yields no candidate — each lost flag
+    /// CAS counts a `wake_misses`, clears the loser's stale routing
+    /// state and re-picks, so two consecutive losses can no longer drop
+    /// the wake while work sits queued (the pre-bitmask code gave up
+    /// after two attempts). Bounded: every miss clears a mask bit, so
+    /// the candidate set strictly shrinks up to the `p + 1` cap.
     /// Returns false when no parked candidate exists (never wakes a
     /// non-parked worker).
     fn wake_coldest_in(&self, node: Option<usize>) -> bool {
-        for _attempt in 0..2 {
-            let Some(w) = crate::rt::tune::pick_coldest(
-                self.park_since.len(),
-                |i| self.park_since[i].load(Ordering::Relaxed),
-                |i| node.is_none_or(|n| self.topology.node_of(i) == n),
-            ) else {
+        let p = self.park_since.len();
+        for _attempt in 0..=p {
+            let Some(w) = self
+                .parked
+                .pick_coldest_in(node, |i| self.park_since[i].load(Ordering::Relaxed))
+            else {
                 return false;
             };
             if self.try_wake(w) {
+                self.wake_router.note_routed(false);
                 return true;
             }
             self.wake_misses.fetch_add(1, Ordering::Relaxed);
-            // The stale stamp would re-elect the same worker: clear it
-            // (the owner re-publishes on its next park).
+            self.wake_router.note_routed(true);
+            // The stale routing state would re-elect the same worker:
+            // clear it (the owner re-publishes on its next park).
+            self.parked.clear(w);
             self.park_since[w].store(0, Ordering::Relaxed);
         }
         false
@@ -293,9 +312,14 @@ impl Shared {
 
     /// Park-aware wake with no locality preference, for external wake
     /// sources (the job server's spout routing): wake the pool's
-    /// longest-parked worker. Returns false when nobody is parked.
+    /// longest-parked worker. Returns false when nobody is parked (or
+    /// routing is suspended by the miss backoff — callers fall back to
+    /// the plain `wake_one` sweep).
     pub fn wake_coldest(&self) -> bool {
         if self.sleepers.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        if !self.wake_router.should_route() {
             return false;
         }
         self.wake_coldest_in(None)
@@ -303,32 +327,57 @@ impl Shared {
 
     /// Smallest (oldest) park stamp over this pool's workers, if any —
     /// how long the pool's coldest worker has been parked. Used by the
-    /// job server to rank shards for park-aware spout wakes.
+    /// job server to rank shards for park-aware spout wakes. Indexed by
+    /// the parked bitmask: O(#parked), not O(P).
     pub fn coldest_park_stamp(&self) -> Option<u64> {
-        let mut best: Option<u64> = None;
-        for ts in &self.park_since {
-            let t = ts.load(Ordering::Relaxed);
-            if t != 0 && best.is_none_or(|b| t < b) {
-                best = Some(t);
-            }
+        self.parked.coldest_stamp(|i| self.park_since[i].load(Ordering::Relaxed))
+    }
+
+    /// Publish worker `w`'s parked state for wake routing. Order
+    /// matters: flag first (the wake handshake), then the stamp, then
+    /// the mask bit — a set mask bit therefore implies the stamp and
+    /// flag stores are visible, so a routed pick can never elect a
+    /// worker whose park is still half-published. Called by the lazy
+    /// idle policy (`sched::lazy`) only; every unpark path funnels
+    /// through [`Self::clear_parked`].
+    #[inline]
+    pub(crate) fn publish_parked(&self, w: usize) {
+        self.parked_flag[w].store(true, Ordering::Release);
+        if self.park_aware {
+            self.park_since[w].store(crate::rt::tune::park_stamp(self.epoch), Ordering::Relaxed);
+            self.parked.set(w);
         }
-        best
+    }
+
+    /// The one central unpark clear (mask bit → stamp → flag, the
+    /// reverse of [`Self::publish_parked`]): every path that takes a
+    /// worker out of park — backstop expiry, spurious wake, shutdown,
+    /// targeted submission wake, spout-claim wake — funnels through
+    /// here, so no unpark path can leave a stale stamp or mask bit on
+    /// an awake worker.
+    #[inline]
+    pub(crate) fn clear_parked(&self, w: usize) {
+        if self.park_aware {
+            self.parked.clear(w);
+            self.park_since[w].store(0, Ordering::Relaxed);
+        }
+        self.parked_flag[w].store(false, Ordering::Release);
     }
 
     /// Wake `target` after pushing directly to its submission queue.
     /// The eager flag clear keeps `wake_one` from wasting its CAS on a
     /// worker that is already being woken; the latched parker closes
-    /// the race with a concurrent park; the park-stamp clear steers the
-    /// next park-aware pick to another worker (the owner re-publishes
-    /// on its next park). Used by the pool's submission paths and by
-    /// the job server's home-drain fast path, which must wake **every**
+    /// the race with a concurrent park; the routing-state clear steers
+    /// the next park-aware pick to another worker (the owner
+    /// re-publishes on its next park). Used by the pool's submission
+    /// paths, by `Worker::schedule_on` pinned rescheduling and by the
+    /// job server's home-drain fast path, which must wake **every**
     /// worker it pushed to (submission queues are single-consumer, so a
     /// frame on a still-parked worker would otherwise wait out that
     /// worker's park backstop).
     #[inline]
     pub(crate) fn wake_submission_target(&self, target: usize) {
-        self.park_since[target].store(0, Ordering::Relaxed);
-        self.parked_flag[target].store(false, Ordering::Release);
+        self.clear_parked(target);
         self.parkers[target].notify();
     }
 
@@ -337,6 +386,14 @@ impl Shared {
             .compare_exchange(true, false, Ordering::AcqRel, Ordering::Relaxed)
             .is_ok()
         {
+            // The CAS claimed the park: retire its routing state too,
+            // so a worker woken by `wake_one` never lingers in the mask
+            // with a stale stamp (the pre-bitmask code left the stamp
+            // behind until the owner's own clear caught up).
+            if self.park_aware {
+                self.parked.clear(w);
+                self.park_since[w].store(0, Ordering::Relaxed);
+            }
             self.parkers[w].notify();
             true
         } else {
@@ -494,6 +551,7 @@ impl PoolBuilder {
                 self.first_stacklet,
             ))
         });
+        let parked = crate::rt::tune::ParkedSet::new(p, nodes, |w| topology.node_of(w));
         let shared = Arc::new(Shared {
             deques: (0..p).map(|_| Deque::new()).collect(),
             submissions: (0..p).map(|_| FrameQueue::new()).collect(),
@@ -519,8 +577,10 @@ impl PoolBuilder {
             on_abandon: self.on_abandon,
             epoch: std::time::Instant::now(),
             park_since: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            parked,
             park_aware: self.park_aware,
             wake_misses: AtomicU64::new(0),
+            wake_router: crate::rt::tune::WakeRouteTuner::new(),
         });
         let mut threads = Vec::with_capacity(p);
         for id in 0..p {
@@ -633,6 +693,7 @@ impl Pool {
         s.stack_pool_hits += self.shared.submit_stack_hits.load(Ordering::Relaxed);
         s.stack_pool_misses += self.shared.submit_stack_misses.load(Ordering::Relaxed);
         s.wake_misses = self.shared.wake_misses.load(Ordering::Relaxed);
+        s.wake_backoffs = self.shared.wake_router.suspensions();
         s.stacklet_grows = self.shared.shelf.tuner().grows_count();
         s.hot_stacklet_bytes = self.shared.shelf.tuner().hot_bytes_gauge();
         s
@@ -770,19 +831,22 @@ impl Pool {
     }
 
     /// Park-aware submission target: the longest-parked worker, or
-    /// `None` when routing is disabled or nobody is parked (then the
-    /// round-robin counter decides, exactly as before). Only ever
-    /// returns a worker that was parked at decision time.
+    /// `None` when routing is disabled, suspended by the miss backoff,
+    /// or nobody is parked (then the round-robin counter decides,
+    /// exactly as before). Indexed by the parked bitmask — O(#parked),
+    /// flat in worker count — and only ever returns a worker that was
+    /// parked at decision time.
     #[inline]
     fn park_aware_target(&self) -> Option<usize> {
         if !self.shared.park_aware || self.shared.sleepers.load(Ordering::Relaxed) == 0 {
             return None;
         }
-        crate::rt::tune::pick_coldest(
-            self.shared.park_since.len(),
-            |i| self.shared.park_since[i].load(Ordering::Relaxed),
-            |_| true,
-        )
+        if !self.shared.wake_router.should_route() {
+            return None;
+        }
+        self.shared
+            .parked
+            .pick_coldest_in(None, |i| self.shared.park_since[i].load(Ordering::Relaxed))
     }
 
     /// Wake `target` after pushing to its submission queue (see

@@ -14,7 +14,8 @@
 //! | per-job peak stack footprint, sampled at | [`FootprintTuner`]  | recycled stacks are reshaped to the learned **hot size**; fresh stacks are born hot ([`crate::stack::StackShelf`], `Pool::new_root`, thief-side `fresh_stack`) |
 //! | root completion + stacklet-grow events   |                     | |
 //! | `migration_misses` : `jobs_migrated`     | [`HysteresisTuner`] | the job server's diversion hysteresis margin moves within builder-set bounds (`service::MigrationHub`) |
-//! | per-worker park timestamps               | `Shared::park_since`| submission targets and spout wakes prefer the longest-parked (coldest) worker/shard ([`pick_coldest`]) |
+//! | per-worker park stamps + parked bitmask  | [`ParkedSet`] + `Shared::park_since` | submission targets, `wake_one` and spout wakes prefer the longest-parked (coldest) worker/shard — O(#parked) bit iteration, never an O(P) stamp scan ([`ParkedSet::pick_coldest_in`]) |
+//! | routed-wake miss rate                    | [`WakeRouteTuner`]  | sustained `wake_misses` suspend park-aware routing for a cool-down of plain wakes, then re-enable (hysteresis = the suspension period) |
 //!
 //! ## Register shapes
 //!
@@ -50,6 +51,8 @@
 //! steady state stays at 0 allocs/job with all tuners enabled.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::sync::CachePadded;
 
 /// Decay shift of the footprint register: a below-register sample closes
 /// `1/2^8` of the gap, so the register forgets a one-off deep job over a
@@ -319,6 +322,11 @@ pub fn park_stamp(epoch: std::time::Instant) -> u64 {
 /// worker that was parked at decision time (the actual notify still goes
 /// through the parked-flag CAS, so a lost race never wakes anyone
 /// spuriously).
+///
+/// This O(P) scan is **retained as the linear oracle for tests only**
+/// (tests/tune.rs model-checks [`ParkedSet`] against it); the runtime's
+/// submit and wake paths go through [`ParkedSet::pick_coldest_in`],
+/// which touches only the stamps of workers whose mask bit is set.
 pub fn pick_coldest(
     candidates: usize,
     park_since: impl Fn(usize) -> u64,
@@ -335,6 +343,265 @@ pub fn pick_coldest(
         }
     }
     best.map(|(_, i)| i)
+}
+
+/// Packed **parked-worker bitmask**: one cache-padded 64-bit word per
+/// group of ≤64 workers, grouped so each NUMA node owns a contiguous
+/// word range. This is the O(1) idle-tracking index that replaces the
+/// O(P) `park_since` scans on the submit and wake paths:
+///
+/// * `set`/`clear` are a single `fetch_or`/`fetch_and` on the owning
+///   word (no loop, no allocation);
+/// * [`Self::pick_coldest_in`] finds a target by iterating only the
+///   *set* bits (`trailing_zeros` + `bits &= bits - 1`) of the first
+///   non-empty word after a rotating cursor, reading park stamps of
+///   parked workers only — O(#parked in one word), never O(P).
+///
+/// The mask is a **routing index, not a wake claim**: the authoritative
+/// handshake stays the `parked_flag` CAS in `Shared::try_wake`. The
+/// publication order (flag → stamp → mask bit, reversed on clear) gives
+/// the picker a one-sided invariant — a set bit implies the stamp store
+/// is visible implies the flag store is visible — so a racing pick can
+/// at worst target a worker that just woke (the CAS then fails and the
+/// caller retries), never a worker that has not finished publishing.
+/// Bits whose stamp reads 0 are mid-transition and are skipped, which
+/// preserves the never-targets-awake property the oracle test asserts.
+#[derive(Debug)]
+pub struct ParkedSet {
+    /// One padded word per ≤64-worker group; nodes own disjoint ranges.
+    words: Vec<CachePadded<AtomicU64>>,
+    /// `worker -> (word index, bit index)`.
+    slots: Vec<(u32, u32)>,
+    /// `word * 64 + bit -> worker` (`usize::MAX` = unused bit).
+    members: Vec<usize>,
+    /// `node -> [start, end)` word range.
+    node_words: Vec<(u32, u32)>,
+    /// Rotating start word for node-agnostic picks, so no word is
+    /// systematically favoured when several have parked workers.
+    cursor: AtomicUsize,
+}
+
+impl ParkedSet {
+    /// Build the mask for `workers` workers partitioned into `nodes`
+    /// groups by `node_of`. Workers of one node get consecutive bits in
+    /// that node's words, so a per-node pick touches only its own words.
+    pub fn new(workers: usize, nodes: usize, node_of: impl Fn(usize) -> usize) -> Self {
+        let nodes = nodes.max(1);
+        let mut by_node: Vec<Vec<usize>> = vec![Vec::new(); nodes];
+        for w in 0..workers {
+            by_node[node_of(w).min(nodes - 1)].push(w);
+        }
+        let mut words = Vec::new();
+        let mut slots = vec![(0u32, 0u32); workers];
+        let mut members = Vec::new();
+        let mut node_words = Vec::with_capacity(nodes);
+        for group in &by_node {
+            let start = words.len() as u32;
+            for (i, &w) in group.iter().enumerate() {
+                if i % 64 == 0 {
+                    words.push(CachePadded::new(AtomicU64::new(0)));
+                    members.resize(members.len() + 64, usize::MAX);
+                }
+                let word = (words.len() - 1) as u32;
+                let bit = (i % 64) as u32;
+                slots[w] = (word, bit);
+                members[word as usize * 64 + bit as usize] = w;
+            }
+            node_words.push((start, words.len() as u32));
+        }
+        if words.is_empty() {
+            // Degenerate 0-worker set: keep one word so loads stay valid.
+            words.push(CachePadded::new(AtomicU64::new(0)));
+            members.resize(64, usize::MAX);
+        }
+        ParkedSet { words, slots, members, node_words, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Number of workers this set indexes.
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Mark `w` parked: one `fetch_or` on its owning word.
+    #[inline]
+    pub fn set(&self, w: usize) {
+        let (word, bit) = self.slots[w];
+        self.words[word as usize].fetch_or(1u64 << bit, Ordering::Release);
+    }
+
+    /// Mark `w` awake: one `fetch_and` on its owning word.
+    #[inline]
+    pub fn clear(&self, w: usize) {
+        let (word, bit) = self.slots[w];
+        self.words[word as usize].fetch_and(!(1u64 << bit), Ordering::Release);
+    }
+
+    /// Whether `w`'s bit is currently set (tests / oracle checks).
+    pub fn is_set(&self, w: usize) -> bool {
+        let (word, bit) = self.slots[w];
+        self.words[word as usize].load(Ordering::Relaxed) & (1u64 << bit) != 0
+    }
+
+    /// The longest-parked worker according to the mask: the first
+    /// non-empty word (rotating over the node's range, or all words for
+    /// `None`) decides the group, the smallest nonzero stamp within it
+    /// decides the worker — `park_since` is the tie-break *within a
+    /// word*, so single-word (≤64-worker / flat-topology) pools keep
+    /// exact coldest semantics. Bits whose stamp reads 0 are racing
+    /// awake and are skipped.
+    pub fn pick_coldest_in(
+        &self,
+        node: Option<usize>,
+        stamp: impl Fn(usize) -> u64,
+    ) -> Option<usize> {
+        let (start, end) = match node {
+            Some(n) => {
+                let &(s, e) = self.node_words.get(n)?;
+                (s as usize, e as usize)
+            }
+            None => (0, self.words.len()),
+        };
+        let span = end - start;
+        if span == 0 {
+            return None;
+        }
+        let rot = if span > 1 { self.cursor.fetch_add(1, Ordering::Relaxed) } else { 0 };
+        for k in 0..span {
+            let wi = start + (rot + k) % span;
+            if let Some(w) = self.pick_in_word(wi, &stamp) {
+                return Some(w);
+            }
+        }
+        None
+    }
+
+    /// Smallest-stamp parked member of word `wi`, skipping stamp-0 bits.
+    fn pick_in_word(&self, wi: usize, stamp: &impl Fn(usize) -> u64) -> Option<usize> {
+        let mut bits = self.words[wi].load(Ordering::Relaxed);
+        let mut best: Option<(u64, usize)> = None;
+        while bits != 0 {
+            let bit = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let member = self.members[wi * 64 + bit];
+            if member == usize::MAX {
+                continue;
+            }
+            let ts = stamp(member);
+            if ts == 0 {
+                continue;
+            }
+            if best.is_none_or(|(b, _)| ts < b) {
+                best = Some((ts, member));
+            }
+        }
+        best.map(|(_, w)| w)
+    }
+
+    /// Smallest nonzero stamp over all *set* bits — the mask-indexed
+    /// replacement for the O(P) `coldest_park_stamp` scan. O(#parked).
+    pub fn coldest_stamp(&self, stamp: impl Fn(usize) -> u64) -> Option<u64> {
+        let mut best: Option<u64> = None;
+        for wi in 0..self.words.len() {
+            let mut bits = self.words[wi].load(Ordering::Relaxed);
+            while bits != 0 {
+                let bit = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let member = self.members[wi * 64 + bit];
+                if member == usize::MAX {
+                    continue;
+                }
+                let ts = stamp(member);
+                if ts != 0 && best.is_none_or(|b| ts < b) {
+                    best = Some(ts);
+                }
+            }
+        }
+        best
+    }
+}
+
+// ----------------------------------------------------------------------
+// Routed-wake miss backoff
+// ----------------------------------------------------------------------
+
+/// Routed wake attempts per miss-rate window.
+pub const WAKE_ROUTE_WINDOW: u64 = 64;
+
+/// Plain-wake decisions a suspension lasts before routing re-enables.
+/// The suspension period *is* the hysteresis: routing cannot flap per
+/// decision, only once per drained cool-down.
+pub const WAKE_ROUTE_SUSPEND: u64 = 256;
+
+/// Feeds the `wake_misses` signal back into the park-aware router: when
+/// more than half of a [`WAKE_ROUTE_WINDOW`] of routed wake attempts
+/// lose their flag CAS (the stamp table is churning faster than it can
+/// be read — routing is pure overhead), park-aware targeting is
+/// suspended for [`WAKE_ROUTE_SUSPEND`] wake decisions in favour of the
+/// plain `wake_one` sweep, then re-enabled with a fresh window. All
+/// state is plain atomics; both hooks are a couple of relaxed ops.
+#[derive(Debug, Default)]
+pub struct WakeRouteTuner {
+    /// Routed attempts in the current window.
+    routed: AtomicU64,
+    /// Missed (lost-CAS) attempts in the current window.
+    missed: AtomicU64,
+    /// Remaining plain-wake decisions while suspended (0 = routing on).
+    suspend: AtomicU64,
+    /// Lifetime suspensions (the `wake_backoffs` metric).
+    suspensions: AtomicU64,
+}
+
+impl WakeRouteTuner {
+    /// A fresh tuner with routing enabled.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consult (and advance) the gate: `true` = route park-aware,
+    /// `false` = this decision should use the plain wake path. Each
+    /// `false` drains one tick of the suspension; lost racy decrements
+    /// only lengthen the cool-down by a few decisions.
+    pub fn should_route(&self) -> bool {
+        let s = self.suspend.load(Ordering::Relaxed);
+        if s == 0 {
+            return true;
+        }
+        let _ = self.suspend.compare_exchange(s, s - 1, Ordering::Relaxed, Ordering::Relaxed);
+        false
+    }
+
+    /// Record one routed wake attempt; `missed` = the flag CAS lost.
+    /// Every [`WAKE_ROUTE_WINDOW`]-th attempt closes the window and
+    /// suspends routing if misses exceeded half of it.
+    pub fn note_routed(&self, missed: bool) {
+        if missed {
+            self.missed.fetch_add(1, Ordering::Relaxed);
+        }
+        let n = self.routed.fetch_add(1, Ordering::Relaxed) + 1;
+        if n < WAKE_ROUTE_WINDOW {
+            return;
+        }
+        // One racer closes the window; the rest keep counting into the
+        // next one.
+        if self.routed.compare_exchange(n, 0, Ordering::Relaxed, Ordering::Relaxed).is_err() {
+            return;
+        }
+        let m = self.missed.swap(0, Ordering::Relaxed);
+        if m * 2 > WAKE_ROUTE_WINDOW {
+            self.suspend.store(WAKE_ROUTE_SUSPEND, Ordering::Relaxed);
+            self.suspensions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether routing is currently suspended (tests).
+    pub fn suspended(&self) -> bool {
+        self.suspend.load(Ordering::Relaxed) != 0
+    }
+
+    /// Lifetime suspension count (`wake_backoffs`).
+    pub fn suspensions(&self) -> u64 {
+        self.suspensions.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -476,5 +743,103 @@ mod tests {
     fn park_stamp_is_never_zero() {
         let epoch = std::time::Instant::now();
         assert_ne!(park_stamp(epoch), 0);
+    }
+
+    #[test]
+    fn parked_set_single_word_matches_oracle() {
+        // Flat topology, ≤64 workers: one word, so the mask pick must
+        // equal the linear oracle exactly.
+        let set = ParkedSet::new(5, 1, |_| 0);
+        let stamps = [0u64, 500, 300, 0, 900];
+        for (w, &ts) in stamps.iter().enumerate() {
+            if ts != 0 {
+                set.set(w);
+            }
+        }
+        let pick = set.pick_coldest_in(None, |i| stamps[i]);
+        assert_eq!(pick, pick_coldest(5, |i| stamps[i], |_| true));
+        assert_eq!(pick, Some(2));
+        assert_eq!(set.coldest_stamp(|i| stamps[i]), Some(300));
+        // Clearing the coldest moves the pick to the next-coldest.
+        set.clear(2);
+        assert_eq!(set.pick_coldest_in(None, |i| stamps[i]), Some(1));
+        // A set bit whose stamp reads 0 (racing awake) is never picked.
+        set.clear(1);
+        set.clear(4);
+        set.set(0);
+        assert_eq!(set.pick_coldest_in(None, |i| stamps[i]), None);
+    }
+
+    #[test]
+    fn parked_set_respects_node_partition() {
+        // 6 workers on 3 nodes, round-robin: per-node picks only see
+        // their own members.
+        let set = ParkedSet::new(6, 3, |w| w % 3);
+        let stamps = [11u64, 7, 5, 3, 0, 0];
+        for w in 0..4 {
+            set.set(w);
+        }
+        // node 0 owns {0, 3}, node 1 owns {1, 4}, node 2 owns {2, 5}.
+        assert_eq!(set.pick_coldest_in(Some(0), |i| stamps[i]), Some(3));
+        assert_eq!(set.pick_coldest_in(Some(1), |i| stamps[i]), Some(1));
+        assert_eq!(set.pick_coldest_in(Some(2), |i| stamps[i]), Some(2));
+        assert_eq!(set.pick_coldest_in(Some(9), |i| stamps[i]), None);
+        let any = set.pick_coldest_in(None, |i| stamps[i]).expect("someone is parked");
+        assert!(stamps[any] != 0, "node-agnostic pick returned an awake worker");
+        assert_eq!(set.coldest_stamp(|i| stamps[i]), Some(3));
+    }
+
+    #[test]
+    fn parked_set_spans_multiple_words() {
+        // >64 workers in one node exercises the multi-word path.
+        let p = 70;
+        let set = ParkedSet::new(p, 1, |_| 0);
+        let stamp = |i: usize| if i == 3 || i == 68 { (i as u64) + 1 } else { 0 };
+        set.set(3);
+        set.set(68);
+        for _ in 0..8 {
+            let w = set.pick_coldest_in(None, stamp).expect("two parked");
+            assert!(w == 3 || w == 68, "picked awake worker {w}");
+        }
+        assert_eq!(set.coldest_stamp(stamp), Some(4));
+        set.clear(3);
+        assert_eq!(set.pick_coldest_in(None, stamp), Some(68));
+        set.clear(68);
+        assert_eq!(set.pick_coldest_in(None, stamp), None);
+    }
+
+    #[test]
+    fn wake_route_tuner_suspends_on_sustained_misses_then_recovers() {
+        let t = WakeRouteTuner::new();
+        assert!(t.should_route(), "fresh tuner routes");
+        // A clean window never suspends.
+        for _ in 0..WAKE_ROUTE_WINDOW {
+            t.note_routed(false);
+        }
+        assert!(!t.suspended());
+        assert_eq!(t.suspensions(), 0);
+        // A window that is mostly misses suspends routing...
+        for _ in 0..WAKE_ROUTE_WINDOW {
+            t.note_routed(true);
+        }
+        assert!(t.suspended(), "all-miss window must suspend routing");
+        assert_eq!(t.suspensions(), 1);
+        // ...for WAKE_ROUTE_SUSPEND decisions, then re-enables.
+        for _ in 0..WAKE_ROUTE_SUSPEND {
+            assert!(!t.should_route(), "suspension must gate every decision");
+        }
+        assert!(t.should_route(), "drained suspension must re-enable routing");
+        assert!(!t.suspended());
+    }
+
+    #[test]
+    fn wake_route_tuner_tolerates_minority_misses() {
+        let t = WakeRouteTuner::new();
+        // Exactly half misses: not "sustained" — routing stays on.
+        for i in 0..WAKE_ROUTE_WINDOW {
+            t.note_routed(i % 2 == 0);
+        }
+        assert!(!t.suspended(), "half-miss window must not suspend");
+        assert_eq!(t.suspensions(), 0);
     }
 }

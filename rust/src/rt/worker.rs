@@ -519,7 +519,11 @@ impl Worker {
         // The stack travels with the frame; take a fresh one for ourselves.
         self.stack = self.fresh_stack();
         self.shared.submissions[target].push(FramePtr(h));
-        self.shared.parkers[target].notify();
+        // Full submission wake, not a bare notify: it also clears the
+        // target's parked flag, stamp and mask bit, so a pinned
+        // reschedule cannot leave a stale "parked" routing entry on the
+        // worker it just woke (the wake-path stale-stamp audit).
+        self.shared.wake_submission_target(target);
         Transfer::ToScheduler
     }
 

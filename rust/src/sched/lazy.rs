@@ -47,17 +47,14 @@ pub fn idle(w: &mut Worker) {
 
     shared.metrics.worker(w.id).bump_sleeps();
     shared.sleepers.fetch_add(1, Ordering::SeqCst);
-    shared.parked_flag[w.id].store(true, Ordering::Release);
-    // Publish the park stamp *after* the flag: a nonzero stamp implies
-    // the flag was set, so park-aware wake routing (rt::tune) never
-    // elects a worker that has not reached its flag store yet. One
-    // stamp per park attempt — a worker bouncing on its backstop
-    // re-polls for work in between, so "parked since the last re-poll"
-    // is the honest coldness measure.
-    if shared.park_aware {
-        shared.park_since[w.id]
-            .store(crate::rt::tune::park_stamp(shared.epoch), Ordering::Relaxed);
-    }
+    // Publish the parked state (flag → park stamp → mask bit, see
+    // `Shared::publish_parked`): the mask bit lands last, so a set bit
+    // implies the stamp and flag stores are visible and park-aware wake
+    // routing never elects a worker that has not reached its flag store
+    // yet. One stamp per park attempt — a worker bouncing on its
+    // backstop re-polls for work in between, so "parked since the last
+    // re-poll" is the honest coldness measure.
+    shared.publish_parked(w.id);
 
     // Re-check for work between flag-set and park (close the race with
     // wake_one's flag CAS).
@@ -67,10 +64,13 @@ pub fn idle(w: &mut Worker) {
         shared.parkers[w.id].park_timeout(PARK_BACKSTOP);
     }
 
-    // Clear the stamp before the flag so routing never sees a stale
-    // "parked" stamp on an awake worker.
-    shared.park_since[w.id].store(0, Ordering::Relaxed);
-    shared.parked_flag[w.id].store(false, Ordering::Release);
+    // Leave the parked state through the one central clear (mask bit →
+    // stamp → flag, the reverse of publish — `Shared::clear_parked`).
+    // Every unpark reason funnels through here: backstop expiry,
+    // notify, spurious wake and shutdown all return from park_timeout,
+    // so routing never sees a stale "parked" stamp or mask bit on an
+    // awake worker.
+    shared.clear_parked(w.id);
     shared.sleepers.fetch_sub(1, Ordering::SeqCst);
     awake.fetch_add(1, Ordering::SeqCst);
 }

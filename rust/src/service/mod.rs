@@ -373,6 +373,17 @@ enum Claimed {
 /// shard pools.
 struct MigrationHub {
     spouts: Vec<CachePadded<Spout>>,
+    /// Packed **spout-occupancy bitmask**: bit `s % 64` of word
+    /// `s / 64` is set while shard `s`'s spout is (believed) non-empty.
+    /// Idle thieves polling for cross-shard work test this one word
+    /// (a register test for ≤64 shards) instead of loading every
+    /// sibling spout's `len` cache line — the shard-level analogue of
+    /// the pool's parked bitmask. Maintained set-after-len-increment by
+    /// producers and clear-then-recheck by consumers (see
+    /// [`Self::unmark_spout_if_empty`]), so a bit may transiently stay
+    /// set on an empty spout (one wasted poll) but never stays clear on
+    /// a non-empty one.
+    spout_mask: Vec<AtomicU64>,
     /// `victims[s]` = the other shards with their node distance from
     /// `s`, nearest first (same NUMA node before remote, index-ordered
     /// within a distance class) — the shard-level analogue of Eq. (6)'s
@@ -429,6 +440,7 @@ impl MigrationHub {
                     })
                 })
                 .collect(),
+            spout_mask: (0..n.div_ceil(64).max(1)).map(|_| AtomicU64::new(0)).collect(),
             victims,
             wakers: OnceLock::new(),
             tuner,
@@ -447,10 +459,38 @@ impl MigrationHub {
         self.cap.saturating_sub(self.spouts[shard].len.load(Ordering::Relaxed))
     }
 
+    /// Whether `shard`'s occupancy bit is set (one word load).
+    #[inline]
+    fn spout_marked(&self, shard: usize) -> bool {
+        self.spout_mask[shard / 64].load(Ordering::Relaxed) & (1u64 << (shard % 64)) != 0
+    }
+
+    /// Producer side: mark `shard`'s spout non-empty. Must run *after*
+    /// the `len` increment — a consumer that observes the bit then sees
+    /// a positive `len`, and a consumer clearing concurrently re-checks
+    /// `len` after its clear, so the bit can never end up clear while
+    /// frames sit queued.
+    #[inline]
+    fn mark_spout(&self, shard: usize) {
+        self.spout_mask[shard / 64].fetch_or(1u64 << (shard % 64), Ordering::Release);
+    }
+
+    /// Consumer side: retire `shard`'s bit after observing `len == 0`,
+    /// then re-check and restore it if a producer raced in between
+    /// (clear → recheck → re-set; the producer's own set lands after
+    /// its increment, so one of the two sets survives any interleaving).
+    fn unmark_spout_if_empty(&self, shard: usize) {
+        self.spout_mask[shard / 64].fetch_and(!(1u64 << (shard % 64)), Ordering::Release);
+        if self.spouts[shard].len.load(Ordering::Acquire) > 0 {
+            self.mark_spout(shard);
+        }
+    }
+
     /// Park one diverted frame in `shard`'s spout and wake a starved
     /// sibling. Allocation-free: the frame links through its own header.
     fn divert(&self, shard: usize, frame: FramePtr) {
         self.spouts[shard].len.fetch_add(1, Ordering::Release);
+        self.mark_spout(shard);
         self.diverted.fetch_add(1, Ordering::Relaxed);
         self.spouts[shard].queue.push(frame);
         self.wake_starved(shard);
@@ -466,6 +506,7 @@ impl MigrationHub {
             return;
         }
         self.spouts[shard].len.fetch_add(n, Ordering::Release);
+        self.mark_spout(shard);
         self.diverted.fetch_add(n as u64, Ordering::Relaxed);
         self.spouts[shard].queue.push_batch(frames);
         self.wake_starved(shard);
@@ -500,6 +541,12 @@ impl MigrationHub {
     fn claim_impl(&self, s: usize, home_drain: bool) -> Option<Claimed> {
         let spout = &self.spouts[s];
         if spout.len.load(Ordering::Acquire) == 0 {
+            // Drained: retire the occupancy bit (at most once per drain
+            // transition — pollers skip unmarked spouts, so an empty
+            // spout is not re-polled until a producer re-marks it).
+            if self.spout_marked(s) {
+                self.unmark_spout_if_empty(s);
+            }
             return None;
         }
         let Ok(_guard) = spout.claim.try_lock() else {
@@ -552,8 +599,12 @@ impl MigrationHub {
     /// Claim work on behalf of `shard`'s pool: own spout first (not a
     /// migration — the saturated shard drains its own overflow, with
     /// the [`Self::try_claim_home`] fast path), then siblings
-    /// nearest-first. Feeds the hysteresis tuner: contended polls count
-    /// as misses, cross-shard claims as productive migrations.
+    /// nearest-first. Sibling polling is indexed by the spout-occupancy
+    /// bitmask: a victim whose bit is clear costs one shared-word test,
+    /// not a load of its spout's `len` line — the poll sweep is O(1) in
+    /// shard count when nothing is diverted. Feeds the hysteresis
+    /// tuner: contended polls count as misses, cross-shard claims as
+    /// productive migrations.
     fn claim_for(&self, shard: usize) -> ExternalPoll {
         match self.try_claim_home(shard) {
             Some(Claimed::Frame(frame)) => {
@@ -566,6 +617,9 @@ impl MigrationHub {
             None => {}
         }
         for &(victim, _) in &self.victims[shard] {
+            if !self.spout_marked(victim) {
+                continue;
+            }
             match self.try_claim(victim) {
                 Some(Claimed::Frame(frame)) => {
                     self.tuner.note_claim();
@@ -591,10 +645,13 @@ impl MigrationHub {
     /// With park-aware routing on, shards *within one distance class*
     /// are ranked by how long their coldest worker has been parked
     /// (Eq. (6)'s hierarchy still decides between classes), and the wake
-    /// lands on that shard's longest-parked worker. Park stamps are
-    /// measured against each pool's own build instant; a server builds
-    /// its shards back-to-back, so cross-shard comparisons are off by at
-    /// most the few-ms build skew — noise at parking timescales.
+    /// lands on that shard's longest-parked worker. Both the ranking
+    /// (`coldest_park_stamp`) and the wake (`wake_coldest`) are indexed
+    /// by each pool's parked bitmask — O(#parked), never an O(P) stamp
+    /// scan. Park stamps are measured against each pool's own build
+    /// instant; a server builds its shards back-to-back, so cross-shard
+    /// comparisons are off by at most the few-ms build skew — noise at
+    /// parking timescales.
     fn wake_starved(&self, home: usize) {
         let Some(wakers) = self.wakers.get() else { return };
         if self.park_aware {

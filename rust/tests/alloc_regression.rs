@@ -143,6 +143,43 @@ fn steady_state_is_allocation_free() {
         );
     }
 
+    // Park/wake cycles on a lazy park-aware pool (ISSUE 6): every
+    // iteration lets the workers park (setting their stamp and packed
+    // parked-bitmask bit) and then wakes them through the routed submit
+    // path (clearing both). Mask maintenance is a single fetch_or /
+    // fetch_and on a pre-sized word and the picker iterates set bits of
+    // one word, so the whole park→route→wake→execute cycle must stay
+    // allocation-free once warm.
+    {
+        use rustfork::sched::SchedulerKind;
+        let pool = Pool::builder()
+            .workers(2)
+            .scheduler(SchedulerKind::Lazy)
+            .park_aware_wakes(true)
+            .build();
+        let mut submit = |_seed: u64| {
+            // ~2 ms idle gap: the 1 ms backstop guarantees both workers
+            // complete at least one full park/publish cycle per job.
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            pool.submit(Fib::new(10)).join()
+        };
+        for seed in 0..32 {
+            assert_eq!(submit(seed), fib_exact(10), "park-cycle warmup job {seed}");
+        }
+        let mut last = usize::MAX;
+        for _attempt in 0..5 {
+            last = window(50, &mut submit);
+            if last == 0 {
+                break;
+            }
+        }
+        assert_eq!(
+            last, 0,
+            "park/wake cycles with the parked bitmask never reached a \
+             zero-allocation window"
+        );
+    }
+
     // Deep workload with the feedback tuners on (ISSUE 5): each job is
     // a 2000-frame call chain (~160 KiB of live stack, 40× the default
     // first stacklet). During warmup the adaptive-sizing loop pays the

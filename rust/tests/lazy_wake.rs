@@ -91,6 +91,80 @@ fn concurrent_submitters_racing_parking_workers() {
 }
 
 #[test]
+fn routed_wakes_racing_unparks_never_strand_a_job() {
+    // Regression hammer for the `wake_one` lost-wake window: the routed
+    // (park-aware) picker used to re-run only **once** after losing a
+    // worker's flag CAS, so two simultaneous wakes racing one parking
+    // worker could both give up while a queued job sat behind a pool of
+    // parked workers until the backstop. The fix retries until the
+    // picker has drained every parked candidate. Here chaos threads
+    // spray routed and plain wakes (burning parked candidates out from
+    // under concurrent submitters) while producers submit into the idle
+    // gaps — no job may outlive all parked workers, i.e. every join
+    // lands well inside the latency ceiling.
+    let pool = std::sync::Arc::new(
+        Pool::builder()
+            .workers(3)
+            .scheduler(SchedulerKind::Lazy)
+            .park_aware_wakes(true)
+            .build(),
+    );
+    let _ = pool.run(Fib::new(10));
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut chaos = Vec::new();
+    for c in 0..2u64 {
+        let shared = pool.shared().clone();
+        let stop = std::sync::Arc::clone(&stop);
+        chaos.push(std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                // Alternate routed and plain wakes so both paths race
+                // the workers' park/backstop cycle.
+                if i % 2 == 0 {
+                    let _ = shared.wake_coldest();
+                } else {
+                    shared.wake_one((c + i) as usize % 3);
+                }
+                i += 1;
+                if i % 7 == 0 {
+                    std::thread::sleep(Duration::from_micros(800));
+                }
+            }
+        }));
+    }
+    let mut submitters = Vec::new();
+    for t in 0..2u64 {
+        let pool = std::sync::Arc::clone(&pool);
+        submitters.push(std::thread::spawn(move || {
+            let mut worst = Duration::ZERO;
+            for i in 0..200u64 {
+                std::thread::sleep(Duration::from_micros((t * 211 + i * 89) % 2000));
+                let seed = t * 10_000 + i;
+                let t0 = Instant::now();
+                let h = pool.submit(MixedJob::from_seed(seed));
+                assert_eq!(h.join(), MixedJob::expected(seed), "submitter {t} job {i}");
+                worst = worst.max(t0.elapsed());
+            }
+            worst
+        }));
+    }
+    for th in submitters {
+        let worst = th.join().unwrap();
+        assert!(
+            worst < latency_ceiling(),
+            "job waited {worst:?} with wake chaos burning parked candidates — \
+             routed wake gave up before draining the picker?"
+        );
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for th in chaos {
+        th.join().unwrap();
+    }
+    let m = pool.metrics();
+    assert_eq!(m.signals, m.steals, "wake chaos broke quiescence: {m:?}");
+}
+
+#[test]
 fn batch_submission_wakes_parked_workers() {
     // A batch dropped onto a fully-parked lazy pool must be served by
     // the single wake sweep (one notify per touched worker), not rely

@@ -12,10 +12,15 @@
 //!   oracles and the quiescence invariant holds, i.e. the untuned
 //!   server is today's server.
 
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
 use rustfork::numa::NumaTopology;
-use rustfork::rt::tune::pick_coldest;
+use rustfork::rt::tune::{pick_coldest, ParkedSet};
 use rustfork::rt::Pool;
+use rustfork::sched::SchedulerKind;
 use rustfork::service::{jobs::DeepJob, jobs::MixedJob, JobServer, PinnedShard};
+use rustfork::sync::XorShift64;
 
 /// Deep enough that each job's live stack (~80 bytes/frame) dwarfs the
 /// 4 KiB default first stacklet many times over.
@@ -204,6 +209,142 @@ fn wake_routing_never_picks_a_non_parked_worker() {
 }
 
 #[test]
+fn parked_mask_matches_linear_oracle_under_random_ops() {
+    // Model check (ISSUE 6 tentpole): drive a `ParkedSet` and a shadow
+    // stamp table through random park/unpark sequences and assert the
+    // packed mask never disagrees with the linear `pick_coldest` oracle
+    // it replaced — same membership bit-for-bit, same Some/None pick
+    // verdict, same coldest stamp, and (for single-word sets, which is
+    // every flat pool of ≤64 workers) the exact same coldest pick.
+    for &(workers, nodes) in &[(5usize, 1usize), (8, 2), (70, 2), (64, 1)] {
+        let node_of = move |w: usize| w % nodes;
+        let set = ParkedSet::new(workers, nodes, node_of);
+        assert_eq!(set.workers(), workers);
+        let mut stamps = vec![0u64; workers];
+        let mut rng = XorShift64::new(0x9E37_79B9 ^ workers as u64);
+        let mut next_stamp = 1u64;
+        for step in 0..2_000u32 {
+            let w = (rng.next_u64() % workers as u64) as usize;
+            if rng.next_u64() % 2 == 0 {
+                // Park: stamp first, then the mask bit (publish order).
+                stamps[w] = next_stamp;
+                next_stamp += 1;
+                set.set(w);
+            } else {
+                // Unpark: mask bit first, then the stamp (clear order).
+                set.clear(w);
+                stamps[w] = 0;
+            }
+            for i in 0..workers {
+                assert_eq!(
+                    set.is_set(i),
+                    stamps[i] != 0,
+                    "step {step}: worker {i} membership diverged from the oracle table"
+                );
+            }
+            let oracle = pick_coldest(workers, |i| stamps[i], |_| true);
+            let got = set.pick_coldest_in(None, |i| stamps[i]);
+            match (oracle, got) {
+                (None, None) => {}
+                (Some(o), Some(g)) => {
+                    assert!(stamps[g] != 0, "step {step}: mask picked awake worker {g}");
+                    // Multi-word sets pick the coldest of one (rotating)
+                    // word; single-word sets must match the global
+                    // coldest exactly.
+                    if workers <= 64 && nodes == 1 {
+                        assert_eq!(
+                            stamps[g], stamps[o],
+                            "step {step}: mask pick {g} is not the coldest ({o})"
+                        );
+                    }
+                }
+                (o, g) => panic!("step {step}: oracle says {o:?}, mask says {g:?}"),
+            }
+            assert_eq!(
+                set.coldest_stamp(|i| stamps[i]),
+                stamps.iter().copied().filter(|&s| s != 0).min(),
+                "step {step}: coldest_stamp diverged"
+            );
+            // Per-node picks never stray outside their partition.
+            for n in 0..nodes {
+                if let Some(g) = set.pick_coldest_in(Some(n), |i| stamps[i]) {
+                    assert_eq!(node_of(g), n, "step {step}: node {n} pick strayed to {g}");
+                    assert!(stamps[g] != 0, "step {step}: node {n} picked awake worker {g}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn real_park_cycles_leave_no_stale_stamps() {
+    // Extends the never-targets-awake property from synthetic tables to
+    // real park/unpark cycles: after arbitrary wake traffic (routed
+    // wakes, plain wakes, submissions racing the backstop bounce), no
+    // awake worker may *keep* a nonzero park stamp or a set mask bit.
+    // A parked worker republishes a fresh stamp every backstop (~1 ms),
+    // so a stamp that survives three 5 ms samples unchanged while the
+    // parked flag reads false the whole time is stale by construction —
+    // exactly the bug class the centralized `clear_parked` closes.
+    let pool = Pool::builder()
+        .workers(3)
+        .scheduler(SchedulerKind::Lazy)
+        .park_aware_wakes(true)
+        .build();
+    let _ = pool.run(DeepJob::new(1));
+    let shared = pool.shared().clone();
+    for round in 0..40u64 {
+        // Mix every unpark path: routed wakes, plain wakes, and real
+        // submissions, separated by gaps long enough to park in.
+        std::thread::sleep(Duration::from_millis(2));
+        let _ = shared.wake_coldest();
+        shared.wake_one(round as usize % 3);
+        let h = pool.submit(MixedJob::from_seed(round));
+        assert_eq!(h.join(), MixedJob::expected(round), "round {round}");
+        // Three-strike stale check on every worker.
+        let suspects: Vec<(usize, u64)> = (0..3)
+            .filter(|&w| !shared.parked_flag[w].load(Ordering::Acquire))
+            .map(|w| (w, shared.park_since[w].load(Ordering::Relaxed)))
+            .filter(|&(_, s)| s != 0)
+            .collect();
+        for strike in 0..2 {
+            if suspects.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            for &(w, s) in &suspects {
+                let flag = shared.parked_flag[w].load(Ordering::Acquire);
+                let now = shared.park_since[w].load(Ordering::Relaxed);
+                assert!(
+                    flag || now != s,
+                    "round {round} strike {strike}: worker {w} is awake but its park \
+                     stamp {s} never cleared — stale stamp on an unpark path"
+                );
+            }
+        }
+        // Same property for the mask: a set bit on a worker that is not
+        // parked must be a transient, not a resident.
+        let bit_suspects: Vec<usize> = (0..3)
+            .filter(|&w| {
+                shared.parked.is_set(w) && !shared.parked_flag[w].load(Ordering::Acquire)
+            })
+            .collect();
+        if !bit_suspects.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+            for w in bit_suspects {
+                assert!(
+                    shared.parked_flag[w].load(Ordering::Acquire) || !shared.parked.is_set(w),
+                    "round {round}: worker {w} awake with a resident mask bit"
+                );
+            }
+        }
+    }
+    // The pool still quiesces exactly after all that chaos.
+    let m = pool.metrics();
+    assert_eq!(m.signals, m.steals, "{m:?}");
+}
+
+#[test]
 fn park_aware_server_stays_exact() {
     // End-to-end smoke with park-aware routing live on a lazy server:
     // bursty traffic with idle gaps (so workers actually park between
@@ -256,6 +397,7 @@ fn all_tuners_off_matches_serial_checksums() {
     assert_eq!(m.signals, m.steals, "{m:?}");
     assert_eq!(m.hot_stacklet_bytes, 0, "no hot size with the tuner off");
     assert_eq!(m.wake_misses, 0, "no routed wakes with park-aware off");
+    assert_eq!(m.wake_backoffs, 0, "no wake-route backoffs with park-aware off");
     assert_eq!(
         server.migration_hysteresis(),
         Some(rustfork::service::DEFAULT_MIGRATION_HYSTERESIS),
