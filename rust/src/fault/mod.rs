@@ -1,0 +1,243 @@
+//! Deterministic, seed-driven fault injection.
+//!
+//! The runtime is sprinkled with a small number of **named fault
+//! sites** — places where a real deployment hurts: workload panics,
+//! late wakes, full migration spouts, an exhausted stack shelf. Each
+//! site asks [`should_fire`] whether to inject its fault. The check
+//! compiles into every build and costs **one relaxed load** while no
+//! plan is armed (the universal case outside the chaos tests), so the
+//! shipped binary and the chaos-tested binary exercise the same code.
+//!
+//! Faults are driven by a [`FaultPlan`]: a seed plus, per site, a
+//! firing period and a budget. The decision for the *n*-th arrival at a
+//! site is a pure function of `(seed, site, n)` — re-running a chaos
+//! test with the same seed and thread interleaving-independent
+//! arrival counts reproduces the same fault pattern, and different
+//! seeds explore different patterns. Arm a plan with [`arm`]; the
+//! returned [`FaultGuard`] disarms on drop (tests must serialize —
+//! the armed plan is process-global).
+//!
+//! | Site | Location | Injected effect |
+//! |------|----------|-----------------|
+//! | [`FaultSite::WorkloadPanic`]  | `service::Tracked::step` (first resume) | job panics before running |
+//! | [`FaultSite::DelayedWake`]    | `sched::lazy` idle path, pre-park       | worker naps before parking |
+//! | [`FaultSite::SpoutOverflow`]  | `service::MigrationHub::spout_room`     | spout reports full; divert falls back |
+//! | [`FaultSite::ShelfExhausted`] | `stack::StackShelf::pop`                | recycle miss; fresh stack allocated |
+//!
+//! Every effect is one the system must already tolerate; injection
+//! just makes the rare paths common enough to assert invariants over.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Named injection points. The discriminant indexes the plan's
+/// per-site state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic a job on its first resume (before any forks are in
+    /// flight, so abandonment accounting stays exact).
+    WorkloadPanic = 0,
+    /// Sleep briefly on the lazy scheduler's idle path, just before
+    /// parking — widens the park/wake race windows.
+    DelayedWake = 1,
+    /// Report a migration spout as full, forcing divert paths onto
+    /// their direct-submission fallback.
+    SpoutOverflow = 2,
+    /// Report the stack shelf empty, forcing a fresh stack allocation.
+    ShelfExhausted = 3,
+}
+
+/// Number of [`FaultSite`] variants (array size for per-site state).
+pub const FAULT_SITES: usize = 4;
+
+/// Process-global arm flag: the only cost paid while faults are off.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// The armed plan. A mutex (not a hot-path structure) because it is
+/// touched only when armed, i.e. inside the chaos tests.
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Per-site firing state: static schedule plus live counters.
+#[derive(Debug)]
+struct SiteState {
+    /// Fire roughly one arrival in `period` (0 = site disabled).
+    period: u64,
+    /// Maximum total fires for the run.
+    budget: u64,
+    /// Arrivals observed (input to the deterministic decision).
+    arrivals: AtomicU64,
+    /// Faults actually injected.
+    fired: AtomicU64,
+}
+
+impl SiteState {
+    const fn off() -> Self {
+        SiteState {
+            period: 0,
+            budget: 0,
+            arrivals: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A deterministic fault schedule: seed + per-site period/budget.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: [SiteState; FAULT_SITES],
+}
+
+impl FaultPlan {
+    /// A plan with every site disabled.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            sites: [
+                SiteState::off(),
+                SiteState::off(),
+                SiteState::off(),
+                SiteState::off(),
+            ],
+        }
+    }
+
+    /// Enable `site`: fire on roughly one arrival in `period`
+    /// (clamped to ≥ 1 — 1 fires on every arrival), at most `budget`
+    /// times total.
+    pub fn with(mut self, site: FaultSite, period: u64, budget: u64) -> Self {
+        let s = &mut self.sites[site as usize];
+        s.period = period.max(1);
+        s.budget = budget;
+        self
+    }
+
+    /// The seeded, arrival-indexed decision. Pure in `(seed, site, n)`
+    /// apart from the budget cap.
+    fn decide(&self, site: FaultSite) -> bool {
+        let s = &self.sites[site as usize];
+        if s.period == 0 {
+            return false;
+        }
+        let n = s.arrivals.fetch_add(1, Ordering::Relaxed);
+        let key = (site as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        if splitmix64(self.seed ^ key ^ n) % s.period != 0 {
+            return false;
+        }
+        // Enforce the budget exactly even under racing arrivals.
+        s.fired
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |f| {
+                (f < s.budget).then_some(f + 1)
+            })
+            .is_ok()
+    }
+
+    fn count(&self, site: FaultSite) -> (u64, u64) {
+        let s = &self.sites[site as usize];
+        (s.arrivals.load(Ordering::Relaxed), s.fired.load(Ordering::Relaxed))
+    }
+}
+
+/// SplitMix64 — the standard 64-bit finalizer; full-avalanche, so
+/// consecutive arrival indices decorrelate.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Should the caller inject its fault at `site`? One relaxed load when
+/// no plan is armed; never fires outside an armed [`FaultPlan`].
+#[inline(always)]
+pub fn should_fire(site: FaultSite) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_slow(site)
+}
+
+#[cold]
+fn fire_slow(site: FaultSite) -> bool {
+    let plan = {
+        let guard = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        match &*guard {
+            Some(p) => Arc::clone(p),
+            None => return false,
+        }
+    };
+    plan.decide(site)
+}
+
+/// Arm `plan` process-wide. Only one plan can be armed at a time
+/// (chaos tests serialize on a shared mutex); the returned guard
+/// disarms and drops the plan when it goes out of scope.
+pub fn arm(plan: FaultPlan) -> FaultGuard {
+    let plan = Arc::new(plan);
+    {
+        let mut guard = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        debug_assert!(guard.is_none(), "arming over an armed fault plan");
+        *guard = Some(Arc::clone(&plan));
+    }
+    ARMED.store(true, Ordering::Relaxed);
+    FaultGuard { plan }
+}
+
+/// Keeps a [`FaultPlan`] armed; disarms on drop. Exposes the live
+/// counters so tests can assert how much chaos actually happened.
+pub struct FaultGuard {
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultGuard {
+    /// Arrivals observed at `site` while armed.
+    pub fn arrivals(&self, site: FaultSite) -> u64 {
+        self.plan.count(site).0
+    }
+
+    /// Faults injected at `site` while armed.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.plan.count(site).1
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::Relaxed);
+        *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_never_fires() {
+        assert!(!should_fire(FaultSite::WorkloadPanic));
+        assert!(!should_fire(FaultSite::ShelfExhausted));
+    }
+
+    #[test]
+    fn deterministic_and_budgeted() {
+        let roll = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::new(seed).with(FaultSite::DelayedWake, 4, 8);
+            (0..256).map(|_| plan.decide(FaultSite::DelayedWake)).collect()
+        };
+        let a = roll(42);
+        let b = roll(42);
+        assert_eq!(a, b, "same seed must reproduce the same schedule");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!(fires > 0, "period 4 over 256 arrivals must fire");
+        assert!(fires <= 8, "budget must cap fires, got {fires}");
+        let c = roll(43);
+        assert_ne!(a, c, "different seeds should differ (256 rolls)");
+    }
+
+    #[test]
+    fn disabled_site_never_fires() {
+        let plan = FaultPlan::new(7).with(FaultSite::WorkloadPanic, 1, u64::MAX);
+        assert!(!plan.decide(FaultSite::SpoutOverflow));
+        assert!(plan.decide(FaultSite::WorkloadPanic));
+    }
+}

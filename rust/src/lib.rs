@@ -221,12 +221,80 @@
 //! ([`rt::pool::PoolBuilder::abandon_hook`]); the job server uses it to
 //! release the panicked job's admission slot and per-shard load charge,
 //! so capacity is never leaked by failing jobs.
+//!
+//! ## Robustness: cancellation, deadlines, shedding, fault injection
+//!
+//! ### Cancellation protocol
+//!
+//! Every root carries a one-byte **kill state** in its fused hot block
+//! (`live` / `cancelled` / `shed` / `deadline-expired`; first marker
+//! wins). [`rt::pool::RootHandle::cancel`] sets it with one relaxed
+//! store — no allocation, no lock, no signal. Cancellation is
+//! **cooperative** and observed at the queue boundaries the runtime
+//! already crosses:
+//!
+//! * **Before the job starts** (still queued in a submission queue,
+//!   deque, or migration spout): the dequeuing worker — or the server's
+//!   drop-time spout drain — **discards** the frame instead of
+//!   executing it: the never-started task state is dropped in place,
+//!   the abandonment hook fires, the signal completes in abandoned
+//!   mode, and the block's stack **recycles through the shelf** (a
+//!   clean discard is not a poisoning event). Cost: one relaxed load on
+//!   the dequeue path, **0 heap allocations per cancelled job**
+//!   (regression-gated by the cancel scenario in
+//!   `rust/tests/alloc_regression.rs`).
+//! * **After the job starts**: the next `fork` the job's strand reaches
+//!   on its root's behalf raises a cancellation unwind, which rides the
+//!   existing panic-containment path (stack quarantined, deque drained,
+//!   root abandoned exactly once). Straight-line code between forks is
+//!   never interrupted.
+//!
+//! Handles resolve either way: `join`/`poll` panic (as for workload
+//! panics), while [`rt::pool::RootHandle::try_join`] returns
+//! `Err(`[`rt::pool::AbortReason`]`)` distinguishing `Panicked` /
+//! `Cancelled` / `Shed` / `DeadlineExpired`.
+//!
+//! ### Deadlines and load shedding
+//!
+//! [`service::JobServerBuilder::deadline_default`] and
+//! [`service::JobServer::submit_with_deadline`] stamp a deadline into
+//! the root's hot block before the frame is published. A job whose
+//! deadline passes while still queued is killed **at dequeue or
+//! drain time** — expired jobs are *never executed*, which is the
+//! useful half of a deadline under overload (started jobs are never
+//! interrupted). [`service::ShedPolicy`] (mirroring
+//! [`service::PlacementPolicy`]) decides what a full server does with
+//! new work: [`service::BlockOnFull`] (default, the classic
+//! backpressure), [`service::RejectNew`] (fail fast), or
+//! [`service::ShedOldest`] — kill the oldest still-unstarted job to
+//! make room, which under uniform deadlines preserves goodput: the
+//! oldest queued job is the one most likely to miss its deadline
+//! anyway (`rust/tests/chaos.rs` demonstrates the FIFO collapse vs
+//! shed-oldest recovery under 4× overload). Accounting:
+//! `submitted == completed + abandoned + shed` at quiescence
+//! ([`service::ServerStats`]); `jobs_cancelled` / `jobs_shed` /
+//! `deadline_expired` / `jobs_rejected` in
+//! [`metrics::MetricsSnapshot`].
+//!
+//! ### Fault injection
+//!
+//! [`fault`] compiles deterministic, seed-driven fault injection into
+//! every build (one relaxed load per site while disarmed). Sites:
+//! workload panic (first resume of a served job), delayed wake (lazy
+//! scheduler's pre-park window), spout overflow (migration divert
+//! fallback), shelf exhaustion (stack recycle miss). The chaos suite
+//! (`rust/tests/chaos.rs`, seed-matrixed in CI) arms each site across
+//! scheduler × migration configurations and asserts the runtime's
+//! invariants hold under fire: `signals == steals` at quiescence, the
+//! admission accounting identity, full capacity recovery, and no
+//! un-quarantined poisoned stacks.
 
 pub mod algo;
 pub mod analysis;
 pub mod baseline;
 pub mod config;
 pub mod deque;
+pub mod fault;
 pub mod frame;
 pub mod harness;
 pub mod mem;

@@ -47,6 +47,18 @@ pub struct WorkerCounters {
     /// flight). A high miss:migration ratio means thieves are fighting
     /// over a trickle of diverted work.
     pub migration_misses: AtomicU64,
+    /// Root jobs discarded because the client cancelled them
+    /// ([`crate::rt::RootHandle::cancel`]) — either unstarted at a
+    /// dequeue/steal/claim boundary, or stopped at a fork point after
+    /// starting. Each counted job drained through abandonment, never
+    /// producing a result.
+    pub jobs_cancelled: AtomicU64,
+    /// Root jobs discarded (before ever running) by the server's shed
+    /// policy under overload.
+    pub jobs_shed: AtomicU64,
+    /// Root jobs discarded (before ever running) because their deadline
+    /// expired while queued.
+    pub deadline_expired: AtomicU64,
 }
 
 macro_rules! bump {
@@ -77,6 +89,9 @@ impl WorkerCounters {
         bump_stacks_poisoned => stacks_poisoned,
         bump_jobs_migrated => jobs_migrated,
         bump_migration_misses => migration_misses,
+        bump_jobs_cancelled => jobs_cancelled,
+        bump_jobs_shed => jobs_shed,
+        bump_deadline_expired => deadline_expired,
     }
 }
 
@@ -132,6 +147,18 @@ pub struct MetricsSnapshot {
     /// (sustained `wake_misses` over a window; see
     /// `rt::tune::WakeRouteTuner`). Pool-sourced like `wake_misses`.
     pub wake_backoffs: u64,
+    /// Root jobs discarded on client cancellation (see
+    /// `WorkerCounters::jobs_cancelled`).
+    pub jobs_cancelled: u64,
+    /// Root jobs shed by the server's overload policy before running.
+    pub jobs_shed: u64,
+    /// Root jobs discarded on queue-side deadline expiry.
+    pub deadline_expired: u64,
+    /// Admission rejections (`try_submit` bounces) — server-sourced, set
+    /// by [`crate::service::JobServer::metrics`] from the admission
+    /// core; zero for plain pools. A rejected job never became a root:
+    /// it appears in no other counter.
+    pub jobs_rejected: u64,
 }
 
 impl MetricsSnapshot {
@@ -162,6 +189,10 @@ impl MetricsSnapshot {
         self.hot_stacklet_bytes = self.hot_stacklet_bytes.max(other.hot_stacklet_bytes);
         self.wake_misses += other.wake_misses;
         self.wake_backoffs += other.wake_backoffs;
+        self.jobs_cancelled += other.jobs_cancelled;
+        self.jobs_shed += other.jobs_shed;
+        self.deadline_expired += other.deadline_expired;
+        self.jobs_rejected += other.jobs_rejected;
     }
 
     /// Difference against an earlier snapshot.
@@ -186,6 +217,10 @@ impl MetricsSnapshot {
             hot_stacklet_bytes: self.hot_stacklet_bytes,
             wake_misses: self.wake_misses - earlier.wake_misses,
             wake_backoffs: self.wake_backoffs - earlier.wake_backoffs,
+            jobs_cancelled: self.jobs_cancelled - earlier.jobs_cancelled,
+            jobs_shed: self.jobs_shed - earlier.jobs_shed,
+            deadline_expired: self.deadline_expired - earlier.deadline_expired,
+            jobs_rejected: self.jobs_rejected - earlier.jobs_rejected,
         }
     }
 }
@@ -230,6 +265,9 @@ impl Metrics {
             s.stacks_poisoned += w.stacks_poisoned.load(Ordering::Relaxed);
             s.jobs_migrated += w.jobs_migrated.load(Ordering::Relaxed);
             s.migration_misses += w.migration_misses.load(Ordering::Relaxed);
+            s.jobs_cancelled += w.jobs_cancelled.load(Ordering::Relaxed);
+            s.jobs_shed += w.jobs_shed.load(Ordering::Relaxed);
+            s.deadline_expired += w.deadline_expired.load(Ordering::Relaxed);
         }
         s
     }

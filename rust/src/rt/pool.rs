@@ -149,13 +149,34 @@ pub struct ExternalJob {
     pub migrated: bool,
 }
 
-/// Hook invoked (at most once per root) when a workload panic abandons
-/// a root task, with the root's submission tag. The sharded job server
-/// uses it to release the job's admission slot and per-shard load
-/// charge — the fix for the PR 2 leak where a panicked `Tracked` job
-/// never ran its completion hook. Runs strictly before the abandoned
-/// signal fires, so server accounting is settled when `join` unblocks.
-pub type AbandonHook = dyn Fn(u64) + Send + Sync;
+/// Why a root task drained through the abandonment machinery instead of
+/// completing. Carried to the pool's [`AbandonHook`] so the job server
+/// can account client-initiated terminations (`Panic`, `Cancelled` →
+/// `abandoned`) separately from server-initiated shedding (`Shed`,
+/// `Expired` → `shed`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainKind {
+    /// A workload panic abandoned the job (PR 4 containment).
+    Panic,
+    /// The client cancelled via [`RootHandle::cancel`].
+    Cancelled,
+    /// The server's [`crate::service::ShedPolicy`] shed the job under
+    /// overload, before it ever ran.
+    Shed,
+    /// The job's deadline expired while it was still queued; it was
+    /// discarded at a dequeue/claim boundary without executing.
+    Expired,
+}
+
+/// Hook invoked (at most once per root) when a root task drains through
+/// abandonment instead of completing — workload panic, client cancel,
+/// load shedding or deadline expiry — with the root's submission tag
+/// and the [`DrainKind`]. The sharded job server uses it to release the
+/// job's admission slot and per-shard load charge — the fix for the
+/// PR 2 leak where a panicked `Tracked` job never ran its completion
+/// hook. Runs strictly before the abandoned signal fires, so server
+/// accounting is settled when `join` unblocks.
+pub type AbandonHook = dyn Fn(u64, DrainKind) + Send + Sync;
 
 /// State shared by all workers of a pool.
 pub struct Shared {
@@ -908,6 +929,7 @@ impl Pool {
                 mem as *mut FrameHeader,
                 Arc::into_raw(Arc::clone(&shared.shelf)),
                 tag,
+                root::discard_shim::<C>,
             ));
             (
                 FramePtr(mem as *mut FrameHeader),
@@ -970,12 +992,69 @@ pub struct RootHandle<T> {
 
 unsafe impl<T: Send> Send for RootHandle<T> {}
 
+/// Why [`RootHandle::try_join`] returned no result: the job was
+/// abandoned by the runtime instead of completing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbortReason {
+    /// A workload panic abandoned the job.
+    Panicked,
+    /// The job was cancelled via [`RootHandle::cancel`].
+    Cancelled,
+    /// The server's shed policy dropped the job under overload.
+    Shed,
+    /// The job's deadline expired before it ran.
+    DeadlineExpired,
+}
+
 impl<T> RootHandle<T> {
     /// The block's completion signal. Valid until this handle releases
     /// its refcount half (`joined` guards every release path).
     fn signal(&self) -> &RootSignal {
         debug_assert!(!self.joined);
         unsafe { (*self.hot).signal() }
+    }
+
+    /// The block's hot part, for crate-internal deadline setting and the
+    /// shed registry. Valid until this handle releases its half.
+    pub(crate) fn hot(&self) -> *const RootHot {
+        debug_assert!(!self.joined);
+        self.hot
+    }
+
+    /// Request **cooperative cancellation**: mark the job's kill byte so
+    /// workers discard it at the next dequeue/steal/claim boundary (if
+    /// it has not started) or stop it at its next fork point (if it is
+    /// running). One relaxed store; never blocks, never allocates.
+    /// Idempotent, and a no-op on a job that already completed. The
+    /// handle stays joinable: [`Self::try_join`] reports
+    /// [`AbortReason::Cancelled`] if the cancel won the race, or
+    /// `Ok(result)` if the job completed first.
+    pub fn cancel(&self) {
+        if self.joined {
+            return;
+        }
+        unsafe { (*self.hot).mark_kill(root::KILL_CANCELLED) };
+    }
+
+    /// Block until the task completes or is abandoned, returning the
+    /// result or the [`AbortReason`] — the non-panicking sibling of
+    /// [`Self::join`], for callers (cancellation, deadlines, shedding)
+    /// to whom an aborted job is an expected outcome.
+    pub fn try_join(mut self) -> Result<T, AbortReason> {
+        self.signal().wait();
+        if self.signal().is_abandoned() {
+            // Read the cause before releasing — the release may dispose
+            // the block.
+            let reason = match unsafe { (*self.hot).kill_code() } {
+                root::KILL_CANCELLED => AbortReason::Cancelled,
+                root::KILL_SHED => AbortReason::Shed,
+                root::KILL_EXPIRED => AbortReason::DeadlineExpired,
+                _ => AbortReason::Panicked,
+            };
+            self.release_abandoned();
+            return Err(reason);
+        }
+        Ok(unsafe { self.take_result() })
     }
 
     /// Block until the task completes and take its result.

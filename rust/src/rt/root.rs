@@ -41,14 +41,32 @@
 //! [`RootSignal::complete`]: crate::rt::pool::RootSignal::complete
 
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use crate::frame::FrameHeader;
 use crate::stack::{round_up, StackShelf};
 use crate::task::{Coroutine, Frame};
 
-use super::pool::{AbandonHook, RootSignal};
+use super::pool::{AbandonHook, DrainKind, RootSignal};
+
+/// Kill-byte states (`RootHot::kill`). `LIVE` is the initial state; the
+/// first `mark_kill` wins and later marks never overwrite it, so the
+/// recorded cause is the *earliest* one (a job cancelled by its client
+/// stays `Cancelled` even if its deadline also expires while queued).
+pub(crate) const KILL_LIVE: u8 = 0;
+pub(crate) const KILL_CANCELLED: u8 = 1;
+pub(crate) const KILL_SHED: u8 = 2;
+pub(crate) const KILL_EXPIRED: u8 = 3;
+
+/// Monotonic microseconds since the first call in this process. Used as
+/// the deadline clock: `0` is reserved as the "no deadline" sentinel, so
+/// producers clamp computed deadlines to `>= 1`.
+pub(crate) fn now_micros() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
 
 /// The type-erased hot part of a fused root block: everything the
 /// submitter's handle and the completing worker share. Lives inside the
@@ -65,6 +83,24 @@ pub struct RootHot {
     /// are still allocated on it, and sibling strands of the job may
     /// still be running against it.
     abandoned: AtomicBool,
+    /// Set by the clean-discard path ([`discard`]): the root was
+    /// abandoned *before it ever ran*, so the block is the stack's only
+    /// allocation and the stack can be recycled instead of quarantined.
+    clean: AtomicBool,
+    /// Set by the worker that first resumes this root. A started root
+    /// must never be discarded at a queue boundary — its continuation
+    /// can legally reappear in a steal (a root that forked gets its
+    /// continuation stolen) while children are in flight.
+    started: AtomicBool,
+    /// Kill byte: `KILL_LIVE` or the first `KILL_*` cause marked by a
+    /// client cancel, the shed policy, or deadline expiry. Checked with
+    /// one relaxed load at dequeue/steal/claim boundaries.
+    kill: AtomicU8,
+    /// Absolute deadline in [`now_micros`] ticks; `0` means none.
+    deadline: AtomicU64,
+    /// Monomorphized task destructor for the clean-discard path: drops
+    /// the never-started task state in place without resuming it.
+    discard_task: unsafe fn(*mut FrameHeader),
     /// Base of the whole block allocation (== the frame header), from
     /// which dispose reads the stack pointer and allocation size.
     base: *mut FrameHeader,
@@ -83,11 +119,21 @@ pub struct RootHot {
 impl RootHot {
     /// Fresh hot part with both halves outstanding. Takes ownership of
     /// one raw `Arc<StackShelf>` reference.
-    pub(crate) fn new(base: *mut FrameHeader, shelf: *const StackShelf, tag: u64) -> Self {
+    pub(crate) fn new(
+        base: *mut FrameHeader,
+        shelf: *const StackShelf,
+        tag: u64,
+        discard_task: unsafe fn(*mut FrameHeader),
+    ) -> Self {
         RootHot {
             signal: RootSignal::new(),
             refs: AtomicUsize::new(2),
             abandoned: AtomicBool::new(false),
+            clean: AtomicBool::new(false),
+            started: AtomicBool::new(false),
+            kill: AtomicU8::new(KILL_LIVE),
+            deadline: AtomicU64::new(0),
+            discard_task,
             base,
             shelf,
             tag,
@@ -98,6 +144,54 @@ impl RootHot {
     #[inline]
     pub fn signal(&self) -> &RootSignal {
         &self.signal
+    }
+
+    /// Record a kill cause. First mark wins; later marks (including
+    /// racing ones) are ignored so the cause is stable once set.
+    #[inline]
+    pub(crate) fn mark_kill(&self, code: u8) {
+        let _ = self
+            .kill
+            .compare_exchange(KILL_LIVE, code, Ordering::Relaxed, Ordering::Relaxed);
+    }
+
+    /// Current kill byte (`KILL_LIVE` if the job is live).
+    #[inline]
+    pub(crate) fn kill_code(&self) -> u8 {
+        self.kill.load(Ordering::Relaxed)
+    }
+
+    /// Set the absolute deadline (in [`now_micros`] ticks, `>= 1`).
+    #[inline]
+    pub(crate) fn set_deadline(&self, at_micros: u64) {
+        self.deadline.store(at_micros.max(1), Ordering::Relaxed);
+    }
+
+    /// Absolute deadline, or `0` if none was set.
+    #[inline]
+    pub(crate) fn deadline(&self) -> u64 {
+        self.deadline.load(Ordering::Relaxed)
+    }
+
+    /// Mark the root as started (first resume). After this, queue-side
+    /// discard is off the table; cancellation is cooperative only.
+    #[inline]
+    pub(crate) fn mark_started(&self) {
+        self.started.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether any worker has started resuming this root.
+    #[inline]
+    pub(crate) fn started(&self) -> bool {
+        self.started.load(Ordering::Relaxed)
+    }
+
+    /// Take an extra refcount reference (the shed-oldest registry holds
+    /// one per tracked job so the `*const RootHot` stays valid until the
+    /// registry prunes it).
+    #[inline]
+    pub(crate) fn retain(&self) {
+        self.refs.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -173,7 +267,7 @@ pub(crate) unsafe fn release(hot: *const RootHot) {
 /// # Safety
 /// `hot` must be the root of the panicked strand's job. The caller must
 /// not touch the block after this call (the release may dispose it).
-pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>) {
+pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>, reason: DrainKind) {
     if (*hot).abandoned.swap(true, Ordering::AcqRel) {
         return; // another strand of this job already abandoned the root
     }
@@ -181,10 +275,66 @@ pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>) {
         let tag = (*hot).tag;
         // Hook code is outside the runtime (job-server accounting); a
         // panic there must not unwind into panic containment itself.
-        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h(tag)));
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h(tag, reason)));
     }
     (*hot).signal.complete_abandoned();
     release(hot);
+}
+
+/// Queue-side discard of a root that **never started**: drop the task
+/// state in place, fire the signal in abandoned mode and release the
+/// worker half — without ever resuming the job. Because the block is the
+/// stack's only allocation, the disposer can recycle the stack (the
+/// `clean` flag below) instead of quarantining it, which is what keeps
+/// cancel/shed allocation-free in steady state.
+///
+/// Idempotent through the same `abandoned` swap as [`abandon`]; safe to
+/// race with a concurrent handle-side `cancel` (that only marks the kill
+/// byte) but **not** with execution — callers must hold exclusive frame
+/// ownership (just popped/claimed it from a queue) and must have checked
+/// `!started()`.
+///
+/// # Safety
+/// `hot` must be the live hot part of a root block whose frame the
+/// caller exclusively owns and whose task has never been resumed. The
+/// caller must not touch the block after this call.
+pub(crate) unsafe fn discard(hot: *const RootHot, hook: Option<&AbandonHook>, reason: DrainKind) {
+    if (*hot).abandoned.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    // Safety net: record the cause even if the caller forgot to mark it
+    // (first mark wins, so an existing mark is preserved).
+    (*hot).mark_kill(match reason {
+        DrainKind::Cancelled => KILL_CANCELLED,
+        DrainKind::Shed => KILL_SHED,
+        DrainKind::Expired => KILL_EXPIRED,
+        DrainKind::Panic => KILL_CANCELLED,
+    });
+    // Drop the never-started task state. The monomorphized shim was
+    // captured at block construction; a task destructor panic is
+    // contained the same way hook panics are.
+    let base = (*hot).base;
+    let shim = (*hot).discard_task;
+    let clean = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| shim(base))).is_ok();
+    // Only a cleanly-destructed block may be recycled; a panicking drop
+    // leaves the stack's contents suspect, so fall back to quarantine.
+    (*hot).clean.store(clean, Ordering::Release);
+    if let Some(h) = hook {
+        let tag = (*hot).tag;
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h(tag, reason)));
+    }
+    (*hot).signal.complete_abandoned();
+    release(hot);
+}
+
+/// Monomorphized task destructor stored in [`RootHot::discard_task`]:
+/// drops the `Frame<C>::task` of a never-started root in place.
+///
+/// # Safety
+/// `f` must be the header of a `Frame<C>` whose task is initialized and
+/// has never been resumed or dropped.
+pub(crate) unsafe fn discard_shim<C: Coroutine>(f: *mut FrameHeader) {
+    std::ptr::drop_in_place(std::ptr::addr_of_mut!((*(f as *mut Frame<C>)).task));
 }
 
 /// Tear down a fully-released root block: drop the signal state, pop the
@@ -201,19 +351,32 @@ unsafe fn dispose(hot: *mut RootHot) {
     let shelf_raw = (*hot).shelf;
     let stack = (*base).stack;
     let size = (*base).alloc_size as usize;
-    // Read before dropping the hot part (the flag lives inside it).
+    // Read before dropping the hot part (the flags live inside it).
     let abandoned = (*hot).abandoned.load(Ordering::Acquire);
+    // A clean discard ([`discard`]) destructed the never-started task in
+    // place, so the block is still the stack's only allocation and the
+    // normal dealloc + recycle route is sound — that is what keeps the
+    // cancel/shed path allocation-free instead of bleeding quarantined
+    // stacks.
+    let clean = (*hot).clean.load(Ordering::Acquire);
     // The signal owns a mutex + possibly a registered waker clone; the
     // task state and the result were already consumed by the shim and
     // the handle respectively (neither exists on the abandoned path).
     std::ptr::drop_in_place(hot);
     let shelf = Arc::from_raw(shelf_raw);
-    if abandoned || (*stack).is_poisoned() {
+    if (abandoned && !clean) || (*stack).is_poisoned() {
         shelf.quarantine(stack);
         return;
     }
     (*stack).dealloc(base as *mut u8, size);
     debug_assert!((*stack).is_empty(), "root stack must quiesce at dispose");
+    if abandoned {
+        // Discarded-before-start: the job never grew the stack, so its
+        // (tiny) footprint would drag the adaptive-sizing estimate down.
+        // Recycle without feeding the tuner.
+        shelf.recycle(stack);
+        return;
+    }
     // Feedback signal for adaptive stacklet sizing (rt::tune): this
     // job's peak live bytes and stacklet-grow count on its root stack —
     // exactly one sample per job, taken at the moment the stack

@@ -36,7 +36,8 @@ use crate::stack::SegmentedStack;
 use crate::sync::{Backoff, XorShift64};
 use crate::task::{Coroutine, Cx, Frame, StageKind, Step};
 
-use super::pool::{ExternalPoll, Shared};
+use super::pool::{DrainKind, ExternalPoll, Shared};
+use super::root;
 
 /// Hot-path event counters kept worker-local (plain increments) and
 /// flushed to the shared atomics at strand boundaries — fork/call/pop
@@ -55,6 +56,11 @@ struct LocalCounters {
 /// spares to cover concurrently-suspended joins it is the victim of;
 /// overflow drains to the shared shelf (which covers submission reuse).
 const LOCAL_STACK_CAP: usize = 4;
+
+/// Panic payload for the fork-boundary cancellation stop. The unwind is
+/// contained by the same machinery as a workload panic; the distinct
+/// payload type just keeps cancellation out of panic-message formatting.
+struct CancelUnwind;
 
 /// Per-thread worker state. Created on the worker thread by the pool.
 pub struct Worker {
@@ -82,6 +88,12 @@ pub struct Worker {
     /// panic containment walks its parent chain to find the job's root,
     /// so steal-originated strands can abandon a **remote** root.
     current: *mut FrameHeader,
+    /// Hot part of the root the current strand belongs to, when the
+    /// strand entered through a Root-kind frame (submission pop, spout
+    /// claim, or a stolen root continuation); null otherwise and between
+    /// strands. Read by the fork-boundary cancellation check — one
+    /// relaxed load per fork, no pointer chasing.
+    active_root: *const root::RootHot,
 }
 
 impl Worker {
@@ -100,6 +112,7 @@ impl Worker {
             rng: XorShift64::new(seed),
             local: LocalCounters::default(),
             current: std::ptr::null_mut(),
+            active_root: std::ptr::null(),
         }
     }
 
@@ -137,7 +150,17 @@ impl Worker {
                 {
                     self.shared.wake_one(self.id);
                 }
-                unsafe { self.adopt_stack((*f).stack) };
+                // Dequeue boundary: a cancelled/shed/expired root that
+                // never started is discarded here — task dropped in
+                // place, slot + stack recovered — instead of executed.
+                if unsafe { self.discard_if_dead(f) } {
+                    backoff.reset();
+                    continue;
+                }
+                unsafe {
+                    self.note_root_started(f);
+                    self.adopt_stack((*f).stack);
+                }
                 self.enter_active();
                 self.execute_guarded(f);
                 self.exit_active();
@@ -150,7 +173,13 @@ impl Worker {
                 // thieves left, strands complete inline (steals == 0 fast
                 // paths), so executing here cannot block.
                 while let Some(FramePtr(f)) = self.shared.submissions[self.id].pop() {
-                    unsafe { self.adopt_stack((*f).stack) };
+                    if unsafe { self.discard_if_dead(f) } {
+                        continue;
+                    }
+                    unsafe {
+                        self.note_root_started(f);
+                        self.adopt_stack((*f).stack);
+                    }
                     self.execute_guarded(f);
                 }
                 break;
@@ -161,6 +190,15 @@ impl Worker {
                 let victim = self.shared.samplers[self.id].sample(&mut self.rng);
                 match self.shared.deques[victim].steal() {
                     crate::deque::Steal::Success(FramePtr(f)) => {
+                        // Steal boundary: one relaxed kill-byte load. In
+                        // practice a stolen Root-kind frame is a started
+                        // continuation (discard declines those), but the
+                        // check keeps the boundary uniform and costs
+                        // nothing against the steal's CAS.
+                        if unsafe { self.discard_if_dead(f) } {
+                            backoff.reset();
+                            continue;
+                        }
                         let counters = self.shared.metrics.worker(self.id);
                         counters.bump_steals();
                         if self.shared.topology.distance(self.id, victim) > 1 {
@@ -169,7 +207,10 @@ impl Worker {
                         // The thief owns the continuation now; count the
                         // steal on the frame (owner-exclusive field —
                         // ownership was transferred by the deque CAS).
-                        unsafe { (*f).steals += 1 };
+                        unsafe {
+                            (*f).steals += 1;
+                            self.note_root_started(f);
+                        }
                         self.enter_active();
                         // Propagate parallelism: if the victim still has
                         // work and someone is asleep, wake them.
@@ -204,10 +245,20 @@ impl Worker {
             match claimed {
                 ExternalPoll::Job(job) => {
                     let FramePtr(f) = job.frame;
+                    // Spout-claim boundary: a diverted root that died
+                    // while queued in a spout is discarded, not executed
+                    // (and not counted as a migration).
+                    if unsafe { self.discard_if_dead(f) } {
+                        backoff.reset();
+                        continue;
+                    }
                     if job.migrated {
                         self.shared.metrics.worker(self.id).bump_jobs_migrated();
                     }
-                    unsafe { self.adopt_stack((*f).stack) };
+                    unsafe {
+                        self.note_root_started(f);
+                        self.adopt_stack((*f).stack);
+                    }
                     self.enter_active();
                     self.execute_guarded(f);
                     self.exit_active();
@@ -268,6 +319,80 @@ impl Worker {
         }));
         if caught.is_err() {
             self.on_workload_panic();
+        }
+        // The strand is over; its root (if tracked) must not leak into
+        // the next strand's fork-boundary cancellation checks.
+        self.active_root = std::ptr::null();
+    }
+
+    /// Queue-boundary liveness check (dequeue / steal / spout claim):
+    /// discard an **unstarted** root whose kill byte is set or whose
+    /// deadline has expired, instead of executing it. One relaxed load
+    /// on the live path (two when a deadline is armed); the discard
+    /// itself drains through [`root::discard`] — task dropped in place,
+    /// abandonment hook, signal, stack recycled — without ever resuming
+    /// the job. Returns true when the frame was consumed.
+    ///
+    /// Started roots are never discarded here: a Root-kind frame can
+    /// legally reappear at the steal boundary as a *mid-run
+    /// continuation* (a root that forked gets its continuation stolen)
+    /// with children in flight — for those, cancellation is the
+    /// cooperative fork-boundary check in [`Self::dispatch`].
+    ///
+    /// # Safety
+    /// The caller must exclusively own `f` (just popped/claimed it).
+    unsafe fn discard_if_dead(&mut self, f: *mut FrameHeader) -> bool {
+        if (*f).kind != FrameKind::Root {
+            return false;
+        }
+        let hot = (*f).root_hot;
+        if hot.is_null() || (*hot).started() {
+            return false;
+        }
+        let mut code = (*hot).kill_code();
+        if code == root::KILL_LIVE {
+            let deadline = (*hot).deadline();
+            if deadline == 0 || root::now_micros() < deadline {
+                return false;
+            }
+            (*hot).mark_kill(root::KILL_EXPIRED);
+            // Re-read: a racing cancel may have won the mark.
+            code = (*hot).kill_code();
+        }
+        let counters = self.shared.metrics.worker(self.id);
+        let reason = match code {
+            root::KILL_SHED => {
+                counters.bump_jobs_shed();
+                DrainKind::Shed
+            }
+            root::KILL_EXPIRED => {
+                counters.bump_deadline_expired();
+                DrainKind::Expired
+            }
+            _ => {
+                counters.bump_jobs_cancelled();
+                DrainKind::Cancelled
+            }
+        };
+        root::discard(hot, self.shared.on_abandon.as_deref(), reason);
+        true
+    }
+
+    /// Record that the strand we are about to run enters through `f`:
+    /// when `f` is a root, mark it started (closing the queue-side
+    /// discard window) and cache its hot part for the fork-boundary
+    /// cancellation check.
+    ///
+    /// # Safety
+    /// The caller must exclusively own `f` and be about to execute it.
+    #[inline]
+    unsafe fn note_root_started(&mut self, f: *mut FrameHeader) {
+        if (*f).kind == FrameKind::Root {
+            let hot = (*f).root_hot;
+            if !hot.is_null() {
+                (*hot).mark_started();
+                self.active_root = hot;
+            }
         }
     }
 
@@ -336,12 +461,23 @@ impl Worker {
             unsafe { self.shared.shelf.quarantine(poisoned) };
         }
         if !hot.is_null() {
+            // A fork-boundary cancellation stop unwinds through this
+            // same path; report it as a cancellation (metric + hook
+            // accounting), not a workload failure.
+            let reason = unsafe {
+                if (*hot).kill_code() == root::KILL_CANCELLED {
+                    self.shared.metrics.worker(self.id).bump_jobs_cancelled();
+                    DrainKind::Cancelled
+                } else {
+                    DrainKind::Panic
+                }
+            };
             // Abandon the root (idempotent across concurrently panicking
             // strands of the same job): runs the pool's abandonment hook
             // and fires the signal so the handle unblocks-and-panics
             // instead of waiting forever.
             unsafe {
-                crate::rt::root::abandon(hot, self.shared.on_abandon.as_deref())
+                crate::rt::root::abandon(hot, self.shared.on_abandon.as_deref(), reason)
             };
         }
     }
@@ -370,6 +506,29 @@ impl Worker {
         self.staged = std::ptr::null_mut();
         match self.staged_kind {
             StageKind::Fork => {
+                // Fork-boundary cancellation checkpoint: one relaxed
+                // load on a line the fork path already executes. A
+                // cancelled running job stops here — before exposing
+                // more work — by unwinding into the panic-containment
+                // path, which abandons the root (as `Cancelled`),
+                // quarantines the strand's stack and keeps the worker
+                // alive. Best-effort by design: strands that never fork
+                // again run to completion.
+                //
+                // Only the **root frame's own** fork boundaries stop:
+                // the root owes no parent signal, and a root frame's
+                // deque entries are always consumed before it steps
+                // again, so unwinding here can never strand a stolen
+                // scope's owed signal — `signals == steals` stays exact
+                // under cancellation (asserted by the chaos suite).
+                // Child frames of a cancelled job run their scope out;
+                // the job stops at its next root-level fork.
+                if (*parent).kind == FrameKind::Root
+                    && !self.active_root.is_null()
+                    && (*self.active_root).kill_code() == root::KILL_CANCELLED
+                {
+                    std::panic::panic_any(CancelUnwind);
+                }
                 self.shared.deques[self.id].push(FramePtr(parent));
                 self.local.forks += 1;
                 // Newly stealable work: wake a sleeper if any. Busy
@@ -443,6 +602,9 @@ impl Worker {
             self.shared.metrics.worker(self.id).bump_roots();
             let hot = (*h).root_hot;
             debug_assert!(!hot.is_null(), "root frame without a fused block");
+            // The strand is finishing; drop the cancellation cache
+            // before the release below can dispose the block.
+            self.active_root = std::ptr::null();
             // The fused root block is NOT deallocated here: it stays
             // live on this stack until both refcount halves release
             // (`rt::root`). Detach the stack first — whichever release

@@ -56,6 +56,12 @@ pub fn idle(w: &mut Worker) {
     // re-poll" is the honest coldness measure.
     shared.publish_parked(w.id);
 
+    // Fault injection: nap inside the flag-set ↔ park window, widening
+    // exactly the race the backstop exists to cover.
+    if crate::fault::should_fire(crate::fault::FaultSite::DelayedWake) {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+
     // Re-check for work between flag-set and park (close the race with
     // wake_one's flag CAS).
     let should_park = shared.submissions[w.id].is_empty()

@@ -64,14 +64,19 @@
 
 pub mod jobs;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::Duration;
 
 use crate::deque::FrameQueue;
 use crate::frame::FramePtr;
 use crate::metrics::MetricsSnapshot;
 use crate::numa::NumaTopology;
-use crate::rt::pool::{ExternalJob, ExternalPoll, ExternalWork, Pool, RootHandle, Shared};
+use crate::rt::pool::{
+    DrainKind, ExternalJob, ExternalPoll, ExternalWork, Pool, RootHandle, Shared,
+};
+use crate::rt::root::{self as root, RootHot};
 use crate::rt::tune::HysteresisTuner;
 use crate::sched::SchedulerKind;
 use crate::sync::CachePadded;
@@ -172,6 +177,96 @@ impl PlacementPolicy for PinnedShard {
     }
 }
 
+/// What to do with a new job arriving while the server is at capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedAction {
+    /// Wait for an admission slot (the pre-PR 7 behavior).
+    Block,
+    /// Refuse the new job and count it as rejected.
+    Reject,
+    /// Mark the oldest still-queued job shed (it is discarded at dequeue
+    /// time, never executed) and wait for its slot to free.
+    ShedOldest,
+}
+
+/// Overload policy: decides how admission behaves at capacity. Mirrors
+/// [`PlacementPolicy`] — a small always-consulted trait object chosen at
+/// build time.
+///
+/// Implementations that may ever return [`ShedAction::ShedOldest`] must
+/// report `tracks_oldest() == true` (the default implementation derives
+/// it from `on_full()`), because the server only maintains the
+/// oldest-job registry when the policy asks for it.
+pub trait ShedPolicy: Send + Sync {
+    /// Called when a submission finds the server at capacity.
+    fn on_full(&self) -> ShedAction;
+
+    /// Human-readable policy name (reporting).
+    fn name(&self) -> &'static str {
+        "custom"
+    }
+
+    /// Whether the server must track submission order for shedding.
+    fn tracks_oldest(&self) -> bool {
+        matches!(self.on_full(), ShedAction::ShedOldest)
+    }
+}
+
+/// Default policy: block the submitter until a slot frees.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BlockOnFull;
+
+impl ShedPolicy for BlockOnFull {
+    fn on_full(&self) -> ShedAction {
+        ShedAction::Block
+    }
+
+    fn name(&self) -> &'static str {
+        "block"
+    }
+}
+
+/// Reject new work at capacity (fail fast; callers see `Err`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RejectNew;
+
+impl ShedPolicy for RejectNew {
+    fn on_full(&self) -> ShedAction {
+        ShedAction::Reject
+    }
+
+    fn name(&self) -> &'static str {
+        "reject-new"
+    }
+}
+
+/// Shed the oldest still-unstarted job to make room for new work. Under
+/// deadline-driven load this preserves goodput: the oldest queued job is
+/// the one most likely to miss its deadline anyway.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ShedOldest;
+
+impl ShedPolicy for ShedOldest {
+    fn on_full(&self) -> ShedAction {
+        ShedAction::ShedOldest
+    }
+
+    fn name(&self) -> &'static str {
+        "shed-oldest"
+    }
+}
+
+/// Registry entry for the shed-oldest policy: a retained reference to a
+/// queued job's root hot block. The server holds one reference per entry
+/// (released when the entry is pruned or consumed), so the pointer stays
+/// valid even after the job completes or is discarded.
+struct RegEntry(*const RootHot);
+
+// SAFETY: the entry is a counted reference to a heap block whose
+// accessors are all atomic; it is moved between threads only under the
+// registry mutex.
+unsafe impl Send for RegEntry {}
+
 /// Per-shard load accounting (placement input + stats).
 #[derive(Debug)]
 struct ShardLoad {
@@ -196,6 +291,10 @@ struct ServerCore {
     /// Jobs abandoned by workload panics (their admission slots were
     /// released through the abandonment hook, not the completion hook).
     abandoned: AtomicU64,
+    /// Jobs shed before execution (shed-oldest policy or expired
+    /// deadline); their slots were released through the abandonment
+    /// hook with a shed/expired drain kind.
+    shed: AtomicU64,
 }
 
 impl ServerCore {
@@ -223,6 +322,18 @@ impl ServerCore {
         self.release_slot();
     }
 
+    /// Shed hook: runs (via the pool's abandonment hook, at most once
+    /// per job) when a queued job is discarded before execution —
+    /// shed-oldest victim or expired deadline. Same slot/load recovery
+    /// as [`ServerCore::abandon`], separate counter: shed jobs were
+    /// never started, abandoned jobs died mid-run.
+    fn shed_slot(&self, shard: usize) {
+        let shard = shard.min(self.loads.len().saturating_sub(1));
+        self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.release_slot();
+    }
+
     fn release_slot(&self) {
         let mut admitted = self.admitted.lock().unwrap();
         debug_assert!(*admitted > 0, "slot release without admission");
@@ -240,12 +351,22 @@ struct Tracked<C: Coroutine> {
     core: Arc<ServerCore>,
     shard: usize,
     done: bool,
+    /// True once the first resume has run — the workload-panic fault
+    /// site only fires on the first step, where the root strand has no
+    /// in-flight children (so the abandonment accounting stays exact).
+    stepped: bool,
 }
 
 impl<C: Coroutine> Coroutine for Tracked<C> {
     type Output = C::Output;
 
     fn step(&mut self, cx: &mut Cx<'_>) -> Step<C::Output> {
+        if !self.stepped {
+            self.stepped = true;
+            if crate::fault::should_fire(crate::fault::FaultSite::WorkloadPanic) {
+                panic!("fault: injected workload panic");
+            }
+        }
         let step = self.inner.step(cx);
         if matches!(step, Step::Return(_)) && !self.done {
             self.done = true;
@@ -456,6 +577,11 @@ impl MigrationHub {
     /// overshoot `cap` by the number of concurrent submitters — the
     /// bound shapes steady-state behaviour, it is not a hard limit.
     fn spout_room(&self, shard: usize) -> usize {
+        // Fault injection: report the spout full so divert paths take
+        // their overflow fallback (direct pool submission).
+        if crate::fault::should_fire(crate::fault::FaultSite::SpoutOverflow) {
+            return 0;
+        }
         self.cap.saturating_sub(self.spouts[shard].len.load(Ordering::Relaxed))
     }
 
@@ -738,6 +864,8 @@ pub struct JobServerBuilder {
     spout_cap: usize,
     adaptive_stacklets: bool,
     park_aware: bool,
+    shed: Box<dyn ShedPolicy>,
+    deadline_default: Option<Duration>,
 }
 
 impl JobServerBuilder {
@@ -758,6 +886,8 @@ impl JobServerBuilder {
             spout_cap: DEFAULT_SPOUT_CAP,
             adaptive_stacklets: true,
             park_aware: true,
+            shed: Box::new(BlockOnFull),
+            deadline_default: None,
         }
     }
 
@@ -881,6 +1011,30 @@ impl JobServerBuilder {
         self
     }
 
+    /// Overload policy consulted when a submission finds the server at
+    /// capacity (default: [`BlockOnFull`]). See [`ShedPolicy`].
+    pub fn shed_policy(mut self, p: impl ShedPolicy + 'static) -> Self {
+        self.shed = Box::new(p);
+        self
+    }
+
+    /// Overload policy, pre-boxed (for policies chosen at runtime).
+    pub fn shed_policy_boxed(mut self, p: Box<dyn ShedPolicy>) -> Self {
+        self.shed = p;
+        self
+    }
+
+    /// Default deadline applied to every job submitted without an
+    /// explicit one (default: none). A job whose deadline passes before
+    /// a worker starts it is discarded at dequeue time — it is never
+    /// executed — and its handle resolves to
+    /// [`AbortReason::DeadlineExpired`](crate::rt::pool::AbortReason).
+    /// Deadlines never interrupt a job that has already started.
+    pub fn deadline_default(mut self, d: Duration) -> Self {
+        self.deadline_default = Some(d);
+        self
+    }
+
     /// Build the server, spawning every shard's workers.
     pub fn build(self) -> JobServer {
         let topology = self
@@ -942,6 +1096,7 @@ impl JobServerBuilder {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             abandoned: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         });
         let shard_nodes: Vec<usize> = plans.iter().map(|&(n, _, _)| n).collect();
         let hub = (self.migration && shard_count > 1).then(|| {
@@ -968,7 +1123,14 @@ impl JobServerBuilder {
                 .park_aware_wakes(self.park_aware)
                 // Within a shard the cores are one NUMA node: flat.
                 .topology(NumaTopology::flat(workers))
-                .abandon_hook(Arc::new(move |tag| hook_core.abandon(tag as usize)));
+                .abandon_hook(Arc::new(move |tag, kind| match kind {
+                    DrainKind::Panic | DrainKind::Cancelled => {
+                        hook_core.abandon(tag as usize);
+                    }
+                    DrainKind::Shed | DrainKind::Expired => {
+                        hook_core.shed_slot(tag as usize);
+                    }
+                }));
             if let Some(hub) = &hub {
                 builder = builder
                     .external_work(Arc::new(ShardSource { hub: Arc::clone(hub), shard: s }));
@@ -982,7 +1144,16 @@ impl JobServerBuilder {
             let routes = shards.iter().map(|s| Arc::downgrade(s.pool.shared())).collect();
             let _ = hub.wakers.set(routes);
         }
-        JobServer { shards, core, policy: self.policy, hub }
+        let shed_reg = self.shed.tracks_oldest().then(|| Mutex::new(VecDeque::new()));
+        JobServer {
+            shards,
+            core,
+            policy: self.policy,
+            hub,
+            shed: self.shed,
+            shed_reg,
+            deadline_default: self.deadline_default,
+        }
     }
 }
 
@@ -995,10 +1166,15 @@ pub struct ServerStats {
     pub completed: u64,
     /// `try_submit` calls bounced by backpressure.
     pub rejected: u64,
-    /// Jobs abandoned by workload panics (slots released through the
-    /// abandonment hook). `submitted == completed + abandoned` at
-    /// quiescence.
+    /// Jobs abandoned by workload panics or mid-run cancellation (slots
+    /// released through the abandonment hook).
+    /// `submitted == completed + abandoned + shed` at quiescence.
     pub abandoned: u64,
+    /// Jobs shed before execution — shed-oldest victims and expired
+    /// deadlines. Shed jobs never run; their handles resolve to an
+    /// [`AbortReason`](crate::rt::pool::AbortReason). Cancelled jobs
+    /// (explicit [`RootHandle::cancel`]) count in `abandoned` instead.
+    pub shed: u64,
     /// Jobs routed through the migration spouts (diverted at placement;
     /// executed by whichever shard claimed them — `jobs_migrated` in
     /// [`MetricsSnapshot`] counts the cross-shard subset).
@@ -1034,6 +1210,13 @@ pub struct JobServer {
     policy: Box<dyn PlacementPolicy>,
     /// Cross-shard migration state (`None`: single shard or disabled).
     hub: Option<Arc<MigrationHub>>,
+    /// Overload policy consulted when admission finds the server full.
+    shed: Box<dyn ShedPolicy>,
+    /// Submission-order registry of retained root references, present
+    /// only when the shed policy tracks the oldest job. Front = oldest.
+    shed_reg: Option<Mutex<VecDeque<RegEntry>>>,
+    /// Deadline applied to jobs submitted without an explicit one.
+    deadline_default: Option<Duration>,
 }
 
 impl JobServer {
@@ -1139,7 +1322,13 @@ impl JobServer {
     }
 
     fn wrap<C: Coroutine>(&self, job: C, shard: usize) -> Tracked<C> {
-        Tracked { inner: job, core: Arc::clone(&self.core), shard, done: false }
+        Tracked {
+            inner: job,
+            core: Arc::clone(&self.core),
+            shard,
+            done: false,
+            stepped: false,
+        }
     }
 
     /// Decide whether the job just charged to `shard` should be parked
@@ -1169,33 +1358,152 @@ impl JobServer {
         streak >= MIGRATION_STREAK_GATE && hub.spout_room(shard) > 0
     }
 
-    /// Submit one job, blocking while the server is at capacity.
-    /// The returned handle joins or `.await`s the result.
+    /// Admission honoring the shed policy. Returns false only when the
+    /// policy rejects the job ([`ShedAction::Reject`]); `infallible`
+    /// callers (plain [`Self::submit`]) degrade rejection to blocking.
+    fn admit_with_policy(&self, infallible: bool) -> bool {
+        if self.try_admit() {
+            return true;
+        }
+        match self.shed.on_full() {
+            ShedAction::Block => {
+                self.admit_blocking();
+                true
+            }
+            ShedAction::Reject if infallible => {
+                self.admit_blocking();
+                true
+            }
+            ShedAction::Reject => false,
+            ShedAction::ShedOldest => {
+                // Mark the oldest still-unstarted job shed, then wait
+                // for a slot: the victim's slot frees when a worker
+                // discards it at dequeue (or any job completes first).
+                self.shed_one();
+                self.admit_blocking();
+                true
+            }
+        }
+    }
+
+    /// Register a freshly built (not yet published) root in the
+    /// shed-oldest registry. Takes one reference on the hot block so the
+    /// entry stays valid past the job's own lifetime; prunes settled
+    /// entries from the front so the deque stays bounded by the
+    /// admission capacity.
+    fn register_for_shed(&self, hot: *const RootHot) {
+        let Some(reg) = &self.shed_reg else { return };
+        unsafe { (*hot).retain() };
+        let mut q = reg.lock().unwrap();
+        while let Some(&RegEntry(h)) = q.front() {
+            // Started or finished entries can no longer be shed.
+            if unsafe { (*h).started() } || unsafe { (*h).signal().is_done() } {
+                q.pop_front();
+                unsafe { root::release(h) };
+            } else {
+                break;
+            }
+        }
+        q.push_back(RegEntry(hot));
+    }
+
+    /// Mark the oldest still-unstarted registered job shed. Returns true
+    /// when a victim was marked (its admission slot frees when a worker
+    /// pops and discards it). Racing starts are benign: a job that
+    /// started between the check and the mark simply runs to completion,
+    /// ignoring the stale mark.
+    fn shed_one(&self) -> bool {
+        let Some(reg) = &self.shed_reg else { return false };
+        let mut q = reg.lock().unwrap();
+        while let Some(RegEntry(h)) = q.pop_front() {
+            let live = unsafe { !(*h).started() && !(*h).signal().is_done() };
+            if live {
+                unsafe {
+                    (*h).mark_kill(root::KILL_SHED);
+                    root::release(h);
+                }
+                return true;
+            }
+            unsafe { root::release(h) };
+        }
+        false
+    }
+
+    /// Submit one job, blocking while the server is at capacity (with
+    /// the shed-oldest policy, first marking the oldest queued job shed
+    /// to free its slot faster). The builder's default deadline, if any,
+    /// is applied. The returned handle joins or `.await`s the result;
+    /// use [`RootHandle::try_join`](crate::rt::pool::RootHandle::try_join)
+    /// to observe cancellation/shedding instead of panicking.
     pub fn submit<C: Coroutine>(&self, job: C) -> RootHandle<C::Output> {
-        self.admit_blocking();
+        let admitted = self.admit_with_policy(true);
+        debug_assert!(admitted);
         self.core.submitted.fetch_add(1, Ordering::Relaxed);
         let shard = self.place();
-        self.route(job, shard)
+        self.route(job, shard, self.deadline_default)
+    }
+
+    /// Submit one job with an explicit deadline (`None`: no deadline,
+    /// overriding any builder default), honoring the shed policy in
+    /// full: `Err(job)` hands the job back when the policy rejects new
+    /// work at capacity. A job whose deadline passes before a worker
+    /// starts it is discarded at dequeue time — never executed — and its
+    /// handle resolves to `AbortReason::DeadlineExpired`. Deadlines
+    /// never interrupt a job that has already started.
+    pub fn submit_with_deadline<C: Coroutine>(
+        &self,
+        job: C,
+        deadline: Option<Duration>,
+    ) -> Result<RootHandle<C::Output>, C> {
+        if !self.admit_with_policy(false) {
+            self.core.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(job);
+        }
+        self.core.submitted.fetch_add(1, Ordering::Relaxed);
+        let shard = self.place();
+        Ok(self.route(job, shard, deadline))
     }
 
     /// Route an admitted, placed job: divert to the migration spout on
     /// sustained imbalance, else submit directly to the shard's pool.
     /// The tag carried to the abandonment hook is the placement shard.
-    fn route<C: Coroutine>(&self, job: C, shard: usize) -> RootHandle<C::Output> {
+    /// Deadline stamping and shed registration happen here, strictly
+    /// before the frame is published to any queue.
+    fn route<C: Coroutine>(
+        &self,
+        job: C,
+        shard: usize,
+        deadline: Option<Duration>,
+    ) -> RootHandle<C::Output> {
         let tracked = self.wrap(job, shard);
+        let (frame, handle) = self.shards[shard].pool.make_root(tracked, shard as u64);
+        self.arm_root(handle.hot(), deadline);
         if self.should_divert(shard) {
             let hub = self.hub.as_ref().expect("divert without a migration hub");
-            let (frame, handle) =
-                self.shards[shard].pool.make_root(tracked, shard as u64);
             hub.divert(shard, frame);
-            handle
         } else {
-            self.shards[shard].pool.submit_tagged(tracked, shard as u64)
+            self.shards[shard].pool.submit_frame(frame);
         }
+        handle
+    }
+
+    /// Stamp the deadline and register for shedding — both before the
+    /// frame is visible to workers, so no discard can race the setup.
+    fn arm_root(&self, hot: *const RootHot, deadline: Option<Duration>) {
+        if let Some(d) = deadline {
+            let micros = u64::try_from(d.as_micros()).unwrap_or(u64::MAX);
+            let at = root::now_micros().saturating_add(micros.max(1));
+            unsafe { (*hot).set_deadline(at) };
+        }
+        self.register_for_shed(hot);
     }
 
     /// Submit one job unless the server is at capacity; on rejection the
     /// job is handed back so the caller can retry, shed or redirect it.
+    /// Always rejects at capacity regardless of the shed policy (this
+    /// *is* the reject-new behavior); counts the bounce in
+    /// [`ServerStats::rejected`] and `jobs_rejected` in
+    /// [`Self::metrics`].
     pub fn try_submit<C: Coroutine>(&self, job: C) -> Result<RootHandle<C::Output>, C> {
         if !self.try_admit() {
             self.core.rejected.fetch_add(1, Ordering::Relaxed);
@@ -1203,7 +1511,7 @@ impl JobServer {
         }
         self.core.submitted.fetch_add(1, Ordering::Relaxed);
         let shard = self.place();
-        Ok(self.route(job, shard))
+        Ok(self.route(job, shard, self.deadline_default))
     }
 
     /// Submit a batch. Jobs are admitted in capacity-bounded waves
@@ -1250,6 +1558,7 @@ impl JobServer {
                 let tracked = self.wrap(job, shard);
                 let (frame, handle) =
                     self.shards[shard].pool.make_root(tracked, shard as u64);
+                self.arm_root(handle.hot(), self.deadline_default);
                 guard.groups[shard].push(frame);
                 out.push(handle);
             }
@@ -1283,6 +1592,7 @@ impl JobServer {
             completed: self.core.completed.load(Ordering::Relaxed),
             rejected: self.core.rejected.load(Ordering::Relaxed),
             abandoned: self.core.abandoned.load(Ordering::Relaxed),
+            shed: self.core.shed.load(Ordering::Relaxed),
             diverted: self
                 .hub
                 .as_ref()
@@ -1325,8 +1635,54 @@ impl JobServer {
             total.stacklet_grows = tuner.grows_count();
             total.hot_stacklet_bytes = tuner.hot_bytes_gauge();
         }
+        // Admission rejections are a server-side event (no worker ever
+        // sees a rejected job), so the aggregate is sourced from the
+        // admission core, not from the per-worker counters.
+        total.jobs_rejected = self.core.rejected.load(Ordering::Relaxed);
         total
     }
+
+    /// The active shed policy's name.
+    pub fn shed_policy_name(&self) -> &'static str {
+        self.shed.name()
+    }
+
+    /// The server-wide shared stack shelf (recycling + quarantine
+    /// introspection; every shard recycles through this one shelf).
+    pub fn stack_shelf(&self) -> &Arc<crate::stack::StackShelf> {
+        self.shards[0].pool.stack_shelf()
+    }
+
+    /// The default deadline applied to submissions (builder knob).
+    pub fn deadline_default(&self) -> Option<Duration> {
+        self.deadline_default
+    }
+}
+
+/// Classify a queued (never-started) root at drain time: `Some(kind)`
+/// when the job must be discarded instead of executed — killed by
+/// cancel/shed, or past its deadline (marked expired here, first marker
+/// wins). `None` means run it normally. Mirrors the worker's
+/// dequeue-time check; both sides must agree or a dead job could
+/// execute through one door and not the other.
+unsafe fn drain_reason(hot: *const RootHot) -> Option<DrainKind> {
+    if hot.is_null() || (*hot).started() {
+        return None;
+    }
+    let mut code = (*hot).kill_code();
+    if code == root::KILL_LIVE {
+        let deadline = (*hot).deadline();
+        if deadline == 0 || root::now_micros() < deadline {
+            return None;
+        }
+        (*hot).mark_kill(root::KILL_EXPIRED);
+        code = (*hot).kill_code();
+    }
+    Some(match code {
+        root::KILL_SHED => DrainKind::Shed,
+        root::KILL_EXPIRED => DrainKind::Expired,
+        _ => DrainKind::Cancelled,
+    })
 }
 
 impl Drop for JobServer {
@@ -1335,13 +1691,41 @@ impl Drop for JobServer {
     /// completes (the pools' shutdown drain executes re-injected
     /// submissions inline). Without this, a frame diverted but never
     /// claimed would strand its handle forever.
+    ///
+    /// Drained frames that were cancelled, shed or deadline-expired are
+    /// **discarded here, never re-injected**: the pools' shutdown drain
+    /// also checks the kill byte, but discarding at the source keeps the
+    /// no-execution guarantee independent of pool teardown order. Slot
+    /// accounting goes through the same abandon/shed split as the
+    /// workers' hook.
     fn drop(&mut self) {
+        // The shed registry holds pure bookkeeping references; release
+        // them first (a release never tears down a block that still has
+        // live worker/handle halves).
+        if let Some(reg) = &self.shed_reg {
+            let mut q = reg.lock().unwrap_or_else(|p| p.into_inner());
+            while let Some(RegEntry(h)) = q.pop_front() {
+                unsafe { root::release(h) };
+            }
+        }
         let Some(hub) = &self.hub else { return };
+        let core = Arc::clone(&self.core);
+        let hook = move |tag: u64, kind: DrainKind| match kind {
+            DrainKind::Shed | DrainKind::Expired => core.shed_slot(tag as usize),
+            DrainKind::Panic | DrainKind::Cancelled => core.abandon(tag as usize),
+        };
+        let hook_ref: &crate::rt::pool::AbandonHook = &hook;
         for shard in 0..self.shards.len() {
             loop {
                 match hub.try_claim(shard) {
                     Some(Claimed::Frame(frame)) => {
-                        self.shards[shard].pool.submit_frame(frame);
+                        let hot = unsafe { (*frame.0).root_hot };
+                        match unsafe { drain_reason(hot) } {
+                            Some(reason) => unsafe {
+                                root::discard(hot, Some(hook_ref), reason);
+                            },
+                            None => self.shards[shard].pool.submit_frame(frame),
+                        }
                     }
                     // A worker holds the claim lock or a push is in
                     // flight; it (or the next iteration) will finish the

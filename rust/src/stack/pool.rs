@@ -138,6 +138,11 @@ impl StackShelf {
 
     /// Take a recycled stack (LIFO — the hottest stack first).
     pub fn pop(&self) -> Option<*mut SegmentedStack> {
+        // Fault injection: report the shelf empty, forcing the caller
+        // onto the fresh-allocation path (a recycle miss).
+        if crate::fault::should_fire(crate::fault::FaultSite::ShelfExhausted) {
+            return None;
+        }
         self.slots.lock().unwrap().pop().map(|s| s.0)
     }
 

@@ -224,4 +224,76 @@ fn steady_state_is_allocation_free() {
             "hot-sized steady state must not grow stacklets"
         );
     }
+
+    // Cancel-heavy traffic (PR 7): cancelling a queued job and resolving
+    // its handle must be as allocation-free as completing it. A gate job
+    // pins the single worker so a burst of submissions is still queued
+    // when cancelled; the worker then discards every dead frame at
+    // dequeue (drop task state in place, abandoned signal, stack back to
+    // the shelf — a clean discard is not a poisoning event, so the
+    // recycle loop keeps turning).
+    {
+        use rustfork::rt::pool::AbortReason;
+        use rustfork::stack::StackShelf;
+        use rustfork::task::FnTask;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        const CANCELS: usize = 25;
+        // Shelf sized above the burst (blocker + CANCELS concurrent
+        // roots) so warm windows never miss.
+        let pool = Pool::builder()
+            .workers(1)
+            .stack_shelf(Arc::new(StackShelf::new(64)))
+            .build();
+        let gate = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(CANCELS);
+        let mut cancel_window = |rounds: usize| -> usize {
+            let before = alloc_count();
+            for _ in 0..rounds {
+                gate.store(false, Ordering::Release);
+                let g = Arc::clone(&gate);
+                let blocker = pool.submit(FnTask::new(move || {
+                    while !g.load(Ordering::Acquire) {
+                        std::thread::yield_now();
+                    }
+                    0u64
+                }));
+                for _ in 0..CANCELS {
+                    handles.push(pool.submit(FnTask::new(|| 1u64)));
+                }
+                for h in &handles {
+                    h.cancel();
+                }
+                gate.store(true, Ordering::Release);
+                assert_eq!(blocker.join(), 0);
+                for h in handles.drain(..) {
+                    assert!(
+                        matches!(h.try_join(), Err(AbortReason::Cancelled)),
+                        "queued-then-cancelled job must resolve as cancelled"
+                    );
+                }
+            }
+            alloc_count() - before
+        };
+        // Warm: bank stacks for the whole burst on the shelf.
+        let _ = cancel_window(8);
+        let cancelled_before = pool.metrics().jobs_cancelled;
+        let mut last = usize::MAX;
+        for _attempt in 0..5 {
+            last = cancel_window(4);
+            if last == 0 {
+                break;
+            }
+        }
+        assert_eq!(
+            last, 0,
+            "cancel-heavy traffic never reached a zero-allocation window"
+        );
+        let cancelled = pool.metrics().jobs_cancelled - cancelled_before;
+        assert!(
+            cancelled >= (4 * CANCELS) as u64,
+            "measured windows must discard real cancels: {cancelled}"
+        );
+    }
 }

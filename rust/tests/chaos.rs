@@ -1,0 +1,375 @@
+//! Chaos suite (PR 7 tentpole): deterministic fault injection ×
+//! scheduler × migration matrix, plus cancellation, deadline and
+//! load-shedding scenarios. Every test drives real traffic while faults
+//! or kill events fire, then asserts the runtime's core invariants
+//! survived:
+//!
+//! * `signals == steals` at quiescence (the fork/join accounting
+//!   identity — abandonment must never strand an owed signal);
+//! * `submitted == completed + abandoned + shed` (every admitted job is
+//!   accounted for exactly once);
+//! * every poisoned stack is quarantined (no reuse of a stack that
+//!   unwound mid-frame);
+//! * admission capacity fully recovers (no leaked slots).
+//!
+//! The fault plan is process-global, so every test serializes on one
+//! mutex. The seed comes from `RUSTFORK_CHAOS_SEED` (CI runs a fixed
+//! seed matrix); a failing seed reproduces locally with
+//! `RUSTFORK_CHAOS_SEED=<seed> cargo test --release --test chaos`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use rustfork::fault::{arm, FaultPlan, FaultSite};
+use rustfork::numa::NumaTopology;
+use rustfork::rt::pool::AbortReason;
+use rustfork::sched::SchedulerKind;
+use rustfork::service::{jobs::MixedJob, JobServer, ShedOldest};
+use rustfork::task::FnTask;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    // A panicking sibling test must not wedge the rest of the suite.
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("RUSTFORK_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00)
+}
+
+/// The quiescence invariants every chaos run must uphold, however many
+/// jobs panicked, were cancelled, shed or expired along the way.
+fn assert_invariants(server: &JobServer, label: &str) {
+    let stats = server.stats();
+    assert_eq!(stats.in_flight, 0, "{label}: jobs still admitted: {stats:?}");
+    assert_eq!(
+        stats.submitted,
+        stats.completed + stats.abandoned + stats.shed,
+        "{label}: admission accounting broken: {stats:?}"
+    );
+    let m = server.metrics();
+    assert_eq!(
+        m.signals, m.steals,
+        "{label}: fork/join accounting broken: {m:?}"
+    );
+    assert!(
+        server.stack_shelf().quarantined_count() >= m.stacks_poisoned,
+        "{label}: a poisoned stack escaped quarantine: {} quarantined, {} poisoned",
+        server.stack_shelf().quarantined_count(),
+        m.stacks_poisoned
+    );
+}
+
+/// Prove no admission slot leaked: a full capacity's worth of fresh
+/// jobs must admit and complete.
+fn assert_capacity_recovers(server: &JobServer, label: &str) {
+    let cap = server.capacity() as u64;
+    let handles: Vec<_> =
+        (0..cap).map(|s| (s, server.submit(MixedJob::from_seed(s)))).collect();
+    for (s, h) in handles {
+        assert_eq!(h.join(), MixedJob::expected(s), "{label}: recovery seed {s}");
+    }
+    assert_eq!(server.in_flight(), 0, "{label}: recovery left jobs admitted");
+}
+
+#[test]
+fn fault_matrix_invariants() {
+    let _lock = serial();
+    let base_seed = chaos_seed();
+    let sites = [
+        (FaultSite::WorkloadPanic, 11, 24),
+        (FaultSite::DelayedWake, 3, 100_000),
+        (FaultSite::SpoutOverflow, 2, 100_000),
+        (FaultSite::ShelfExhausted, 4, 100_000),
+    ];
+    for sched in [SchedulerKind::Busy, SchedulerKind::Lazy] {
+        for migration in [true, false] {
+            for (idx, &(site, period, budget)) in sites.iter().enumerate() {
+                let label = format!("{sched:?}/migration={migration}/{site:?}");
+                let seed = base_seed
+                    ^ ((idx as u64 + 1) << 8)
+                    ^ ((migration as u64) << 16)
+                    ^ (((sched == SchedulerKind::Lazy) as u64) << 17);
+                let guard = arm(FaultPlan::new(seed).with(site, period, budget));
+                let server = JobServer::builder()
+                    .topology(NumaTopology::synthetic(2, 2))
+                    .shards(2)
+                    .workers_per_shard(2)
+                    .capacity(64)
+                    .scheduler(sched)
+                    .migration(migration)
+                    .migration_hysteresis(2)
+                    .seed(seed)
+                    .build();
+                let mut handles = Vec::with_capacity(200);
+                for s in 0..200u64 {
+                    if s % 5 == 0 {
+                        // Aggressive deadline: some expire queued, some
+                        // make it — both paths must stay accounted.
+                        let Ok(h) = server.submit_with_deadline(
+                            MixedJob::from_seed(s),
+                            Some(Duration::from_micros(50)),
+                        ) else {
+                            panic!("block-on-full admission cannot reject");
+                        };
+                        handles.push((s, h));
+                    } else {
+                        let h = server.submit(MixedJob::from_seed(s));
+                        if s % 7 == 0 {
+                            // Cancel storm: unstarted victims discard at
+                            // dequeue; started ones stop at their next
+                            // root-level fork or simply run out.
+                            h.cancel();
+                        }
+                        handles.push((s, h));
+                    }
+                }
+                for (s, h) in handles {
+                    match h.try_join() {
+                        Ok(v) => assert_eq!(
+                            v,
+                            MixedJob::expected(s),
+                            "{label}: completed job corrupted (seed {s})"
+                        ),
+                        // Panicked / Cancelled / Shed / DeadlineExpired
+                        // are all legitimate outcomes under chaos.
+                        Err(_) => {}
+                    }
+                }
+                if site == FaultSite::WorkloadPanic {
+                    assert!(
+                        guard.fired(site) > 0,
+                        "{label}: the panic site never fired — chaos was a no-op"
+                    );
+                }
+                drop(guard);
+                assert_invariants(&server, &label);
+                assert_capacity_recovers(&server, &label);
+                assert_invariants(&server, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn expired_jobs_never_execute() {
+    let _lock = serial();
+    const VICTIMS: usize = 16;
+    let gate = Arc::new(AtomicBool::new(false));
+    let ran = Arc::new(AtomicU64::new(0));
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(1, 1))
+        .shards(1)
+        .workers_per_shard(1)
+        .capacity(64)
+        .build();
+    // Pin the only worker so the deadlined jobs are still queued when
+    // their deadline passes.
+    let g = Arc::clone(&gate);
+    let blocker = server.submit(FnTask::new(move || {
+        while !g.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        0u64
+    }));
+    let victims: Vec<_> = (0..VICTIMS)
+        .map(|_| {
+            let r = Arc::clone(&ran);
+            let Ok(h) = server.submit_with_deadline(
+                FnTask::new(move || {
+                    r.fetch_add(1, Ordering::Relaxed);
+                    0u64
+                }),
+                Some(Duration::from_millis(1)),
+            ) else {
+                panic!("admission under capacity cannot reject");
+            };
+            h
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10));
+    gate.store(true, Ordering::Release);
+    assert_eq!(blocker.join(), 0);
+    for h in victims {
+        assert!(
+            matches!(h.try_join(), Err(AbortReason::DeadlineExpired)),
+            "queued-past-deadline job must resolve as expired"
+        );
+    }
+    assert_eq!(ran.load(Ordering::Relaxed), 0, "an expired job executed");
+    let stats = server.stats();
+    assert_eq!(stats.shed, VICTIMS as u64, "expired jobs count as shed: {stats:?}");
+    let m = server.metrics();
+    assert_eq!(m.deadline_expired, VICTIMS as u64, "{m:?}");
+    assert_invariants(&server, "expired");
+    assert_capacity_recovers(&server, "expired");
+}
+
+#[test]
+fn cancel_storm_recovers_capacity() {
+    let _lock = serial();
+    const CAP: usize = 32;
+    let gate = Arc::new(AtomicBool::new(false));
+    let ran = Arc::new(AtomicU64::new(0));
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(1, 2))
+        .shards(1)
+        .workers_per_shard(2)
+        .capacity(CAP)
+        .build();
+    // Two blockers pin both workers; the rest of the capacity fills
+    // with side-effect victims that are cancelled while queued.
+    let blockers: Vec<_> = (0..2)
+        .map(|_| {
+            let g = Arc::clone(&gate);
+            server.submit(FnTask::new(move || {
+                while !g.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+                0u64
+            }))
+        })
+        .collect();
+    let victims: Vec<_> = (0..CAP - 2)
+        .map(|_| {
+            let r = Arc::clone(&ran);
+            server.submit(FnTask::new(move || {
+                r.fetch_add(1, Ordering::Relaxed);
+                0u64
+            }))
+        })
+        .collect();
+    for h in &victims {
+        h.cancel();
+    }
+    gate.store(true, Ordering::Release);
+    for h in blockers {
+        assert_eq!(h.join(), 0);
+    }
+    for h in victims {
+        assert!(
+            matches!(h.try_join(), Err(AbortReason::Cancelled)),
+            "queued-then-cancelled job must resolve as cancelled"
+        );
+    }
+    assert_eq!(ran.load(Ordering::Relaxed), 0, "a cancelled job executed");
+    let m = server.metrics();
+    assert!(
+        m.jobs_cancelled >= (CAP - 2) as u64,
+        "discards must be counted: {m:?}"
+    );
+    assert_invariants(&server, "cancel-storm");
+    assert_capacity_recovers(&server, "cancel-storm");
+}
+
+#[test]
+fn shed_oldest_preserves_goodput_under_overload() {
+    let _lock = serial();
+    const JOB_MS: u64 = 1;
+    const DEADLINE: Duration = Duration::from_millis(8);
+    const CAP: usize = 64;
+    const BURST: usize = 4 * CAP;
+
+    fn spin_job(
+        good: &Arc<AtomicU64>,
+    ) -> FnTask<impl FnOnce() -> u64 + Send + 'static, u64> {
+        let good = Arc::clone(good);
+        let born = Instant::now();
+        FnTask::new(move || {
+            let t0 = Instant::now();
+            while t0.elapsed() < Duration::from_millis(JOB_MS) {
+                std::hint::spin_loop();
+            }
+            // Goodput = completed within the deadline of *arrival*
+            // (queue wait counts, as it does for a real request).
+            if born.elapsed() <= DEADLINE {
+                good.fetch_add(1, Ordering::Relaxed);
+            }
+            1u64
+        })
+    }
+
+    let build = |shedding: bool| {
+        let b = JobServer::builder()
+            .topology(NumaTopology::synthetic(1, 2))
+            .shards(1)
+            .workers_per_shard(2)
+            .capacity(CAP);
+        if shedding {
+            b.shed_policy(ShedOldest).deadline_default(DEADLINE).build()
+        } else {
+            b.build()
+        }
+    };
+
+    // No-overload baseline: paced one-at-a-time traffic is ~100% good.
+    let good_base = Arc::new(AtomicU64::new(0));
+    {
+        let server = build(true);
+        for _ in 0..8 {
+            let _ = server.submit(spin_job(&good_base)).try_join();
+        }
+    }
+    let good_base = good_base.load(Ordering::Relaxed);
+    assert!(good_base >= 7, "baseline must be nearly all-good: {good_base}/8");
+
+    // 4×-capacity burst against plain FIFO (block-on-full, no
+    // deadlines): every job executes, almost all of them too late.
+    let good_fifo = Arc::new(AtomicU64::new(0));
+    let fifo_stats = {
+        let server = build(false);
+        let handles: Vec<_> = (0..BURST).map(|_| server.submit(spin_job(&good_fifo))).collect();
+        for h in handles {
+            let _ = h.try_join();
+        }
+        server.stats()
+    };
+    let good_fifo = good_fifo.load(Ordering::Relaxed);
+
+    // The same burst with shed-oldest + deadlines: stale jobs are shed
+    // or expire un-executed, so the workers' time goes to jobs that can
+    // still meet their deadline.
+    let good_shed = Arc::new(AtomicU64::new(0));
+    let (shed_stats, shed_metrics) = {
+        let server = build(true);
+        let handles: Vec<_> = (0..BURST).map(|_| server.submit(spin_job(&good_shed))).collect();
+        for h in handles {
+            let _ = h.try_join();
+        }
+        (server.stats(), server.metrics())
+    };
+    let good_shed = good_shed.load(Ordering::Relaxed);
+
+    // FIFO collapse: under 4× overload only the head of the queue can
+    // be on time.
+    assert!(
+        (good_fifo as usize) < BURST / 4,
+        "FIFO should collapse under 4x overload: {good_fifo}/{BURST} good"
+    );
+    // Shedding wins, with margin (generous to absorb CI timing noise).
+    assert!(
+        good_shed > good_fifo && good_shed >= good_fifo + good_fifo / 2,
+        "shed-oldest must beat FIFO goodput: shed {good_shed} vs fifo {good_fifo}"
+    );
+    // The policy actually shed work, and the books balance either way.
+    assert!(shed_stats.shed > 0, "overload must shed: {shed_stats:?}");
+    assert!(
+        shed_metrics.jobs_shed + shed_metrics.deadline_expired > 0,
+        "worker discard counters must move: {shed_metrics:?}"
+    );
+    assert_eq!(
+        fifo_stats.submitted,
+        fifo_stats.completed + fifo_stats.abandoned + fifo_stats.shed,
+        "{fifo_stats:?}"
+    );
+    assert_eq!(
+        shed_stats.submitted,
+        shed_stats.completed + shed_stats.abandoned + shed_stats.shed,
+        "{shed_stats:?}"
+    );
+}

@@ -4,8 +4,13 @@
 //! neither lost nor double-executed, and the runtime's
 //! `signals == steals` invariant survives migration.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
 use rustfork::numa::NumaTopology;
+use rustfork::rt::pool::AbortReason;
 use rustfork::service::{jobs::MixedJob, JobServer, PinnedShard};
+use rustfork::task::FnTask;
 
 const JOBS: u64 = 512;
 const WINDOW: usize = 64;
@@ -124,4 +129,64 @@ fn undrained_spout_jobs_complete_at_shutdown() {
     for (s, h) in handles {
         assert_eq!(h.join(), MixedJob::expected(s), "seed {s} after shutdown");
     }
+}
+
+#[test]
+fn cancelled_spout_frames_never_execute_at_shutdown() {
+    // PR 7 regression (drop-drain hardening): frames drained out of the
+    // migration spouts at shutdown that were cancelled while parked must
+    // be abandoned, never executed — through whichever door drains them
+    // (the server's drop-time spout drain or a worker's claim-time
+    // check).
+    let gate = Arc::new(AtomicBool::new(false));
+    let ran = Arc::new(AtomicU64::new(0));
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 1))
+        .shards(2)
+        .workers_per_shard(1)
+        .capacity(256)
+        .policy(PinnedShard(0))
+        .migration(true)
+        .migration_hysteresis(2)
+        .build();
+    // Occupy every worker: the first pinned blocker holds shard 0's
+    // worker; once the diversion streak opens, shard 1's worker claims
+    // the first diverted blocker (the spouts are FIFO) and gates too.
+    let blockers: Vec<_> = (0..6)
+        .map(|_| {
+            let g = Arc::clone(&gate);
+            server.submit(FnTask::new(move || {
+                while !g.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+                0u64
+            }))
+        })
+        .collect();
+    // Park side-effect jobs behind them in the spout (no free worker
+    // can claim them), then cancel while still queued.
+    let cancelled: Vec<_> = (0..32)
+        .map(|_| {
+            let r = Arc::clone(&ran);
+            server.submit(FnTask::new(move || {
+                r.fetch_add(1, Ordering::Relaxed);
+                0u64
+            }))
+        })
+        .collect();
+    for h in &cancelled {
+        h.cancel();
+    }
+    gate.store(true, Ordering::Release);
+    drop(server);
+    for h in blockers {
+        assert_eq!(h.join(), 0);
+    }
+    for h in cancelled {
+        assert!(
+            matches!(h.try_join(), Err(AbortReason::Cancelled)),
+            "cancelled spout frame must resolve as cancelled, not hang or run"
+        );
+    }
+    assert_eq!(ran.load(Ordering::Relaxed), 0, "a cancelled job executed");
 }
