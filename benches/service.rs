@@ -2,7 +2,7 @@
 //! many small mixed workloads through the sharded [`JobServer`],
 //! comparing
 //!
-//! * per-job `submit` vs batched `submit_batch_into` (the wake-sweep,
+//! * per-job `submit` vs batched `submit_batch_with` (the wake-sweep,
 //!   MPSC tail-exchange and submitter-arena amortizations),
 //! * round-robin vs least-loaded placement,
 //! * busy vs lazy sub-pool schedulers,
@@ -13,7 +13,11 @@
 //! * **deep jobs** (2000-frame call chains, ~160 KiB of live stack per
 //!   job) with adaptive stacklet sizing disabled vs enabled — the
 //!   feedback-tuning layer should drive stacklet grows/job from ≥1 to
-//!   ~0 after warmup while keeping allocs/job at 0.
+//!   ~0 after warmup while keeping allocs/job at 0,
+//! * **tenant contention** (an aggressor flooding a 64-job window while
+//!   a weight-4 victim runs closed-loop) under FIFO vs weighted-fair
+//!   admission — the QoS layer should bound the victim's slowdown near
+//!   its isolated baseline at a small aggregate-throughput cost.
 //!
 //! Reported per configuration: jobs/sec, closed-loop p50/p99 job
 //! latency, warm steady-state heap allocations per job (should be 0 —
@@ -72,6 +76,25 @@ fn main() {
             fixed.stacklet_grows_per_job,
             adaptive.stacklet_grows_per_job,
             adaptive.hot_stacklet_bytes,
+        );
+    }
+    let fifo = report.configs.iter().find(|c| c.name == "tenant contention, fifo");
+    let wf = report.configs.iter().find(|c| c.name == "tenant contention, weighted-fair");
+    if let (Some(fifo), Some(wf)) = (fifo, wf) {
+        let victim = |c: &rustfork::harness::service_bench::ConfigReport| {
+            c.tenants
+                .as_ref()
+                .and_then(|ts| ts.iter().find(|t| t.name == "victim"))
+                .map_or(0.0, |t| t.slowdown)
+        };
+        println!(
+            "# tenant contention: victim slowdown {:.2}x (fifo) -> {:.2}x (weighted-fair), \
+             aggregate {:.0} -> {:.0} jobs/s (target: bounded victim slowdown, \
+             small throughput cost)",
+            victim(fifo),
+            victim(wf),
+            fifo.jobs_per_sec,
+            wf.jobs_per_sec,
         );
     }
     if std::env::var("RUSTFORK_SCALING").is_ok_and(|v| v == "1") {

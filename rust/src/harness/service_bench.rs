@@ -21,6 +21,12 @@
 //! sizing off vs on — the headline comparison for the feedback-tuning
 //! layer, mirroring how the skewed pair showcases migration.
 //!
+//! The **tenant-contention pair** drives identical skewed two-tenant
+//! traffic (an aggressor flooding a windowed backlog while a victim
+//! runs closed-loop) under [`Fifo`] vs [`WeightedFair`] admission —
+//! the headline comparison for the QoS layer. Per-tenant mean sojourn
+//! and slowdown-vs-isolated land in the report's `tenants` block.
+//!
 //! [`run_scaling`] is the **scaling-curve mode** (`repro bench
 //! scaling`): per-P throughput at P = 1, 2, 4, …, max workers, strong
 //! scaling (fixed total work), weak scaling (work ∝ P) and the
@@ -30,18 +36,18 @@
 //! park-aware paths are indexed by the parked bitmask (O(1) in worker
 //! count); `repro bench scaling --check` gates exactly that.
 //!
-//! [`to_json`] renders the report machine-readably (schema 3 embeds the
-//! scaling curve when one was measured); the launcher's `repro bench
-//! --json <path>` writes it to seed the perf trajectory
-//! (`BENCH_service.json`).
+//! [`to_json`] renders the report machine-readably (schema 4 embeds the
+//! scaling curve when one was measured and a per-tenant slowdown block
+//! for the contention pair); the launcher's `repro bench --json <path>`
+//! writes it to seed the perf trajectory (`BENCH_service.json`).
 
 use crate::mem::MemScope;
 use crate::numa::NumaTopology;
 use crate::rt::pool::RootHandle;
 use crate::sched::SchedulerKind;
 use crate::service::{
-    jobs::DeepJob, jobs::MixedJob, JobServer, LeastLoaded, PinnedShard, PlacementPolicy,
-    RoundRobin,
+    jobs::DeepJob, jobs::MixedJob, AdmissionPolicy, Fifo, JobServer, LeastLoaded, OnFull,
+    PinnedShard, PlacementPolicy, RoundRobin, SubmitOptions, WeightedFair,
 };
 
 /// Knobs for one bench invocation (env-overridable through
@@ -113,6 +119,25 @@ pub struct ConfigReport {
     /// Jobs claimed by a non-home shard over the whole configuration
     /// run (the migration traffic behind any skewed-placement win).
     pub jobs_migrated: u64,
+    /// Admission-policy name ("fifo" for every non-contention
+    /// configuration — the builder default).
+    pub admission: &'static str,
+    /// Per-tenant outcome of the contention pair; `None` for
+    /// single-class configurations.
+    pub tenants: Option<Vec<TenantSlowdown>>,
+}
+
+/// One tenant's outcome in a contention configuration.
+#[derive(Debug, Clone)]
+pub struct TenantSlowdown {
+    /// Registered tenant name.
+    pub name: String,
+    /// Mean submit→return sojourn under contention, microseconds.
+    pub mean_sojourn_us: f64,
+    /// Contended mean sojourn over the tenant's isolated-baseline mean
+    /// (measured in a pre-pass on the same server) — the fairness
+    /// figure weighted-fair admission bounds for the victim.
+    pub slowdown: f64,
 }
 
 /// The whole bench run.
@@ -196,7 +221,7 @@ pub struct ScalingReport {
 
 /// Drive `jobs` seeded MixedJobs through `server`, batched (batch > 1)
 /// or one by one (batch == 1); returns the number of result mismatches.
-/// Batched waves go through [`JobServer::submit_batch_into`] with
+/// Batched waves go through [`JobServer::submit_batch_with`] with
 /// reused buffers, so the steady-state wave allocates nothing.
 pub fn drive(server: &JobServer, jobs: u64, batch: usize) -> u64 {
     let mut failures = 0;
@@ -207,7 +232,7 @@ pub fn drive(server: &JobServer, jobs: u64, batch: usize) -> u64 {
         let wave = batch.min((jobs - seed) as usize) as u64;
         if batch > 1 {
             wave_jobs.extend((seed..seed + wave).map(MixedJob::from_seed));
-            server.submit_batch_into(&mut wave_jobs, &mut handles);
+            server.submit_batch_with(&mut wave_jobs, &mut handles, SubmitOptions::new());
             for (s, h) in (seed..seed + wave).zip(handles.drain(..)) {
                 failures += u64::from(h.join() != MixedJob::expected(s));
             }
@@ -310,6 +335,22 @@ impl PolicyKind {
     }
 }
 
+/// Admission flavour of a tenant-contention configuration.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum AdmissionKind {
+    Fifo,
+    WeightedFair,
+}
+
+impl AdmissionKind {
+    fn boxed(self) -> Box<dyn AdmissionPolicy> {
+        match self {
+            AdmissionKind::Fifo => Box::new(Fifo),
+            AdmissionKind::WeightedFair => Box::new(WeightedFair),
+        }
+    }
+}
+
 /// One row of the configuration matrix.
 struct BenchConfig {
     label: &'static str,
@@ -326,13 +367,17 @@ struct BenchConfig {
     /// Adaptive stacklet sizing on/off (the deep pair toggles this; all
     /// other configurations run with the tuners at their defaults).
     adaptive_stacklets: bool,
+    /// `Some(kind)`: the tenant-contention scenario under this
+    /// admission policy (victim weight 4 / aggressor weight 1, the
+    /// dedicated two-thread driver).
+    contention: Option<AdmissionKind>,
 }
 
 fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
     // 2 shards on a synthetic 2-node machine: placement + sharding
     // active even on UMA hosts.
     let per_shard = (opts.workers / 2).max(1);
-    JobServer::builder()
+    let mut b = JobServer::builder()
         .topology(NumaTopology::synthetic(2, per_shard))
         .shards(2)
         .workers_per_shard(per_shard)
@@ -346,8 +391,14 @@ fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
             2
         } else {
             crate::service::DEFAULT_MIGRATION_HYSTERESIS
-        })
-        .build()
+        });
+    if let Some(kind) = cfg.contention {
+        b = b
+            .admission_policy_boxed(kind.boxed())
+            .tenant(CONTENTION_VICTIM, 4, 0)
+            .tenant(CONTENTION_AGGRESSOR, 1, 1);
+    }
+    b.build()
 }
 
 /// In-flight window for the skewed-placement configurations.
@@ -362,6 +413,15 @@ const DEEP_WINDOW: usize = 16;
 /// stacklet.
 const DEEP_DEPTH: u32 = 2_000;
 
+/// Registered tenant names of the contention pair.
+const CONTENTION_VICTIM: &str = "victim";
+const CONTENTION_AGGRESSOR: &str = "aggressor";
+
+/// Aggressor in-flight window of the contention pair: enough standing
+/// backlog that admission ordering, not worker idleness, decides who
+/// runs next.
+const CONTENTION_WINDOW: usize = 64;
+
 /// Run the full configuration matrix and report.
 pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
     let configs: Vec<BenchConfig> = vec![
@@ -374,6 +434,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: None,
             adaptive_stacklets: true,
+            contention: None,
         },
         BenchConfig {
             label: "lazy + rr, batched",
@@ -384,6 +445,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: None,
             adaptive_stacklets: true,
+            contention: None,
         },
         BenchConfig {
             label: "lazy + least-loaded, batched",
@@ -394,6 +456,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: None,
             adaptive_stacklets: true,
+            contention: None,
         },
         BenchConfig {
             label: "busy + rr, batched",
@@ -404,6 +467,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: None,
             adaptive_stacklets: true,
+            contention: None,
         },
         // The skewed pair: identical traffic (everything placed on
         // shard 0, SKEW_WINDOW jobs in flight), migration off vs on —
@@ -417,6 +481,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: false,
             deep: None,
             adaptive_stacklets: true,
+            contention: None,
         },
         BenchConfig {
             label: "skewed shard0 + migration",
@@ -427,6 +492,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: None,
             adaptive_stacklets: true,
+            contention: None,
         },
         // The deep pair: identical deep-chain traffic, adaptive
         // stacklet sizing off vs on — the headline comparison for the
@@ -440,6 +506,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: Some(DEEP_DEPTH),
             adaptive_stacklets: false,
+            contention: None,
         },
         BenchConfig {
             label: "deep jobs + adaptive stacklets",
@@ -450,11 +517,42 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             migration: true,
             deep: Some(DEEP_DEPTH),
             adaptive_stacklets: true,
+            contention: None,
+        },
+        // The contention pair: identical two-tenant traffic (aggressor
+        // flooding CONTENTION_WINDOW jobs, victim closed-loop), FIFO vs
+        // weighted-fair admission — the headline comparison for the QoS
+        // layer: weighted-fair must bound the victim's slowdown.
+        BenchConfig {
+            label: "tenant contention, fifo",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::RoundRobin,
+            batch: 1,
+            window: None,
+            migration: true,
+            deep: None,
+            adaptive_stacklets: true,
+            contention: Some(AdmissionKind::Fifo),
+        },
+        BenchConfig {
+            label: "tenant contention, weighted-fair",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::RoundRobin,
+            batch: 1,
+            window: None,
+            migration: true,
+            deep: None,
+            adaptive_stacklets: true,
+            contention: Some(AdmissionKind::WeightedFair),
         },
     ];
     let mut out = Vec::new();
     for cfg in &configs {
         let label = cfg.label;
+        if cfg.contention.is_some() {
+            out.push(run_contention(opts, cfg));
+            continue;
+        }
         let server = build_server(opts, cfg);
         let scheduler = match cfg.sched {
             SchedulerKind::Busy => "busy",
@@ -479,7 +577,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
         // measured on the submission path this configuration actually
         // uses: per-job configs drive `submit` closed-loop (the
         // zero-alloc steady state); batched configs drive
-        // `submit_batch_into` in waves with reused buffers, so their
+        // `submit_batch_with` in waves with reused buffers, so their
         // allocs/job honestly measure the arena-backed batch path and a
         // job's latency runs from its wave's submission to its own
         // join; windowed (skewed / deep) configs measure each job from
@@ -532,7 +630,7 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
                 let wave = cfg.batch.min((opts.latency_jobs - seed) as usize) as u64;
                 let t0 = std::time::Instant::now();
                 wave_jobs.extend((seed..seed + wave).map(MixedJob::from_seed));
-                server.submit_batch_into(&mut wave_jobs, &mut wave_handles);
+                server.submit_batch_with(&mut wave_jobs, &mut wave_handles, SubmitOptions::new());
                 for (s, h) in (seed..seed + wave).zip(wave_handles.drain(..)) {
                     let got = h.join();
                     lat.push(t0.elapsed().as_secs_f64() * 1e6);
@@ -570,9 +668,166 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             peak_bytes,
             migration: server.migration_enabled(),
             jobs_migrated: end_metrics.jobs_migrated,
+            admission: server.admission_policy_name(),
+            tenants: None,
         });
     }
     ServiceBenchReport { jobs: opts.jobs, workers: opts.workers, configs: out, scaling: None }
+}
+
+/// Mean submit→return sojourn (µs) a tenant accumulated between two
+/// metrics snapshots, from the per-tenant accounting cells.
+fn tenant_mean_sojourn_us(
+    before: &crate::metrics::MetricsSnapshot,
+    after: &crate::metrics::MetricsSnapshot,
+    slot: usize,
+) -> f64 {
+    let d = after.since(before);
+    let cell = &d.tenants[slot];
+    cell.sojourn_us as f64 / cell.sojourn_jobs.max(1) as f64
+}
+
+/// The tenant-contention scenario: per-tenant isolated baselines, then
+/// both tenants live at once — an aggressor keeping
+/// [`CONTENTION_WINDOW`] jobs permanently in flight while the victim
+/// runs closed-loop. Reported p50/p99 are the victim's contended
+/// latencies; `tenants` carries each tenant's contended mean sojourn
+/// and its slowdown over the isolated baseline.
+fn run_contention(opts: &BenchOptions, cfg: &BenchConfig) -> ConfigReport {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let server = build_server(opts, cfg);
+    let victim = server.tenant(CONTENTION_VICTIM).expect("victim registered");
+    let aggressor = server.tenant(CONTENTION_AGGRESSOR).expect("aggressor registered");
+    let victim_slot = victim.id() as usize;
+    let aggressor_slot = aggressor.id() as usize;
+    let samples = opts.latency_jobs.max(1);
+
+    // Isolated baselines, one tenant at a time on the same (warm after
+    // the first pass) server. The aggressor's baseline uses its own
+    // windowed submission pattern so the slowdown compares like with
+    // like.
+    let snap = server.metrics();
+    for s in 0..samples {
+        let h = server
+            .submit_with(MixedJob::from_seed(s), SubmitOptions::new().tenant(victim))
+            .unwrap_or_else(|_| unreachable!("default policy blocks, never rejects"));
+        assert_eq!(h.join(), MixedJob::expected(s), "victim baseline mismatch");
+    }
+    let mid = server.metrics();
+    let victim_iso_us = tenant_mean_sojourn_us(&snap, &mid, victim_slot);
+    let mut handles = Vec::with_capacity(CONTENTION_WINDOW);
+    let mut seed = 0u64;
+    while seed < samples {
+        let wave = (CONTENTION_WINDOW as u64).min(samples - seed);
+        for s in seed..seed + wave {
+            let h = server
+                .submit_with(MixedJob::from_seed(s), SubmitOptions::new().tenant(aggressor))
+                .unwrap_or_else(|_| unreachable!("default policy blocks, never rejects"));
+            handles.push((s, h));
+        }
+        for (s, h) in handles.drain(..) {
+            assert_eq!(h.join(), MixedJob::expected(s), "aggressor baseline mismatch");
+        }
+        seed += wave;
+    }
+    let base = server.metrics();
+    let aggressor_iso_us = tenant_mean_sojourn_us(&mid, &base, aggressor_slot);
+
+    // Contended pass: the aggressor floods from a second thread until
+    // the victim's closed loop finishes its sample budget.
+    let stop = AtomicBool::new(false);
+    let scope = MemScope::begin();
+    let stats_before = server.stats();
+    let alloc_before = crate::mem::alloc_count();
+    let t0 = std::time::Instant::now();
+    let mut lat = Vec::with_capacity(samples as usize);
+    std::thread::scope(|sc| {
+        // Stop the aggressor even if the victim loop panics — otherwise
+        // the scope's implicit join would hang on the flooding thread.
+        struct StopGuard<'a>(&'a AtomicBool);
+        impl Drop for StopGuard<'_> {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::Release);
+            }
+        }
+        let _stop_guard = StopGuard(&stop);
+        sc.spawn(|| {
+            let mut handles = Vec::with_capacity(CONTENTION_WINDOW);
+            let mut s = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                for _ in 0..CONTENTION_WINDOW {
+                    let h = server
+                        .submit_with(
+                            MixedJob::from_seed(s),
+                            SubmitOptions::new()
+                                .tenant(aggressor)
+                                .on_full(OnFull::Block),
+                        )
+                        .unwrap_or_else(|_| unreachable!("block-on-full never rejects"));
+                    handles.push((s, h));
+                    s += 1;
+                }
+                for (s, h) in handles.drain(..) {
+                    assert_eq!(h.join(), MixedJob::expected(s), "aggressor mismatch");
+                }
+            }
+        });
+        for s in 0..samples {
+            let t = std::time::Instant::now();
+            let h = server
+                .submit_with(MixedJob::from_seed(s), SubmitOptions::new().tenant(victim))
+                .unwrap_or_else(|_| unreachable!("default policy blocks, never rejects"));
+            assert_eq!(h.join(), MixedJob::expected(s), "victim contended mismatch");
+            lat.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        stop.store(true, Ordering::Release);
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let peak_bytes = scope.peak_bytes();
+    // Both tenants' traffic shares the process-wide allocation counter,
+    // so the per-job figure honestly covers the whole contended load —
+    // still ~0 once warm (one thread spawn amortized over the pass).
+    let allocs = crate::mem::alloc_count() - alloc_before;
+    let end = server.metrics();
+    let completed = server.stats().completed - stats_before.completed;
+    let victim_us = tenant_mean_sojourn_us(&base, &end, victim_slot);
+    let aggressor_us = tenant_mean_sojourn_us(&base, &end, aggressor_slot);
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    ConfigReport {
+        name: cfg.label.to_string(),
+        scheduler: match cfg.sched {
+            SchedulerKind::Busy => "busy",
+            SchedulerKind::Lazy => "lazy",
+        },
+        policy: cfg.policy.name(),
+        batch: 1,
+        jobs_per_sec: completed as f64 / secs.max(1e-9),
+        p50_us: percentile(&lat, 0.50),
+        p99_us: percentile(&lat, 0.99),
+        allocs_per_job: allocs as f64 / completed.max(1) as f64,
+        stacklet_grows_per_job: (end.stacklet_grows - base.stacklet_grows) as f64
+            / completed.max(1) as f64,
+        hot_stacklet_bytes: end.hot_stacklet_bytes,
+        wake_misses: end.wake_misses,
+        peak_bytes,
+        migration: server.migration_enabled(),
+        jobs_migrated: end.jobs_migrated,
+        admission: server.admission_policy_name(),
+        tenants: Some(vec![
+            TenantSlowdown {
+                name: CONTENTION_VICTIM.to_string(),
+                mean_sojourn_us: victim_us,
+                slowdown: victim_us / victim_iso_us.max(1e-9),
+            },
+            TenantSlowdown {
+                name: CONTENTION_AGGRESSOR.to_string(),
+                mean_sojourn_us: aggressor_us,
+                slowdown: aggressor_us / aggressor_iso_us.max(1e-9),
+            },
+        ]),
+    }
 }
 
 /// The sampled worker counts: 1, 2, 4, … plus `max` itself when it is
@@ -669,7 +924,7 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"service\",\n");
-    s.push_str("  \"schema\": 3,\n");
+    s.push_str("  \"schema\": 4,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str(&format!("  \"jobs\": {},\n", r.jobs));
     s.push_str(&format!("  \"workers\": {},\n", r.workers));
@@ -701,7 +956,25 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
             c.hot_stacklet_bytes
         ));
         s.push_str(&format!("      \"wake_misses\": {},\n", c.wake_misses));
-        s.push_str(&format!("      \"peak_bytes\": {}\n", c.peak_bytes));
+        s.push_str(&format!("      \"peak_bytes\": {},\n", c.peak_bytes));
+        s.push_str(&format!("      \"admission\": \"{}\",\n", c.admission));
+        match &c.tenants {
+            None => s.push_str("      \"tenants\": null\n"),
+            Some(ts) => {
+                s.push_str("      \"tenants\": [\n");
+                for (j, t) in ts.iter().enumerate() {
+                    s.push_str("        {\n");
+                    s.push_str(&format!("          \"name\": \"{}\",\n", t.name));
+                    s.push_str(&format!(
+                        "          \"mean_sojourn_us\": {:.1},\n",
+                        t.mean_sojourn_us
+                    ));
+                    s.push_str(&format!("          \"slowdown\": {:.3}\n", t.slowdown));
+                    s.push_str(if j + 1 == ts.len() { "        }\n" } else { "        },\n" });
+                }
+                s.push_str("      ]\n");
+            }
+        }
         s.push_str(if i + 1 == r.configs.len() { "    }\n" } else { "    },\n" });
     }
     s.push_str("  ],\n");
@@ -755,7 +1028,7 @@ pub fn scaling_to_json(r: &ScalingReport, measured: bool) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"service-scaling\",\n");
-    s.push_str("  \"schema\": 3,\n");
+    s.push_str("  \"schema\": 4,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str("  \"scaling\": ");
     push_scaling_object(&mut s, r, "  ");
@@ -828,7 +1101,7 @@ mod tests {
             latency_jobs: 10,
         };
         let report = run(&opts);
-        assert_eq!(report.configs.len(), 8);
+        assert_eq!(report.configs.len(), 10);
         for c in &report.configs {
             assert!(c.jobs_per_sec > 0.0, "{}: zero throughput", c.name);
             assert!(c.p99_us >= c.p50_us, "{}: p99 < p50", c.name);
@@ -845,14 +1118,44 @@ mod tests {
             report.configs.iter().find(|c| c.name.contains("adaptive stacklets"));
         assert!(fixed.is_some_and(|c| c.hot_stacklet_bytes == 0));
         assert!(adaptive.is_some_and(|c| c.hot_stacklet_bytes > 0));
+        // The contention pair must exist under each admission policy
+        // with a two-tenant slowdown block; non-contention rows report
+        // the default (fifo) admission and no tenants.
+        let fifo = report
+            .configs
+            .iter()
+            .find(|c| c.name == "tenant contention, fifo")
+            .expect("fifo contention config");
+        let wf = report
+            .configs
+            .iter()
+            .find(|c| c.name == "tenant contention, weighted-fair")
+            .expect("weighted-fair contention config");
+        assert_eq!(fifo.admission, "fifo");
+        assert_eq!(wf.admission, "weighted-fair");
+        for c in [fifo, wf] {
+            let ts = c.tenants.as_ref().expect("contention rows carry tenants");
+            assert_eq!(ts.len(), 2, "{}: victim + aggressor", c.name);
+            for t in ts {
+                assert!(t.mean_sojourn_us > 0.0, "{}: {} sojourn", c.name, t.name);
+                assert!(t.slowdown > 0.0, "{}: {} slowdown", c.name, t.name);
+            }
+        }
+        assert!(report
+            .configs
+            .iter()
+            .filter(|c| c.tenants.is_none())
+            .all(|c| c.admission == "fifo"));
         let json = to_json(&report, true);
         assert!(json.contains("\"bench\": \"service\""));
-        assert!(json.contains("\"schema\": 3"));
+        assert!(json.contains("\"schema\": 4"));
         assert!(json.contains("\"allocs_per_job\""));
         assert!(json.contains("\"jobs_migrated\""));
         assert!(json.contains("\"stacklet_grows_per_job\""));
         assert!(json.contains("\"hot_stacklet_bytes\""));
         assert!(json.contains("\"wake_misses\""));
+        assert!(json.contains("\"admission\""));
+        assert!(json.contains("\"slowdown\""));
         assert!(json.contains("\"scaling\": null"), "matrix-only run embeds no curve");
         // Balanced braces/brackets as a cheap well-formedness check.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
@@ -894,7 +1197,7 @@ mod tests {
         };
         let embedded = to_json(&full, true);
         for json in [standalone.as_str(), embedded.as_str()] {
-            assert!(json.contains("\"schema\": 3"));
+            assert!(json.contains("\"schema\": 4"));
             assert!(json.contains("\"strong_jobs_per_sec\""));
             assert!(json.contains("\"weak_jobs_per_sec_per_worker\""));
             assert!(json.contains("\"submit_ns_per_job\""));

@@ -35,9 +35,11 @@
 //!   (`pjrt` feature; requires vendored xla bindings).
 //! * [`service`] — the **job-service layer**: an asynchronous, batched,
 //!   NUMA-sharded [`service::JobServer`] over the pool, with pluggable
-//!   placement (round-robin / least-loaded / pinned), bounded-admission
-//!   backpressure, and **cross-shard work migration** (hysteresis-gated
-//!   overflow spouts claimed by starved shards in NUMA victim order).
+//!   placement (round-robin / least-loaded / pinned), pluggable
+//!   **admission** (FIFO / strict-priority / weighted-fair multi-tenant
+//!   QoS over per-shard class queues), bounded-admission backpressure,
+//!   and **cross-shard work migration** (hysteresis-gated overflow
+//!   spouts claimed by starved shards in NUMA victim order).
 //!
 //! ## Quickstart
 //!
@@ -115,18 +117,80 @@
 //!
 //! ```
 //! use rustfork::numa::NumaTopology;
-//! use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded};
+//! use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, SubmitOptions};
 //!
 //! let server = JobServer::builder()
 //!     .topology(NumaTopology::synthetic(2, 2)) // 2 shards × 2 workers
 //!     .capacity(64)                            // backpressure bound
 //!     .policy(LeastLoaded)
 //!     .build();
-//! let handles = server.submit_batch((0..8).map(MixedJob::from_seed).collect());
+//! let mut batch: Vec<_> = (0..8).map(MixedJob::from_seed).collect();
+//! let mut handles = Vec::new();
+//! server.submit_batch_with(&mut batch, &mut handles, SubmitOptions::new());
 //! for (seed, h) in (0..8).zip(handles) {
 //!     assert_eq!(h.join(), MixedJob::expected(seed));
 //! }
 //! ```
+//!
+//! Every submission door is a [`service::SubmitOptions`] carrier:
+//! [`service::JobServer::submit_with`] (one job) and
+//! [`service::JobServer::submit_batch_with`] (a wave) take the options
+//! by value — tenant tag, priority band, deadline preference and the
+//! [`service::OnFull`] full-server behaviour (`Policy` defers to the
+//! builder's [`service::ShedPolicy`], `Block` waits, `RejectNew` fails
+//! fast after giving a shed-oldest policy one chance to make room).
+//! The older `submit_with_deadline` / `try_submit` / `submit_batch`
+//! entry points survive as deprecated one-line shims over the same
+//! pair.
+//!
+//! ### Multi-tenant QoS
+//!
+//! Admission is a policy object, not a hard-wired FIFO:
+//! [`service::AdmissionPolicy`] (mirroring [`service::PlacementPolicy`]
+//! and [`service::ShedPolicy`]) classifies each admitted job into a
+//! **class queue** and picks which non-empty class each shard serves
+//! next. Class queues are intrusive ([`deque::FrameQueue`] — admitted
+//! roots link through their own frame headers), so the warm
+//! admit→classify→enqueue→dequeue path stays at **0 heap allocations
+//! per job** (regression-gated by the tenant-tagged scenario in
+//! `rust/tests/alloc_regression.rs`). Built-in policies:
+//! [`service::Fifo`] (everything in class 0),
+//! [`service::StrictPriority`] (most urgent non-empty band first —
+//! maximal latency separation, starves the low bands under sustained
+//! load), and [`service::WeightedFair`] (cumulative weighted shares via
+//! integer cross-multiplication — bounds every tenant's slowdown near
+//! its share, which `rust/tests/qos.rs` asserts against a flooding
+//! aggressor).
+//!
+//! ```
+//! use rustfork::numa::NumaTopology;
+//! use rustfork::service::{jobs::MixedJob, JobServer, SubmitOptions, WeightedFair};
+//!
+//! let server = JobServer::builder()
+//!     .topology(NumaTopology::synthetic(2, 2))
+//!     .capacity(64)
+//!     .admission_policy(WeightedFair)
+//!     .tenant("interactive", 4, 0) // name, weighted share, priority band
+//!     .tenant("batch", 1, 1)
+//!     .build();
+//! let fast = server.tenant("interactive").unwrap();
+//! let h = server
+//!     .submit_with(MixedJob::from_seed(7), SubmitOptions::new().tenant(fast))
+//!     .unwrap_or_else(|_| panic!("under capacity"));
+//! assert_eq!(h.join(), MixedJob::expected(7));
+//! assert_eq!(server.stats().tenants[fast.id() as usize].completed, 1);
+//! ```
+//!
+//! Accounting follows the tags end to end: [`service::ServerStats`]
+//! carries a per-tenant breakdown ([`service::TenantStats`] — the
+//! admission identity `submitted == completed + abandoned + shed` holds
+//! per tenant, partitioning the server-wide one), the metrics layer
+//! keeps per-tenant sojourn sums ([`metrics::MetricsSnapshot`]'s tenant
+//! cells, which the contention pair in `benches/service.rs` uses to
+//! report each tenant's slowdown under FIFO vs weighted-fair), and the
+//! per-worker footprint registers feed the adaptive-stacklet tuner
+//! per-tenant so one tenant's deep jobs don't inflate another's hot
+//! size.
 //!
 //! ### Cross-shard migration
 //!
@@ -257,7 +321,8 @@
 //! ### Deadlines and load shedding
 //!
 //! [`service::JobServerBuilder::deadline_default`] and
-//! [`service::JobServer::submit_with_deadline`] stamp a deadline into
+//! [`service::SubmitOptions::deadline`] (carried by
+//! [`service::JobServer::submit_with`]) stamp a deadline into
 //! the root's hot block before the frame is published. A job whose
 //! deadline passes while still queued is killed **at dequeue or
 //! drain time** — expired jobs are *never executed*, which is the

@@ -23,7 +23,7 @@ use rustfork::harness::{fmt_secs, measure, runner};
 use rustfork::numa::NumaTopology;
 use rustfork::rt::Pool;
 use rustfork::sched::SchedulerKind;
-use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, RoundRobin};
+use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, RoundRobin, SubmitOptions};
 use rustfork::sim::{SimConfig, SimTask, Simulator, StealDiscipline};
 use rustfork::workloads::params::{Scale, Workload};
 use rustfork::workloads::uts::{uts_serial, UtsConfig};
@@ -321,12 +321,14 @@ fn serve(args: &[String]) {
     let mut joined = 0u64;
     let mut failures = 0u64;
     let mut seed = 0u64;
+    let mut wave_jobs = Vec::new();
+    let mut handles = Vec::new();
     while seed < jobs {
         let wave = batch.min((jobs - seed) as usize);
         let seeds: Vec<u64> = (seed..seed + wave as u64).collect();
-        let handles =
-            server.submit_batch(seeds.iter().map(|&s| MixedJob::from_seed(s)).collect());
-        for (&s, h) in seeds.iter().zip(handles) {
+        wave_jobs.extend(seeds.iter().map(|&s| MixedJob::from_seed(s)));
+        server.submit_batch_with(&mut wave_jobs, &mut handles, SubmitOptions::new());
+        for (&s, h) in seeds.iter().zip(handles.drain(..)) {
             if h.join() != MixedJob::expected(s) {
                 failures += 1;
             }
@@ -417,7 +419,7 @@ fn bench(args: &[String]) {
          service   — job-service throughput/latency/allocs-per-job\n\
          \n\
          repro bench --json <path> — run the service matrix + scaling\n\
-         curve and write machine-readable results (schema 3)\n\
+         curve and write machine-readable results (schema 4)\n\
          repro bench scaling [--max-p N] [--json <path>] [--check <baseline.json>]\n\
          \x20   — per-P strong/weak scaling + submit cost; --check gates\n\
          \x20     submit-cost flatness and (when the baseline is measured)\n\

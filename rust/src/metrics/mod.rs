@@ -95,6 +95,53 @@ impl WorkerCounters {
     }
 }
 
+/// Per-tenant counter cell carried in [`MetricsSnapshot::tenants`].
+/// Slot 0 is the default (tenant-less) class; tenant ids past the
+/// register file ([`crate::rt::tune::TENANT_REGISTERS`]) clamp into the
+/// last slot. Filled by [`crate::service::JobServer::metrics`] from the
+/// admission core; all-zero for plain pools.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantCell {
+    /// Jobs admitted for this tenant.
+    pub submitted: u64,
+    /// Jobs whose root strand returned.
+    pub completed: u64,
+    /// Jobs abandoned (workload panic, client cancel).
+    pub abandoned: u64,
+    /// Jobs shed before execution (shed policy or deadline expiry).
+    pub shed: u64,
+    /// Admission rejections (reject-on-full bounces).
+    pub rejected: u64,
+    /// Sum of completed jobs' sojourn times (submit → root return), µs.
+    pub sojourn_us: u64,
+    /// Completed jobs with a sojourn sample (the divisor for the mean).
+    pub sojourn_jobs: u64,
+}
+
+impl TenantCell {
+    fn merge(&mut self, other: &TenantCell) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.abandoned += other.abandoned;
+        self.shed += other.shed;
+        self.rejected += other.rejected;
+        self.sojourn_us += other.sojourn_us;
+        self.sojourn_jobs += other.sojourn_jobs;
+    }
+
+    fn since(&self, earlier: &TenantCell) -> TenantCell {
+        TenantCell {
+            submitted: self.submitted - earlier.submitted,
+            completed: self.completed - earlier.completed,
+            abandoned: self.abandoned - earlier.abandoned,
+            shed: self.shed - earlier.shed,
+            rejected: self.rejected - earlier.rejected,
+            sojourn_us: self.sojourn_us - earlier.sojourn_us,
+            sojourn_jobs: self.sojourn_jobs - earlier.sojourn_jobs,
+        }
+    }
+}
+
 /// Aggregated snapshot across all workers.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct MetricsSnapshot {
@@ -154,11 +201,15 @@ pub struct MetricsSnapshot {
     pub jobs_shed: u64,
     /// Root jobs discarded on queue-side deadline expiry.
     pub deadline_expired: u64,
-    /// Admission rejections (`try_submit` bounces) — server-sourced, set
-    /// by [`crate::service::JobServer::metrics`] from the admission
+    /// Admission rejections (reject-on-full bounces) — server-sourced,
+    /// set by [`crate::service::JobServer::metrics`] from the admission
     /// core; zero for plain pools. A rejected job never became a root:
     /// it appears in no other counter.
     pub jobs_rejected: u64,
+    /// Per-tenant accounting cells, indexed by tenant slot
+    /// ([`crate::rt::tune::tenant_slot`]; slot 0 = the default class).
+    /// Server-sourced like `jobs_rejected`; all-zero for plain pools.
+    pub tenants: [TenantCell; crate::rt::tune::TENANT_REGISTERS],
 }
 
 impl MetricsSnapshot {
@@ -193,6 +244,9 @@ impl MetricsSnapshot {
         self.jobs_shed += other.jobs_shed;
         self.deadline_expired += other.deadline_expired;
         self.jobs_rejected += other.jobs_rejected;
+        for (mine, theirs) in self.tenants.iter_mut().zip(other.tenants.iter()) {
+            mine.merge(theirs);
+        }
     }
 
     /// Difference against an earlier snapshot.
@@ -221,6 +275,7 @@ impl MetricsSnapshot {
             jobs_shed: self.jobs_shed - earlier.jobs_shed,
             deadline_expired: self.deadline_expired - earlier.deadline_expired,
             jobs_rejected: self.jobs_rejected - earlier.jobs_rejected,
+            tenants: std::array::from_fn(|i| self.tenants[i].since(&earlier.tenants[i])),
         }
     }
 }

@@ -126,6 +126,16 @@ impl RootSignal {
 pub trait ExternalWork: Send + Sync {
     /// Try to claim one external root frame for this pool.
     fn poll(&self) -> ExternalPoll;
+
+    /// Cheap occupancy hint consulted by the lazy idle policy's pre-park
+    /// recheck: `true` when a `poll` would probably yield work, so the
+    /// worker skips the park and re-polls instead. Purely advisory (a
+    /// false negative costs one park-backstop latency, never
+    /// correctness). Defaults to `false` — sources whose occupancy is
+    /// not O(1)-readable keep relying on the backstop timer.
+    fn looks_nonempty(&self) -> bool {
+        false
+    }
 }
 
 /// Result of polling an [`ExternalWork`] source.
@@ -226,6 +236,13 @@ pub struct Shared {
     /// Cross-pool work source polled by idle workers before parking
     /// (see [`ExternalWork`]). `None` for standalone pools.
     pub external: Option<Arc<dyn ExternalWork>>,
+    /// Admission-ordered ingress source polled right after a worker's
+    /// own submission queue comes up empty — **before** stealing, so
+    /// admitted-but-queued jobs keep the same priority over steals that
+    /// direct submissions have. The sharded [`crate::service::JobServer`]
+    /// installs its per-shard QoS admission queues here; `None` for
+    /// standalone pools. Same ownership contract as [`ExternalWork`].
+    pub ingress: Option<Arc<dyn ExternalWork>>,
     /// Abandonment hook (see [`AbandonHook`]). `None` for standalone
     /// pools.
     pub on_abandon: Option<Arc<AbandonHook>>,
@@ -440,6 +457,7 @@ pub struct PoolBuilder {
     pin_offset: usize,
     shelf: Option<Arc<StackShelf>>,
     external: Option<Arc<dyn ExternalWork>>,
+    ingress: Option<Arc<dyn ExternalWork>>,
     on_abandon: Option<Arc<AbandonHook>>,
     adaptive_stacklets: bool,
     park_aware: bool,
@@ -456,6 +474,7 @@ impl PoolBuilder {
             pin_offset: 0,
             shelf: None,
             external: None,
+            ingress: None,
             on_abandon: None,
             adaptive_stacklets: true,
             park_aware: true,
@@ -513,6 +532,16 @@ impl PoolBuilder {
     /// [`crate::service::JobServer`] for inter-shard work migration.
     pub fn external_work(mut self, source: Arc<dyn ExternalWork>) -> Self {
         self.external = Some(source);
+        self
+    }
+
+    /// Install an admission-ordered ingress source polled right after a
+    /// worker's own submission queue comes up empty, before it tries to
+    /// steal (see [`Shared::ingress`]). Used by the sharded
+    /// [`crate::service::JobServer`] for its per-shard QoS admission
+    /// queues.
+    pub fn ingress_work(mut self, source: Arc<dyn ExternalWork>) -> Self {
+        self.ingress = Some(source);
         self
     }
 
@@ -595,6 +624,7 @@ impl PoolBuilder {
             submit_stack_hits: AtomicU64::new(0),
             submit_stack_misses: AtomicU64::new(0),
             external: self.external,
+            ingress: self.ingress,
             on_abandon: self.on_abandon,
             epoch: std::time::Instant::now(),
             park_since: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
@@ -834,17 +864,6 @@ impl Pool {
         // Normal path: the guard's drop flushes and returns the buffer.
     }
 
-    /// Route a group of already-built root frames (the job server's
-    /// non-diverted remainder): round-robin per frame, one tail
-    /// exchange + one wake per touched worker, scratch-arena grouped —
-    /// no allocation once the arena is warm.
-    pub(crate) fn submit_frames(&self, frames: impl Iterator<Item = FramePtr>) {
-        let mut guard = BatchGuard::new(self);
-        for frame in frames {
-            guard.groups[self.next_target()].push(frame);
-        }
-    }
-
     /// Round-robin submission target.
     #[inline]
     fn next_target(&self) -> usize {
@@ -894,11 +913,12 @@ impl Pool {
             None => {
                 shared.submit_stack_misses.fetch_add(1, Ordering::Relaxed);
                 // Cold miss: with adaptive sizing on, fresh stacks are
-                // born at the learned hot size so they never re-grow
-                // (rt::tune); otherwise the configured first-stacklet
-                // capacity, as before.
+                // born at the submitting tenant's learned hot size so
+                // they never re-grow (rt::tune); otherwise the
+                // configured first-stacklet capacity, as before.
+                let slot = crate::rt::tune::tenant_slot(root::tag_tenant(tag));
                 Box::into_raw(SegmentedStack::with_first_capacity(
-                    shared.shelf.hot_first_capacity(shared.first_stacklet),
+                    shared.shelf.hot_first_capacity_for(slot, shared.first_stacklet),
                 ))
             }
         };

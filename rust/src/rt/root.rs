@@ -68,6 +68,28 @@ pub(crate) fn now_micros() -> u64 {
     EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
 }
 
+/// Pack a placement shard and a tenant id into the [`RootHot::tag`]
+/// word carried to the pool's abandonment hook: shard in the low 32
+/// bits, tenant in the high 32. Plain (tenant-less) submissions use
+/// tenant 0, which decodes back to the pre-tenancy layout (`tag ==
+/// shard`).
+#[inline]
+pub(crate) fn pack_tag(shard: usize, tenant: u32) -> u64 {
+    (shard as u64 & 0xFFFF_FFFF) | ((tenant as u64) << 32)
+}
+
+/// The placement shard packed into a tag by [`pack_tag`].
+#[inline]
+pub(crate) fn tag_shard(tag: u64) -> usize {
+    (tag & 0xFFFF_FFFF) as usize
+}
+
+/// The tenant id packed into a tag by [`pack_tag`].
+#[inline]
+pub(crate) fn tag_tenant(tag: u64) -> u32 {
+    (tag >> 32) as u32
+}
+
 /// The type-erased hot part of a fused root block: everything the
 /// submitter's handle and the completing worker share. Lives inside the
 /// block's stack allocation, directly after the typed frame.
@@ -353,6 +375,9 @@ unsafe fn dispose(hot: *mut RootHot) {
     let size = (*base).alloc_size as usize;
     // Read before dropping the hot part (the flags live inside it).
     let abandoned = (*hot).abandoned.load(Ordering::Acquire);
+    // Tenant footprint register this job's stack observations feed
+    // (slot 0 for plain submissions; ids past the register file clamp).
+    let slot = crate::rt::tune::tenant_slot(tag_tenant((*hot).tag));
     // A clean discard ([`discard`]) destructed the never-started task in
     // place, so the block is still the stack's only allocation and the
     // normal dealloc + recycle route is sound — that is what keeps the
@@ -380,8 +405,9 @@ unsafe fn dispose(hot: *mut RootHot) {
     // Feedback signal for adaptive stacklet sizing (rt::tune): this
     // job's peak live bytes and stacklet-grow count on its root stack —
     // exactly one sample per job, taken at the moment the stack
-    // quiesces. Two relaxed atomics; the recycle below then trims (and,
-    // if the learned hot size moved, reshapes) the stack.
-    shelf.observe_root_quiesce((*stack).peak_live_bytes(), (*stack).grows_since_trim());
-    shelf.recycle(stack);
+    // quiesces, credited to the submitting tenant's footprint register.
+    // Two relaxed atomics; the recycle below then trims (and, if the
+    // tenant's learned hot size moved, reshapes) the stack.
+    shelf.observe_root_quiesce_for(slot, (*stack).peak_live_bytes(), (*stack).grows_since_trim());
+    shelf.recycle_for(slot, stack);
 }

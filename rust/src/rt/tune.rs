@@ -64,6 +64,21 @@ pub const FOOTPRINT_DECAY_SHIFT: u32 = 8;
 /// reserve more than this.
 pub const MAX_HOT_STACKLET: usize = 8 * 1024 * 1024;
 
+/// Footprint register file size: one independently-converging hot-size
+/// register per tenant slot, so mixed tenants with disjoint stack depths
+/// learn separate hot stacklet sizes instead of fighting over one EMA.
+/// Slot 0 is the default (tenant-less) register; tenant ids past the
+/// file clamp into the last slot. Matches the per-tenant cells carried
+/// in [`crate::metrics::MetricsSnapshot`].
+pub const TENANT_REGISTERS: usize = 8;
+
+/// Map a tenant id to its footprint-register / metrics slot (ids past
+/// the register file share the last slot).
+#[inline]
+pub fn tenant_slot(tenant: u32) -> usize {
+    (tenant as usize).min(TENANT_REGISTERS - 1)
+}
+
 /// Placements per hysteresis-retune window.
 pub const HYSTERESIS_TUNE_WINDOW: u64 = 128;
 
@@ -85,12 +100,14 @@ pub struct FootprintTuner {
     /// Configured first-stacklet capacity — the hot size never shrinks
     /// below it.
     floor: usize,
-    /// Asymmetric EMA of per-job peak live bytes (see module docs).
-    hot_live: AtomicUsize,
+    /// Per-tenant-slot asymmetric EMAs of per-job peak live bytes (see
+    /// module docs). Slot 0 doubles as the tenant-less register.
+    hot_live: [AtomicUsize; TENANT_REGISTERS],
     /// Lifetime stacklet-grow (overflow heap-allocation) events observed
-    /// at job completion — the `stacklet_grows` metric.
+    /// at job completion — the `stacklet_grows` metric. Global across
+    /// slots.
     grows: AtomicU64,
-    /// Jobs sampled.
+    /// Jobs sampled (global across slots).
     jobs: AtomicU64,
 }
 
@@ -100,7 +117,7 @@ impl FootprintTuner {
         FootprintTuner {
             enabled,
             floor: floor.max(crate::stack::ALIGN),
-            hot_live: AtomicUsize::new(0),
+            hot_live: std::array::from_fn(|_| AtomicUsize::new(0)),
             grows: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
         }
@@ -114,33 +131,49 @@ impl FootprintTuner {
     /// Record one quiesced root job: its peak live bytes since the
     /// stack was last trimmed, and how many stacklet-overflow heap
     /// allocations it performed. Lock-free; racy lost updates between
-    /// concurrent completions only slow convergence.
+    /// concurrent completions only slow convergence. Feeds the default
+    /// (slot 0) register — see [`Self::record_job_for`].
     pub fn record_job(&self, peak_live: usize, grows: u64) {
+        self.record_job_for(0, peak_live, grows);
+    }
+
+    /// [`Self::record_job`] into a specific tenant's footprint register.
+    pub fn record_job_for(&self, slot: usize, peak_live: usize, grows: u64) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         if grows > 0 {
             self.grows.fetch_add(grows, Ordering::Relaxed);
         }
-        let cur = self.hot_live.load(Ordering::Relaxed);
+        let reg = &self.hot_live[slot.min(TENANT_REGISTERS - 1)];
+        let cur = reg.load(Ordering::Relaxed);
         let next = if peak_live >= cur {
             peak_live
         } else {
             cur - ((cur - peak_live) >> FOOTPRINT_DECAY_SHIFT)
         };
         if next != cur {
-            self.hot_live.store(next, Ordering::Relaxed);
+            reg.store(next, Ordering::Relaxed);
         }
     }
 
-    /// The learned hot first-stacklet capacity: the footprint envelope
-    /// plus headroom (rounding slack accumulates per frame), quantized
-    /// to a power of two for stability, clamped to
-    /// `[floor, `[`MAX_HOT_STACKLET`]`]`. Returns the floor while cold
-    /// or when the actuator is disabled.
+    /// The learned hot first-stacklet capacity of the default (slot 0)
+    /// register: the footprint envelope plus headroom (rounding slack
+    /// accumulates per frame), quantized to a power of two for
+    /// stability, clamped to `[floor, `[`MAX_HOT_STACKLET`]`]`. Returns
+    /// the floor while cold or when the actuator is disabled.
     pub fn hot_first_capacity(&self) -> usize {
+        self.hot_first_capacity_for(0)
+    }
+
+    /// [`Self::hot_first_capacity`] for a specific tenant register. A
+    /// slot that never recorded a job returns the floor, so a new
+    /// tenant's first stacks are born at the configured size rather than
+    /// inheriting another tenant's depth.
+    pub fn hot_first_capacity_for(&self, slot: usize) -> usize {
         if !self.enabled {
             return self.floor;
         }
-        let live = self.hot_live.load(Ordering::Relaxed).min(MAX_HOT_STACKLET);
+        let reg = &self.hot_live[slot.min(TENANT_REGISTERS - 1)];
+        let live = reg.load(Ordering::Relaxed).min(MAX_HOT_STACKLET);
         if live == 0 {
             return self.floor;
         }
@@ -154,11 +187,17 @@ impl FootprintTuner {
     /// 4× decay band) or the actuator is disabled — reshaping touches
     /// the allocator, so it must fire only while the hot size is
     /// actually moving (warmup, workload shift), never in steady state.
+    /// Judged against the default (slot 0) register.
     pub fn reshape_target(&self, current_first: usize) -> Option<usize> {
+        self.reshape_target_for(0, current_first)
+    }
+
+    /// [`Self::reshape_target`] against a specific tenant's register.
+    pub fn reshape_target_for(&self, slot: usize, current_first: usize) -> Option<usize> {
         if !self.enabled {
             return None;
         }
-        let hot = self.hot_first_capacity();
+        let hot = self.hot_first_capacity_for(slot);
         if current_first < hot {
             return Some(hot);
         }
@@ -178,14 +217,18 @@ impl FootprintTuner {
         self.jobs.load(Ordering::Relaxed)
     }
 
-    /// Gauge for the `hot_stacklet_bytes` metric: the capacity the
-    /// actuator currently targets, 0 while disabled.
+    /// Gauge for the `hot_stacklet_bytes` metric: the largest capacity
+    /// any tenant register currently targets, 0 while disabled. A cold
+    /// register reads the floor, so the gauge never under-reports the
+    /// size fresh stacks are actually born at.
     pub fn hot_bytes_gauge(&self) -> u64 {
-        if self.enabled {
-            self.hot_first_capacity() as u64
-        } else {
-            0
+        if !self.enabled {
+            return 0;
         }
+        (0..TENANT_REGISTERS)
+            .map(|s| self.hot_first_capacity_for(s) as u64)
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -657,6 +700,28 @@ mod tests {
         let t = FootprintTuner::new(true, 4096);
         t.record_job(usize::MAX / 2, 1);
         assert!(t.hot_first_capacity() <= MAX_HOT_STACKLET);
+    }
+
+    #[test]
+    fn tenant_registers_converge_independently() {
+        let t = FootprintTuner::new(true, 4096);
+        // Tenant 1 runs deep jobs, tenant 2 shallow ones: each register
+        // must learn its own hot size without cross-talk.
+        for _ in 0..50 {
+            t.record_job_for(1, 400_000, 0);
+            t.record_job_for(2, 1_000, 0);
+        }
+        let deep = t.hot_first_capacity_for(1);
+        let shallow = t.hot_first_capacity_for(2);
+        assert!(deep >= 400_000, "deep tenant under-learned: {deep}");
+        assert_eq!(shallow, 4096, "shallow tenant must stay at the floor");
+        assert_eq!(t.hot_first_capacity(), 4096, "slot 0 untouched");
+        assert_eq!(t.hot_bytes_gauge(), deep as u64, "gauge is the max register");
+        // Ids past the register file clamp into the last slot.
+        assert_eq!(tenant_slot(0), 0);
+        assert_eq!(tenant_slot(7), 7);
+        assert_eq!(tenant_slot(99), TENANT_REGISTERS - 1);
+        t.record_job_for(usize::MAX, 1, 0); // out-of-range slot must not panic
     }
 
     #[test]

@@ -168,6 +168,36 @@ impl Worker {
                 continue;
             }
 
+            // 1b. Admission-ordered ingress (the job server's per-shard
+            // QoS class queues). Polled before the steal attempt so
+            // admitted-but-queued jobs keep the same priority over
+            // steals that direct submissions have — the dequeue-order
+            // hook that makes fair queueing real. A claimed frame enters
+            // execution exactly like a popped submission. A lost claim
+            // (`Retry`) falls through to steal/idle — the claim winner,
+            // the enqueuer's wake or the park backstop brings us back —
+            // and is not counted as a migration miss (that metric is
+            // spout-only).
+            if let Some(source) = &self.shared.ingress {
+                if let ExternalPoll::Job(job) = source.poll() {
+                    let FramePtr(f) = job.frame;
+                    // Dequeue boundary, same as the submission pop.
+                    if unsafe { self.discard_if_dead(f) } {
+                        backoff.reset();
+                        continue;
+                    }
+                    unsafe {
+                        self.note_root_started(f);
+                        self.adopt_stack((*f).stack);
+                    }
+                    self.enter_active();
+                    self.execute_guarded(f);
+                    self.exit_active();
+                    backoff.reset();
+                    continue;
+                }
+            }
+
             if self.shared.shutdown.load(Ordering::Acquire) {
                 // Drain any submission that raced with shutdown: with no
                 // thieves left, strands complete inline (steals == 0 fast

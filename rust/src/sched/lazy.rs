@@ -63,8 +63,12 @@ pub fn idle(w: &mut Worker) {
     }
 
     // Re-check for work between flag-set and park (close the race with
-    // wake_one's flag CAS).
+    // wake_one's flag CAS). The ingress occupancy hint narrows the same
+    // window for the job server's admission queues — a job enqueued
+    // between our poll and the flag store would otherwise wait out the
+    // backstop.
     let should_park = shared.submissions[w.id].is_empty()
+        && !shared.ingress.as_ref().is_some_and(|i| i.looks_nonempty())
         && !shared.shutdown.load(Ordering::Acquire);
     if should_park {
         shared.parkers[w.id].park_timeout(PARK_BACKSTOP);

@@ -17,13 +17,22 @@
 //!   fed by the per-shard load counters).
 //! * **Backpressure** — a bounded admission count. [`JobServer::submit`]
 //!   blocks while `capacity` jobs are in flight;
-//!   [`JobServer::try_submit`] fails fast and returns the job to the
-//!   caller. A job releases its slot the moment its root strand
-//!   returns, on the completing worker.
-//! * **Batching** — [`JobServer::submit_batch`] admits jobs in waves and
-//!   forwards each wave through [`Pool::submit_batch`], which enqueues
-//!   per-worker chains with a single MPSC tail exchange and performs
-//!   one wake sweep per touched worker instead of one `notify` per job.
+//!   [`SubmitOptions::on_full`] picks fail-fast or policy-driven
+//!   handling per submission. A job releases its slot the moment its
+//!   root strand returns, on the completing worker.
+//! * **Multi-tenant QoS** ([`qos`]) — admission *ordering* is a
+//!   pluggable [`AdmissionPolicy`] over per-shard intrusive **class
+//!   queues** (one class per registered tenant plus shared priority
+//!   bands): [`Fifo`] arrival order, [`StrictPriority`] tiers, or
+//!   [`WeightedFair`] tenant shares. Tenancy rides in each root's tag;
+//!   per-tenant counters and mean sojourn surface through
+//!   [`ServerStats::tenants`] and [`MetricsSnapshot::tenants`], and the
+//!   stack shelf learns per-tenant hot stacklet sizes
+//!   ([`crate::rt::tune::TENANT_REGISTERS`]).
+//! * **Batching** — [`JobServer::submit_batch_with`] admits jobs in
+//!   waves; each wave is grouped by placement shard and enqueued with a
+//!   single MPSC tail exchange and one wake per touched shard instead
+//!   of one `notify` per job.
 //! * **Async** — every submission returns a [`RootHandle`], which is
 //!   both a blocking join handle and a `Future` (waker plumbing through
 //!   [`crate::rt::pool::RootSignal`]), so callers can `.await` results
@@ -63,6 +72,12 @@
 //! strand's deque traffic stays inside that pool.
 
 pub mod jobs;
+pub mod qos;
+
+pub use qos::{
+    AdmissionPolicy, ClassView, DeadlinePref, Fifo, OnFull, StrictPriority, SubmitOptions,
+    TenantHandle, WeightedFair, PRIORITY_BANDS,
+};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
@@ -77,7 +92,8 @@ use crate::rt::pool::{
     DrainKind, ExternalJob, ExternalPoll, ExternalWork, Pool, RootHandle, Shared,
 };
 use crate::rt::root::{self as root, RootHot};
-use crate::rt::tune::HysteresisTuner;
+use crate::rt::tune::{tenant_slot, HysteresisTuner, TENANT_REGISTERS};
+use crate::service::qos::{AdmissionHub, ClassInfo, IngressSource};
 use crate::sched::SchedulerKind;
 use crate::sync::CachePadded;
 use crate::task::{Coroutine, Cx, Step};
@@ -276,10 +292,31 @@ struct ShardLoad {
     completed: AtomicU64,
 }
 
+/// Per-tenant accounting register (one per
+/// [`TENANT_REGISTERS`](crate::rt::tune::TENANT_REGISTERS) slot;
+/// tenant ids past the last slot share it, exactly like the footprint
+/// tuner's clamp). The per-tenant identity `submitted == completed +
+/// abandoned + shed` holds at quiescence for every slot.
+#[derive(Debug, Default)]
+struct TenantLoad {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    abandoned: AtomicU64,
+    shed: AtomicU64,
+    rejected: AtomicU64,
+    in_flight: AtomicUsize,
+    /// Sum of admit→return sojourn times (µs) over `sojourn_jobs`
+    /// completions — the per-tenant latency/slowdown signal.
+    sojourn_us: AtomicU64,
+    sojourn_jobs: AtomicU64,
+}
+
 /// State shared between the server front-end and the completion hooks
 /// running on pool workers.
 struct ServerCore {
     loads: Vec<CachePadded<ShardLoad>>,
+    /// Per-tenant accounting, indexed by clamped tenant slot.
+    tenants: Vec<CachePadded<TenantLoad>>,
     /// Maximum admitted (in-flight) jobs — the backpressure bound.
     capacity: usize,
     /// Currently admitted jobs; guarded so waiters can sleep on `space`.
@@ -298,12 +335,33 @@ struct ServerCore {
 }
 
 impl ServerCore {
+    fn tenant(&self, slot: usize) -> &TenantLoad {
+        &self.tenants[slot.min(self.tenants.len() - 1)]
+    }
+
+    /// Admission-side tenant charge, paired with the release in one of
+    /// the three hooks below.
+    fn note_submit(&self, slot: usize) {
+        let t = self.tenant(slot);
+        t.submitted.fetch_add(1, Ordering::Relaxed);
+        t.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_reject(&self, slot: usize) {
+        self.tenant(slot).rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Completion hook: runs on the worker finishing a job's root
     /// strand. Frees the admission slot and wakes one blocked submitter.
-    fn complete(&self, shard: usize) {
+    fn complete(&self, shard: usize, slot: usize, sojourn_us: u64) {
         self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
         self.loads[shard].completed.fetch_add(1, Ordering::Relaxed);
         self.completed.fetch_add(1, Ordering::Relaxed);
+        let t = self.tenant(slot);
+        t.completed.fetch_add(1, Ordering::Relaxed);
+        t.in_flight.fetch_sub(1, Ordering::Relaxed);
+        t.sojourn_us.fetch_add(sojourn_us, Ordering::Relaxed);
+        t.sojourn_jobs.fetch_add(1, Ordering::Relaxed);
         self.release_slot();
     }
 
@@ -315,10 +373,13 @@ impl ServerCore {
     /// shrink the server's capacity (the PR 2 leak).
     ///
     /// [`AbandonHook`]: crate::rt::pool::AbandonHook
-    fn abandon(&self, shard: usize) {
+    fn abandon(&self, shard: usize, slot: usize) {
         let shard = shard.min(self.loads.len().saturating_sub(1));
         self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
         self.abandoned.fetch_add(1, Ordering::Relaxed);
+        let t = self.tenant(slot);
+        t.abandoned.fetch_add(1, Ordering::Relaxed);
+        t.in_flight.fetch_sub(1, Ordering::Relaxed);
         self.release_slot();
     }
 
@@ -327,10 +388,13 @@ impl ServerCore {
     /// shed-oldest victim or expired deadline. Same slot/load recovery
     /// as [`ServerCore::abandon`], separate counter: shed jobs were
     /// never started, abandoned jobs died mid-run.
-    fn shed_slot(&self, shard: usize) {
+    fn shed_slot(&self, shard: usize, slot: usize) {
         let shard = shard.min(self.loads.len().saturating_sub(1));
         self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
         self.shed.fetch_add(1, Ordering::Relaxed);
+        let t = self.tenant(slot);
+        t.shed.fetch_add(1, Ordering::Relaxed);
+        t.in_flight.fetch_sub(1, Ordering::Relaxed);
         self.release_slot();
     }
 
@@ -350,6 +414,10 @@ struct Tracked<C: Coroutine> {
     inner: C,
     core: Arc<ServerCore>,
     shard: usize,
+    /// Clamped tenant register slot for the completion-side accounting.
+    slot: usize,
+    /// Admission timestamp ([`root::now_micros`]) — the sojourn clock.
+    born_us: u64,
     done: bool,
     /// True once the first resume has run — the workload-panic fault
     /// site only fires on the first step, where the root strand has no
@@ -370,7 +438,8 @@ impl<C: Coroutine> Coroutine for Tracked<C> {
         let step = self.inner.step(cx);
         if matches!(step, Step::Return(_)) && !self.done {
             self.done = true;
-            self.core.complete(self.shard);
+            let sojourn = root::now_micros().saturating_sub(self.born_us);
+            self.core.complete(self.shard, self.slot, sojourn);
         }
         step
     }
@@ -383,7 +452,7 @@ struct Shard {
 }
 
 thread_local! {
-    /// Submitter-local arena for [`JobServer::submit_batch_into`]: the
+    /// Submitter-local arena for [`JobServer::submit_batch_with`]: the
     /// per-shard frame groups keep their capacity across calls, so a
     /// warm submitter thread's waves allocate nothing. Thread-local
     /// because batches arrive from arbitrary client threads; taken out
@@ -396,27 +465,29 @@ thread_local! {
 
 /// Owns the per-shard frame groups for one batch wave. On drop —
 /// normal return or unwind — every frame still grouped under shard `s`
-/// is submitted directly into shard `s`'s pool (each frame was built by
-/// that pool, so this is always a correct route and its handle
-/// completes even if the placement policy panicked mid-wave), and the
-/// buffer's capacity is returned to the thread-local slot. The normal
-/// path relies on this drop as the direct-submission flush; only the
-/// diverted prefix is taken out explicitly beforehand. Twin of
-/// `rt::pool::BatchGuard` (same take-out / flush-on-drop protocol,
-/// per-shard instead of per-worker flush targets): protocol changes
-/// must land in both.
+/// is enqueued into shard `s`'s admission class queue (the wave's one
+/// class — a batch carries a single [`SubmitOptions`]) with one tail
+/// exchange and one wake, so its handle completes even if the placement
+/// policy panicked mid-wave, and the buffer's capacity is returned to
+/// the thread-local slot. The normal path relies on this drop as the
+/// flush; only the diverted prefix is taken out explicitly beforehand.
+/// Twin of `rt::pool::BatchGuard` (same take-out / flush-on-drop
+/// protocol, per-shard instead of per-worker flush targets): protocol
+/// changes must land in both.
 struct WaveGuard<'a> {
     server: &'a JobServer,
+    /// The admission class every frame of this wave belongs to.
+    class: usize,
     groups: Vec<Vec<FramePtr>>,
 }
 
 impl<'a> WaveGuard<'a> {
-    fn new(server: &'a JobServer) -> Self {
+    fn new(server: &'a JobServer, class: usize) -> Self {
         let mut groups = BATCH_SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
         if groups.len() < server.shards.len() {
             groups.resize_with(server.shards.len(), Vec::new);
         }
-        WaveGuard { server, groups }
+        WaveGuard { server, class, groups }
     }
 }
 
@@ -425,7 +496,8 @@ impl Drop for WaveGuard<'_> {
         let n = self.server.shards.len().min(self.groups.len());
         for (shard, group) in self.groups.iter_mut().enumerate().take(n) {
             if !group.is_empty() {
-                self.server.shards[shard].pool.submit_frames(group.drain(..));
+                self.server.admission.enqueue_batch(shard, self.class, group.drain(..));
+                self.server.wake_shard(shard);
             }
         }
         BATCH_SCRATCH.with(|s| *s.borrow_mut() = std::mem::take(&mut self.groups));
@@ -451,6 +523,12 @@ pub const DEFAULT_MIGRATION_HYSTERESIS: usize = 8;
 /// Default per-shard spout bound; a full spout falls back to direct
 /// pool submission (backpressure still comes from the admission bound).
 const DEFAULT_SPOUT_CAP: usize = 256;
+
+/// Upper bound on how long an [`OnFull::RejectNew`] submission waits
+/// for the slot freed by its shed-oldest victim (see
+/// [`JobServer::submit_with`]). Sized at several park backstops: the
+/// victim's discard happens on a worker's next dequeue.
+const REJECT_SHED_WAIT: Duration = Duration::from_millis(10);
 
 /// Frames the home-shard fast path moves from its spout into the home
 /// pool's submission queues per claim-lock acquisition, when no sibling
@@ -848,6 +926,14 @@ impl ExternalWork for ShardSource {
     }
 }
 
+/// A registered tenant's static configuration (name, weighted share,
+/// priority tier).
+struct TenantSpec {
+    name: String,
+    weight: u64,
+    priority: u8,
+}
+
 /// Builder for [`JobServer`].
 pub struct JobServerBuilder {
     shards: Option<usize>,
@@ -866,6 +952,8 @@ pub struct JobServerBuilder {
     park_aware: bool,
     shed: Box<dyn ShedPolicy>,
     deadline_default: Option<Duration>,
+    admission: Box<dyn AdmissionPolicy>,
+    tenants: Vec<TenantSpec>,
 }
 
 impl JobServerBuilder {
@@ -888,6 +976,9 @@ impl JobServerBuilder {
             park_aware: true,
             shed: Box::new(BlockOnFull),
             deadline_default: None,
+            // QoS default: FIFO — exactly the pre-QoS dequeue order.
+            admission: Box::new(Fifo),
+            tenants: Vec::new(),
         }
     }
 
@@ -910,7 +1001,7 @@ impl JobServerBuilder {
     }
 
     /// Admission bound: maximum in-flight jobs before `submit` blocks
-    /// and `try_submit` rejects (default 1024).
+    /// and [`OnFull::RejectNew`] submissions bounce (default 1024).
     pub fn capacity(mut self, jobs: usize) -> Self {
         self.capacity = jobs.max(1);
         self
@@ -1035,6 +1126,41 @@ impl JobServerBuilder {
         self
     }
 
+    /// Admission-ordering policy (default: [`Fifo`], the pre-QoS
+    /// arrival order). See [`AdmissionPolicy`]; [`WeightedFair`] makes
+    /// registered tenant weights meaningful, [`StrictPriority`] makes
+    /// priorities (tenant tiers and [`SubmitOptions::priority`] bands)
+    /// strict.
+    pub fn admission_policy(mut self, p: impl AdmissionPolicy + 'static) -> Self {
+        self.admission = Box::new(p);
+        self
+    }
+
+    /// Admission policy, pre-boxed (for policies chosen at runtime).
+    pub fn admission_policy_boxed(mut self, p: Box<dyn AdmissionPolicy>) -> Self {
+        self.admission = p;
+        self
+    }
+
+    /// Register a tenant (weighted traffic class). `weight` is the
+    /// tenant's relative capacity share under [`WeightedFair`]
+    /// (minimum 1); `priority` its tier under [`StrictPriority`]
+    /// (smaller = more urgent). Ids are assigned in registration order
+    /// starting at 1 (0 is the default class for untagged traffic);
+    /// look the handle up after build with [`JobServer::tenant`].
+    ///
+    /// Tenants beyond [`TENANT_REGISTERS`](crate::rt::tune) − 1 still
+    /// get their own class queue and weight, but share the last
+    /// accounting and footprint register.
+    pub fn tenant(mut self, name: impl Into<String>, weight: u64, priority: u8) -> Self {
+        self.tenants.push(TenantSpec {
+            name: name.into(),
+            weight: weight.max(1),
+            priority,
+        });
+        self
+    }
+
     /// Build the server, spawning every shard's workers.
     pub fn build(self) -> JobServer {
         let topology = self
@@ -1089,6 +1215,9 @@ impl JobServerBuilder {
                     })
                 })
                 .collect(),
+            tenants: (0..TENANT_REGISTERS)
+                .map(|_| CachePadded::new(TenantLoad::default()))
+                .collect(),
             capacity: self.capacity,
             admitted: Mutex::new(0),
             space: Condvar::new(),
@@ -1111,6 +1240,16 @@ impl JobServerBuilder {
                 self.park_aware,
             ))
         });
+        // One class per tenant (index == tenant id; class 0 = default)
+        // plus the shared express priority bands — the same table for
+        // every shard's admission queues.
+        let mut class_info = vec![ClassInfo { weight: 1, priority: 1 }];
+        class_info.extend(
+            self.tenants.iter().map(|t| ClassInfo { weight: t.weight, priority: t.priority }),
+        );
+        class_info
+            .extend((0..PRIORITY_BANDS).map(|b| ClassInfo { weight: 1, priority: b as u8 }));
+        let admission = Arc::new(AdmissionHub::new(shard_count, self.admission, class_info));
         let mut shards = Vec::with_capacity(shard_count);
         for (s, (node, workers, pin_offset)) in plans.into_iter().enumerate() {
             let hook_core = Arc::clone(&core);
@@ -1123,12 +1262,22 @@ impl JobServerBuilder {
                 .park_aware_wakes(self.park_aware)
                 // Within a shard the cores are one NUMA node: flat.
                 .topology(NumaTopology::flat(workers))
-                .abandon_hook(Arc::new(move |tag, kind| match kind {
-                    DrainKind::Panic | DrainKind::Cancelled => {
-                        hook_core.abandon(tag as usize);
-                    }
-                    DrainKind::Shed | DrainKind::Expired => {
-                        hook_core.shed_slot(tag as usize);
+                .ingress_work(Arc::new(IngressSource {
+                    hub: Arc::clone(&admission),
+                    shard: s,
+                }))
+                // The tag packs the placement shard and the tenant id
+                // (`root::pack_tag`); the hooks decode both.
+                .abandon_hook(Arc::new(move |tag, kind| {
+                    let shard = root::tag_shard(tag);
+                    let slot = tenant_slot(root::tag_tenant(tag));
+                    match kind {
+                        DrainKind::Panic | DrainKind::Cancelled => {
+                            hook_core.abandon(shard, slot);
+                        }
+                        DrainKind::Shed | DrainKind::Expired => {
+                            hook_core.shed_slot(shard, slot);
+                        }
                     }
                 }));
             if let Some(hub) = &hub {
@@ -1150,6 +1299,8 @@ impl JobServerBuilder {
             core,
             policy: self.policy,
             hub,
+            admission,
+            tenants: self.tenants,
             shed: self.shed,
             shed_reg,
             deadline_default: self.deadline_default,
@@ -1164,7 +1315,7 @@ pub struct ServerStats {
     pub submitted: u64,
     /// Jobs whose root strand returned.
     pub completed: u64,
-    /// `try_submit` calls bounced by backpressure.
+    /// [`OnFull::RejectNew`] submissions bounced by backpressure.
     pub rejected: u64,
     /// Jobs abandoned by workload panics or mid-run cancellation (slots
     /// released through the abandonment hook).
@@ -1185,6 +1336,41 @@ pub struct ServerStats {
     pub capacity: usize,
     /// Per-shard breakdown.
     pub shards: Vec<ShardStats>,
+    /// Per-tenant breakdown: the default class (id 0) followed by every
+    /// registered tenant in registration order. Tenants past the last
+    /// accounting register share its counters (see
+    /// [`crate::rt::tune::TENANT_REGISTERS`]).
+    pub tenants: Vec<TenantStats>,
+}
+
+/// Per-tenant statistics.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    /// Tenant id (0 = the default class).
+    pub id: u32,
+    /// Registered name (`"default"` for id 0).
+    pub name: String,
+    /// Weighted-fair capacity share.
+    pub weight: u64,
+    /// Strict-priority tier (smaller = more urgent).
+    pub priority: u8,
+    /// Jobs admitted on this tenant's behalf.
+    pub submitted: u64,
+    /// Jobs whose root strand returned.
+    pub completed: u64,
+    /// Jobs lost to workload panics or mid-run cancellation.
+    pub abandoned: u64,
+    /// Jobs shed before execution (shed-oldest victims, expired
+    /// deadlines). `submitted == completed + abandoned + shed` per
+    /// tenant at quiescence.
+    pub shed: u64,
+    /// Submissions bounced by backpressure.
+    pub rejected: u64,
+    /// Currently admitted (queued + running) jobs.
+    pub in_flight: usize,
+    /// Mean admit→return sojourn (µs) over completed jobs — compare
+    /// against an isolated baseline for the tenant's slowdown factor.
+    pub mean_sojourn_us: u64,
 }
 
 /// Per-shard statistics.
@@ -1210,6 +1396,11 @@ pub struct JobServer {
     policy: Box<dyn PlacementPolicy>,
     /// Cross-shard migration state (`None`: single shard or disabled).
     hub: Option<Arc<MigrationHub>>,
+    /// Per-shard admission class queues + dequeue-order policy. Every
+    /// non-diverted submission flows through here.
+    admission: Arc<AdmissionHub>,
+    /// Registered tenants, in id order (id = index + 1).
+    tenants: Vec<TenantSpec>,
     /// Overload policy consulted when admission finds the server full.
     shed: Box<dyn ShedPolicy>,
     /// Submission-order registry of retained root references, present
@@ -1253,6 +1444,19 @@ impl JobServer {
     /// The active placement policy's name.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// The active admission (dequeue-order) policy's name.
+    pub fn admission_policy_name(&self) -> &'static str {
+        self.admission.policy_name()
+    }
+
+    /// Look up a registered tenant's handle by name.
+    pub fn tenant(&self, name: &str) -> Option<TenantHandle> {
+        self.tenants
+            .iter()
+            .position(|t| t.name == name)
+            .map(|i| TenantHandle { id: (i + 1) as u32 })
     }
 
     /// True when cross-shard work migration is active.
@@ -1321,14 +1525,46 @@ impl JobServer {
         shard
     }
 
-    fn wrap<C: Coroutine>(&self, job: C, shard: usize) -> Tracked<C> {
+    fn wrap<C: Coroutine>(&self, job: C, shard: usize, slot: usize) -> Tracked<C> {
         Tracked {
             inner: job,
             core: Arc::clone(&self.core),
             shard,
+            slot,
+            born_us: root::now_micros(),
             done: false,
             stepped: false,
         }
+    }
+
+    /// The admission class a submission joins: explicit priorities ride
+    /// the shared express bands, tenants their own class, everything
+    /// else the default class — then the policy's `classify` hook
+    /// (FIFO collapses all of it to class 0).
+    fn class_of(&self, opts: &SubmitOptions) -> usize {
+        let tenant_classes = self.tenants.len() + 1;
+        let base = match (opts.priority, opts.tenant) {
+            (Some(p), _) => tenant_classes + (p as usize).min(PRIORITY_BANDS - 1),
+            (None, Some(t)) => (t.id as usize).min(tenant_classes - 1),
+            (None, None) => 0,
+        };
+        self.admission.classify(base)
+    }
+
+    fn resolve_deadline(&self, pref: DeadlinePref) -> Option<Duration> {
+        match pref {
+            DeadlinePref::Inherit => self.deadline_default,
+            DeadlinePref::Unbounded => None,
+            DeadlinePref::Within(d) => Some(d),
+        }
+    }
+
+    /// Wake one worker of `shard` after publishing admission-queue
+    /// work. Idle-but-awake workers find the queue through their
+    /// ingress poll; parked ones need the nudge (their pre-park
+    /// recheck and the park backstop bound the lost-wake window).
+    fn wake_shard(&self, shard: usize) {
+        self.shards[shard].pool.shared().wake_one(0);
     }
 
     /// Decide whether the job just charged to `shard` should be parked
@@ -1386,6 +1622,41 @@ impl JobServer {
         }
     }
 
+    /// [`OnFull::RejectNew`] admission: never blocks indefinitely, but
+    /// consults the shed policy before bouncing — with shed-oldest
+    /// configured, the oldest still-unstarted job is marked shed and
+    /// its slot briefly waited for (bounded by
+    /// [`REJECT_SHED_WAIT`](self); the victim's slot frees when a
+    /// worker pops and discards it, which the park backstop bounds to
+    /// ~1 ms on an idle shard). So rejection then means "full of
+    /// running work", not merely "full". With block/reject policies
+    /// this is a plain fail-fast bounce, exactly the old `try_submit`.
+    fn admit_reject_new(&self) -> bool {
+        if self.try_admit() {
+            return true;
+        }
+        if !matches!(self.shed.on_full(), ShedAction::ShedOldest) {
+            return false;
+        }
+        if !self.shed_one() {
+            return false;
+        }
+        let deadline = std::time::Instant::now() + REJECT_SHED_WAIT;
+        let mut admitted = self.core.admitted.lock().unwrap();
+        loop {
+            if *admitted < self.core.capacity {
+                *admitted += 1;
+                return true;
+            }
+            let now = std::time::Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return false;
+            };
+            admitted = self.core.space.wait_timeout(admitted, left).unwrap().0;
+        }
+    }
+
     /// Register a freshly built (not yet published) root in the
     /// shed-oldest registry. Takes one reference on the hot block so the
     /// entry stays valid past the job's own lifetime; prunes settled
@@ -1432,41 +1703,68 @@ impl JobServer {
     /// Submit one job, blocking while the server is at capacity (with
     /// the shed-oldest policy, first marking the oldest queued job shed
     /// to free its slot faster). The builder's default deadline, if any,
-    /// is applied. The returned handle joins or `.await`s the result;
-    /// use [`RootHandle::try_join`](crate::rt::pool::RootHandle::try_join)
-    /// to observe cancellation/shedding instead of panicking.
+    /// is applied; the job rides the default tenant class. The returned
+    /// handle joins or `.await`s the result; use
+    /// [`RootHandle::try_join`](crate::rt::pool::RootHandle::try_join)
+    /// to observe cancellation/shedding instead of panicking. For
+    /// tenants, priorities, explicit deadlines or fail-fast overflow
+    /// handling, use [`Self::submit_with`].
     pub fn submit<C: Coroutine>(&self, job: C) -> RootHandle<C::Output> {
         let admitted = self.admit_with_policy(true);
         debug_assert!(admitted);
-        self.core.submitted.fetch_add(1, Ordering::Relaxed);
-        let shard = self.place();
-        self.route(job, shard, self.deadline_default)
+        self.finish_submit(job, SubmitOptions::default())
     }
 
-    /// Submit one job with an explicit deadline (`None`: no deadline,
-    /// overriding any builder default), honoring the shed policy in
-    /// full: `Err(job)` hands the job back when the policy rejects new
-    /// work at capacity. A job whose deadline passes before a worker
-    /// starts it is discarded at dequeue time — never executed — and its
-    /// handle resolves to `AbortReason::DeadlineExpired`. Deadlines
-    /// never interrupt a job that has already started.
-    pub fn submit_with_deadline<C: Coroutine>(
+    /// Submit one job with explicit [`SubmitOptions`] (tenant, express
+    /// priority, deadline, at-capacity behavior). `Err(job)` hands the
+    /// job back when admission rejects it — per the shed policy
+    /// ([`OnFull::Policy`]) or fail-fast ([`OnFull::RejectNew`]); the
+    /// bounce counts in [`ServerStats::rejected`] globally and for the
+    /// tenant. A job whose deadline passes before a worker starts it is
+    /// discarded at dequeue time — never executed — and its handle
+    /// resolves to `AbortReason::DeadlineExpired`; deadlines never
+    /// interrupt a started job.
+    pub fn submit_with<C: Coroutine>(
         &self,
         job: C,
-        deadline: Option<Duration>,
+        opts: SubmitOptions,
     ) -> Result<RootHandle<C::Output>, C> {
-        if !self.admit_with_policy(false) {
+        let admitted = match opts.on_full {
+            OnFull::Policy => self.admit_with_policy(false),
+            OnFull::Block => {
+                self.admit_blocking();
+                true
+            }
+            OnFull::RejectNew => self.admit_reject_new(),
+        };
+        if !admitted {
             self.core.rejected.fetch_add(1, Ordering::Relaxed);
+            self.core.note_reject(tenant_slot(opts.tenant.map_or(0, |t| t.id)));
             return Err(job);
         }
+        Ok(self.finish_submit(job, opts))
+    }
+
+    /// Shared tail of every single-job submission: tenant accounting,
+    /// placement, and routing of the already-admitted job.
+    fn finish_submit<C: Coroutine>(
+        &self,
+        job: C,
+        opts: SubmitOptions,
+    ) -> RootHandle<C::Output> {
+        let tenant = opts.tenant.map_or(0, |t| t.id);
         self.core.submitted.fetch_add(1, Ordering::Relaxed);
+        self.core.note_submit(tenant_slot(tenant));
         let shard = self.place();
-        Ok(self.route(job, shard, deadline))
+        let class = self.class_of(&opts);
+        let deadline = self.resolve_deadline(opts.deadline);
+        self.route(job, shard, deadline, tenant, class)
     }
 
     /// Route an admitted, placed job: divert to the migration spout on
-    /// sustained imbalance, else submit directly to the shard's pool.
-    /// The tag carried to the abandonment hook is the placement shard.
+    /// sustained imbalance, else enqueue into the shard's admission
+    /// class queue (and wake a worker). The tag carried to the
+    /// abandonment hook packs the placement shard and the tenant id.
     /// Deadline stamping and shed registration happen here, strictly
     /// before the frame is published to any queue.
     fn route<C: Coroutine>(
@@ -1474,15 +1772,19 @@ impl JobServer {
         job: C,
         shard: usize,
         deadline: Option<Duration>,
+        tenant: u32,
+        class: usize,
     ) -> RootHandle<C::Output> {
-        let tracked = self.wrap(job, shard);
-        let (frame, handle) = self.shards[shard].pool.make_root(tracked, shard as u64);
+        let tracked = self.wrap(job, shard, tenant_slot(tenant));
+        let (frame, handle) =
+            self.shards[shard].pool.make_root(tracked, root::pack_tag(shard, tenant));
         self.arm_root(handle.hot(), deadline);
         if self.should_divert(shard) {
             let hub = self.hub.as_ref().expect("divert without a migration hub");
             hub.divert(shard, frame);
         } else {
-            self.shards[shard].pool.submit_frame(frame);
+            self.admission.enqueue(shard, class, frame);
+            self.wake_shard(shard);
         }
         handle
     }
@@ -1498,74 +1800,53 @@ impl JobServer {
         self.register_for_shed(hot);
     }
 
-    /// Submit one job unless the server is at capacity; on rejection the
-    /// job is handed back so the caller can retry, shed or redirect it.
-    /// Always rejects at capacity regardless of the shed policy (this
-    /// *is* the reject-new behavior); counts the bounce in
-    /// [`ServerStats::rejected`] and `jobs_rejected` in
-    /// [`Self::metrics`].
-    pub fn try_submit<C: Coroutine>(&self, job: C) -> Result<RootHandle<C::Output>, C> {
-        if !self.try_admit() {
-            self.core.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(job);
-        }
-        self.core.submitted.fetch_add(1, Ordering::Relaxed);
-        let shard = self.place();
-        Ok(self.route(job, shard, self.deadline_default))
-    }
-
-    /// Submit a batch. Jobs are admitted in capacity-bounded waves
-    /// (blocking between waves while the server is full); each wave is
-    /// grouped by placement shard in the submitter-local arena and
-    /// routed with one MPSC tail exchange and one wake sweep per
-    /// (wave × shard). Handles are returned in input order.
-    ///
-    /// Allocates only the returned vector; callers that reuse buffers
-    /// across waves should prefer [`Self::submit_batch_into`], which
-    /// allocates nothing once its buffers are warm.
-    pub fn submit_batch<C: Coroutine>(
-        &self,
-        mut batch: Vec<C>,
-    ) -> Vec<RootHandle<C::Output>> {
-        let mut out = Vec::with_capacity(batch.len());
-        self.submit_batch_into(&mut batch, &mut out);
-        out
-    }
-
-    /// [`Self::submit_batch`], arena style: drains `batch` and appends
-    /// one handle per job to `out` in input order. Per-wave bookkeeping
-    /// (the per-shard frame groups) lives in a submitter-local
-    /// thread-local arena whose capacity survives across calls, so a
-    /// warm submitter thread pays **zero heap allocations per wave** —
-    /// the batch-path analogue of the recycled-stack steady state.
-    pub fn submit_batch_into<C: Coroutine>(
+    /// Submit a batch under one [`SubmitOptions`]: drains `batch` and
+    /// appends one handle per job to `out` in input order. Jobs are
+    /// admitted in capacity-bounded waves — the batch path always
+    /// blocks between waves while the server is full (`opts.on_full` is
+    /// effectively [`OnFull::Block`] here: a wave admits what fits and
+    /// waits for the rest rather than bouncing a suffix of the batch).
+    /// Each wave is grouped by placement shard in a submitter-local
+    /// thread-local arena whose capacity survives across calls and
+    /// enqueued with one MPSC tail exchange and one wake per
+    /// (wave × shard), so a warm submitter thread pays **zero heap
+    /// allocations per wave** — the batch-path analogue of the
+    /// recycled-stack steady state.
+    pub fn submit_batch_with<C: Coroutine>(
         &self,
         batch: &mut Vec<C>,
         out: &mut Vec<RootHandle<C::Output>>,
+        opts: SubmitOptions,
     ) {
+        let tenant = opts.tenant.map_or(0, |t| t.id);
+        let slot = tenant_slot(tenant);
+        let class = self.class_of(&opts);
+        let deadline = self.resolve_deadline(opts.deadline);
         out.reserve(batch.len());
         let mut jobs = batch.drain(..);
         let mut remaining = jobs.len();
         while remaining > 0 {
             let wave = self.admit_up_to(remaining);
             self.core.submitted.fetch_add(wave as u64, Ordering::Relaxed);
-            let mut guard = WaveGuard::new(self);
+            let mut guard = WaveGuard::new(self, class);
             // Build every root in input order; handles go straight to
             // `out`, frames into the per-shard groups.
             for _ in 0..wave {
                 let job = jobs.next().expect("wave exceeded batch");
+                self.core.note_submit(slot);
                 let shard = self.place();
-                let tracked = self.wrap(job, shard);
+                let tracked = self.wrap(job, shard, slot);
                 let (frame, handle) =
-                    self.shards[shard].pool.make_root(tracked, shard as u64);
-                self.arm_root(handle.hot(), self.deadline_default);
+                    self.shards[shard].pool.make_root(tracked, root::pack_tag(shard, tenant));
+                self.arm_root(handle.hot(), deadline);
                 guard.groups[shard].push(frame);
                 out.push(handle);
             }
             // Park as much of each group as the spout bound allows (one
             // tail exchange, one wake) so starved shards can claim it;
-            // the remainder is flushed straight into the home pools by
-            // the guard's drop (which also covers the unwind path).
+            // the remainder is flushed into the home shards' admission
+            // class queues by the guard's drop (which also covers the
+            // unwind path).
             for shard in 0..self.shards.len() {
                 if guard.groups[shard].is_empty() || !self.should_divert(shard) {
                     continue;
@@ -1579,6 +1860,56 @@ impl JobServer {
             drop(guard);
             remaining -= wave;
         }
+    }
+
+    // ----------------------------------------------------------------
+    // Deprecated submission shims (the old five-way submit zoo)
+    // ----------------------------------------------------------------
+
+    /// Submit one job with an explicit deadline.
+    #[deprecated(
+        note = "use submit_with(job, SubmitOptions::new().deadline(d)) \
+                (or .no_deadline() for None)"
+    )]
+    pub fn submit_with_deadline<C: Coroutine>(
+        &self,
+        job: C,
+        deadline: Option<Duration>,
+    ) -> Result<RootHandle<C::Output>, C> {
+        let opts = match deadline {
+            Some(d) => SubmitOptions::new().deadline(d),
+            None => SubmitOptions::new().no_deadline(),
+        };
+        self.submit_with(job, opts)
+    }
+
+    /// Submit one job unless the server is at capacity; on rejection
+    /// the job is handed back so the caller can retry, shed or
+    /// redirect it.
+    #[deprecated(note = "use submit_with(job, SubmitOptions::new().on_full(OnFull::RejectNew))")]
+    pub fn try_submit<C: Coroutine>(&self, job: C) -> Result<RootHandle<C::Output>, C> {
+        self.submit_with(job, SubmitOptions::new().on_full(OnFull::RejectNew))
+    }
+
+    /// Submit a batch, returning the handles in input order.
+    #[deprecated(note = "use submit_batch_with(&mut batch, &mut out, SubmitOptions::new())")]
+    pub fn submit_batch<C: Coroutine>(
+        &self,
+        mut batch: Vec<C>,
+    ) -> Vec<RootHandle<C::Output>> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.submit_batch_with(&mut batch, &mut out, SubmitOptions::default());
+        out
+    }
+
+    /// Batch submission into caller-owned buffers.
+    #[deprecated(note = "use submit_batch_with(batch, out, SubmitOptions::new())")]
+    pub fn submit_batch_into<C: Coroutine>(
+        &self,
+        batch: &mut Vec<C>,
+        out: &mut Vec<RootHandle<C::Output>>,
+    ) {
+        self.submit_batch_with(batch, out, SubmitOptions::default());
     }
 
     // ----------------------------------------------------------------
@@ -1611,6 +1942,32 @@ impl JobServer {
                     completed: self.core.loads[i].completed.load(Ordering::Relaxed),
                 })
                 .collect(),
+            tenants: (0..=self.tenants.len())
+                .map(|id| {
+                    let (name, weight, priority) = if id == 0 {
+                        ("default".to_string(), 1, 1)
+                    } else {
+                        let t = &self.tenants[id - 1];
+                        (t.name.clone(), t.weight, t.priority)
+                    };
+                    let load = self.core.tenant(tenant_slot(id as u32));
+                    let sojourn_jobs = load.sojourn_jobs.load(Ordering::Relaxed);
+                    TenantStats {
+                        id: id as u32,
+                        name,
+                        weight,
+                        priority,
+                        submitted: load.submitted.load(Ordering::Relaxed),
+                        completed: load.completed.load(Ordering::Relaxed),
+                        abandoned: load.abandoned.load(Ordering::Relaxed),
+                        shed: load.shed.load(Ordering::Relaxed),
+                        rejected: load.rejected.load(Ordering::Relaxed),
+                        in_flight: load.in_flight.load(Ordering::Relaxed),
+                        mean_sojourn_us: load.sojourn_us.load(Ordering::Relaxed)
+                            / sojourn_jobs.max(1),
+                    }
+                })
+                .collect(),
         }
     }
 
@@ -1639,6 +1996,18 @@ impl JobServer {
         // sees a rejected job), so the aggregate is sourced from the
         // admission core, not from the per-worker counters.
         total.jobs_rejected = self.core.rejected.load(Ordering::Relaxed);
+        // Same for the per-tenant registers: admission/completion-side
+        // accounting the per-worker metrics never see.
+        for (slot, cell) in total.tenants.iter_mut().enumerate() {
+            let t = &self.core.tenants[slot];
+            cell.submitted = t.submitted.load(Ordering::Relaxed);
+            cell.completed = t.completed.load(Ordering::Relaxed);
+            cell.abandoned = t.abandoned.load(Ordering::Relaxed);
+            cell.shed = t.shed.load(Ordering::Relaxed);
+            cell.rejected = t.rejected.load(Ordering::Relaxed);
+            cell.sojourn_us = t.sojourn_us.load(Ordering::Relaxed);
+            cell.sojourn_jobs = t.sojourn_jobs.load(Ordering::Relaxed);
+        }
         total
     }
 
@@ -1686,11 +2055,11 @@ unsafe fn drain_reason(hot: *const RootHot) -> Option<DrainKind> {
 }
 
 impl Drop for JobServer {
-    /// Flush still-parked spout frames back into their home shards
-    /// before the pools shut down, so every outstanding handle
-    /// completes (the pools' shutdown drain executes re-injected
-    /// submissions inline). Without this, a frame diverted but never
-    /// claimed would strand its handle forever.
+    /// Flush still-queued admission-class and spout frames back into
+    /// their home shards before the pools shut down, so every
+    /// outstanding handle completes (the pools' shutdown drain executes
+    /// re-injected submissions inline). Without this, a frame enqueued
+    /// but never dequeued would strand its handle forever.
     ///
     /// Drained frames that were cancelled, shed or deadline-expired are
     /// **discarded here, never re-injected**: the pools' shutdown drain
@@ -1708,13 +2077,38 @@ impl Drop for JobServer {
                 unsafe { root::release(h) };
             }
         }
-        let Some(hub) = &self.hub else { return };
         let core = Arc::clone(&self.core);
-        let hook = move |tag: u64, kind: DrainKind| match kind {
-            DrainKind::Shed | DrainKind::Expired => core.shed_slot(tag as usize),
-            DrainKind::Panic | DrainKind::Cancelled => core.abandon(tag as usize),
+        let hook = move |tag: u64, kind: DrainKind| {
+            let shard = root::tag_shard(tag);
+            let slot = tenant_slot(root::tag_tenant(tag));
+            match kind {
+                DrainKind::Shed | DrainKind::Expired => core.shed_slot(shard, slot),
+                DrainKind::Panic | DrainKind::Cancelled => core.abandon(shard, slot),
+            }
         };
         let hook_ref: &crate::rt::pool::AbandonHook = &hook;
+        // Admission class queues first: workers may still be polling
+        // them concurrently (Retry = a worker holds the claim), but the
+        // queues only empty — nothing enqueues during drop.
+        for shard in 0..self.shards.len() {
+            loop {
+                match self.admission.poll(shard) {
+                    ExternalPoll::Job(job) => {
+                        let frame = job.frame;
+                        let hot = unsafe { (*frame.0).root_hot };
+                        match unsafe { drain_reason(hot) } {
+                            Some(reason) => unsafe {
+                                root::discard(hot, Some(hook_ref), reason);
+                            },
+                            None => self.shards[shard].pool.submit_frame(frame),
+                        }
+                    }
+                    ExternalPoll::Retry => std::thread::yield_now(),
+                    ExternalPoll::Empty => break,
+                }
+            }
+        }
+        let Some(hub) = &self.hub else { return };
         for shard in 0..self.shards.len() {
             loop {
                 match hub.try_claim(shard) {
@@ -1865,7 +2259,9 @@ mod tests {
     #[test]
     fn batch_preserves_input_order() {
         let server = small_server(2, 2, 32);
-        let handles = server.submit_batch((0..40).map(MixedJob::from_seed).collect());
+        let mut batch: Vec<_> = (0..40).map(MixedJob::from_seed).collect();
+        let mut handles = Vec::new();
+        server.submit_batch_with(&mut batch, &mut handles, SubmitOptions::new());
         for (seed, h) in (0..40).zip(handles) {
             assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
         }
@@ -1874,6 +2270,7 @@ mod tests {
     #[test]
     fn try_submit_rejects_at_capacity_then_recovers() {
         let server = small_server(1, 1, 1);
+        let reject = SubmitOptions::new().on_full(OnFull::RejectNew);
         let gate = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         let g = std::sync::Arc::clone(&gate);
         // Occupy the only slot with a job that spins until released.
@@ -1883,20 +2280,107 @@ mod tests {
             }
             1u64
         }));
-        // Server is full: try_submit must bounce and return the job.
-        let bounced = server.try_submit(FnTask::new(|| 2u64));
+        // Server is full: reject-new must bounce and return the job
+        // (the default block-on-full shed policy never makes room).
+        let bounced = server.submit_with(FnTask::new(|| 2u64), reject);
         assert!(bounced.is_err(), "admission bound not enforced");
         assert_eq!(server.stats().rejected, 1);
         gate.store(true, Ordering::Release);
         assert_eq!(blocker.join(), 1);
-        // Slot freed: the next try_submit succeeds.
+        // Slot freed: the next reject-new submission succeeds.
         let h = loop {
-            match server.try_submit(FnTask::new(|| 3u64)) {
+            match server.submit_with(FnTask::new(|| 3u64), reject) {
                 Ok(h) => break h,
                 Err(_) => std::thread::yield_now(),
             }
         };
         assert_eq!(h.join(), 3);
+    }
+
+    /// The deprecated five-way submit zoo still works through its
+    /// forwarding shims (migration safety net; everything else in-tree
+    /// uses the [`SubmitOptions`] surface).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_forward() {
+        let server = small_server(1, 2, 16);
+        assert_eq!(server.submit(MixedJob::fib(10)).join(), fib_exact(10));
+        let h = server
+            .submit_with_deadline(MixedJob::fib(10), Some(Duration::from_secs(60)))
+            .unwrap_or_else(|_| panic!("deadline shim rejected"));
+        assert_eq!(h.join(), fib_exact(10));
+        let h = server
+            .try_submit(MixedJob::fib(10))
+            .unwrap_or_else(|_| panic!("try_submit shim rejected"));
+        assert_eq!(h.join(), fib_exact(10));
+        let handles = server.submit_batch((0..8).map(MixedJob::from_seed).collect());
+        for (seed, h) in (0..8).zip(handles) {
+            assert_eq!(h.join(), MixedJob::expected(seed));
+        }
+        let mut batch: Vec<_> = (0..8).map(MixedJob::from_seed).collect();
+        let mut out = Vec::new();
+        server.submit_batch_into(&mut batch, &mut out);
+        for (seed, h) in (0..8).zip(out) {
+            assert_eq!(h.join(), MixedJob::expected(seed));
+        }
+        let stats = server.stats();
+        assert_eq!(stats.submitted, stats.completed);
+    }
+
+    #[test]
+    fn tenant_registration_and_accounting() {
+        let server = JobServer::builder()
+            .topology(NumaTopology::synthetic(1, 2))
+            .shards(1)
+            .workers_per_shard(2)
+            .capacity(32)
+            .admission_policy(WeightedFair)
+            .tenant("gold", 4, 0)
+            .tenant("bronze", 1, 2)
+            .build();
+        assert_eq!(server.admission_policy_name(), "weighted-fair");
+        let gold = server.tenant("gold").expect("registered tenant");
+        let bronze = server.tenant("bronze").expect("registered tenant");
+        assert_eq!(gold.id(), 1);
+        assert_eq!(bronze.id(), 2);
+        assert!(server.tenant("nobody").is_none());
+        let mut handles = Vec::new();
+        for seed in 0..12u64 {
+            let t = if seed % 2 == 0 { gold } else { bronze };
+            let h = server
+                .submit_with(MixedJob::from_seed(seed), SubmitOptions::new().tenant(t))
+                .unwrap_or_else(|_| panic!("seed {seed} rejected"));
+            handles.push((seed, h));
+        }
+        // One express-priority job on top, accounted to gold.
+        let express = server
+            .submit_with(
+                MixedJob::fib(12),
+                SubmitOptions::new().tenant(gold).priority(0),
+            )
+            .unwrap_or_else(|_| panic!("express rejected"));
+        assert_eq!(express.join(), fib_exact(12));
+        for (seed, h) in handles {
+            assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+        }
+        let stats = server.stats();
+        assert_eq!(stats.tenants.len(), 3, "default + 2 registered");
+        let gold_stats = &stats.tenants[1];
+        let bronze_stats = &stats.tenants[2];
+        assert_eq!(gold_stats.name, "gold");
+        assert_eq!((gold_stats.weight, gold_stats.priority), (4, 0));
+        assert_eq!(gold_stats.submitted, 7, "6 tagged + 1 express");
+        assert_eq!(gold_stats.completed, 7);
+        assert_eq!(bronze_stats.submitted, 6);
+        assert_eq!(bronze_stats.completed, 6);
+        assert_eq!(stats.tenants[0].submitted, 0, "no untagged traffic");
+        assert!(gold_stats.mean_sojourn_us > 0, "sojourn clock must tick");
+        assert_eq!(gold_stats.in_flight, 0);
+        // The same counters surface through the metrics snapshot.
+        let snap = server.metrics();
+        assert_eq!(snap.tenants[1].completed, 7);
+        assert_eq!(snap.tenants[2].completed, 6);
+        assert_eq!(snap.tenants[1].sojourn_jobs, 7);
     }
 
     #[test]
@@ -1927,7 +2411,9 @@ mod tests {
             .policy(LeastLoaded)
             .build();
         assert_eq!(server.policy_name(), "least-loaded");
-        let handles = server.submit_batch((0..32).map(MixedJob::from_seed).collect());
+        let mut batch: Vec<_> = (0..32).map(MixedJob::from_seed).collect();
+        let mut handles = Vec::new();
+        server.submit_batch_with(&mut batch, &mut handles, SubmitOptions::new());
         for (seed, h) in (0..32).zip(handles) {
             assert_eq!(h.join(), MixedJob::expected(seed));
         }

@@ -1,0 +1,532 @@
+//! Multi-tenant **QoS admission**: pluggable admission policies,
+//! per-shard class queues, tenant handles and the unified
+//! [`SubmitOptions`] submission surface.
+//!
+//! Before this layer every admitted job went straight into a worker's
+//! submission queue — one anonymous traffic class, so a burst from one
+//! caller head-of-line-blocked everyone behind the single admission
+//! bound. Admission is now split in two:
+//!
+//! 1. the **capacity gate** (the bounded `admitted` count in
+//!    `ServerCore`, unchanged), and
+//! 2. an **ordering stage**: per-shard **class queues** — intrusive
+//!    [`FrameQueue`]s linking admitted root frames through their own
+//!    headers, so the warm admit→dequeue path allocates nothing — with
+//!    a pluggable [`AdmissionPolicy`] deciding which class a worker
+//!    serves next (the dequeue-order hook `rt::worker` polls between
+//!    its own submission queue and the steal attempt).
+//!
+//! The class table of every shard is `[default] + registered tenants +
+//! PRIORITY_BANDS express lanes`: class index == tenant id for tenant
+//! traffic, and jobs submitted with an explicit
+//! [`SubmitOptions::priority`] ride a shared priority band regardless
+//! of tenant. Tenant *accounting* always follows the tenant id packed
+//! in the root's tag, independent of which class queue carried the
+//! frame — so [`Fifo`]'s single-queue collapse changes ordering, never
+//! the per-tenant books.
+//!
+//! Three built-in policies:
+//!
+//! | policy | order | use |
+//! |---|---|---|
+//! | [`Fifo`] | strict arrival order, one queue | baseline; exactly the pre-QoS behavior |
+//! | [`StrictPriority`] | lowest `priority` value first | latency tiers; **starves** low classes under load |
+//! | [`WeightedFair`] | cumulative served/weight cross-multiplication | weighted capacity shares; bounds every class's slowdown |
+//!
+//! [`WeightedFair`] compares *cumulative* served counters (`pick c₁
+//! over c₂ iff (served₁+1)·w₂ < (served₂+1)·w₁` — integer-only, no
+//! floating point on the dequeue path). A class that idles for a long
+//! time therefore banks credit it later repays in a burst; for the
+//! sustained-contention regimes QoS exists for this is the desired
+//! "catch up to your share" behavior, and it keeps the policy to one
+//! relaxed load per class per dequeue.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::deque::FrameQueue;
+use crate::frame::FramePtr;
+use crate::rt::pool::{ExternalJob, ExternalPoll};
+use crate::sync::CachePadded;
+
+/// Shared express-lane priority-band classes appended to every shard's
+/// class table, for jobs submitted with an explicit
+/// [`SubmitOptions::priority`] (band = `min(priority, 3)`; band 0 is
+/// the most urgent).
+pub const PRIORITY_BANDS: usize = 4;
+
+/// A registered tenant (weighted traffic class) of a
+/// [`crate::service::JobServer`]. Obtained from
+/// [`crate::service::JobServer::tenant`] after registering the tenant
+/// on the builder; carried per submission via
+/// [`SubmitOptions::tenant`]. Copy — embed it freely in request
+/// contexts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantHandle {
+    pub(crate) id: u32,
+}
+
+impl TenantHandle {
+    /// The tenant's id (0 is the default class every untagged
+    /// submission belongs to; registered tenants start at 1).
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+}
+
+/// What a fallible submission does when the server is at capacity.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum OnFull {
+    /// Defer to the server's configured [`crate::service::ShedPolicy`]
+    /// (block / reject / shed-oldest). The default.
+    #[default]
+    Policy,
+    /// Block until a slot frees, regardless of the shed policy.
+    Block,
+    /// Never block: reject unless room can be made without waiting.
+    /// With the shed-oldest policy configured, the oldest queued job is
+    /// shed first and its slot briefly waited for — so rejection means
+    /// "the server is full of *running* work", not merely "full".
+    RejectNew,
+}
+
+/// Deadline selection for one submission.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum DeadlinePref {
+    /// Use the builder's default deadline, if any. The default.
+    #[default]
+    Inherit,
+    /// No deadline, overriding any builder default.
+    Unbounded,
+    /// This relative deadline.
+    Within(Duration),
+}
+
+/// Per-submission options for [`crate::service::JobServer::submit_with`]
+/// / [`crate::service::JobServer::submit_batch_with`] — the one struct
+/// that replaced the five-way submit zoo. Builder-style and `Copy`;
+/// `SubmitOptions::default()` reproduces plain
+/// [`crate::service::JobServer::submit`] semantics except that
+/// `on_full` rejection is surfaced as `Err` instead of degraded to
+/// blocking.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SubmitOptions {
+    pub(crate) tenant: Option<TenantHandle>,
+    pub(crate) priority: Option<u8>,
+    pub(crate) deadline: DeadlinePref,
+    pub(crate) on_full: OnFull,
+}
+
+impl SubmitOptions {
+    /// Fresh default options (default tenant, no express priority,
+    /// inherited deadline, shed-policy overflow handling).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit on behalf of `tenant` (accounting, weighted-fair share
+    /// and footprint register all follow it).
+    pub fn tenant(mut self, tenant: TenantHandle) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    /// Ride a shared express priority band (`0` = most urgent; values
+    /// past `PRIORITY_BANDS - 1` clamp) instead of the tenant's class
+    /// queue. Accounting still follows the tenant.
+    pub fn priority(mut self, band: u8) -> Self {
+        self.priority = Some(band);
+        self
+    }
+
+    /// Set a relative deadline (see
+    /// [`crate::service::JobServerBuilder::deadline_default`] for
+    /// expiry semantics).
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = DeadlinePref::Within(d);
+        self
+    }
+
+    /// Remove any deadline, including the builder default.
+    pub fn no_deadline(mut self) -> Self {
+        self.deadline = DeadlinePref::Unbounded;
+        self
+    }
+
+    /// Set the at-capacity behavior.
+    pub fn on_full(mut self, b: OnFull) -> Self {
+        self.on_full = b;
+        self
+    }
+}
+
+/// Read-only per-class view handed to [`AdmissionPolicy::next_class`]:
+/// queue depths, cumulative served counts and the static weight /
+/// priority table. Reads the live atomics — no allocation on the
+/// dequeue path.
+pub struct ClassView<'a> {
+    pub(crate) classes: &'a [CachePadded<ClassQueue>],
+    pub(crate) info: &'a [ClassInfo],
+}
+
+impl ClassView<'_> {
+    /// Number of classes (tenants + priority bands).
+    pub fn classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Frames currently queued in class `c` (may transiently over-count
+    /// by in-flight pushes, never under-count).
+    pub fn queued(&self, c: usize) -> usize {
+        self.classes[c].len.load(Ordering::Relaxed)
+    }
+
+    /// Frames ever dequeued from class `c` on this shard.
+    pub fn served(&self, c: usize) -> u64 {
+        self.classes[c].served.load(Ordering::Relaxed)
+    }
+
+    /// Class `c`'s weight (capacity share; ≥ 1).
+    pub fn weight(&self, c: usize) -> u64 {
+        self.info[c].weight
+    }
+
+    /// Class `c`'s priority (smaller = more urgent).
+    pub fn priority(&self, c: usize) -> u8 {
+        self.info[c].priority
+    }
+}
+
+/// Decides admission-queue ordering: which class an enqueued job joins
+/// and which class an idle worker serves next. Mirrors
+/// [`crate::service::PlacementPolicy`] / [`crate::service::ShedPolicy`]
+/// — a small always-consulted trait object chosen at build time.
+pub trait AdmissionPolicy: Send + Sync {
+    /// Map a job's natural class (tenant id, or a priority-band index)
+    /// to the class queue it joins. The identity by default; [`Fifo`]
+    /// collapses everything to class 0 to preserve global arrival
+    /// order.
+    fn classify(&self, class: usize) -> usize {
+        class
+    }
+
+    /// Pick the next class to serve, or `None` when every class is
+    /// empty. Must only return classes with `view.queued(c) > 0`.
+    fn next_class(&self, view: &ClassView<'_>) -> Option<usize>;
+
+    /// Human-readable policy name (reporting).
+    fn name(&self) -> &'static str {
+        "custom"
+    }
+}
+
+/// Global arrival order, one queue — exactly the pre-QoS dequeue
+/// behavior, and the throughput baseline the weighted policies are
+/// benchmarked against.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Fifo;
+
+impl AdmissionPolicy for Fifo {
+    fn classify(&self, _class: usize) -> usize {
+        0
+    }
+
+    fn next_class(&self, view: &ClassView<'_>) -> Option<usize> {
+        (view.queued(0) > 0).then_some(0)
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Serve the most urgent non-empty class (smallest priority value, ties
+/// → lowest class index). Unconditionally starves lower classes while
+/// urgent work exists — that is the point, and the hazard.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StrictPriority;
+
+impl AdmissionPolicy for StrictPriority {
+    fn next_class(&self, view: &ClassView<'_>) -> Option<usize> {
+        (0..view.classes())
+            .filter(|&c| view.queued(c) > 0)
+            .min_by_key(|&c| (view.priority(c), c))
+    }
+
+    fn name(&self) -> &'static str {
+        "strict-priority"
+    }
+}
+
+/// Weighted-fair dequeue: serve the non-empty class furthest below its
+/// weighted share of cumulative service. Integer cross-multiplication
+/// (`(served₁+1)·w₂ < (served₂+1)·w₁`), so the per-dequeue cost is one
+/// relaxed load and one multiply per class.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WeightedFair;
+
+impl AdmissionPolicy for WeightedFair {
+    fn next_class(&self, view: &ClassView<'_>) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for c in 0..view.classes() {
+            if view.queued(c) == 0 {
+                continue;
+            }
+            best = Some(match best {
+                None => c,
+                Some(b) => {
+                    // c is hungrier than b iff served_c/w_c < served_b/w_b.
+                    let lhs = (view.served(c) + 1).saturating_mul(view.weight(b));
+                    let rhs = (view.served(b) + 1).saturating_mul(view.weight(c));
+                    if lhs < rhs {
+                        c
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted-fair"
+    }
+}
+
+/// Static per-class metadata (one table shared by all shards).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ClassInfo {
+    pub(crate) weight: u64,
+    pub(crate) priority: u8,
+}
+
+/// One class's queue on one shard: an intrusive MPSC of admitted root
+/// frames (links through `FrameHeader::qnext_store`, so enqueue
+/// allocates nothing) plus its depth and cumulative-served counters.
+#[derive(Default)]
+pub(crate) struct ClassQueue {
+    queue: FrameQueue,
+    /// Queued frames; bumped before the push and decremented after the
+    /// pop, so it may transiently over-count but never under-counts.
+    len: AtomicUsize,
+    /// Frames ever dequeued — the weighted-fair service history.
+    served: AtomicU64,
+}
+
+/// One shard's admission ingress: its class queues, an O(1) occupancy
+/// count for the empty fast path and the pre-park hint, and the
+/// consumer claim lock serializing [`FrameQueue`]'s single-consumer
+/// pop across that shard's workers.
+pub(crate) struct IngressShard {
+    classes: Vec<CachePadded<ClassQueue>>,
+    total: AtomicUsize,
+    claim: Mutex<()>,
+}
+
+/// All shards' admission queues plus the policy and class table.
+/// Wrapped per shard in an [`crate::rt::pool::ExternalWork`] adapter
+/// installed as the pool's ingress source.
+pub(crate) struct AdmissionHub {
+    shards: Vec<IngressShard>,
+    policy: Box<dyn AdmissionPolicy>,
+    info: Vec<ClassInfo>,
+}
+
+impl AdmissionHub {
+    pub(crate) fn new(
+        shard_count: usize,
+        policy: Box<dyn AdmissionPolicy>,
+        info: Vec<ClassInfo>,
+    ) -> Self {
+        let classes = info.len();
+        AdmissionHub {
+            shards: (0..shard_count)
+                .map(|_| IngressShard {
+                    classes: (0..classes).map(|_| CachePadded::new(ClassQueue::default())).collect(),
+                    total: AtomicUsize::new(0),
+                    claim: Mutex::new(()),
+                })
+                .collect(),
+            policy,
+            info,
+        }
+    }
+
+    /// The active policy's name.
+    pub(crate) fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// The class queue a job with natural class `class` joins.
+    pub(crate) fn classify(&self, class: usize) -> usize {
+        self.policy.classify(class).min(self.info.len() - 1)
+    }
+
+    /// Enqueue one admitted frame. Wait-free, allocation-free; counter
+    /// order (len → total → push) guarantees the consumer-side `total`
+    /// check never misses a published frame.
+    pub(crate) fn enqueue(&self, shard: usize, class: usize, frame: FramePtr) {
+        let sh = &self.shards[shard];
+        sh.classes[class].len.fetch_add(1, Ordering::Relaxed);
+        sh.total.fetch_add(1, Ordering::Release);
+        sh.classes[class].queue.push(frame);
+    }
+
+    /// Enqueue a wave of frames into one class with a single MPSC tail
+    /// exchange (the batch path's per-(wave × shard) cost).
+    pub(crate) fn enqueue_batch(
+        &self,
+        shard: usize,
+        class: usize,
+        frames: impl ExactSizeIterator<Item = FramePtr>,
+    ) {
+        let n = frames.len();
+        if n == 0 {
+            return;
+        }
+        let sh = &self.shards[shard];
+        sh.classes[class].len.fetch_add(n, Ordering::Relaxed);
+        sh.total.fetch_add(n, Ordering::Release);
+        sh.classes[class].queue.push_batch(frames);
+    }
+
+    /// O(1) occupancy hint (the lazy idle policy's pre-park recheck).
+    pub(crate) fn looks_nonempty(&self, shard: usize) -> bool {
+        self.shards[shard].total.load(Ordering::Relaxed) > 0
+    }
+
+    /// Claim the next admitted frame for `shard` per the policy.
+    /// `Retry` covers both consumer contention (another worker holds
+    /// the claim lock) and an in-flight producer push (the policy saw
+    /// the class non-empty but its frame's tail exchange has not landed
+    /// yet) — callers treat it exactly like a transiently-empty
+    /// submission queue.
+    pub(crate) fn poll(&self, shard: usize) -> ExternalPoll {
+        let sh = &self.shards[shard];
+        if sh.total.load(Ordering::Acquire) == 0 {
+            return ExternalPoll::Empty;
+        }
+        let Ok(_claim) = sh.claim.try_lock() else {
+            return ExternalPoll::Retry;
+        };
+        let view = ClassView { classes: &sh.classes, info: &self.info };
+        let Some(c) = self.policy.next_class(&view) else {
+            // total raced ahead of the len bumps; nothing serveable yet.
+            return ExternalPoll::Retry;
+        };
+        let cq = &sh.classes[c];
+        match cq.queue.pop() {
+            Some(frame) => {
+                cq.len.fetch_sub(1, Ordering::Relaxed);
+                sh.total.fetch_sub(1, Ordering::AcqRel);
+                cq.served.fetch_add(1, Ordering::Relaxed);
+                ExternalPoll::Job(ExternalJob { frame, migrated: false })
+            }
+            // Producer push in flight on the chosen class.
+            None => ExternalPoll::Retry,
+        }
+    }
+}
+
+/// Per-shard [`crate::rt::pool::ExternalWork`] adapter over the hub,
+/// installed as each pool's ingress source.
+pub(crate) struct IngressSource {
+    pub(crate) hub: std::sync::Arc<AdmissionHub>,
+    pub(crate) shard: usize,
+}
+
+impl crate::rt::pool::ExternalWork for IngressSource {
+    fn poll(&self) -> ExternalPoll {
+        self.hub.poll(self.shard)
+    }
+
+    fn looks_nonempty(&self) -> bool {
+        self.hub.looks_nonempty(self.shard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view_fixture(spec: &[(usize, u64, u64, u8)]) -> (Vec<CachePadded<ClassQueue>>, Vec<ClassInfo>) {
+        // (queued, served, weight, priority) per class.
+        let classes = spec
+            .iter()
+            .map(|&(q, s, _, _)| {
+                CachePadded::new(ClassQueue {
+                    queue: FrameQueue::new(),
+                    len: AtomicUsize::new(q),
+                    served: AtomicU64::new(s),
+                })
+            })
+            .collect();
+        let info =
+            spec.iter().map(|&(_, _, w, p)| ClassInfo { weight: w, priority: p }).collect();
+        (classes, info)
+    }
+
+    #[test]
+    fn fifo_collapses_to_class_zero() {
+        let p = Fifo;
+        assert_eq!(p.classify(0), 0);
+        assert_eq!(p.classify(3), 0);
+        let (classes, info) = view_fixture(&[(2, 0, 1, 1), (9, 0, 1, 0)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), Some(0), "fifo only ever serves class 0");
+        let (classes, info) = view_fixture(&[(0, 0, 1, 1), (9, 0, 1, 0)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), None);
+    }
+
+    #[test]
+    fn strict_priority_serves_most_urgent_nonempty() {
+        let p = StrictPriority;
+        let (classes, info) = view_fixture(&[(1, 0, 1, 2), (1, 0, 1, 0), (1, 0, 1, 1)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), Some(1), "priority 0 wins");
+        let (classes, info) = view_fixture(&[(1, 0, 1, 2), (0, 0, 1, 0), (1, 0, 1, 1)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), Some(2), "empty urgent class is skipped");
+    }
+
+    #[test]
+    fn weighted_fair_tracks_cumulative_shares() {
+        let p = WeightedFair;
+        // The comparison is on virtual finish times `(served+1)/weight`.
+        // Class 0 weight 1, class 1 weight 4: at served (1, 7) both
+        // finish next at 2.0 — tie goes to the lower index.
+        let (classes, info) = view_fixture(&[(5, 1, 1, 1), (5, 7, 4, 1)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), Some(0), "tie → lowest index");
+        // One more serve of class 0 (2.0 → 3.0) flips it.
+        let (classes, info) = view_fixture(&[(5, 2, 1, 1), (5, 7, 4, 1)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), Some(1), "class 0 over-served → serve 1");
+        // A flooding heavy class never locks out the light one.
+        let (classes, info) = view_fixture(&[(1, 0, 1, 1), (500, 100, 4, 1)]);
+        let view = ClassView { classes: &classes, info: &info };
+        assert_eq!(p.next_class(&view), Some(0), "starved light class is served");
+    }
+
+    #[test]
+    fn submit_options_builder_roundtrip() {
+        let t = TenantHandle { id: 3 };
+        let o = SubmitOptions::new()
+            .tenant(t)
+            .priority(2)
+            .deadline(Duration::from_millis(5))
+            .on_full(OnFull::RejectNew);
+        assert_eq!(o.tenant.unwrap().id(), 3);
+        assert_eq!(o.priority, Some(2));
+        assert_eq!(o.deadline, DeadlinePref::Within(Duration::from_millis(5)));
+        assert_eq!(o.on_full, OnFull::RejectNew);
+        let d = SubmitOptions::default();
+        assert!(d.tenant.is_none() && d.priority.is_none());
+        assert_eq!(d.deadline, DeadlinePref::Inherit);
+        assert_eq!(d.on_full, OnFull::Policy);
+        assert_eq!(d.no_deadline().deadline, DeadlinePref::Unbounded);
+    }
+}

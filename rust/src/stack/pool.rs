@@ -120,17 +120,30 @@ impl StackShelf {
     /// Sample one quiesced root job into the tuner: its peak live bytes
     /// and stacklet-grow count since the stack's last trim. Called by
     /// the fused-root-block disposer ([`crate::rt::root`]) right before
-    /// it recycles the job's stack.
+    /// it recycles the job's stack. Feeds the default (slot 0) tenant
+    /// register.
     pub fn observe_root_quiesce(&self, peak_live: usize, grows: u64) {
         self.tuner.record_job(peak_live, grows);
     }
 
+    /// [`Self::observe_root_quiesce`] credited to a specific tenant's
+    /// footprint register, so tenants with disjoint stack depths learn
+    /// separate hot sizes.
+    pub fn observe_root_quiesce_for(&self, slot: usize, peak_live: usize, grows: u64) {
+        self.tuner.record_job_for(slot, peak_live, grows);
+    }
+
     /// First-stacklet capacity fresh stacks should be born with:
     /// the learned hot size, or `fallback` while cold / when adaptive
-    /// sizing is disabled.
+    /// sizing is disabled. Reads the default (slot 0) tenant register.
     pub fn hot_first_capacity(&self, fallback: usize) -> usize {
+        self.hot_first_capacity_for(0, fallback)
+    }
+
+    /// [`Self::hot_first_capacity`] for a specific tenant register.
+    pub fn hot_first_capacity_for(&self, slot: usize, fallback: usize) -> usize {
         if self.tuner.enabled() {
-            self.tuner.hot_first_capacity().max(fallback)
+            self.tuner.hot_first_capacity_for(slot).max(fallback)
         } else {
             fallback
         }
@@ -164,13 +177,26 @@ impl StackShelf {
     /// been created by `SegmentedStack` boxing (`Box::into_raw`) and must
     /// be empty unless poisoned.
     pub unsafe fn recycle(&self, s: *mut SegmentedStack) {
+        self.recycle_for(0, s)
+    }
+
+    /// [`Self::recycle`] with the stack's reshape decision judged
+    /// against a specific tenant's footprint register (the tenant whose
+    /// job just quiesced on it). The shelf itself stays tenant-agnostic
+    /// LIFO — a stack banked by one tenant may be popped by another, in
+    /// which case the next recycle reshapes it toward the new tenant's
+    /// hot size.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::recycle`].
+    pub unsafe fn recycle_for(&self, slot: usize, s: *mut SegmentedStack) {
         if (*s).is_poisoned() {
             self.quarantine(s);
             return;
         }
         debug_assert!((*s).is_empty(), "recycled stacks must be empty");
         (*s).trim();
-        if let Some(target) = self.tuner.reshape_target((*s).first_capacity()) {
+        if let Some(target) = self.tuner.reshape_target_for(slot, (*s).first_capacity()) {
             (*s).reshape_first(target);
         }
         let mut slots = self.slots.lock().unwrap();

@@ -85,6 +85,36 @@ fn steady_state_is_allocation_free() {
         assert_reaches_zero("job server", 256, |_| server.submit(Fib::new(10)).join());
     }
 
+    // Tenant-tagged traffic through the QoS admission queues (ISSUE 8):
+    // classify→enqueue→weighted-fair dequeue links admitted frames
+    // through their own headers (`FrameHeader::qnext`), and the
+    // per-tenant accounting and footprint registers are plain atomics —
+    // so a warm tenant-tagged submit→join cycle must be exactly as
+    // allocation-free as an untagged one. Both tenants run the same job
+    // type, so the per-slot hot stacklet sizes agree and recycled
+    // stacks never reshape between tenants.
+    {
+        use rustfork::service::{SubmitOptions, WeightedFair};
+        let server = JobServer::builder()
+            .topology(NumaTopology::synthetic(2, 2))
+            .shards(2)
+            .workers_per_shard(2)
+            .capacity(64)
+            .admission_policy(WeightedFair)
+            .tenant("gold", 4, 0)
+            .tenant("bronze", 1, 1)
+            .build();
+        let gold = server.tenant("gold").unwrap();
+        let bronze = server.tenant("bronze").unwrap();
+        assert_reaches_zero("tenant-tagged server", 256, |seed| {
+            let t = if seed % 2 == 0 { gold } else { bronze };
+            server
+                .submit_with(Fib::new(10), SubmitOptions::new().tenant(t))
+                .unwrap_or_else(|_| panic!("under-capacity submit rejected"))
+                .join()
+        });
+    }
+
     // Sharded server with forced skew and migration active (ISSUE 4):
     // diversion through the intrusive spout (`FrameHeader::qnext`, no
     // queue nodes), hierarchical claims and cross-shard execution must

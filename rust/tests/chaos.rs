@@ -25,7 +25,10 @@ use rustfork::fault::{arm, FaultPlan, FaultSite};
 use rustfork::numa::NumaTopology;
 use rustfork::rt::pool::AbortReason;
 use rustfork::sched::SchedulerKind;
-use rustfork::service::{jobs::MixedJob, JobServer, ShedOldest};
+use rustfork::service::{
+    jobs::MixedJob, AdmissionPolicy, Fifo, JobServer, OnFull, ShedOldest, StrictPriority,
+    SubmitOptions, WeightedFair,
+};
 use rustfork::task::FnTask;
 
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -42,6 +45,17 @@ fn chaos_seed() -> u64 {
         .unwrap_or(0xC0FF_EE00)
 }
 
+/// The admission-policy dimension of the CI chaos matrix: every policy
+/// must uphold the same invariants under faults. Defaults to FIFO (the
+/// pre-QoS ordering).
+fn chaos_admission() -> Box<dyn AdmissionPolicy> {
+    match std::env::var("RUSTFORK_CHAOS_ADMISSION").as_deref() {
+        Ok("weighted-fair") => Box::new(WeightedFair),
+        Ok("strict-priority") => Box::new(StrictPriority),
+        _ => Box::new(Fifo),
+    }
+}
+
 /// The quiescence invariants every chaos run must uphold, however many
 /// jobs panicked, were cancelled, shed or expired along the way.
 fn assert_invariants(server: &JobServer, label: &str) {
@@ -52,6 +66,19 @@ fn assert_invariants(server: &JobServer, label: &str) {
         stats.completed + stats.abandoned + stats.shed,
         "{label}: admission accounting broken: {stats:?}"
     );
+    for t in &stats.tenants {
+        assert_eq!(
+            t.in_flight, 0,
+            "{label}: tenant '{}' still in flight: {stats:?}",
+            t.name
+        );
+        assert_eq!(
+            t.submitted,
+            t.completed + t.abandoned + t.shed,
+            "{label}: tenant '{}' accounting broken: {stats:?}",
+            t.name
+        );
+    }
     let m = server.metrics();
     assert_eq!(
         m.signals, m.steals,
@@ -104,22 +131,39 @@ fn fault_matrix_invariants() {
                     .scheduler(sched)
                     .migration(migration)
                     .migration_hysteresis(2)
+                    .admission_policy_boxed(chaos_admission())
+                    .tenant("gold", 3, 0)
+                    .tenant("bronze", 1, 1)
                     .seed(seed)
                     .build();
+                let gold = server.tenant("gold").unwrap();
+                let bronze = server.tenant("bronze").unwrap();
                 let mut handles = Vec::with_capacity(200);
                 for s in 0..200u64 {
                     if s % 5 == 0 {
                         // Aggressive deadline: some expire queued, some
                         // make it — both paths must stay accounted.
-                        let Ok(h) = server.submit_with_deadline(
+                        let Ok(h) = server.submit_with(
                             MixedJob::from_seed(s),
-                            Some(Duration::from_micros(50)),
+                            SubmitOptions::new().deadline(Duration::from_micros(50)),
                         ) else {
-                            panic!("block-on-full admission cannot reject");
+                            panic!("policy-on-full admission cannot reject here");
                         };
                         handles.push((s, h));
                     } else {
-                        let h = server.submit(MixedJob::from_seed(s));
+                        // Interleave tenant-tagged and untagged traffic:
+                        // the per-tenant books must balance under chaos
+                        // exactly like the global ones.
+                        let opts = match s % 3 {
+                            1 => SubmitOptions::new().tenant(gold),
+                            2 => SubmitOptions::new().tenant(bronze),
+                            _ => SubmitOptions::new(),
+                        };
+                        let Ok(h) = server
+                            .submit_with(MixedJob::from_seed(s), opts.on_full(OnFull::Block))
+                        else {
+                            panic!("block-on-full admission cannot reject");
+                        };
                         if s % 7 == 0 {
                             // Cancel storm: unstarted victims discard at
                             // dequeue; started ones stop at their next
@@ -180,12 +224,12 @@ fn expired_jobs_never_execute() {
     let victims: Vec<_> = (0..VICTIMS)
         .map(|_| {
             let r = Arc::clone(&ran);
-            let Ok(h) = server.submit_with_deadline(
+            let Ok(h) = server.submit_with(
                 FnTask::new(move || {
                     r.fetch_add(1, Ordering::Relaxed);
                     0u64
                 }),
-                Some(Duration::from_millis(1)),
+                SubmitOptions::new().deadline(Duration::from_millis(1)),
             ) else {
                 panic!("admission under capacity cannot reject");
             };
@@ -372,4 +416,108 @@ fn shed_oldest_preserves_goodput_under_overload() {
         shed_stats.completed + shed_stats.abandoned + shed_stats.shed,
         "{shed_stats:?}"
     );
+}
+
+/// Per-tenant books stay isolated under faults: injected panics across
+/// interleaved tenant traffic balance per tenant, and a tenant whose own
+/// jobs panic never leaks abandonments into a clean tenant's accounting.
+#[test]
+fn tenant_accounting_isolation_under_faults() {
+    let _lock = serial();
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(1, 2))
+        .shards(1)
+        .workers_per_shard(2)
+        .capacity(64)
+        .admission_policy(WeightedFair)
+        .tenant("clean", 2, 0)
+        .tenant("faulty", 1, 1)
+        .build();
+    let clean = server.tenant("clean").unwrap();
+    let faulty = server.tenant("faulty").unwrap();
+    let grab = |id: u32| {
+        let s = server.stats();
+        let t = s.tenants.into_iter().find(|t| t.id == id).expect("tenant stats row");
+        (t.submitted, t.completed, t.abandoned, t.shed)
+    };
+
+    // Phase 1: injected panics land on whichever tenant's job happens to
+    // be resuming — both tenants' identities must still balance.
+    {
+        let guard =
+            arm(FaultPlan::new(chaos_seed() ^ 0x7E17).with(FaultSite::WorkloadPanic, 7, 32));
+        let handles: Vec<_> = (0..120u64)
+            .map(|s| {
+                let t = if s % 2 == 0 { clean } else { faulty };
+                let Ok(h) = server.submit_with(
+                    MixedJob::from_seed(s),
+                    SubmitOptions::new().tenant(t).on_full(OnFull::Block),
+                ) else {
+                    panic!("block-on-full admission cannot reject");
+                };
+                (s, h)
+            })
+            .collect();
+        for (s, h) in handles {
+            if let Ok(v) = h.try_join() {
+                assert_eq!(v, MixedJob::expected(s), "completed job corrupted (seed {s})");
+            }
+        }
+        assert!(
+            guard.fired(FaultSite::WorkloadPanic) > 0,
+            "the panic site never fired — chaos was a no-op"
+        );
+    }
+    assert_invariants(&server, "tenant-isolation/injected");
+    let stats = server.stats();
+    assert_eq!(
+        stats.tenants.iter().map(|t| t.submitted).sum::<u64>(),
+        stats.submitted,
+        "tenant rows must partition global submissions: {stats:?}"
+    );
+    assert_eq!(grab(clean.id()).0, 60);
+    assert_eq!(grab(faulty.id()).0, 60);
+
+    // Phase 2: only the faulty tenant's jobs panic (on their own, no
+    // injection). The clean tenant must complete everything and absorb
+    // zero abandonments.
+    let clean_before = grab(clean.id());
+    let faulty_before = grab(faulty.id());
+    let mut handles = Vec::new();
+    for s in 0..40u64 {
+        if s % 2 == 0 {
+            let Ok(h) = server.submit_with(
+                MixedJob::from_seed(s),
+                SubmitOptions::new().tenant(clean).on_full(OnFull::Block),
+            ) else {
+                panic!("block-on-full admission cannot reject");
+            };
+            handles.push((s, h));
+        } else {
+            let Ok(h) = server.submit_with(
+                FnTask::new(move || -> u64 { panic!("tenant self-panic (seed {s})") }),
+                SubmitOptions::new().tenant(faulty).on_full(OnFull::Block),
+            ) else {
+                panic!("block-on-full admission cannot reject");
+            };
+            handles.push((s, h));
+        }
+    }
+    for (s, h) in handles {
+        if s % 2 == 0 {
+            assert_eq!(h.join(), MixedJob::expected(s), "clean job corrupted (seed {s})");
+        } else {
+            assert!(h.try_join().is_err(), "self-panicking job cannot complete");
+        }
+    }
+    let clean_after = grab(clean.id());
+    let faulty_after = grab(faulty.id());
+    assert_eq!(clean_after.1 - clean_before.1, 20, "clean tenant completes everything");
+    assert_eq!(
+        clean_after.2, clean_before.2,
+        "a faulty tenant's panics leaked into the clean tenant's abandonments"
+    );
+    assert_eq!(faulty_after.2 - faulty_before.2, 20, "every self-panic is abandoned");
+    assert_invariants(&server, "tenant-isolation/self-panic");
+    assert_capacity_recovers(&server, "tenant-isolation");
 }

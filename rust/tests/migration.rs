@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use rustfork::numa::NumaTopology;
 use rustfork::rt::pool::AbortReason;
-use rustfork::service::{jobs::MixedJob, JobServer, PinnedShard};
+use rustfork::service::{jobs::MixedJob, JobServer, PinnedShard, SubmitOptions};
 use rustfork::task::FnTask;
 
 const JOBS: u64 = 512;
@@ -104,10 +104,12 @@ fn skewed_batch_submissions_migrate() {
     // The streak gate advances once per placement group on the batch
     // path, so several rounds are needed before diversion opens.
     let server = skewed_server(true);
+    let mut batch = Vec::new();
+    let mut handles = Vec::new();
     for round in 0..6 {
-        let handles =
-            server.submit_batch((0..128).map(MixedJob::from_seed).collect());
-        for (seed, h) in (0..128).zip(handles) {
+        batch.extend((0..128).map(MixedJob::from_seed));
+        server.submit_batch_with(&mut batch, &mut handles, SubmitOptions::new());
+        for (seed, h) in (0..128).zip(handles.drain(..)) {
             assert_eq!(h.join(), MixedJob::expected(seed), "round {round} seed {seed}");
         }
     }

@@ -11,7 +11,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use rustfork::numa::NumaTopology;
-use rustfork::service::{jobs::MixedJob, JobServer, LeastLoaded, RoundRobin};
+use rustfork::service::{
+    jobs::MixedJob, JobServer, LeastLoaded, OnFull, RoundRobin, SubmitOptions,
+};
 use rustfork::sync::block_on;
 use rustfork::task::FnTask;
 
@@ -42,8 +44,13 @@ fn hammer(server: &Arc<JobServer>) -> u64 {
                     // Batched submit, joined after the whole wave.
                     1 => {
                         let wave = (base + JOBS_PER_SUBMITTER - seed).min(10);
-                        let handles = server.submit_batch(
-                            (seed..seed + wave).map(MixedJob::from_seed).collect(),
+                        let mut batch: Vec<_> =
+                            (seed..seed + wave).map(MixedJob::from_seed).collect();
+                        let mut handles = Vec::new();
+                        server.submit_batch_with(
+                            &mut batch,
+                            &mut handles,
+                            SubmitOptions::new(),
                         );
                         for (s, h) in (seed..seed + wave).zip(handles) {
                             if h.join() != MixedJob::expected(s) {
@@ -173,11 +180,14 @@ fn admission_capacity_recovers_after_panics() {
     assert_eq!(stats.abandoned, PANICS);
     assert_eq!(stats.completed, 0);
 
-    // Full capacity is available again: fill it via try_submit, then
-    // drain correctly.
+    // Full capacity is available again: fill it via fail-fast
+    // submission, then drain correctly.
     let mut handles = Vec::new();
     for seed in 0..4u64 {
-        match server.try_submit(MixedJob::from_seed(seed)) {
+        match server.submit_with(
+            MixedJob::from_seed(seed),
+            SubmitOptions::new().on_full(OnFull::RejectNew),
+        ) {
             Ok(h) => handles.push((seed, h)),
             Err(_) => panic!("slot {seed} still leaked after panics"),
         }
@@ -197,7 +207,7 @@ fn admission_capacity_recovers_after_panics() {
 }
 
 #[test]
-fn try_submit_sheds_load_but_never_corrupts() {
+fn reject_new_sheds_load_but_never_corrupts() {
     // Fast-fail submission under overload: rejected jobs are returned
     // intact and resubmitted later; accepted ones must all be correct.
     let server = Arc::new(
@@ -212,7 +222,7 @@ fn try_submit_sheds_load_but_never_corrupts() {
         (0..200).map(|s| (s, MixedJob::from_seed(s))).collect();
     let mut handles = Vec::new();
     while let Some((seed, job)) = pending.pop() {
-        match server.try_submit(job) {
+        match server.submit_with(job, SubmitOptions::new().on_full(OnFull::RejectNew)) {
             Ok(h) => handles.push((seed, h)),
             Err(job) => {
                 // Shed: park the job again and give the server room.

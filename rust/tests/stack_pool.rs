@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 
 use rustfork::numa::NumaTopology;
 use rustfork::rt::Pool;
-use rustfork::service::{jobs::MixedJob, JobServer};
+use rustfork::service::{jobs::MixedJob, JobServer, SubmitOptions};
 use rustfork::stack::{SegmentedStack, StackShelf};
 use rustfork::task::FnTask;
 use rustfork::workloads::fib::{fib_exact, Fib};
@@ -91,9 +91,12 @@ fn shelf_recycles_across_shards() {
         .workers_per_shard(2)
         .capacity(64)
         .build();
+    let mut batch = Vec::new();
+    let mut handles = Vec::new();
     for round in 0..8 {
-        let handles = server.submit_batch((0..16).map(MixedJob::from_seed).collect());
-        for (seed, h) in (0..16).zip(handles) {
+        batch.extend((0..16).map(MixedJob::from_seed));
+        server.submit_batch_with(&mut batch, &mut handles, SubmitOptions::new());
+        for (seed, h) in (0..16).zip(handles.drain(..)) {
             assert_eq!(h.join(), MixedJob::expected(seed), "round {round}");
         }
     }

@@ -19,7 +19,7 @@ use rustfork::numa::NumaTopology;
 use rustfork::rt::tune::{pick_coldest, ParkedSet};
 use rustfork::rt::Pool;
 use rustfork::sched::SchedulerKind;
-use rustfork::service::{jobs::DeepJob, jobs::MixedJob, JobServer, PinnedShard};
+use rustfork::service::{jobs::DeepJob, jobs::MixedJob, JobServer, PinnedShard, SubmitOptions};
 use rustfork::sync::XorShift64;
 
 /// Deep enough that each job's live stack (~80 bytes/frame) dwarfs the
@@ -388,7 +388,9 @@ fn all_tuners_off_matches_serial_checksums() {
         );
     }
     // ...and batched waves, in input order.
-    let handles = server.submit_batch((0..128).map(MixedJob::from_seed).collect());
+    let mut batch: Vec<_> = (0..128).map(MixedJob::from_seed).collect();
+    let mut handles = Vec::new();
+    server.submit_batch_with(&mut batch, &mut handles, SubmitOptions::new());
     for (seed, h) in (0..128).zip(handles) {
         assert_eq!(h.join(), MixedJob::expected(seed), "batched seed {seed}");
     }
