@@ -14,6 +14,12 @@
 //!   job) with adaptive stacklet sizing disabled vs enabled — the
 //!   feedback-tuning layer should drive stacklet grows/job from ≥1 to
 //!   ~0 after warmup while keeping allocs/job at 0,
+//! * **started-job migration** (long-phase jobs yielding at root-level
+//!   safe points, pinned to shard 0, the unstarted lane's hysteresis
+//!   pinned shut) with the started-capsule lane disabled vs enabled —
+//!   the relocatable-stack layer should re-home suspended jobs to the
+//!   idle shard (`jobs_migrated_started` > 0, adopted stacklets move
+//!   with them) and recover throughput the unstarted lane cannot touch,
 //! * **tenant contention** (an aggressor flooding a 64-job window while
 //!   a weight-4 victim runs closed-loop) under FIFO vs weighted-fair
 //!   admission — the QoS layer should bound the victim's slowdown near
@@ -65,6 +71,17 @@ fn main() {
             "# skewed-placement migration speedup: {:.2}x ({} jobs migrated, target >= 1.5x)",
             on.jobs_per_sec / off.jobs_per_sec.max(1e-9),
             on.jobs_migrated,
+        );
+    }
+    let started_off = report.configs.iter().find(|c| c.name.contains("no started migration"));
+    let started_on = report.configs.iter().find(|c| c.name.contains("+ started migration"));
+    if let (Some(off), Some(on)) = (started_off, started_on) {
+        println!(
+            "# started-capsule migration speedup: {:.2}x ({} started jobs re-homed, \
+             {} stacklets adopted, target >= 1.5x under long-job skew)",
+            on.jobs_per_sec / off.jobs_per_sec.max(1e-9),
+            on.jobs_migrated_started,
+            on.stacklets_adopted,
         );
     }
     let fixed = report.configs.iter().find(|c| c.name.contains("fixed stacklets"));

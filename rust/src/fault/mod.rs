@@ -23,6 +23,8 @@
 //! | [`FaultSite::DelayedWake`]    | `sched::lazy` idle path, pre-park       | worker naps before parking |
 //! | [`FaultSite::SpoutOverflow`]  | `service::MigrationHub::spout_room`     | spout reports full; divert falls back |
 //! | [`FaultSite::ShelfExhausted`] | `stack::StackShelf::pop`                | recycle miss; fresh stack allocated |
+//! | [`FaultSite::StackAdoptRace`] | `service::MigrationHub` started-lane claim | lease handoff reports contended; thief retries |
+//! | [`FaultSite::SafePointStall`] | `rt::worker` root-level yield            | yield point delayed; strand keeps running at home |
 //!
 //! Every effect is one the system must already tolerate; injection
 //! just makes the rare paths common enough to assert invariants over.
@@ -45,10 +47,18 @@ pub enum FaultSite {
     SpoutOverflow = 2,
     /// Report the stack shelf empty, forcing a fresh stack allocation.
     ShelfExhausted = 3,
+    /// Lose the started-capsule lease handoff (the claim's spout CAS
+    /// reports contended), forcing the claiming thief onto its retry
+    /// path while the capsule stays parked in the lane.
+    StackAdoptRace = 4,
+    /// Delay a cooperative safe point: the root-level yield is declined
+    /// once and the strand keeps running on its home shard until the
+    /// next yield.
+    SafePointStall = 5,
 }
 
 /// Number of [`FaultSite`] variants (array size for per-site state).
-pub const FAULT_SITES: usize = 4;
+pub const FAULT_SITES: usize = 6;
 
 /// Process-global arm flag: the only cost paid while faults are off.
 static ARMED: AtomicBool = AtomicBool::new(false);
@@ -94,6 +104,8 @@ impl FaultPlan {
         FaultPlan {
             seed,
             sites: [
+                SiteState::off(),
+                SiteState::off(),
                 SiteState::off(),
                 SiteState::off(),
                 SiteState::off(),

@@ -21,6 +21,14 @@
 //! sizing off vs on — the headline comparison for the feedback-tuning
 //! layer, mirroring how the skewed pair showcases migration.
 //!
+//! The **started-migration pair** drives identical pinned long-phase
+//! traffic ([`LongPhaseJob`] chains yielding at root-level safe points,
+//! everything placed on shard 0, unstarted-lane hysteresis pinned shut)
+//! with the started-capsule lane off vs on — the headline comparison
+//! for the relocatable-stack layer: the "on" side must report
+//! `jobs_migrated_started > 0` with `stacklets_adopted` counting the
+//! chains that re-homed.
+//!
 //! The **tenant-contention pair** drives identical skewed two-tenant
 //! traffic (an aggressor flooding a windowed backlog while a victim
 //! runs closed-loop) under [`Fifo`] vs [`WeightedFair`] admission —
@@ -36,18 +44,19 @@
 //! park-aware paths are indexed by the parked bitmask (O(1) in worker
 //! count); `repro bench scaling --check` gates exactly that.
 //!
-//! [`to_json`] renders the report machine-readably (schema 4 embeds the
-//! scaling curve when one was measured and a per-tenant slowdown block
-//! for the contention pair); the launcher's `repro bench --json <path>`
-//! writes it to seed the perf trajectory (`BENCH_service.json`).
+//! [`to_json`] renders the report machine-readably (schema 5 embeds the
+//! scaling curve when one was measured, a per-tenant slowdown block for
+//! the contention pair and the started-migration counters on every
+//! configuration); the launcher's `repro bench --json <path>` writes it
+//! to seed the perf trajectory (`BENCH_service.json`).
 
 use crate::mem::MemScope;
 use crate::numa::NumaTopology;
 use crate::rt::pool::RootHandle;
 use crate::sched::SchedulerKind;
 use crate::service::{
-    jobs::DeepJob, jobs::MixedJob, AdmissionPolicy, Fifo, JobServer, LeastLoaded, OnFull,
-    PinnedShard, PlacementPolicy, RoundRobin, SubmitOptions, WeightedFair,
+    jobs::DeepJob, jobs::LongPhaseJob, jobs::MixedJob, AdmissionPolicy, Fifo, JobServer,
+    LeastLoaded, OnFull, PinnedShard, PlacementPolicy, RoundRobin, SubmitOptions, WeightedFair,
 };
 
 /// Knobs for one bench invocation (env-overridable through
@@ -119,6 +128,15 @@ pub struct ConfigReport {
     /// Jobs claimed by a non-home shard over the whole configuration
     /// run (the migration traffic behind any skewed-placement win).
     pub jobs_migrated: u64,
+    /// Whether the started-capsule lane (relocatable stacks) was
+    /// enabled.
+    pub started_migration: bool,
+    /// Started jobs re-homed at a safe point over the whole run — the
+    /// capsule-lane traffic behind the started-migration pair's win.
+    pub jobs_migrated_started: u64,
+    /// Stacklets whose footprint moved shelf columns with those
+    /// capsules (`Σ leased == Σ adopted` at quiescence).
+    pub stacklets_adopted: u64,
     /// Admission-policy name ("fifo" for every non-contention
     /// configuration — the builder default).
     pub admission: &'static str,
@@ -291,6 +309,35 @@ pub fn drive_deep(server: &JobServer, jobs: u64, window: usize, depth: u32) -> u
     failures
 }
 
+/// Long-phase driver: `window` [`LongPhaseJob`]s of `phases` root-level
+/// safe points in flight at a time. Each job yields between compute
+/// bursts, so a saturated shard's suspended jobs are live candidates
+/// for started-capsule migration. Returns the number of result
+/// mismatches.
+pub fn drive_long_phase(
+    server: &JobServer,
+    jobs: u64,
+    window: usize,
+    phases: u32,
+    spin: u32,
+) -> u64 {
+    let mut failures = 0;
+    let mut handles = Vec::with_capacity(window.max(1));
+    let expected = LongPhaseJob::expected(phases, spin);
+    let mut done = 0u64;
+    while done < jobs {
+        let wave = (window.max(1) as u64).min(jobs - done);
+        for _ in 0..wave {
+            handles.push(server.submit(LongPhaseJob::new(phases, spin)));
+        }
+        for h in handles.drain(..) {
+            failures += u64::from(h.join() != expected);
+        }
+        done += wave;
+    }
+    failures
+}
+
 /// Value at quantile `q` (0..=1) of an ascending-sorted sample, with
 /// linear interpolation.
 fn percentile(sorted: &[f64], q: f64) -> f64 {
@@ -364,6 +411,15 @@ struct BenchConfig {
     /// `Some(depth)`: drive [`DeepJob`] chains instead of MixedJobs
     /// (uses the window driver; `window` must be set).
     deep: Option<u32>,
+    /// `Some((phases, spin))`: drive [`LongPhaseJob`]s instead of
+    /// MixedJobs (uses the window driver; `window` must be set). Pins
+    /// the unstarted-lane hysteresis shut so only started capsules can
+    /// cross shards — the started-migration pair toggles
+    /// `started_migration` over this traffic.
+    long_phase: Option<(u32, u32)>,
+    /// Started-capsule lane on/off (builder default on; the
+    /// started-migration pair toggles this).
+    started_migration: bool,
     /// Adaptive stacklet sizing on/off (the deep pair toggles this; all
     /// other configurations run with the tuners at their defaults).
     adaptive_stacklets: bool,
@@ -385,6 +441,7 @@ fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
         .scheduler(cfg.sched)
         .policy_boxed(cfg.policy.boxed())
         .migration(cfg.migration)
+        .started_migration(cfg.started_migration)
         .adaptive_stacklets(cfg.adaptive_stacklets)
         // Skewed configurations should demonstrate migration promptly.
         .migration_hysteresis(if cfg.policy == PolicyKind::Pinned0 {
@@ -392,6 +449,12 @@ fn build_server(opts: &BenchOptions, cfg: &BenchConfig) -> JobServer {
         } else {
             crate::service::DEFAULT_MIGRATION_HYSTERESIS
         });
+    if cfg.long_phase.is_some() {
+        // The started pair isolates the capsule lane: pin the unstarted
+        // lane's hysteresis shut so any cross-shard win is the
+        // relocatable-stack layer's alone.
+        b = b.migration_hysteresis(64).migration_hysteresis_bounds(64, 64);
+    }
     if let Some(kind) = cfg.contention {
         b = b
             .admission_policy_boxed(kind.boxed())
@@ -413,6 +476,18 @@ const DEEP_WINDOW: usize = 16;
 /// stacklet.
 const DEEP_DEPTH: u32 = 2_000;
 
+/// In-flight window of the started-migration pair: enough suspended
+/// jobs on the pinned shard that its admission backlog trips the
+/// capsule lane's demand gate.
+const STARTED_WINDOW: usize = 32;
+
+/// Root-level safe points per job of the started-migration pair.
+const STARTED_PHASES: u32 = 4;
+
+/// LCG steps per phase of the started-migration pair: long enough that
+/// a re-homed job's remaining phases repay the handoff.
+const STARTED_SPIN: u32 = 10_000;
+
 /// Registered tenant names of the contention pair.
 const CONTENTION_VICTIM: &str = "victim";
 const CONTENTION_AGGRESSOR: &str = "aggressor";
@@ -433,6 +508,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: None,
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -444,6 +521,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: None,
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -455,6 +534,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: None,
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -466,6 +547,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: None,
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -480,6 +563,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: Some(SKEW_WINDOW),
             migration: false,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -491,6 +576,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: Some(SKEW_WINDOW),
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -505,6 +592,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: Some(DEEP_WINDOW),
             migration: true,
             deep: Some(DEEP_DEPTH),
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: false,
             contention: None,
         },
@@ -516,6 +605,39 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: Some(DEEP_WINDOW),
             migration: true,
             deep: Some(DEEP_DEPTH),
+            long_phase: None,
+            started_migration: true,
+            adaptive_stacklets: true,
+            contention: None,
+        },
+        // The started-migration pair: identical pinned long-phase
+        // traffic (STARTED_WINDOW suspended-capable jobs in flight on
+        // shard 0, the unstarted lane pinned shut), started-capsule
+        // lane off vs on — the headline comparison for the
+        // relocatable-stack layer.
+        BenchConfig {
+            label: "long-phase shard0, no started migration",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::Pinned0,
+            batch: 1,
+            window: Some(STARTED_WINDOW),
+            migration: true,
+            deep: None,
+            long_phase: Some((STARTED_PHASES, STARTED_SPIN)),
+            started_migration: false,
+            adaptive_stacklets: true,
+            contention: None,
+        },
+        BenchConfig {
+            label: "long-phase shard0 + started migration",
+            sched: SchedulerKind::Lazy,
+            policy: PolicyKind::Pinned0,
+            batch: 1,
+            window: Some(STARTED_WINDOW),
+            migration: true,
+            deep: None,
+            long_phase: Some((STARTED_PHASES, STARTED_SPIN)),
+            started_migration: true,
             adaptive_stacklets: true,
             contention: None,
         },
@@ -531,6 +653,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: None,
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: Some(AdmissionKind::Fifo),
         },
@@ -542,6 +666,8 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             window: None,
             migration: true,
             deep: None,
+            long_phase: None,
+            started_migration: true,
             adaptive_stacklets: true,
             contention: Some(AdmissionKind::WeightedFair),
         },
@@ -564,10 +690,13 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
         // in measure()'s first call.
         let scope = MemScope::begin();
         let m = super::measure(opts.reps, 0.2, || {
-            let failures = match (cfg.deep, cfg.window) {
-                (Some(depth), w) => drive_deep(&server, opts.jobs, w.unwrap_or(1), depth),
-                (None, Some(w)) => drive_windowed(&server, opts.jobs, w),
-                (None, None) => drive(&server, opts.jobs, cfg.batch),
+            let failures = match (cfg.long_phase, cfg.deep, cfg.window) {
+                (Some((phases, spin)), _, w) => {
+                    drive_long_phase(&server, opts.jobs, w.unwrap_or(1), phases, spin)
+                }
+                (None, Some(depth), w) => drive_deep(&server, opts.jobs, w.unwrap_or(1), depth),
+                (None, None, Some(w)) => drive_windowed(&server, opts.jobs, w),
+                (None, None, None) => drive(&server, opts.jobs, cfg.batch),
             };
             assert_eq!(failures, 0, "result mismatches under {label}");
         });
@@ -595,7 +724,24 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
         let alloc_before = crate::mem::alloc_count();
         let mut seed = 0u64;
         while seed < opts.latency_jobs {
-            if let Some(depth) = cfg.deep {
+            if let Some((phases, spin)) = cfg.long_phase {
+                let w = cfg.window.unwrap_or(1);
+                let wave = (w as u64).min(opts.latency_jobs - seed);
+                let expected = LongPhaseJob::expected(phases, spin);
+                for _ in 0..wave {
+                    window_buf.push((
+                        expected,
+                        std::time::Instant::now(),
+                        server.submit(LongPhaseJob::new(phases, spin)),
+                    ));
+                }
+                for (e, t0, h) in window_buf.drain(..) {
+                    let got = h.join();
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(got, e, "long-phase latency pass mismatch");
+                }
+                seed += wave;
+            } else if let Some(depth) = cfg.deep {
                 let w = cfg.window.unwrap_or(1);
                 let wave = (w as u64).min(opts.latency_jobs - seed);
                 for _ in 0..wave {
@@ -668,6 +814,9 @@ pub fn run(opts: &BenchOptions) -> ServiceBenchReport {
             peak_bytes,
             migration: server.migration_enabled(),
             jobs_migrated: end_metrics.jobs_migrated,
+            started_migration: cfg.started_migration,
+            jobs_migrated_started: end_metrics.jobs_migrated_started,
+            stacklets_adopted: end_metrics.stacklets_adopted,
             admission: server.admission_policy_name(),
             tenants: None,
         });
@@ -814,6 +963,9 @@ fn run_contention(opts: &BenchOptions, cfg: &BenchConfig) -> ConfigReport {
         peak_bytes,
         migration: server.migration_enabled(),
         jobs_migrated: end.jobs_migrated,
+        started_migration: cfg.started_migration,
+        jobs_migrated_started: end.jobs_migrated_started,
+        stacklets_adopted: end.stacklets_adopted,
         admission: server.admission_policy_name(),
         tenants: Some(vec![
             TenantSlowdown {
@@ -924,7 +1076,7 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"service\",\n");
-    s.push_str("  \"schema\": 4,\n");
+    s.push_str("  \"schema\": 5,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str(&format!("  \"jobs\": {},\n", r.jobs));
     s.push_str(&format!("  \"workers\": {},\n", r.workers));
@@ -943,6 +1095,12 @@ pub fn to_json(r: &ServiceBenchReport, measured: bool) -> String {
         s.push_str(&format!("      \"batch\": {},\n", c.batch));
         s.push_str(&format!("      \"migration\": {},\n", c.migration));
         s.push_str(&format!("      \"jobs_migrated\": {},\n", c.jobs_migrated));
+        s.push_str(&format!("      \"started_migration\": {},\n", c.started_migration));
+        s.push_str(&format!(
+            "      \"jobs_migrated_started\": {},\n",
+            c.jobs_migrated_started
+        ));
+        s.push_str(&format!("      \"stacklets_adopted\": {},\n", c.stacklets_adopted));
         s.push_str(&format!("      \"jobs_per_sec\": {:.1},\n", c.jobs_per_sec));
         s.push_str(&format!("      \"p50_us\": {:.2},\n", c.p50_us));
         s.push_str(&format!("      \"p99_us\": {:.2},\n", c.p99_us));
@@ -1028,7 +1186,7 @@ pub fn scaling_to_json(r: &ScalingReport, measured: bool) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"service-scaling\",\n");
-    s.push_str("  \"schema\": 4,\n");
+    s.push_str("  \"schema\": 5,\n");
     s.push_str(&format!("  \"measured\": {measured},\n"));
     s.push_str("  \"scaling\": ");
     push_scaling_object(&mut s, r, "  ");
@@ -1101,7 +1259,7 @@ mod tests {
             latency_jobs: 10,
         };
         let report = run(&opts);
-        assert_eq!(report.configs.len(), 10);
+        assert_eq!(report.configs.len(), 12);
         for c in &report.configs {
             assert!(c.jobs_per_sec > 0.0, "{}: zero throughput", c.name);
             assert!(c.p99_us >= c.p50_us, "{}: p99 < p50", c.name);
@@ -1118,6 +1276,29 @@ mod tests {
             report.configs.iter().find(|c| c.name.contains("adaptive stacklets"));
         assert!(fixed.is_some_and(|c| c.hot_stacklet_bytes == 0));
         assert!(adaptive.is_some_and(|c| c.hot_stacklet_bytes > 0));
+        // The started-migration pair must exist with the capsule lane
+        // off/on respectively; the "off" side must report zero capsule
+        // traffic (actual traffic on the "on" side is load-dependent,
+        // so only the lane flag and the off-side zeroes are asserted
+        // at this tiny scale).
+        let started_off = report
+            .configs
+            .iter()
+            .find(|c| c.name.contains("no started migration"))
+            .expect("started-off config");
+        let started_on = report
+            .configs
+            .iter()
+            .find(|c| c.name.contains("+ started migration"))
+            .expect("started-on config");
+        assert!(!started_off.started_migration);
+        assert_eq!(started_off.jobs_migrated_started, 0);
+        assert_eq!(started_off.stacklets_adopted, 0);
+        assert!(started_on.started_migration);
+        assert!(
+            started_on.stacklets_adopted >= started_on.jobs_migrated_started,
+            "each re-homed capsule carries at least one stacklet"
+        );
         // The contention pair must exist under each admission policy
         // with a two-tenant slowdown block; non-contention rows report
         // the default (fifo) admission and no tenants.
@@ -1148,9 +1329,12 @@ mod tests {
             .all(|c| c.admission == "fifo"));
         let json = to_json(&report, true);
         assert!(json.contains("\"bench\": \"service\""));
-        assert!(json.contains("\"schema\": 4"));
+        assert!(json.contains("\"schema\": 5"));
         assert!(json.contains("\"allocs_per_job\""));
         assert!(json.contains("\"jobs_migrated\""));
+        assert!(json.contains("\"started_migration\""));
+        assert!(json.contains("\"jobs_migrated_started\""));
+        assert!(json.contains("\"stacklets_adopted\""));
         assert!(json.contains("\"stacklet_grows_per_job\""));
         assert!(json.contains("\"hot_stacklet_bytes\""));
         assert!(json.contains("\"wake_misses\""));
@@ -1197,7 +1381,7 @@ mod tests {
         };
         let embedded = to_json(&full, true);
         for json in [standalone.as_str(), embedded.as_str()] {
-            assert!(json.contains("\"schema\": 4"));
+            assert!(json.contains("\"schema\": 5"));
             assert!(json.contains("\"strong_jobs_per_sec\""));
             assert!(json.contains("\"weak_jobs_per_sec_per_worker\""));
             assert!(json.contains("\"submit_ns_per_job\""));

@@ -38,8 +38,11 @@
 //!   placement (round-robin / least-loaded / pinned), pluggable
 //!   **admission** (FIFO / strict-priority / weighted-fair multi-tenant
 //!   QoS over per-shard class queues), bounded-admission backpressure,
-//!   and **cross-shard work migration** (hysteresis-gated overflow
-//!   spouts claimed by starved shards in NUMA victim order).
+//!   **cross-shard work migration** of both unstarted jobs
+//!   (hysteresis-gated overflow spouts claimed by starved shards in
+//!   NUMA victim order) and **started jobs** (safe-point capsules whose
+//!   segmented stacks are re-homed by pointer handoff), and **elastic
+//!   shard drain** ([`service::JobServer::drain_shard`]).
 //!
 //! ## Quickstart
 //!
@@ -139,9 +142,6 @@
 //! [`service::OnFull`] full-server behaviour (`Policy` defers to the
 //! builder's [`service::ShedPolicy`], `Block` waits, `RejectNew` fails
 //! fast after giving a shed-oldest policy one chance to make room).
-//! The older `submit_with_deadline` / `try_submit` / `submit_batch`
-//! entry points survive as deprecated one-line shims over the same
-//! pair.
 //!
 //! ### Multi-tenant QoS
 //!
@@ -192,25 +192,60 @@
 //! per-tenant so one tenant's deep jobs don't inflate another's hot
 //! size.
 //!
-//! ### Cross-shard migration
+//! ### Cross-shard migration: two lanes
 //!
 //! Shards are NUMA-local sub-pools, so intra-job steals never cross a
 //! node — but a skewed placement stream could saturate one shard while
 //! another idles. The migration layer (on by default for multi-shard
-//! servers) keeps the shards' isolation for the common case and opens a
-//! relief valve under **sustained** imbalance: when a placement's shard
-//! exceeds the emptiest shard's in-flight count by the hysteresis
-//! margin ([`service::JobServerBuilder::migration_hysteresis`]) for
-//! several consecutive placements, the job is parked in the shard's
-//! bounded **overflow spout** — an intrusive MPSC linking root frames
-//! through `FrameHeader::qnext`, so diversion performs zero heap
-//! allocations. Idle workers poll the spouts *before parking*, their
-//! own shard's first, then siblings nearest-first per
-//! [`numa::NumaTopology::node_distance`] (the paper's hierarchical
-//! NUMA-aware stealing, lifted from cores to shards). `jobs_migrated`
-//! and `migration_misses` in [`metrics::MetricsSnapshot`] expose the
-//! traffic; the skewed-placement configurations of `benches/service.rs`
-//! measure the throughput recovery, with allocs/job still 0.
+//! servers) keeps the shards' isolation for the common case and opens
+//! two relief valves under imbalance:
+//!
+//! * **Unstarted jobs** ride the **overflow spouts**: when a
+//!   placement's shard exceeds the emptiest shard's in-flight count by
+//!   the hysteresis margin
+//!   ([`service::JobServerBuilder::migration_hysteresis`]) for several
+//!   consecutive placements, the job is parked in the shard's bounded
+//!   spout — an intrusive MPSC linking root frames through
+//!   `FrameHeader::qnext`, so diversion performs zero heap
+//!   allocations. Idle workers poll the spouts *before parking*, their
+//!   own shard's first, then siblings nearest-first per
+//!   [`numa::NumaTopology::node_distance`] (the paper's hierarchical
+//!   NUMA-aware stealing, lifted from cores to shards).
+//! * **Started jobs** ride the **started-capsule lane**. A job that
+//!   yields ([`task::Step::Yield`]) at a **root-level safe point** —
+//!   `signals == steals` for its frame and the fused root block is the
+//!   only live allocation on its segmented stack, so the stacklet
+//!   chain is self-contained — may be **detached** by its worker: the
+//!   worker swaps onto a shelf-popped spare, the suspended strand
+//!   becomes a *capsule* (frame + stack) in its home shard's lane, and
+//!   whichever shard claims it **adopts** the whole stacklet chain by
+//!   pointer handoff via a transferable [`stack::StackLease`] — no
+//!   bytes copied, footprint accounting moved atomically between the
+//!   shelf's per-shard columns (`Σ leased == Σ adopted` at quiescence,
+//!   a chaos-suite invariant). Detach is **demand-driven**: it only
+//!   happens when the home shard has an admission backlog and some
+//!   sibling shard has parked workers (or the home shard is draining),
+//!   gated by a consecutive-demand streak — a balanced system never
+//!   pays more than a couple of relaxed loads per yield. Long
+//!   non-forking phases opt in by yielding between phases
+//!   ([`service::jobs::LongPhaseJob`] is the reference shape); yields
+//!   inside a fork-join scope or off the root frame are free no-ops.
+//!
+//! **Elastic drain** composes both lanes:
+//! [`service::JobServer::drain_shard`] marks a shard draining (new
+//! placements redirect, its pool stops claiming lane work, safe-point
+//! detach becomes unconditional), evacuates every queued admission
+//! frame, diverted spout frame and parked capsule to the surviving
+//! shards, discards dead frames (cancelled / shed / expired) with full
+//! accounting, and returns once the shard's queues are empty and its
+//! workers idle — no stranded handles, shard decommissioned.
+//!
+//! `jobs_migrated`, `jobs_migrated_started`, `stacklets_adopted` and
+//! `migration_misses` in [`metrics::MetricsSnapshot`] expose the
+//! traffic; the skewed-placement and started-migration configurations
+//! of `benches/service.rs` measure the throughput recovery, with
+//! allocs/job still 0 (regression-gated by the started-migration
+//! scenario in `rust/tests/alloc_regression.rs`).
 //!
 //! ## Feedback tuning
 //!
@@ -347,12 +382,15 @@
 //! every build (one relaxed load per site while disarmed). Sites:
 //! workload panic (first resume of a served job), delayed wake (lazy
 //! scheduler's pre-park window), spout overflow (migration divert
-//! fallback), shelf exhaustion (stack recycle miss). The chaos suite
-//! (`rust/tests/chaos.rs`, seed-matrixed in CI) arms each site across
-//! scheduler × migration configurations and asserts the runtime's
-//! invariants hold under fire: `signals == steals` at quiescence, the
-//! admission accounting identity, full capacity recovery, and no
-//! un-quarantined poisoned stacks.
+//! fallback), shelf exhaustion (stack recycle miss), stack-adopt race
+//! (a started-capsule claim loses its race and retries), and
+//! safe-point stall (a root-level yield declines to detach once). The
+//! chaos suite (`rust/tests/chaos.rs`, seed-matrixed in CI) arms each
+//! site across scheduler × migration configurations and asserts the
+//! runtime's invariants hold under fire: `signals == steals` at
+//! quiescence, the admission accounting identity, the started-capsule
+//! lease ledger balance, full capacity recovery, and no un-quarantined
+//! poisoned stacks.
 
 pub mod algo;
 pub mod analysis;

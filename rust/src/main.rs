@@ -419,7 +419,7 @@ fn bench(args: &[String]) {
          service   — job-service throughput/latency/allocs-per-job\n\
          \n\
          repro bench --json <path> — run the service matrix + scaling\n\
-         curve and write machine-readable results (schema 4)\n\
+         curve and write machine-readable results (schema 5)\n\
          repro bench scaling [--max-p N] [--json <path>] [--check <baseline.json>]\n\
          \x20   — per-P strong/weak scaling + submit cost; --check gates\n\
          \x20     submit-cost flatness and (when the baseline is measured)\n\

@@ -47,6 +47,14 @@ pub struct WorkerCounters {
     /// flight). A high miss:migration ratio means thieves are fighting
     /// over a trickle of diverted work.
     pub migration_misses: AtomicU64,
+    /// **Started** root jobs this worker claimed from another shard's
+    /// started-capsule lane (the job yielded at a root-level safe point
+    /// on its home shard and was re-homed here, stack and all). Subset
+    /// of neither `jobs_migrated` nor `steals` — a third movement kind.
+    pub jobs_migrated_started: AtomicU64,
+    /// Stacklets whose ownership this worker adopted along with claimed
+    /// started capsules (pointer handoff; no bytes copied).
+    pub stacklets_adopted: AtomicU64,
     /// Root jobs discarded because the client cancelled them
     /// ([`crate::rt::RootHandle::cancel`]) — either unstarted at a
     /// dequeue/steal/claim boundary, or stopped at a fork point after
@@ -89,17 +97,27 @@ impl WorkerCounters {
         bump_stacks_poisoned => stacks_poisoned,
         bump_jobs_migrated => jobs_migrated,
         bump_migration_misses => migration_misses,
+        bump_jobs_migrated_started => jobs_migrated_started,
         bump_jobs_cancelled => jobs_cancelled,
         bump_jobs_shed => jobs_shed,
         bump_deadline_expired => deadline_expired,
     }
+
+    /// Add `n` adopted stacklets (relaxed) — one claimed capsule hands
+    /// over a whole chain at once.
+    #[inline]
+    pub fn add_stacklets_adopted(&self, n: u64) {
+        self.stacklets_adopted.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 /// Per-tenant counter cell carried in [`MetricsSnapshot::tenants`].
-/// Slot 0 is the default (tenant-less) class; tenant ids past the
-/// register file ([`crate::rt::tune::TENANT_REGISTERS`]) clamp into the
-/// last slot. Filled by [`crate::service::JobServer::metrics`] from the
-/// admission core; all-zero for plain pools.
+/// Slot 0 is the default (tenant-less) class. The snapshot carries the
+/// first [`crate::rt::tune::TENANT_REGISTERS`] slots (the struct stays
+/// `Copy`); a server whose register file grew past that surfaces the
+/// full per-tenant table through `ServerStats` instead. Filled by
+/// [`crate::service::JobServer::metrics`] from the admission core;
+/// all-zero for plain pools.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct TenantCell {
     /// Jobs admitted for this tenant.
@@ -173,6 +191,14 @@ pub struct MetricsSnapshot {
     /// Spout polls that saw divertible work but lost the claim race
     /// (see `WorkerCounters::migration_misses`).
     pub migration_misses: u64,
+    /// Started root jobs re-homed across shards via the migration hub's
+    /// started-capsule lane (root yielded at a safe point; the claiming
+    /// shard adopted its stack). Disjoint from `jobs_migrated`.
+    pub jobs_migrated_started: u64,
+    /// Stacklets adopted along with started-capsule claims (pointer
+    /// handoff — the byte balance between the leasing and adopting
+    /// shard columns is asserted by the chaos suite).
+    pub stacklets_adopted: u64,
     /// Stacklet-overflow (grow) heap allocations observed at root
     /// completion — the adaptive-sizing feedback signal
     /// ([`crate::rt::tune::FootprintTuner`]). Sourced from the stack
@@ -236,6 +262,8 @@ impl MetricsSnapshot {
         self.stacks_poisoned += other.stacks_poisoned;
         self.jobs_migrated += other.jobs_migrated;
         self.migration_misses += other.migration_misses;
+        self.jobs_migrated_started += other.jobs_migrated_started;
+        self.stacklets_adopted += other.stacklets_adopted;
         self.stacklet_grows += other.stacklet_grows;
         self.hot_stacklet_bytes = self.hot_stacklet_bytes.max(other.hot_stacklet_bytes);
         self.wake_misses += other.wake_misses;
@@ -267,6 +295,8 @@ impl MetricsSnapshot {
             stacks_poisoned: self.stacks_poisoned - earlier.stacks_poisoned,
             jobs_migrated: self.jobs_migrated - earlier.jobs_migrated,
             migration_misses: self.migration_misses - earlier.migration_misses,
+            jobs_migrated_started: self.jobs_migrated_started - earlier.jobs_migrated_started,
+            stacklets_adopted: self.stacklets_adopted - earlier.stacklets_adopted,
             stacklet_grows: self.stacklet_grows - earlier.stacklet_grows,
             hot_stacklet_bytes: self.hot_stacklet_bytes,
             wake_misses: self.wake_misses - earlier.wake_misses,
@@ -320,6 +350,8 @@ impl Metrics {
             s.stacks_poisoned += w.stacks_poisoned.load(Ordering::Relaxed);
             s.jobs_migrated += w.jobs_migrated.load(Ordering::Relaxed);
             s.migration_misses += w.migration_misses.load(Ordering::Relaxed);
+            s.jobs_migrated_started += w.jobs_migrated_started.load(Ordering::Relaxed);
+            s.stacklets_adopted += w.stacklets_adopted.load(Ordering::Relaxed);
             s.jobs_cancelled += w.jobs_cancelled.load(Ordering::Relaxed);
             s.jobs_shed += w.jobs_shed.load(Ordering::Relaxed);
             s.deadline_expired += w.deadline_expired.load(Ordering::Relaxed);

@@ -136,6 +136,28 @@ pub trait ExternalWork: Send + Sync {
     fn looks_nonempty(&self) -> bool {
         false
     }
+
+    /// Cheap pre-check a worker makes at a root-level safe point
+    /// ([`crate::task::Step::Yield`]): would this source accept a
+    /// started-job capsule right now? Consulted *before* the worker pays
+    /// the detach (fresh stack + counter flush), so yields on a balanced
+    /// system cost a couple of atomic loads. Defaults to `false` —
+    /// plain pools never re-home started work.
+    fn wants_started(&self) -> bool {
+        false
+    }
+
+    /// Hand over a started-job capsule: a root frame suspended at a
+    /// root-level safe point, with its (self-contained) stack riding
+    /// along. Returns `None` when the source took ownership — the frame
+    /// will reappear through some pool's `poll` as a started
+    /// [`ExternalJob`] — or gives the frame back (`Some`) when the
+    /// source declined after all (a `wants_started` race); the caller
+    /// then reattaches and keeps running the strand at home. The default
+    /// declines.
+    fn offer_started(&self, frame: FramePtr) -> Option<FramePtr> {
+        Some(frame)
+    }
 }
 
 /// Result of polling an [`ExternalWork`] source.
@@ -157,6 +179,14 @@ pub struct ExternalJob {
     /// True when the frame crossed shards (claimed from a sibling
     /// shard's spout) — counted as `jobs_migrated`.
     pub migrated: bool,
+    /// True when the frame is a started-job capsule: a root that already
+    /// ran, yielded at a root-level safe point and was re-homed with its
+    /// stack. Counted as `jobs_migrated_started` when it also crossed
+    /// shards.
+    pub started: bool,
+    /// Stacklets that travelled with a started capsule's stack lease
+    /// (0 for unstarted jobs) — counted as `stacklets_adopted`.
+    pub adopted_stacklets: u64,
 }
 
 /// Why a root task drained through the abandonment machinery instead of

@@ -112,8 +112,19 @@ pub struct RootHot {
     /// Set by the worker that first resumes this root. A started root
     /// must never be discarded at a queue boundary — its continuation
     /// can legally reappear in a steal (a root that forked gets its
-    /// continuation stolen) while children are in flight.
+    /// continuation stolen) while children are in flight. Exception:
+    /// while `yielded` (below) is also set, the strand is suspended at a
+    /// root-level safe point and discard becomes legal again.
     started: AtomicBool,
+    /// Set while the strand is parked at a **root-level safe point**
+    /// ([`crate::task::Step::Yield`] accepted by the migration hub):
+    /// `signals == steals` holds, no child is in flight, and the fused
+    /// block is its stack's only allocation — exactly the
+    /// never-started shape, so queue-side discard (kill-byte checks at
+    /// claim) is sound again. Cleared by the worker that resumes the
+    /// capsule, which closes the discard window before any child can
+    /// exist.
+    yielded: AtomicBool,
     /// Kill byte: `KILL_LIVE` or the first `KILL_*` cause marked by a
     /// client cancel, the shed policy, or deadline expiry. Checked with
     /// one relaxed load at dequeue/steal/claim boundaries.
@@ -153,6 +164,7 @@ impl RootHot {
             abandoned: AtomicBool::new(false),
             clean: AtomicBool::new(false),
             started: AtomicBool::new(false),
+            yielded: AtomicBool::new(false),
             kill: AtomicU8::new(KILL_LIVE),
             deadline: AtomicU64::new(0),
             discard_task,
@@ -208,12 +220,37 @@ impl RootHot {
         self.started.load(Ordering::Relaxed)
     }
 
+    /// Mark / clear the root as parked at a root-level safe point. Set
+    /// (with `Release`, pairing with the claim-side `Acquire`) *before*
+    /// the detaching worker publishes the capsule to the started lane;
+    /// cleared by the resuming worker before the first post-claim step.
+    #[inline]
+    pub(crate) fn set_yielded(&self, v: bool) {
+        self.yielded.store(v, Ordering::Release);
+    }
+
+    /// Whether the strand is suspended at a root-level safe point (see
+    /// the field docs — started-but-yielded roots are discardable).
+    #[inline]
+    pub(crate) fn yielded(&self) -> bool {
+        self.yielded.load(Ordering::Acquire)
+    }
+
     /// Take an extra refcount reference (the shed-oldest registry holds
     /// one per tracked job so the `*const RootHot` stays valid until the
     /// registry prunes it).
     #[inline]
     pub(crate) fn retain(&self) {
         self.refs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The caller-supplied submission label (see the field docs). The
+    /// job server packs the placement shard and tenant slot in here;
+    /// the migration hub reads it back to account a started-capsule
+    /// handoff against the right tenant.
+    #[inline]
+    pub(crate) fn tag(&self) -> u64 {
+        self.tag
     }
 }
 
@@ -303,23 +340,30 @@ pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>, re
     release(hot);
 }
 
-/// Queue-side discard of a root that **never started**: drop the task
-/// state in place, fire the signal in abandoned mode and release the
-/// worker half — without ever resuming the job. Because the block is the
-/// stack's only allocation, the disposer can recycle the stack (the
-/// `clean` flag below) instead of quarantining it, which is what keeps
-/// cancel/shed allocation-free in steady state.
+/// Queue-side discard of a root that **never started** — or that is
+/// suspended at a **root-level safe point** (`started && yielded`, the
+/// migration hub's started-capsule lane): drop the task state in place,
+/// fire the signal in abandoned mode and release the worker half —
+/// without resuming the job. In both shapes the block is the stack's
+/// only allocation, so the disposer can recycle the stack (the `clean`
+/// flag below) instead of quarantining it, which is what keeps
+/// cancel/shed allocation-free in steady state. The abandon `hook`
+/// decodes the home shard/tenant from the block's tag, so accounting
+/// lands on the placement shard even when the capsule's stack has
+/// already left it.
 ///
 /// Idempotent through the same `abandoned` swap as [`abandon`]; safe to
 /// race with a concurrent handle-side `cancel` (that only marks the kill
 /// byte) but **not** with execution — callers must hold exclusive frame
 /// ownership (just popped/claimed it from a queue) and must have checked
-/// `!started()`.
+/// `!started() || yielded()`.
 ///
 /// # Safety
 /// `hot` must be the live hot part of a root block whose frame the
-/// caller exclusively owns and whose task has never been resumed. The
-/// caller must not touch the block after this call.
+/// caller exclusively owns and whose task is either never-resumed or
+/// suspended at a root-level yield (dropping the coroutine state in
+/// place is sound in both). The caller must not touch the block after
+/// this call.
 pub(crate) unsafe fn discard(hot: *const RootHot, hook: Option<&AbandonHook>, reason: DrainKind) {
     if (*hot).abandoned.swap(true, Ordering::AcqRel) {
         return;
@@ -350,11 +394,13 @@ pub(crate) unsafe fn discard(hot: *const RootHot, hook: Option<&AbandonHook>, re
 }
 
 /// Monomorphized task destructor stored in [`RootHot::discard_task`]:
-/// drops the `Frame<C>::task` of a never-started root in place.
+/// drops the `Frame<C>::task` of a never-started (or safe-point
+/// suspended) root in place.
 ///
 /// # Safety
-/// `f` must be the header of a `Frame<C>` whose task is initialized and
-/// has never been resumed or dropped.
+/// `f` must be the header of a `Frame<C>` whose task is initialized, not
+/// currently executing (never resumed, or suspended at a root-level
+/// yield), and not yet dropped.
 pub(crate) unsafe fn discard_shim<C: Coroutine>(f: *mut FrameHeader) {
     std::ptr::drop_in_place(std::ptr::addr_of_mut!((*(f as *mut Frame<C>)).task));
 }

@@ -64,19 +64,25 @@ pub const FOOTPRINT_DECAY_SHIFT: u32 = 8;
 /// reserve more than this.
 pub const MAX_HOT_STACKLET: usize = 8 * 1024 * 1024;
 
-/// Footprint register file size: one independently-converging hot-size
-/// register per tenant slot, so mixed tenants with disjoint stack depths
-/// learn separate hot stacklet sizes instead of fighting over one EMA.
-/// Slot 0 is the default (tenant-less) register; tenant ids past the
-/// file clamp into the last slot. Matches the per-tenant cells carried
-/// in [`crate::metrics::MetricsSnapshot`].
+/// **Default** footprint register file size: one independently-converging
+/// hot-size register per tenant slot, so mixed tenants with disjoint
+/// stack depths learn separate hot stacklet sizes instead of fighting
+/// over one EMA. Slot 0 is the default (tenant-less) register. The file
+/// is growable: [`FootprintTuner::with_registers`] (and the job server,
+/// which sizes it to its registered tenant count) allocate more; each
+/// register file clamps out-of-range slots into its own last register,
+/// so only deployments that stay at the default see ids ≥ 8 alias.
 pub const TENANT_REGISTERS: usize = 8;
 
-/// Map a tenant id to its footprint-register / metrics slot (ids past
-/// the register file share the last slot).
+/// Map a tenant id to its footprint-register / metrics slot. The mapping
+/// is identity: every structure indexed by a slot (the tuner's register
+/// file, [`crate::service::ServerCore`]'s tenant loads, the metrics
+/// tenant cells) clamps into its *own* capacity, so a server that grew
+/// its register file past [`TENANT_REGISTERS`] keeps high tenant ids
+/// distinct while smaller files degrade to sharing their last slot.
 #[inline]
 pub fn tenant_slot(tenant: u32) -> usize {
-    (tenant as usize).min(TENANT_REGISTERS - 1)
+    tenant as usize
 }
 
 /// Placements per hysteresis-retune window.
@@ -101,8 +107,11 @@ pub struct FootprintTuner {
     /// below it.
     floor: usize,
     /// Per-tenant-slot asymmetric EMAs of per-job peak live bytes (see
-    /// module docs). Slot 0 doubles as the tenant-less register.
-    hot_live: [AtomicUsize; TENANT_REGISTERS],
+    /// module docs). Slot 0 doubles as the tenant-less register; sized
+    /// at construction ([`TENANT_REGISTERS`] by default, growable via
+    /// [`Self::with_registers`]) and clamping out-of-range slots into
+    /// the last register.
+    hot_live: Vec<AtomicUsize>,
     /// Lifetime stacklet-grow (overflow heap-allocation) events observed
     /// at job completion — the `stacklet_grows` metric. Global across
     /// slots.
@@ -112,15 +121,28 @@ pub struct FootprintTuner {
 }
 
 impl FootprintTuner {
-    /// A tuner with the given actuator gate and first-stacklet floor.
+    /// A tuner with the given actuator gate and first-stacklet floor,
+    /// carrying the default [`TENANT_REGISTERS`]-slot register file.
     pub fn new(enabled: bool, floor: usize) -> Self {
+        Self::with_registers(enabled, floor, TENANT_REGISTERS)
+    }
+
+    /// [`Self::new`] with a register file of `registers` slots (at least
+    /// one). The job server sizes this to its registered tenant count so
+    /// tenants past the default file stop aliasing the last register.
+    pub fn with_registers(enabled: bool, floor: usize, registers: usize) -> Self {
         FootprintTuner {
             enabled,
             floor: floor.max(crate::stack::ALIGN),
-            hot_live: std::array::from_fn(|_| AtomicUsize::new(0)),
+            hot_live: (0..registers.max(1)).map(|_| AtomicUsize::new(0)).collect(),
             grows: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
         }
+    }
+
+    /// Register-file size (slots).
+    pub fn registers(&self) -> usize {
+        self.hot_live.len()
     }
 
     /// Whether the sizing actuator is live.
@@ -143,7 +165,7 @@ impl FootprintTuner {
         if grows > 0 {
             self.grows.fetch_add(grows, Ordering::Relaxed);
         }
-        let reg = &self.hot_live[slot.min(TENANT_REGISTERS - 1)];
+        let reg = &self.hot_live[slot.min(self.hot_live.len() - 1)];
         let cur = reg.load(Ordering::Relaxed);
         let next = if peak_live >= cur {
             peak_live
@@ -172,7 +194,7 @@ impl FootprintTuner {
         if !self.enabled {
             return self.floor;
         }
-        let reg = &self.hot_live[slot.min(TENANT_REGISTERS - 1)];
+        let reg = &self.hot_live[slot.min(self.hot_live.len() - 1)];
         let live = reg.load(Ordering::Relaxed).min(MAX_HOT_STACKLET);
         if live == 0 {
             return self.floor;
@@ -225,7 +247,7 @@ impl FootprintTuner {
         if !self.enabled {
             return 0;
         }
-        (0..TENANT_REGISTERS)
+        (0..self.hot_live.len())
             .map(|s| self.hot_first_capacity_for(s) as u64)
             .max()
             .unwrap_or(0)
@@ -717,11 +739,36 @@ mod tests {
         assert_eq!(shallow, 4096, "shallow tenant must stay at the floor");
         assert_eq!(t.hot_first_capacity(), 4096, "slot 0 untouched");
         assert_eq!(t.hot_bytes_gauge(), deep as u64, "gauge is the max register");
-        // Ids past the register file clamp into the last slot.
+        // The slot mapping is identity; each register file clamps
+        // out-of-range slots into its own last register.
         assert_eq!(tenant_slot(0), 0);
         assert_eq!(tenant_slot(7), 7);
-        assert_eq!(tenant_slot(99), TENANT_REGISTERS - 1);
+        assert_eq!(tenant_slot(99), 99);
         t.record_job_for(usize::MAX, 1, 0); // out-of-range slot must not panic
+    }
+
+    #[test]
+    fn register_file_grows_past_the_default() {
+        // A default-size file aliases high slots into its last register…
+        let small = FootprintTuner::new(true, 4096);
+        assert_eq!(small.registers(), TENANT_REGISTERS);
+        small.record_job_for(9, 400_000, 0);
+        assert!(
+            small.hot_first_capacity_for(TENANT_REGISTERS - 1) >= 400_000,
+            "default file must clamp slot 9 into the last register"
+        );
+        // …while a grown file keeps them distinct.
+        let grown = FootprintTuner::with_registers(true, 4096, 12);
+        assert_eq!(grown.registers(), 12);
+        grown.record_job_for(9, 400_000, 0);
+        assert!(grown.hot_first_capacity_for(9) >= 400_000);
+        assert_eq!(
+            grown.hot_first_capacity_for(TENANT_REGISTERS - 1),
+            4096,
+            "slot 7 must not alias slot 9 in a grown file"
+        );
+        assert_eq!(grown.hot_first_capacity_for(11), 4096);
+        grown.record_job_for(50, 1, 0); // past even the grown file: clamps, no panic
     }
 
     #[test]

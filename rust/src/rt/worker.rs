@@ -283,7 +283,14 @@ impl Worker {
                         continue;
                     }
                     if job.migrated {
-                        self.shared.metrics.worker(self.id).bump_jobs_migrated();
+                        let counters = self.shared.metrics.worker(self.id);
+                        counters.bump_jobs_migrated();
+                        if job.started {
+                            // A re-homed started capsule: the root block
+                            // and its stacklet chain crossed shards.
+                            counters.bump_jobs_migrated_started();
+                            counters.add_stacklets_adopted(job.adopted_stacklets);
+                        }
                     }
                     unsafe {
                         self.note_root_started(f);
@@ -363,11 +370,15 @@ impl Worker {
     /// abandonment hook, signal, stack recycled — without ever resuming
     /// the job. Returns true when the frame was consumed.
     ///
-    /// Started roots are never discarded here: a Root-kind frame can
-    /// legally reappear at the steal boundary as a *mid-run
-    /// continuation* (a root that forked gets its continuation stolen)
-    /// with children in flight — for those, cancellation is the
-    /// cooperative fork-boundary check in [`Self::dispatch`].
+    /// Started roots are never discarded here — with one exception: a
+    /// Root-kind frame can legally reappear at the steal boundary as a
+    /// *mid-run continuation* (a root that forked gets its continuation
+    /// stolen) with children in flight — for those, cancellation is the
+    /// cooperative fork-boundary check in [`Self::dispatch`]. The
+    /// exception is a **yielded capsule** (`started && yielded`): a root
+    /// suspended at a root-level safe point is back in the
+    /// never-started shape — no children in flight, the block is its
+    /// stack's only allocation — so queue-side discard is sound again.
     ///
     /// # Safety
     /// The caller must exclusively own `f` (just popped/claimed it).
@@ -376,7 +387,7 @@ impl Worker {
             return false;
         }
         let hot = (*f).root_hot;
-        if hot.is_null() || (*hot).started() {
+        if hot.is_null() || ((*hot).started() && !(*hot).yielded()) {
             return false;
         }
         let mut code = (*hot).kill_code();
@@ -409,9 +420,10 @@ impl Worker {
     }
 
     /// Record that the strand we are about to run enters through `f`:
-    /// when `f` is a root, mark it started (closing the queue-side
-    /// discard window) and cache its hot part for the fork-boundary
-    /// cancellation check.
+    /// when `f` is a root, mark it started and clear any yielded flag
+    /// (closing the queue-side discard window — for first starts and
+    /// for re-homed capsules resuming after a root-level yield alike)
+    /// and cache its hot part for the fork-boundary cancellation check.
     ///
     /// # Safety
     /// The caller must exclusively own `f` and be about to execute it.
@@ -421,6 +433,7 @@ impl Worker {
             let hot = (*f).root_hot;
             if !hot.is_null() {
                 (*hot).mark_started();
+                (*hot).set_yielded(false);
                 self.active_root = hot;
             }
         }
@@ -693,6 +706,105 @@ impl Worker {
     }
 
     // ----------------------------------------------------------------
+    // Root-level safe point (Step::Yield) — started-capsule detach
+    // ----------------------------------------------------------------
+
+    /// Cooperative safe point: decide whether the yielding strand should
+    /// be re-homed. Returns `Some(ToScheduler)` when the frame was
+    /// detached as a started-job capsule (root block + stack lease,
+    /// pointer handoff — no byte copying) and handed to the pool's
+    /// external source; `None` when the yield is a no-op and the caller
+    /// should keep stepping the task.
+    ///
+    /// The detach is legal only at a **root-level** safe point, where
+    /// the capsule is provably self-contained:
+    ///
+    /// - `h` is the job's root and `h.steals == 0`: every fork the root
+    ///   made has joined (`signals == steals` held at each join), so no
+    ///   other worker holds a reference into this strand.
+    /// - No child is staged (the task yielded between phases, not
+    ///   mid-dispatch).
+    /// - The worker still runs on the root's own stack and the root
+    ///   block is that stack's **only live allocation** — child frames
+    ///   from completed scopes have all popped — so the stacklet chain
+    ///   travels with the frame and nothing else does.
+    ///
+    /// Cost when the system is balanced: the pre-checks plus one
+    /// `wants_started` call (a couple of relaxed loads), no state
+    /// changes. Only when the source wants the capsule do we pay the
+    /// detach: counter flush, `yielded` publish, fresh stack. The
+    /// [`crate::fault::FaultSite::SafePointStall`] site declines the
+    /// yield once, modelling a delayed safe point.
+    ///
+    /// # Safety
+    /// Caller is the trampoline resuming `h`; the strand is suspended at
+    /// the yield and owns its stack.
+    pub(crate) unsafe fn yield_root(&mut self, h: *mut FrameHeader) -> Option<Transfer> {
+        if (*h).kind != FrameKind::Root || (*h).steals != 0 {
+            return None;
+        }
+        let hot = (*h).root_hot;
+        if hot.is_null() {
+            return None;
+        }
+        // Cancellation checkpoint: a yield is a strand boundary just
+        // like a root-level fork; a cancelled job stops here through
+        // the same contained unwind.
+        if (*hot).kill_code() == root::KILL_CANCELLED {
+            std::panic::panic_any(CancelUnwind);
+        }
+        debug_assert!(self.staged.is_null(), "yield with a staged child");
+        // Pool shutdown: the server's drop-drain loops may already have
+        // run, so a capsule detached now would land in a lane nobody
+        // drains — a stranded handle. Finish the job in place instead.
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        if self.stack != (*h).stack
+            || (*self.stack).live_bytes() != (*h).alloc_size as usize
+        {
+            // Not self-contained (yield from inside a live scope, or
+            // after a join left us on a different stack): free no-op.
+            return None;
+        }
+        let wants = match &self.shared.external {
+            Some(s) => s.wants_started(),
+            None => return None,
+        };
+        if !wants {
+            return None;
+        }
+        if crate::fault::should_fire(crate::fault::FaultSite::SafePointStall) {
+            return None;
+        }
+        // Detach. Publish `yielded` first (Release) so a claimer that
+        // sees the capsule also sees the safe-point shape; flush local
+        // counters so metrics snapshots taken while the capsule is in
+        // flight stay exact.
+        self.flush_counters();
+        (*hot).set_yielded(true);
+        let capsule = self.stack;
+        self.stack = self.fresh_stack();
+        let prev_root = self.active_root;
+        self.active_root = std::ptr::null();
+        let source = Arc::clone(self.shared.external.as_ref().unwrap());
+        match source.offer_started(FramePtr(h)) {
+            None => Some(Transfer::ToScheduler),
+            Some(FramePtr(back)) => {
+                // wants/offer race: the source declined after all.
+                // Reattach and keep running the strand at home.
+                debug_assert_eq!(back, h, "offer_started returned a different frame");
+                let spare = self.stack;
+                self.stack = capsule;
+                self.release_stack(spare);
+                self.active_root = prev_root;
+                (*hot).set_yielded(false);
+                None
+            }
+        }
+    }
+
+    // ----------------------------------------------------------------
     // Explicit scheduling (§III-D1)
     // ----------------------------------------------------------------
 
@@ -844,6 +956,15 @@ pub unsafe fn resume_shim<C: Coroutine>(
                 return w.final_awaitable(h);
             }
             Step::ScheduleOn(target) => return w.schedule_on(h, target),
+            Step::Yield => {
+                // Root-level safe point: either the strand detaches as a
+                // started-job capsule (rare — only under demand) or the
+                // yield is free and we keep stepping in place.
+                if let Some(t) = w.yield_root(h) {
+                    return t;
+                }
+                continue;
+            }
         }
     }
 }

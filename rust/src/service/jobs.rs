@@ -129,6 +129,67 @@ impl Coroutine for DeepJob {
     }
 }
 
+/// A **long-phase** service job: `phases` compute bursts of `spin`
+/// oracle steps each, separated by [`Step::Yield`] safe points. This
+/// is the started-job-migration workload: between phases the strand is
+/// at a root-level yield — no children in flight, the fused root block
+/// the only live allocation — so the runtime may detach it as a
+/// capsule and re-home it to a starved shard mid-job. With migration
+/// off a long job finishes wherever placement pinned it, however
+/// overloaded that shard became.
+///
+/// The output is a deterministic LCG checksum over every spin step, so
+/// a job resumed on a different shard (different worker, adopted
+/// stack) still has an exact oracle: [`LongPhaseJob::expected`].
+pub struct LongPhaseJob {
+    phases: u32,
+    spin: u32,
+    done: u32,
+    acc: u64,
+}
+
+impl LongPhaseJob {
+    /// A job of `phases` bursts × `spin` oracle steps, yielding at each
+    /// phase boundary.
+    pub fn new(phases: u32, spin: u32) -> Self {
+        LongPhaseJob { phases, spin, done: 0, acc: 0 }
+    }
+
+    /// One burst of the LCG oracle (Knuth MMIX constants).
+    fn burst(mut x: u64, spin: u32) -> u64 {
+        for _ in 0..spin {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        }
+        x
+    }
+
+    /// The serial expectation for [`LongPhaseJob::new`]`(phases, spin)`.
+    pub fn expected(phases: u32, spin: u32) -> u64 {
+        let mut acc = 0u64;
+        for _ in 0..phases {
+            acc = Self::burst(acc, spin);
+        }
+        acc
+    }
+}
+
+impl Coroutine for LongPhaseJob {
+    type Output = u64;
+
+    fn step(&mut self, _cx: &mut Cx<'_>) -> Step<u64> {
+        if self.done == self.phases {
+            return Step::Return(self.acc);
+        }
+        self.acc = Self::burst(self.acc, self.spin);
+        self.done += 1;
+        if self.done == self.phases {
+            Step::Return(self.acc)
+        } else {
+            Step::Yield
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +211,21 @@ mod tests {
         for (seed, h) in (0..30).zip(handles) {
             assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
         }
+    }
+
+    #[test]
+    fn long_phase_job_matches_oracle() {
+        let pool = Pool::with_workers(2);
+        for (phases, spin) in [(1u32, 1u32), (1, 64), (4, 32), (16, 100)] {
+            assert_eq!(
+                pool.run(LongPhaseJob::new(phases, spin)),
+                LongPhaseJob::expected(phases, spin),
+                "phases {phases} spin {spin}"
+            );
+        }
+        // Degenerate zero-phase job returns the LCG identity.
+        assert_eq!(pool.run(LongPhaseJob::new(0, 10)), 0);
+        assert_eq!(LongPhaseJob::expected(0, 10), 0);
     }
 
     #[test]

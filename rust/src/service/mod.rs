@@ -38,22 +38,49 @@
 //!   [`crate::rt::pool::RootSignal`]), so callers can `.await` results
 //!   on any executor — e.g. [`crate::sync::block_on`].
 //! * **Cross-shard migration** — shards are no longer fully isolated
-//!   sub-pools: each shard owns a bounded intrusive **overflow spout**
-//!   (a [`FrameQueue`] linking diverted root frames through their own
-//!   headers, so migration allocates nothing). When placement detects
-//!   **sustained** imbalance — the chosen shard's in-flight count
-//!   exceeds the emptiest shard's by at least the hysteresis threshold
-//!   for several consecutive placements — the job is parked in the
-//!   chosen shard's spout instead of a worker queue. Starved shards
-//!   poll the spouts **before parking**, in a hierarchical victim
-//!   order derived from [`NumaTopology::node_distance`]: their own
-//!   spout first (not a migration — with a fast path that drains a run
-//!   into the home pool's submission queues when no sibling is
-//!   starved, bypassing the spout's consumer lock), then same-node
-//!   siblings, then remote nodes — the paper's NUMA-aware stealing
-//!   rule lifted one level up, and the composable cross-pool stealing
-//!   of Kvik. `jobs_migrated` / `migration_misses` in
-//!   [`MetricsSnapshot`] expose the traffic.
+//!   sub-pools: the [`MigrationHub`](self) runs **two lanes** of
+//!   intrusive, allocation-free frame traffic between them.
+//!
+//!   The **unstarted lane** (per-shard bounded **overflow spouts**, a
+//!   [`FrameQueue`] linking diverted root frames through their own
+//!   headers): when placement detects **sustained** imbalance — the
+//!   chosen shard's in-flight count exceeds the emptiest shard's by at
+//!   least the hysteresis threshold for several consecutive placements
+//!   — the job is parked in the chosen shard's spout instead of a
+//!   worker queue. Starved shards poll the spouts **before parking**,
+//!   in a hierarchical victim order derived from
+//!   [`NumaTopology::node_distance`]: their own spout first (not a
+//!   migration — with a fast path that drains a run into the home
+//!   pool's submission queues when no sibling is starved, bypassing
+//!   the spout's consumer lock), then same-node siblings, then remote
+//!   nodes — the paper's NUMA-aware stealing rule lifted one level up,
+//!   and the composable cross-pool stealing of Kvik.
+//!
+//!   The **started lane** re-homes jobs that are *already running*: a
+//!   long job that suspends at a **root-level safe point**
+//!   ([`crate::task::Step::Yield`], honoured by `yield_point()`-style
+//!   cooperative yields in long non-forking phases) is provably
+//!   self-contained — `signals == steals` holds, no child is in
+//!   flight, and the fused root block is its segmented stack's only
+//!   live allocation. The worker detaches the job as a **capsule**
+//!   (root block + [`crate::stack::StackLease`] over its stacklet
+//!   chain) into the home shard's started lane; any shard may claim
+//!   it, *adopt* the stacklet chain (a pointer handoff — no bytes are
+//!   copied; the shelf's per-shard footprint ledger moves the charge
+//!   atomically from the leasing column to the adopting column) and
+//!   resume it. Detach is demand-driven — the home shard has an
+//!   admission backlog while a sibling shard has parked workers — so a
+//!   balanced server never pays the detach cost. Kill-byte checks
+//!   (cancel / shed / deadline) run at the lane's claim boundary
+//!   exactly like the unstarted lane's: a yielded capsule has the
+//!   never-started shape again, so queue-side discard is legal while
+//!   it is parked.
+//!
+//!   `jobs_migrated` / `jobs_migrated_started` / `stacklets_adopted` /
+//!   `migration_misses` in [`MetricsSnapshot`] expose both lanes'
+//!   traffic. [`JobServer::drain_shard`] composes the two lanes into an
+//!   elastic evacuation: the drained shard's queued *and* running work
+//!   re-homes to its siblings and the shard quiesces.
 //! * **Feedback tuning** ([`crate::rt::tune`]) — three self-tuning
 //!   loops, each individually disable-able from the builder: the shared
 //!   stack shelf learns the p99 job footprint and keeps recycled stacks
@@ -80,7 +107,7 @@ pub use qos::{
 };
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use std::time::Duration;
 
@@ -309,6 +336,9 @@ struct TenantLoad {
     /// completions — the per-tenant latency/slowdown signal.
     sojourn_us: AtomicU64,
     sojourn_jobs: AtomicU64,
+    /// Started-job capsules of this tenant re-homed to another shard
+    /// (the cross-shard subset of the started migration lane).
+    migrated_started: AtomicU64,
 }
 
 /// State shared between the server front-end and the completion hooks
@@ -512,6 +542,15 @@ impl Drop for WaveGuard<'_> {
 /// the "sustained, not noise" gate in front of the hysteresis margin.
 const MIGRATION_STREAK_GATE: u32 = 4;
 
+/// Consecutive wanting `wants_started` polls before a shard's workers
+/// actually detach a yielding strand. Smaller than
+/// [`MIGRATION_STREAK_GATE`]: the demand signal (home backlog + a
+/// parked sibling) is already much stronger evidence of sustained skew
+/// than a single imbalanced placement, and a started detach rescues
+/// work that is otherwise *stuck behind* a long job — waiting four
+/// polls would forfeit most of the win.
+const STARTED_STREAK_GATE: u32 = 2;
+
 /// Default hysteresis margin: the chosen shard must have at least this
 /// many more in-flight jobs than the emptiest shard before a placement
 /// counts as imbalanced. With self-tuning on (the default) this is only
@@ -566,6 +605,24 @@ enum Claimed {
     Contended,
 }
 
+/// Late-bound context for the **started-capsule lane**, set once by the
+/// builder after the admission hub, server core and stack shelf exist
+/// (the hub itself is built before them). Absent — e.g. in hub unit
+/// tests — the started lane is inert: `wants_started` reports false and
+/// offers bounce.
+struct StartedCtx {
+    /// Backlog signal: a shard with queued admissions is the demand
+    /// side of a started detach.
+    admission: Arc<AdmissionHub>,
+    /// Per-tenant accounting (`migrated_started`).
+    core: Arc<ServerCore>,
+    /// The shared shelf whose lease/adoption ledger tracks every
+    /// capsule's stacklet chain.
+    shelf: Arc<crate::stack::StackShelf>,
+    /// Builder knob ([`JobServerBuilder::started_migration`]).
+    enabled: bool,
+}
+
 /// The server-wide migration state shared by every shard's
 /// [`ExternalWork`] source: the spouts, the per-shard hierarchical
 /// victim orders, the self-tuning hysteresis, and wake routes into the
@@ -607,6 +664,21 @@ struct MigrationHub {
     /// Round-robin cursor for the home drain fast path's submission
     /// spreading (see [`Self::try_claim_home`]).
     drain_rr: AtomicUsize,
+    /// The **started lane**: per-shard queues of detached started-job
+    /// capsules (root block + stack lease), same intrusive-spout shape
+    /// as the unstarted lane. `streak` here gates `wants_started`, not
+    /// diversion.
+    started: Vec<CachePadded<Spout>>,
+    /// Occupancy bitmask for the started lanes (same maintenance
+    /// protocol as `spout_mask`).
+    started_mask: Vec<AtomicU64>,
+    /// Shards being evacuated by [`JobServer::drain_shard`]. A draining
+    /// shard's pool claims no lane work, placement redirects away from
+    /// it, and its own yielding strands always detach.
+    draining: Vec<AtomicBool>,
+    /// Started-lane collaborators (admission backlog, tenant accounting,
+    /// the shelf's lease ledger); set once post-build.
+    started_ctx: OnceLock<StartedCtx>,
 }
 
 impl MigrationHub {
@@ -647,6 +719,19 @@ impl MigrationHub {
             diverted: AtomicU64::new(0),
             park_aware,
             drain_rr: AtomicUsize::new(0),
+            started: (0..n)
+                .map(|_| {
+                    CachePadded::new(Spout {
+                        queue: FrameQueue::new(),
+                        len: AtomicUsize::new(0),
+                        claim: Mutex::new(()),
+                        streak: AtomicU32::new(0),
+                    })
+                })
+                .collect(),
+            started_mask: (0..n.div_ceil(64).max(1)).map(|_| AtomicU64::new(0)).collect(),
+            draining: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            started_ctx: OnceLock::new(),
         }
     }
 
@@ -800,19 +885,186 @@ impl MigrationHub {
         true
     }
 
+    // ------------------------------------------------------------------
+    // Started lane (detached capsules of running jobs)
+    // ------------------------------------------------------------------
+
+    /// Whether `shard`'s started-lane occupancy bit is set.
+    #[inline]
+    fn started_marked(&self, shard: usize) -> bool {
+        self.started_mask[shard / 64].load(Ordering::Relaxed) & (1u64 << (shard % 64)) != 0
+    }
+
+    /// Producer side of the started-lane bit (after the `len` bump).
+    #[inline]
+    fn mark_started_lane(&self, shard: usize) {
+        self.started_mask[shard / 64].fetch_or(1u64 << (shard % 64), Ordering::Release);
+    }
+
+    /// Consumer side: clear → recheck → restore, like the spout mask.
+    fn unmark_started_if_empty(&self, shard: usize) {
+        self.started_mask[shard / 64].fetch_and(!(1u64 << (shard % 64)), Ordering::Release);
+        if self.started[shard].len.load(Ordering::Acquire) > 0 {
+            self.mark_started_lane(shard);
+        }
+    }
+
+    /// Should a strand yielding on `shard` pay the detach cost? The
+    /// cheap pre-check the worker runs at every accepted safe point, so
+    /// it must stay a few relaxed loads on the balanced path.
+    ///
+    /// Demand-driven, independent of the hysteresis margin (which
+    /// shapes *placement*; a started detach rescues work already
+    /// placed): detach only when `shard` has an **admission backlog**
+    /// (queued jobs its busy workers are not reaching) while some
+    /// non-draining sibling has **parked workers** (idle capacity that
+    /// cannot reach the backlog because the running job is in the way).
+    /// A draining shard always wants its strands detached. Streak-gated
+    /// at [`STARTED_STREAK_GATE`] so one transient backlog poll does
+    /// not trigger a detach.
+    fn wants_started_for(&self, shard: usize) -> bool {
+        let Some(ctx) = self.started_ctx.get() else { return false };
+        if !ctx.enabled {
+            return false;
+        }
+        if self.draining[shard].load(Ordering::Acquire) {
+            return true;
+        }
+        let streak = &self.started[shard].streak;
+        if ctx.admission.queued(shard) == 0 {
+            streak.store(0, Ordering::Relaxed);
+            return false;
+        }
+        let Some(wakers) = self.wakers.get() else { return false };
+        let starved = self.victims[shard].iter().any(|&(v, _)| {
+            !self.draining[v].load(Ordering::Relaxed)
+                && wakers[v]
+                    .upgrade()
+                    .is_some_and(|s| s.sleepers.load(Ordering::Relaxed) > 0)
+        });
+        if !starved {
+            streak.store(0, Ordering::Relaxed);
+            return false;
+        }
+        streak.fetch_add(1, Ordering::Relaxed).saturating_add(1) >= STARTED_STREAK_GATE
+    }
+
+    /// Accept a detached capsule from `shard`'s yielding worker: charge
+    /// the stack lease to `shard`'s ledger column and park the frame in
+    /// the started lane. Returns `None` when the lane took ownership;
+    /// `Some(frame)` bounces the capsule back (lane full, or the lane
+    /// went inert between `wants_started` and the offer) and the worker
+    /// reattaches it — the bounce path exists exactly so this check can
+    /// race `wants_started` without an undo protocol.
+    fn offer_started_for(&self, shard: usize, frame: FramePtr) -> Option<FramePtr> {
+        let Some(ctx) = self.started_ctx.get() else { return Some(frame) };
+        if !ctx.enabled {
+            return Some(frame);
+        }
+        let lane = &self.started[shard];
+        if !self.draining[shard].load(Ordering::Acquire)
+            && lane.len.load(Ordering::Relaxed) >= self.cap
+        {
+            return Some(frame);
+        }
+        // The lease is charged before the frame is visible to claimers;
+        // its value is dropped here because the intrusive queue carries
+        // only the frame pointer — the claim side reconstructs an
+        // identical census with `StackLease::capture` (sound: the chain
+        // is immutable while the strand is suspended).
+        unsafe {
+            let _ = ctx.shelf.lease_out(shard, (*frame.0).stack);
+        }
+        lane.len.fetch_add(1, Ordering::Release);
+        self.mark_started_lane(shard);
+        lane.queue.push(frame);
+        self.wake_starved(shard);
+        None
+    }
+
+    /// Try to take one capsule out of shard `s`'s started lane. Same
+    /// claim protocol as the unstarted spout; the
+    /// [`crate::fault::FaultSite::StackAdoptRace`] site loses the
+    /// handoff before the lock, modelling a contended lease CAS — the
+    /// capsule stays parked and the thief retries.
+    fn try_claim_started(&self, s: usize) -> Option<Claimed> {
+        let lane = &self.started[s];
+        if lane.len.load(Ordering::Acquire) == 0 {
+            if self.started_marked(s) {
+                self.unmark_started_if_empty(s);
+            }
+            return None;
+        }
+        if crate::fault::should_fire(crate::fault::FaultSite::StackAdoptRace) {
+            return Some(Claimed::Contended);
+        }
+        let Ok(_guard) = lane.claim.try_lock() else {
+            return Some(Claimed::Contended);
+        };
+        match lane.queue.pop() {
+            Some(frame) => {
+                lane.len.fetch_sub(1, Ordering::AcqRel);
+                Some(Claimed::Frame(frame))
+            }
+            None => Some(Claimed::Contended),
+        }
+    }
+
+    /// Complete a started-capsule claim: adopt the stacklet chain into
+    /// `to_shard`'s ledger column (balancing the lease-out charge —
+    /// also when `to_shard == from_shard`: a home reclaim still settles
+    /// the ledger) and account a cross-shard move to the job's tenant.
+    ///
+    /// # Safety
+    /// `frame` must have been claimed from `from_shard`'s started lane
+    /// by the caller, with exclusive ownership.
+    unsafe fn finish_started_claim(
+        &self,
+        from_shard: usize,
+        to_shard: usize,
+        frame: FramePtr,
+    ) -> ExternalJob {
+        let ctx = self.started_ctx.get().expect("started claim without lane context");
+        let lease = crate::stack::StackLease::capture((*frame.0).stack, from_shard);
+        let adopted_stacklets = lease.stacklet_count() as u64;
+        let _ = ctx.shelf.adopt(to_shard, lease);
+        let migrated = to_shard != from_shard;
+        if migrated {
+            let hot = (*frame.0).root_hot;
+            if !hot.is_null() {
+                let slot = tenant_slot(root::tag_tenant((*hot).tag()));
+                ctx.core.tenant(slot).migrated_started.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        ExternalJob { frame, migrated, started: true, adopted_stacklets }
+    }
+
     /// Claim work on behalf of `shard`'s pool: own spout first (not a
     /// migration — the saturated shard drains its own overflow, with
-    /// the [`Self::try_claim_home`] fast path), then siblings
-    /// nearest-first. Sibling polling is indexed by the spout-occupancy
-    /// bitmask: a victim whose bit is clear costs one shared-word test,
-    /// not a load of its spout's `len` line — the poll sweep is O(1) in
-    /// shard count when nothing is diverted. Feeds the hysteresis
-    /// tuner: contended polls count as misses, cross-shard claims as
-    /// productive migrations.
+    /// the [`Self::try_claim_home`] fast path), then the own started
+    /// lane (reclaiming a capsule nobody rescued), then siblings
+    /// nearest-first — each victim's started lane before its unstarted
+    /// spout, because a started capsule carries warm progress that an
+    /// unstarted job does not. Polling is indexed by the occupancy
+    /// bitmasks: a victim whose bits are clear costs two shared-word
+    /// tests, not loads of its `len` lines — the poll sweep is O(1) in
+    /// shard count when nothing is parked. Feeds the hysteresis tuner:
+    /// contended polls count as misses, cross-shard claims as
+    /// productive migrations. A **draining** shard claims nothing — its
+    /// queues are owned by [`JobServer::drain_shard`] and its workers
+    /// only finish what they already run.
     fn claim_for(&self, shard: usize) -> ExternalPoll {
+        if self.draining[shard].load(Ordering::Acquire) {
+            return ExternalPoll::Empty;
+        }
         match self.try_claim_home(shard) {
             Some(Claimed::Frame(frame)) => {
-                return ExternalPoll::Job(ExternalJob { frame, migrated: false })
+                return ExternalPoll::Job(ExternalJob {
+                    frame,
+                    migrated: false,
+                    started: false,
+                    adopted_stacklets: 0,
+                })
             }
             Some(Claimed::Contended) => {
                 self.tuner.note_miss();
@@ -820,14 +1072,50 @@ impl MigrationHub {
             }
             None => {}
         }
+        if self.started_marked(shard) {
+            match self.try_claim_started(shard) {
+                Some(Claimed::Frame(frame)) => {
+                    // Home reclaim: not a migration (no metric bump),
+                    // but the adopt still settles the lease ledger.
+                    return ExternalPoll::Job(unsafe {
+                        self.finish_started_claim(shard, shard, frame)
+                    });
+                }
+                Some(Claimed::Contended) => {
+                    self.tuner.note_miss();
+                    return ExternalPoll::Retry;
+                }
+                None => {}
+            }
+        }
         for &(victim, _) in &self.victims[shard] {
+            if self.started_marked(victim) {
+                match self.try_claim_started(victim) {
+                    Some(Claimed::Frame(frame)) => {
+                        self.tuner.note_claim();
+                        return ExternalPoll::Job(unsafe {
+                            self.finish_started_claim(victim, shard, frame)
+                        });
+                    }
+                    Some(Claimed::Contended) => {
+                        self.tuner.note_miss();
+                        return ExternalPoll::Retry;
+                    }
+                    None => {}
+                }
+            }
             if !self.spout_marked(victim) {
                 continue;
             }
             match self.try_claim(victim) {
                 Some(Claimed::Frame(frame)) => {
                     self.tuner.note_claim();
-                    return ExternalPoll::Job(ExternalJob { frame, migrated: true })
+                    return ExternalPoll::Job(ExternalJob {
+                        frame,
+                        migrated: true,
+                        started: false,
+                        adopted_stacklets: 0,
+                    })
                 }
                 Some(Claimed::Contended) => {
                     self.tuner.note_miss();
@@ -924,6 +1212,14 @@ impl ExternalWork for ShardSource {
     fn poll(&self) -> ExternalPoll {
         self.hub.claim_for(self.shard)
     }
+
+    fn wants_started(&self) -> bool {
+        self.hub.wants_started_for(self.shard)
+    }
+
+    fn offer_started(&self, frame: FramePtr) -> Option<FramePtr> {
+        self.hub.offer_started_for(self.shard, frame)
+    }
 }
 
 /// A registered tenant's static configuration (name, weighted share,
@@ -950,6 +1246,7 @@ pub struct JobServerBuilder {
     spout_cap: usize,
     adaptive_stacklets: bool,
     park_aware: bool,
+    started_migration: bool,
     shed: Box<dyn ShedPolicy>,
     deadline_default: Option<Duration>,
     admission: Box<dyn AdmissionPolicy>,
@@ -974,6 +1271,7 @@ impl JobServerBuilder {
             spout_cap: DEFAULT_SPOUT_CAP,
             adaptive_stacklets: true,
             park_aware: true,
+            started_migration: true,
             shed: Box::new(BlockOnFull),
             deadline_default: None,
             // QoS default: FIFO — exactly the pre-QoS dequeue order.
@@ -1096,9 +1394,23 @@ impl JobServerBuilder {
     }
 
     /// Per-shard overflow-spout bound (default 256). A full spout falls
-    /// back to direct pool submission.
+    /// back to direct pool submission. Also bounds each shard's
+    /// started-capsule lane (a full lane bounces the detach and the
+    /// strand keeps running at home).
     pub fn spout_capacity(mut self, frames: usize) -> Self {
         self.spout_cap = frames.max(1);
+        self
+    }
+
+    /// Enable or disable **started-job migration** (default: on, when
+    /// migration itself is on). When on, a job suspended at a
+    /// root-level safe point ([`crate::task::Step::Yield`]) can be
+    /// detached as a capsule — root block plus its segmented stack,
+    /// handed over by pointer — and resumed by a starved sibling shard;
+    /// see the [module docs](self). When off, yields are free no-ops
+    /// and only unstarted jobs migrate, exactly the pre-lane behavior.
+    pub fn started_migration(mut self, enabled: bool) -> Self {
+        self.started_migration = enabled;
         self
     }
 
@@ -1198,11 +1510,20 @@ impl JobServerBuilder {
         // banks here would exist (in flight) at peak anyway.
         let total_workers: usize = plans.iter().map(|&(_, w, _)| w).sum();
         let shelf_cap = (4 * total_workers).max(16).max(self.capacity.min(4096));
-        let shelf = Arc::new(crate::stack::StackShelf::new_tuned(
+        // Per-tenant register file: at least the static default, grown
+        // to cover every registered tenant (ids 1..=len) plus the
+        // default class 0 — a server with many tenants no longer
+        // aliases the high ids onto the last register.
+        let register_count = TENANT_REGISTERS.max(self.tenants.len() + 1);
+        let shelf = Arc::new(crate::stack::StackShelf::new_tuned_with_registers(
             shelf_cap,
             self.adaptive_stacklets,
             crate::stack::FIRST_STACKLET,
+            register_count,
         ));
+        // The per-shard lease/adoption ledger backs the started lane's
+        // byte-balance invariant (and is harmless without it).
+        shelf.enable_adoption_accounts(shard_count);
         // The core exists before the pools: each pool's abandonment
         // hook (panic containment releasing admission slots) closes
         // over it.
@@ -1215,7 +1536,7 @@ impl JobServerBuilder {
                     })
                 })
                 .collect(),
-            tenants: (0..TENANT_REGISTERS)
+            tenants: (0..register_count)
                 .map(|_| CachePadded::new(TenantLoad::default()))
                 .collect(),
             capacity: self.capacity,
@@ -1250,6 +1571,18 @@ impl JobServerBuilder {
         class_info
             .extend((0..PRIORITY_BANDS).map(|b| ClassInfo { weight: 1, priority: b as u8 }));
         let admission = Arc::new(AdmissionHub::new(shard_count, self.admission, class_info));
+        if let Some(hub) = &hub {
+            // The started lane's collaborators exist now; arm it. (The
+            // hub is constructed before the core/admission because its
+            // `new` signature predates the lane — and the lane must be
+            // inert for hub unit tests anyway.)
+            let _ = hub.started_ctx.set(StartedCtx {
+                admission: Arc::clone(&admission),
+                core: Arc::clone(&core),
+                shelf: Arc::clone(&shelf),
+                enabled: self.started_migration,
+            });
+        }
         let mut shards = Vec::with_capacity(shard_count);
         for (s, (node, workers, pin_offset)) in plans.into_iter().enumerate() {
             let hook_core = Arc::clone(&core);
@@ -1371,6 +1704,10 @@ pub struct TenantStats {
     /// Mean admit→return sojourn (µs) over completed jobs — compare
     /// against an isolated baseline for the tenant's slowdown factor.
     pub mean_sojourn_us: u64,
+    /// Started-job capsules re-homed to another shard mid-run (the
+    /// cross-shard subset of the started migration lane; see the
+    /// [module docs](self)).
+    pub migrated_started: u64,
 }
 
 /// Per-shard statistics.
@@ -1517,7 +1854,18 @@ impl JobServer {
     /// reacts at the same per-job rate regardless of submission style.
     fn place(&self) -> usize {
         let view = ShardLoads { loads: &self.core.loads };
-        let shard = self.policy.place(&view).min(self.shards.len() - 1);
+        let mut shard = self.policy.place(&view).min(self.shards.len() - 1);
+        if let Some(hub) = &self.hub {
+            if hub.draining[shard].load(Ordering::Relaxed) {
+                // A draining shard admits no new work: redirect to the
+                // least-loaded live shard (there is always one —
+                // `drain_shard` refuses to evacuate the last).
+                shard = (0..self.shards.len())
+                    .filter(|&s| !hub.draining[s].load(Ordering::Relaxed))
+                    .min_by_key(|&s| view.in_flight(s))
+                    .unwrap_or(shard);
+            }
+        }
         self.core.loads[shard].in_flight.fetch_add(1, Ordering::AcqRel);
         if let Some(hub) = &self.hub {
             hub.tuner.note_placement();
@@ -1863,53 +2211,149 @@ impl JobServer {
     }
 
     // ----------------------------------------------------------------
-    // Deprecated submission shims (the old five-way submit zoo)
+    // Elastic shard drain
     // ----------------------------------------------------------------
 
-    /// Submit one job with an explicit deadline.
-    #[deprecated(
-        note = "use submit_with(job, SubmitOptions::new().deadline(d)) \
-                (or .no_deadline() for None)"
-    )]
-    pub fn submit_with_deadline<C: Coroutine>(
-        &self,
-        job: C,
-        deadline: Option<Duration>,
-    ) -> Result<RootHandle<C::Output>, C> {
-        let opts = match deadline {
-            Some(d) => SubmitOptions::new().deadline(d),
-            None => SubmitOptions::new().no_deadline(),
+    /// Evacuate `shard` and decommission it: mark it draining (new
+    /// placements redirect to the least-loaded live shard and the
+    /// shard's pool stops claiming lane work), then move every queued
+    /// admission frame, every diverted spout frame and every parked
+    /// started-job capsule to the remaining shards, and wait until the
+    /// shard's own queues are empty and its workers are idle. Started
+    /// jobs still *running* on the shard re-home themselves: with the
+    /// shard draining, every accepted safe point detaches
+    /// (`wants_started` is unconditionally true), and jobs that never
+    /// yield simply finish in place before the drain returns.
+    ///
+    /// Dead frames met on the way out (cancelled, shed, expired) are
+    /// discarded here with full slot/ledger accounting, never
+    /// re-injected. Live work keeps its original placement tag, so
+    /// completion accounting still credits this shard — only execution
+    /// moves.
+    ///
+    /// The shard stays decommissioned afterwards (its workers keep
+    /// running but receive no new work). Returns `false` — without
+    /// touching anything — when the server has no migration hub, the
+    /// index is out of range, or every other shard is already draining
+    /// (the last live shard cannot be evacuated).
+    pub fn drain_shard(&self, shard: usize) -> bool {
+        let Some(hub) = &self.hub else { return false };
+        if shard >= self.shards.len() {
+            return false;
+        }
+        let targets: Vec<usize> = (0..self.shards.len())
+            .filter(|&s| s != shard && !hub.draining[s].load(Ordering::Relaxed))
+            .collect();
+        if targets.is_empty() {
+            return false;
+        }
+        hub.draining[shard].store(true, Ordering::Release);
+        let core = Arc::clone(&self.core);
+        let hook = move |tag: u64, kind: DrainKind| {
+            let s = root::tag_shard(tag);
+            let slot = tenant_slot(root::tag_tenant(tag));
+            match kind {
+                DrainKind::Shed | DrainKind::Expired => core.shed_slot(s, slot),
+                DrainKind::Panic | DrainKind::Cancelled => core.abandon(s, slot),
+            }
         };
-        self.submit_with(job, opts)
-    }
-
-    /// Submit one job unless the server is at capacity; on rejection
-    /// the job is handed back so the caller can retry, shed or
-    /// redirect it.
-    #[deprecated(note = "use submit_with(job, SubmitOptions::new().on_full(OnFull::RejectNew))")]
-    pub fn try_submit<C: Coroutine>(&self, job: C) -> Result<RootHandle<C::Output>, C> {
-        self.submit_with(job, SubmitOptions::new().on_full(OnFull::RejectNew))
-    }
-
-    /// Submit a batch, returning the handles in input order.
-    #[deprecated(note = "use submit_batch_with(&mut batch, &mut out, SubmitOptions::new())")]
-    pub fn submit_batch<C: Coroutine>(
-        &self,
-        mut batch: Vec<C>,
-    ) -> Vec<RootHandle<C::Output>> {
-        let mut out = Vec::with_capacity(batch.len());
-        self.submit_batch_with(&mut batch, &mut out, SubmitOptions::default());
-        out
-    }
-
-    /// Batch submission into caller-owned buffers.
-    #[deprecated(note = "use submit_batch_with(batch, out, SubmitOptions::new())")]
-    pub fn submit_batch_into<C: Coroutine>(
-        &self,
-        batch: &mut Vec<C>,
-        out: &mut Vec<RootHandle<C::Output>>,
-    ) {
-        self.submit_batch_with(batch, out, SubmitOptions::default());
+        let hook_ref: &crate::rt::pool::AbandonHook = &hook;
+        // Route evacuated live frames round-robin over the live shards.
+        let mut rr = 0usize;
+        // A worker that popped a submission but has not yet entered its
+        // active window is invisible to one quiescence poll; require
+        // the idle observation to repeat before trusting it.
+        let mut idle_polls = 0u32;
+        let drained = self.shards[shard].pool.shared();
+        loop {
+            let mut progressed = false;
+            // Queued admissions (never started).
+            match self.admission.poll(shard) {
+                ExternalPoll::Job(job) => {
+                    progressed = true;
+                    let frame = job.frame;
+                    let hot = unsafe { (*frame.0).root_hot };
+                    match unsafe { drain_reason(hot) } {
+                        Some(reason) => unsafe {
+                            root::discard(hot, Some(hook_ref), reason);
+                        },
+                        None => {
+                            let t = targets[rr % targets.len()];
+                            rr += 1;
+                            // Cross-pool submission is safe: the shards
+                            // share one shelf and identical hooks.
+                            self.shards[t].pool.submit_frame(frame);
+                        }
+                    }
+                }
+                ExternalPoll::Retry => progressed = true,
+                ExternalPoll::Empty => {}
+            }
+            // Diverted spout frames (never started).
+            match hub.try_claim(shard) {
+                Some(Claimed::Frame(frame)) => {
+                    progressed = true;
+                    let hot = unsafe { (*frame.0).root_hot };
+                    match unsafe { drain_reason(hot) } {
+                        Some(reason) => unsafe {
+                            root::discard(hot, Some(hook_ref), reason);
+                        },
+                        None => {
+                            let t = targets[rr % targets.len()];
+                            rr += 1;
+                            self.shards[t].pool.submit_frame(frame);
+                        }
+                    }
+                }
+                Some(Claimed::Contended) => progressed = true,
+                None => {}
+            }
+            // Parked started capsules: adopt the stack lease into the
+            // destination (or here, when the capsule turns out dead —
+            // the ledger must balance either way), then hand over.
+            match hub.try_claim_started(shard) {
+                Some(Claimed::Frame(frame)) => {
+                    progressed = true;
+                    let t = targets[rr % targets.len()];
+                    rr += 1;
+                    let hot = unsafe { (*frame.0).root_hot };
+                    match unsafe { drain_reason(hot) } {
+                        Some(reason) => unsafe {
+                            let _ = hub.finish_started_claim(shard, shard, frame);
+                            root::discard(hot, Some(hook_ref), reason);
+                        },
+                        None => {
+                            let job = unsafe { hub.finish_started_claim(shard, t, frame) };
+                            self.shards[t].pool.submit_frame(job.frame);
+                        }
+                    }
+                }
+                Some(Claimed::Contended) => progressed = true,
+                None => {}
+            }
+            if progressed {
+                idle_polls = 0;
+                continue;
+            }
+            // Quiescent when nothing is queued anywhere on the shard
+            // and no worker is mid-job (running strands either finish
+            // or detach at their next safe point — both re-check the
+            // lanes above on the next loop iteration).
+            if self.admission.queued(shard) == 0
+                && hub.spouts[shard].len.load(Ordering::Acquire) == 0
+                && hub.started[shard].len.load(Ordering::Acquire) == 0
+                && drained.submissions.iter().all(|q| q.is_empty())
+                && drained.active.load(Ordering::Acquire) == 0
+            {
+                idle_polls += 1;
+                if idle_polls >= 8 {
+                    return true;
+                }
+            } else {
+                idle_polls = 0;
+            }
+            std::thread::yield_now();
+        }
     }
 
     // ----------------------------------------------------------------
@@ -1965,6 +2409,7 @@ impl JobServer {
                         in_flight: load.in_flight.load(Ordering::Relaxed),
                         mean_sojourn_us: load.sojourn_us.load(Ordering::Relaxed)
                             / sojourn_jobs.max(1),
+                        migrated_started: load.migrated_started.load(Ordering::Relaxed),
                     }
                 })
                 .collect(),
@@ -2035,7 +2480,12 @@ impl JobServer {
 /// dequeue-time check; both sides must agree or a dead job could
 /// execute through one door and not the other.
 unsafe fn drain_reason(hot: *const RootHot) -> Option<DrainKind> {
-    if hot.is_null() || (*hot).started() {
+    // A started root is undiscardable — unless it is suspended at a
+    // root-level safe point (`yielded`): the capsule then has exactly
+    // the never-started shape (block = its stack's only allocation, no
+    // strand in flight), so queue-side discard is legal again. Mirrors
+    // the worker's `discard_if_dead`.
+    if hot.is_null() || ((*hot).started() && !(*hot).yielded()) {
         return None;
     }
     let mut code = (*hot).kill_code();
@@ -2124,6 +2574,29 @@ impl Drop for JobServer {
                     // A worker holds the claim lock or a push is in
                     // flight; it (or the next iteration) will finish the
                     // hand-off.
+                    Some(Claimed::Contended) => std::thread::yield_now(),
+                    None => break,
+                }
+            }
+        }
+        // Started lanes: parked capsules are re-homed to their own
+        // shard (the adopt settles the lease ledger even when the
+        // destination is the leasing shard) and finish inline during
+        // pool shutdown — a resumed capsule cannot re-detach there, the
+        // worker's yield path declines once `shutdown` is set.
+        for shard in 0..self.shards.len() {
+            loop {
+                match hub.try_claim_started(shard) {
+                    Some(Claimed::Frame(frame)) => {
+                        let job = unsafe { hub.finish_started_claim(shard, shard, frame) };
+                        let hot = unsafe { (*job.frame.0).root_hot };
+                        match unsafe { drain_reason(hot) } {
+                            Some(reason) => unsafe {
+                                root::discard(hot, Some(hook_ref), reason);
+                            },
+                            None => self.shards[shard].pool.submit_frame(job.frame),
+                        }
+                    }
                     Some(Claimed::Contended) => std::thread::yield_now(),
                     None => break,
                 }
@@ -2297,34 +2770,55 @@ mod tests {
         assert_eq!(h.join(), 3);
     }
 
-    /// The deprecated five-way submit zoo still works through its
-    /// forwarding shims (migration safety net; everything else in-tree
-    /// uses the [`SubmitOptions`] surface).
+    /// Registering more tenants than the static
+    /// [`TENANT_REGISTERS`](crate::rt::tune::TENANT_REGISTERS) default
+    /// must grow the accounting register file: every tenant keeps its
+    /// own counters instead of the high ids aliasing the last register.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_forward() {
-        let server = small_server(1, 2, 16);
-        assert_eq!(server.submit(MixedJob::fib(10)).join(), fib_exact(10));
-        let h = server
-            .submit_with_deadline(MixedJob::fib(10), Some(Duration::from_secs(60)))
-            .unwrap_or_else(|_| panic!("deadline shim rejected"));
-        assert_eq!(h.join(), fib_exact(10));
-        let h = server
-            .try_submit(MixedJob::fib(10))
-            .unwrap_or_else(|_| panic!("try_submit shim rejected"));
-        assert_eq!(h.join(), fib_exact(10));
-        let handles = server.submit_batch((0..8).map(MixedJob::from_seed).collect());
-        for (seed, h) in (0..8).zip(handles) {
-            assert_eq!(h.join(), MixedJob::expected(seed));
+    fn tenant_registers_grow_past_static_default() {
+        let mut builder = JobServer::builder()
+            .topology(NumaTopology::synthetic(1, 2))
+            .shards(1)
+            .workers_per_shard(2)
+            .capacity(64);
+        // 12 tenants: ids 1..=12, i.e. 13 slots with the default class —
+        // well past the static 8-register file.
+        for i in 0..12 {
+            builder = builder.tenant(format!("t{i}"), 1, 1);
         }
-        let mut batch: Vec<_> = (0..8).map(MixedJob::from_seed).collect();
-        let mut out = Vec::new();
-        server.submit_batch_into(&mut batch, &mut out);
-        for (seed, h) in (0..8).zip(out) {
-            assert_eq!(h.join(), MixedJob::expected(seed));
+        let server = builder.build();
+        let mut handles = Vec::new();
+        for i in 0..12u64 {
+            let t = server.tenant(&format!("t{i}")).expect("registered tenant");
+            let h = server
+                .submit_with(MixedJob::from_seed(i), SubmitOptions::new().tenant(t))
+                .unwrap_or_else(|_| panic!("tenant {i} rejected"));
+            handles.push((i, h));
+        }
+        for (seed, h) in handles {
+            assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
         }
         let stats = server.stats();
-        assert_eq!(stats.submitted, stats.completed);
+        assert_eq!(stats.tenants.len(), 13);
+        for (id, t) in stats.tenants.iter().enumerate() {
+            let expect = u64::from(id != 0);
+            assert_eq!(
+                (t.submitted, t.completed),
+                (expect, expect),
+                "tenant {id} must own its register (no aliasing)"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_shard_refuses_last_live_shard() {
+        let server = small_server(2, 1, 16);
+        assert!(server.drain_shard(0), "first drain must succeed");
+        assert!(!server.drain_shard(1), "last live shard must refuse");
+        assert!(!server.drain_shard(7), "out of range must refuse");
+        // A single-shard server has no hub at all.
+        let single = small_server(1, 1, 16);
+        assert!(!single.drain_shard(0));
     }
 
     #[test]

@@ -397,6 +397,14 @@ impl AdmissionHub {
         self.shards[shard].total.load(Ordering::Relaxed) > 0
     }
 
+    /// Frames admitted for `shard` but not yet claimed (may transiently
+    /// over-count by in-flight pushes). The migration hub's demand
+    /// signal: a shard with a backlog wants started capsules from its
+    /// overloaded peers; an idle one does not.
+    pub(crate) fn queued(&self, shard: usize) -> usize {
+        self.shards[shard].total.load(Ordering::Relaxed)
+    }
+
     /// Claim the next admitted frame for `shard` per the policy.
     /// `Retry` covers both consumer contention (another worker holds
     /// the claim lock) and an in-flight producer push (the policy saw
@@ -422,7 +430,12 @@ impl AdmissionHub {
                 cq.len.fetch_sub(1, Ordering::Relaxed);
                 sh.total.fetch_sub(1, Ordering::AcqRel);
                 cq.served.fetch_add(1, Ordering::Relaxed);
-                ExternalPoll::Job(ExternalJob { frame, migrated: false })
+                ExternalPoll::Job(ExternalJob {
+                    frame,
+                    migrated: false,
+                    started: false,
+                    adopted_stacklets: 0,
+                })
             }
             // Producer push in flight on the chosen class.
             None => ExternalPoll::Retry,

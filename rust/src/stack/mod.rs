@@ -21,7 +21,7 @@
 pub mod pool;
 pub mod stacklet;
 
-pub use pool::StackShelf;
+pub use pool::{StackLease, StackShelf};
 use stacklet::Stacklet;
 
 /// Frame alignment: every allocation is rounded up to this. 16 matches

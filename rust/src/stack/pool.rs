@@ -40,11 +40,99 @@
 //! [`Pool`]: crate::rt::pool::Pool
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 use crate::rt::tune::FootprintTuner;
 
 use super::SegmentedStack;
+
+/// A transferable claim on a quiesced strand's stacklet chain.
+///
+/// When a started job suspends at a root-level safe point, its segmented
+/// stack holds exactly one live allocation — the fused root block — and
+/// nothing else references the chain. The home shard *leases the stack
+/// out* ([`StackShelf::lease_out`]): the lease captures the chain pointer
+/// plus its footprint/stacklet census, and ownership of the chain rides
+/// with the lease until a destination shard *adopts* it
+/// ([`StackShelf::adopt`]). Adoption is a pointer handoff — no stacklet
+/// bytes are copied — and the footprint accounting moves atomically from
+/// the leasing shard's column to the adopting shard's.
+///
+/// Ownership rules (who may do what while a lease is outstanding):
+/// * **free** — nobody: the chain belongs to the lease; only the adopting
+///   worker (via the normal root-block release → `recycle`) or the shelf
+///   drop path may free it afterwards.
+/// * **quarantine** — only the adopting side, and only through the usual
+///   poison/abandon machinery after adoption; a leased stack cannot be
+///   poisoned because its strand is suspended (nothing runs on it).
+/// * **trim / reshape** — deferred: the chain is adopted as-is and the
+///   tuner window resets only at the next recycle-time trim, so the
+///   tenancy's grow/peak signals survive the migration intact.
+#[derive(Debug)]
+pub struct StackLease {
+    stack: *mut SegmentedStack,
+    bytes: usize,
+    stacklets: usize,
+    from_shard: usize,
+}
+
+// The leased chain is quiesced and unaliased (the strand it belongs to is
+// suspended); the lease is the sole owner while in transit.
+unsafe impl Send for StackLease {}
+
+impl StackLease {
+    /// The leased chain.
+    pub fn stack(&self) -> *mut SegmentedStack {
+        self.stack
+    }
+
+    /// Footprint bytes captured at lease time (stacklets + metadata).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Stacklets in the leased chain.
+    pub fn stacklet_count(&self) -> usize {
+        self.stacklets
+    }
+
+    /// Shard the chain was leased out of.
+    pub fn from_shard(&self) -> usize {
+        self.from_shard
+    }
+
+    /// Re-capture the lease for a chain already charged by
+    /// [`StackShelf::lease_out`]. The intrusive capsule lanes carry only
+    /// the frame pointer, so the lease *value* cannot ride along; the
+    /// claiming side rebuilds it here. Sound because the chain is
+    /// immutable between lease-out and adoption (its strand is
+    /// suspended), so the census read now is identical to the one the
+    /// original lease charged.
+    ///
+    /// # Safety
+    /// `stack` must be a chain currently leased out of `from_shard` via
+    /// [`StackShelf::lease_out`], with no concurrent access.
+    pub unsafe fn capture(stack: *mut SegmentedStack, from_shard: usize) -> StackLease {
+        StackLease {
+            stack,
+            bytes: (*stack).footprint_bytes(),
+            stacklets: (*stack).stacklet_count(),
+            from_shard,
+        }
+    }
+}
+
+/// Per-shard lease/adoption ledger. One column per shard; byte balance
+/// (`Σ leased_bytes == Σ adopted_bytes` at quiescence) is a chaos-suite
+/// invariant.
+#[derive(Debug, Default)]
+struct AdoptAccount {
+    leased_jobs: AtomicU64,
+    leased_bytes: AtomicU64,
+    adopted_jobs: AtomicU64,
+    adopted_bytes: AtomicU64,
+    adopted_stacklets: AtomicU64,
+}
 
 /// A shelved stack. Raw because `SegmentedStack` boxes move between
 /// threads through the shelf; exclusive ownership is re-established by
@@ -75,6 +163,10 @@ pub struct StackShelf {
     /// tells [`Self::recycle`] what first-stacklet capacity shelved
     /// stacks should carry (see [`crate::rt::tune`]).
     tuner: FootprintTuner,
+    /// Per-shard lease/adoption ledger for relocated started-job stacks.
+    /// Installed once by the sharded service ([`Self::enable_adoption_accounts`]);
+    /// absent for standalone pools, whose stacks never migrate.
+    accounts: OnceLock<Vec<AdoptAccount>>,
 }
 
 impl std::fmt::Debug for Shelved {
@@ -107,6 +199,121 @@ impl StackShelf {
             dropped: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
             tuner: FootprintTuner::new(adaptive, floor),
+            accounts: OnceLock::new(),
+        }
+    }
+
+    /// [`Self::new_tuned`] with a footprint register file sized for
+    /// `registers` distinct tenants (default [`crate::rt::tune::TENANT_REGISTERS`];
+    /// the sharded service grows this to its registered tenant count so
+    /// high tenant ids stop aliasing the last register).
+    pub fn new_tuned_with_registers(
+        capacity: usize,
+        adaptive: bool,
+        floor: usize,
+        registers: usize,
+    ) -> Self {
+        let capacity = capacity.max(1);
+        StackShelf {
+            slots: Mutex::new(Vec::with_capacity(capacity)),
+            capacity,
+            poisoned: Mutex::new(Vec::new()),
+            recycled: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            tuner: FootprintTuner::with_registers(adaptive, floor, registers),
+            accounts: OnceLock::new(),
+        }
+    }
+
+    /// Install the per-shard lease/adoption ledger (idempotent; first
+    /// caller wins). Called once by [`crate::service::JobServerBuilder`]
+    /// with the shard count; standalone pools leave it absent and
+    /// [`Self::lease_out`] / [`Self::adopt`] become pure pointer handoffs.
+    pub fn enable_adoption_accounts(&self, shards: usize) {
+        let _ = self.accounts.set((0..shards.max(1)).map(|_| AdoptAccount::default()).collect());
+    }
+
+    /// Begin re-homing a started strand's stack: capture its chain into a
+    /// transferable [`StackLease`] and charge the bytes to `from_shard`'s
+    /// leased-out column. Pure pointer handoff — no stacklet bytes move.
+    ///
+    /// # Safety
+    /// The strand owning `stack` must be suspended at a root-level safe
+    /// point (the fused root block is the stack's only live allocation)
+    /// and the caller must hold exclusive ownership of the chain until
+    /// the returned lease is consumed by [`Self::adopt`].
+    pub unsafe fn lease_out(&self, from_shard: usize, stack: *mut SegmentedStack) -> StackLease {
+        let bytes = (*stack).footprint_bytes();
+        let stacklets = (*stack).stacklet_count();
+        if let Some(accounts) = self.accounts.get() {
+            let col = &accounts[from_shard.min(accounts.len() - 1)];
+            col.leased_jobs.fetch_add(1, Ordering::Relaxed);
+            col.leased_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+        StackLease { stack, bytes, stacklets, from_shard }
+    }
+
+    /// Complete a re-homing: `to_shard` adopts the leased chain. The
+    /// lease's byte/stacklet census lands in the adopting shard's column,
+    /// balancing the lease-out charge. Returns the chain pointer for the
+    /// adopting worker to mount ([`crate::rt::worker`]'s `adopt_stack`).
+    ///
+    /// # Safety
+    /// `lease` must come from [`Self::lease_out`] on this shelf and be
+    /// consumed exactly once.
+    pub unsafe fn adopt(&self, to_shard: usize, lease: StackLease) -> *mut SegmentedStack {
+        if let Some(accounts) = self.accounts.get() {
+            let col = &accounts[to_shard.min(accounts.len() - 1)];
+            col.adopted_jobs.fetch_add(1, Ordering::Relaxed);
+            col.adopted_bytes.fetch_add(lease.bytes as u64, Ordering::Relaxed);
+            col.adopted_stacklets.fetch_add(lease.stacklets as u64, Ordering::Relaxed);
+        }
+        lease.stack
+    }
+
+    /// Lifetime (jobs, bytes) leased out of `shard`.
+    pub fn leased_out(&self, shard: usize) -> (u64, u64) {
+        match self.accounts.get() {
+            Some(a) if shard < a.len() => (
+                a[shard].leased_jobs.load(Ordering::Relaxed),
+                a[shard].leased_bytes.load(Ordering::Relaxed),
+            ),
+            _ => (0, 0),
+        }
+    }
+
+    /// Lifetime (jobs, bytes) adopted into `shard`.
+    pub fn adopted_in(&self, shard: usize) -> (u64, u64) {
+        match self.accounts.get() {
+            Some(a) if shard < a.len() => (
+                a[shard].adopted_jobs.load(Ordering::Relaxed),
+                a[shard].adopted_bytes.load(Ordering::Relaxed),
+            ),
+            _ => (0, 0),
+        }
+    }
+
+    /// Lifetime stacklets adopted into `shard`.
+    pub fn adopted_stacklets(&self, shard: usize) -> u64 {
+        match self.accounts.get() {
+            Some(a) if shard < a.len() => a[shard].adopted_stacklets.load(Ordering::Relaxed),
+            _ => 0,
+        }
+    }
+
+    /// Ledger balance: (total bytes leased out, total bytes adopted in)
+    /// summed over every shard column. Equal at quiescence — asserted by
+    /// the chaos and migration suites.
+    pub fn lease_balance(&self) -> (u64, u64) {
+        match self.accounts.get() {
+            Some(a) => a.iter().fold((0, 0), |(l, ad), col| {
+                (
+                    l + col.leased_bytes.load(Ordering::Relaxed),
+                    ad + col.adopted_bytes.load(Ordering::Relaxed),
+                )
+            }),
+            None => (0, 0),
         }
     }
 
@@ -420,6 +627,54 @@ mod tests {
         }
         // The grow/footprint signals stay live for the metrics.
         assert_eq!(shelf.tuner().grows_count(), 9);
+    }
+
+    #[test]
+    fn lease_adopt_moves_bytes_between_shard_columns() {
+        let shelf = StackShelf::new(4);
+        shelf.enable_adoption_accounts(2);
+        // Grow a stack so the lease carries a multi-stacklet chain.
+        let mut stack = SegmentedStack::with_first_capacity(64);
+        let mut ps = Vec::new();
+        for _ in 0..100 {
+            ps.push((stack.alloc(128), 128));
+        }
+        for (p, n) in ps.into_iter().rev() {
+            stack.dealloc(p, n);
+        }
+        let bytes = stack.footprint_bytes() as u64;
+        let stacklets = stack.stacklet_count() as u64;
+        let raw = Box::into_raw(stack);
+        let lease = unsafe { shelf.lease_out(0, raw) };
+        assert_eq!(lease.stack(), raw, "lease is a pointer handoff");
+        assert_eq!(lease.bytes() as u64, bytes);
+        assert_eq!(shelf.leased_out(0), (1, bytes));
+        assert_eq!(shelf.adopted_in(1), (0, 0));
+        // The lease is Send: hand it to another thread and adopt there.
+        let shelf = std::sync::Arc::new(shelf);
+        let remote = std::sync::Arc::clone(&shelf);
+        let back = std::thread::spawn(move || {
+            let adopted = unsafe { remote.adopt(1, lease) };
+            adopted as usize
+        })
+        .join()
+        .unwrap();
+        assert_eq!(back, raw as usize, "adoption returns the same chain");
+        assert_eq!(shelf.adopted_in(1), (1, bytes));
+        assert_eq!(shelf.adopted_stacklets(1), stacklets);
+        assert_eq!(shelf.lease_balance(), (bytes, bytes), "ledger balances at quiescence");
+        unsafe { shelf.recycle(raw) };
+    }
+
+    #[test]
+    fn lease_without_accounts_is_pure_handoff() {
+        let shelf = StackShelf::new(2);
+        let raw = Box::into_raw(SegmentedStack::with_first_capacity(64));
+        let lease = unsafe { shelf.lease_out(0, raw) };
+        let back = unsafe { shelf.adopt(1, lease) };
+        assert_eq!(back, raw);
+        assert_eq!(shelf.lease_balance(), (0, 0));
+        unsafe { drop(Box::from_raw(raw)) };
     }
 
     #[test]

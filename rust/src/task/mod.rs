@@ -43,6 +43,16 @@ pub enum Step<T> {
     /// fork-join scope, when this frame is the top allocation of the
     /// worker's current stack.
     ScheduleOn(usize),
+    /// Cooperative safe point (`yield_point()`): the task declares it is
+    /// between long non-forking phases with no children in flight. At a
+    /// *root-level* yield — when `signals == steals` holds for this frame
+    /// and the frame's fused root block is the only live allocation on
+    /// its stack — the runtime may detach the strand and re-home it to
+    /// another shard ([`crate::service::MigrationHub`]'s started-capsule
+    /// lane). Otherwise the yield is free: the worker resumes the task
+    /// immediately. Yielding inside a fork-join scope, or from a non-root
+    /// frame, is always a no-op.
+    Yield,
 }
 
 impl<T> Step<T> {
@@ -55,6 +65,7 @@ impl<T> Step<T> {
             Step::Dispatch => Step::Dispatch,
             Step::Join => Step::Join,
             Step::ScheduleOn(w) => Step::ScheduleOn(w),
+            Step::Yield => Step::Yield,
             Step::Return(v) => Step::Return(f(v)),
         }
     }

@@ -26,7 +26,8 @@ use rustfork::numa::NumaTopology;
 use rustfork::rt::pool::AbortReason;
 use rustfork::sched::SchedulerKind;
 use rustfork::service::{
-    jobs::MixedJob, AdmissionPolicy, Fifo, JobServer, OnFull, ShedOldest, StrictPriority,
+    jobs::{LongPhaseJob, MixedJob},
+    AdmissionPolicy, Fifo, JobServer, OnFull, PinnedShard, ShedOldest, StrictPriority,
     SubmitOptions, WeightedFair,
 };
 use rustfork::task::FnTask;
@@ -90,6 +91,14 @@ fn assert_invariants(server: &JobServer, label: &str) {
         server.stack_shelf().quarantined_count(),
         m.stacks_poisoned
     );
+    // Started-capsule lease ledger: with nothing in flight, every stack
+    // leased out of a shard column was adopted into one — a capsule
+    // lost to a fault would strand its lease-out charge.
+    let (leased, adopted) = server.stack_shelf().lease_balance();
+    assert_eq!(
+        leased, adopted,
+        "{label}: stack-lease ledger unbalanced: {leased} leased vs {adopted} adopted"
+    );
 }
 
 /// Prove no admission slot leaked: a full capacity's worth of fresh
@@ -113,6 +122,8 @@ fn fault_matrix_invariants() {
         (FaultSite::DelayedWake, 3, 100_000),
         (FaultSite::SpoutOverflow, 2, 100_000),
         (FaultSite::ShelfExhausted, 4, 100_000),
+        (FaultSite::StackAdoptRace, 2, 100_000),
+        (FaultSite::SafePointStall, 2, 100_000),
     ];
     for sched in [SchedulerKind::Busy, SchedulerKind::Lazy] {
         for migration in [true, false] {
@@ -123,12 +134,17 @@ fn fault_matrix_invariants() {
                     ^ ((migration as u64) << 16)
                     ^ (((sched == SchedulerKind::Lazy) as u64) << 17);
                 let guard = arm(FaultPlan::new(seed).with(site, period, budget));
+                // Pinned placement skews every cell: the spouts (and,
+                // with migration on, the started-capsule lane fed by the
+                // yielding long jobs below) see real traffic for the
+                // fault sites to land on.
                 let server = JobServer::builder()
                     .topology(NumaTopology::synthetic(2, 2))
                     .shards(2)
                     .workers_per_shard(2)
                     .capacity(64)
                     .scheduler(sched)
+                    .policy(PinnedShard(0))
                     .migration(migration)
                     .migration_hysteresis(2)
                     .admission_policy_boxed(chaos_admission())
@@ -138,6 +154,20 @@ fn fault_matrix_invariants() {
                     .build();
                 let gold = server.tenant("gold").unwrap();
                 let bronze = server.tenant("bronze").unwrap();
+                // Yielding long-phase jobs ride along with the mixed
+                // traffic: their root-level safe points are where the
+                // SafePointStall / StackAdoptRace sites arrive, and a
+                // few get cancelled while suspended to drive the
+                // kill-byte check at capsule claim.
+                let long_handles: Vec<_> = (0..16u64)
+                    .map(|i| {
+                        let h = server.submit(LongPhaseJob::new(6, 2_000));
+                        if i % 5 == 4 {
+                            h.cancel();
+                        }
+                        h
+                    })
+                    .collect();
                 let mut handles = Vec::with_capacity(200);
                 for s in 0..200u64 {
                     if s % 5 == 0 {
@@ -182,6 +212,16 @@ fn fault_matrix_invariants() {
                         ),
                         // Panicked / Cancelled / Shed / DeadlineExpired
                         // are all legitimate outcomes under chaos.
+                        Err(_) => {}
+                    }
+                }
+                for h in long_handles {
+                    match h.try_join() {
+                        Ok(v) => assert_eq!(
+                            v,
+                            LongPhaseJob::expected(6, 2_000),
+                            "{label}: re-homed long job corrupted"
+                        ),
                         Err(_) => {}
                     }
                 }

@@ -3,13 +3,23 @@
 //! serial oracles) and quiescence accounting — diverted jobs are
 //! neither lost nor double-executed, and the runtime's
 //! `signals == steals` invariant survives migration.
+//!
+//! ISSUE 9 additions: **started-job migration** (long-phase jobs pinned
+//! to one shard re-home mid-job through the hub's started-capsule lane,
+//! with the skew pair asserting the speedup) and **elastic shard drain**
+//! ([`JobServer::drain_shard`] evacuates queued, diverted and parked
+//! started work with no stranded handles).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use rustfork::numa::NumaTopology;
 use rustfork::rt::pool::AbortReason;
-use rustfork::service::{jobs::MixedJob, JobServer, PinnedShard, SubmitOptions};
+use rustfork::service::{
+    jobs::{LongPhaseJob, MixedJob},
+    JobServer, PinnedShard, SubmitOptions,
+};
 use rustfork::task::FnTask;
 
 const JOBS: u64 = 512;
@@ -117,6 +127,159 @@ fn skewed_batch_submissions_migrate() {
     assert_eq!(stats.completed, 6 * 128);
     assert!(stats.diverted > 0, "batched skew must divert: {stats:?}");
     assert_eq!(server.metrics().roots, 6 * 128);
+}
+
+// ---------------------------------------------------------------------
+// Started-job migration (ISSUE 9 tentpole)
+// ---------------------------------------------------------------------
+
+const LONG_JOBS: u64 = 16;
+const PHASES: u32 = 8;
+const SPIN: u32 = 300_000;
+
+/// Every long job pinned to shard 0, the unstarted lane pinned shut
+/// (hysteresis bounds way above the backlog), so the only road off the
+/// hot shard is the started-capsule lane.
+fn long_job_server(started: bool) -> JobServer {
+    JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 2))
+        .shards(2)
+        .workers_per_shard(2)
+        .capacity(LONG_JOBS as usize)
+        .policy(PinnedShard(0))
+        .migration(true)
+        .migration_hysteresis(64)
+        .migration_hysteresis_bounds(64, 64)
+        .started_migration(started)
+        .build()
+}
+
+fn drive_long(server: &JobServer) -> Duration {
+    let expect = LongPhaseJob::expected(PHASES, SPIN);
+    let t0 = Instant::now();
+    let handles: Vec<_> =
+        (0..LONG_JOBS).map(|_| server.submit(LongPhaseJob::new(PHASES, SPIN))).collect();
+    for h in handles {
+        assert_eq!(h.join(), expect, "re-homed job must keep its checksum");
+    }
+    t0.elapsed()
+}
+
+#[test]
+fn long_job_skew_rehomes_started_capsules() {
+    let server = long_job_server(true);
+    let with = drive_long(&server);
+
+    let stats = server.stats();
+    assert_eq!(stats.submitted, LONG_JOBS);
+    assert_eq!(stats.completed, LONG_JOBS);
+    assert_eq!(stats.diverted, 0, "unstarted lane must stay shut: {stats:?}");
+    let m = server.metrics();
+    assert_eq!(m.roots, LONG_JOBS, "every job executes exactly once: {m:?}");
+    assert_eq!(m.signals, m.steals, "quiescence must survive re-homing: {m:?}");
+    assert!(
+        m.jobs_migrated_started > 0,
+        "skewed long jobs must re-home through the started lane: {m:?}"
+    );
+    assert!(
+        m.stacklets_adopted >= m.jobs_migrated_started,
+        "every re-homed capsule hands over at least its first stacklet: {m:?}"
+    );
+    // Lease ledger: every stack leased out of a shard column was
+    // adopted into one (bytes conserved — pointer handoff, no copies).
+    let (leased, adopted) = server.stack_shelf().lease_balance();
+    assert_eq!(leased, adopted, "lease/adopt byte ledger must balance");
+    assert!(leased > 0, "migrated capsules must move bytes through the ledger");
+
+    // Control: identical traffic with the started lane off stays exact,
+    // pinned, and slower (all work serialized onto shard 0's workers).
+    let server = long_job_server(false);
+    let without = drive_long(&server);
+    let m = server.metrics();
+    assert_eq!(m.jobs_migrated_started, 0);
+    assert_eq!(m.stacklets_adopted, 0);
+    assert_eq!(m.signals, m.steals);
+    assert_eq!(server.stack_shelf().lease_balance(), (0, 0));
+
+    // The perf gate needs the idle shard's workers to actually run in
+    // parallel with the hot shard's; skip the timing half on starved CI.
+    let cores =
+        std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1);
+    if cores >= 4 {
+        let speedup = without.as_secs_f64() / with.as_secs_f64().max(1e-9);
+        assert!(
+            speedup >= 1.5,
+            "started migration must relieve the pinned shard: {speedup:.2}x \
+             (with {with:?} vs without {without:?})"
+        );
+    }
+}
+
+#[test]
+fn drain_shard_evacuates_and_quiesces() {
+    // Capacity above the whole offered load so every job is admitted
+    // (queued or running) when the drain starts — the interesting case.
+    let server = JobServer::builder()
+        .topology(NumaTopology::synthetic(2, 2))
+        .shards(2)
+        .workers_per_shard(2)
+        .capacity(128)
+        .policy(PinnedShard(0))
+        .migration(true)
+        .migration_hysteresis(64)
+        .migration_hysteresis_bounds(64, 64)
+        .started_migration(true)
+        .build();
+    let expect = LongPhaseJob::expected(PHASES, SPIN);
+    // A mix of long started jobs and short queued ones, all pinned to
+    // the shard about to be decommissioned.
+    let long: Vec<_> =
+        (0..6).map(|_| server.submit(LongPhaseJob::new(PHASES, SPIN))).collect();
+    let short: Vec<_> =
+        (0..48u64).map(|s| (s, server.submit(MixedJob::from_seed(s)))).collect();
+
+    // Concurrent with execution: evacuate shard 0. Queued admissions are
+    // re-routed, parked capsules adopted across, running strands either
+    // finish or detach at their next safe point.
+    assert!(server.drain_shard(0), "drain of a live shard must succeed");
+
+    // No stranded handles: everything resolves exactly.
+    for h in long {
+        assert_eq!(h.join(), expect);
+    }
+    for (s, h) in short {
+        assert_eq!(h.join(), MixedJob::expected(s), "seed {s}");
+    }
+
+    // Quiescence + accounting: nothing lost, nothing double-run.
+    let stats = server.stats();
+    assert_eq!(stats.submitted, 6 + 48);
+    assert_eq!(stats.completed, 6 + 48);
+    assert_eq!(stats.abandoned, 0);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(server.in_flight(), 0);
+    assert_eq!(stats.shards[0].in_flight, 0, "drained shard must be empty");
+    let m = server.metrics();
+    assert_eq!(m.roots, 6 + 48);
+    assert_eq!(m.signals, m.steals, "drain must preserve quiescence: {m:?}");
+    let (leased, adopted) = server.stack_shelf().lease_balance();
+    assert_eq!(leased, adopted, "drain must settle every outstanding lease");
+
+    // The shard stays decommissioned: new pinned placements redirect to
+    // the surviving shard and still complete.
+    let before = server.stats().shards[1].completed;
+    let post: Vec<_> =
+        (0..32u64).map(|s| (s, server.submit(MixedJob::from_seed(s)))).collect();
+    for (s, h) in post {
+        assert_eq!(h.join(), MixedJob::expected(s), "post-drain seed {s}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 6 + 48 + 32);
+    assert_eq!(stats.shards[0].in_flight, 0, "no new work lands on a drained shard");
+    assert!(
+        stats.shards[1].completed >= before + 32,
+        "post-drain placements must redirect to the live shard: {stats:?}"
+    );
 }
 
 #[test]
