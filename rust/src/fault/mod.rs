@@ -25,6 +25,8 @@
 //! | [`FaultSite::ShelfExhausted`] | `stack::StackShelf::pop`                | recycle miss; fresh stack allocated |
 //! | [`FaultSite::StackAdoptRace`] | `service::MigrationHub` started-lane claim | lease handoff reports contended; thief retries |
 //! | [`FaultSite::SafePointStall`] | `rt::worker` root-level yield            | yield point delayed; strand keeps running at home |
+//! | [`FaultSite::JoinRace`]       | `rt::worker` implicit-join signal        | stolen child's completion delayed inside the handoff window |
+//! | [`FaultSite::HandoffStall`]   | `rt::worker` owed-signal handoff         | dying strand parks between debt-record and unwind |
 //!
 //! Every effect is one the system must already tolerate; injection
 //! just makes the rare paths common enough to assert invariants over.
@@ -55,10 +57,19 @@ pub enum FaultSite {
     /// once and the strand keeps running on its home shard until the
     /// next yield.
     SafePointStall = 5,
+    /// Delay a stolen child's completion signal just before its join CAS,
+    /// widening the window in which a dying owner's settlement flip
+    /// ([`crate::frame::JoinCounter::begin_settlement`]) races the
+    /// child's signal.
+    JoinRace = 6,
+    /// Park a dying strand between recording its owed-signal debt
+    /// (`note_handoff`) and continuing the cancel unwind, so settling
+    /// children observe the ledger mid-handoff.
+    HandoffStall = 7,
 }
 
 /// Number of [`FaultSite`] variants (array size for per-site state).
-pub const FAULT_SITES: usize = 6;
+pub const FAULT_SITES: usize = 8;
 
 /// Process-global arm flag: the only cost paid while faults are off.
 static ARMED: AtomicBool = AtomicBool::new(false);
@@ -104,6 +115,8 @@ impl FaultPlan {
         FaultPlan {
             seed,
             sites: [
+                SiteState::off(),
+                SiteState::off(),
                 SiteState::off(),
                 SiteState::off(),
                 SiteState::off(),

@@ -34,6 +34,30 @@
 //! `rt::worker` for the full argument. After a completed join the counter
 //! is back at 0, ready for the next scope, and the (exclusively owned)
 //! steal counter is reset by the resuming worker.
+//!
+//! ## Abandon-settlement overlay (owed-signal handoff)
+//!
+//! A strand killed mid-scope (cancel / shed / deadline, observed at a
+//! fork boundary) cannot simply vanish: stolen children of its dying
+//! frames still hold pointers to those frames' join words and will
+//! signal them on completion. The owner therefore flips each dying
+//! frame's counter into **settlement mode** with
+//! [`JoinCounter::begin_settlement`]: one `fetch_sub` of
+//! `SETTLE_BIAS + steals`, which atomically records the outstanding
+//! debt below the bias so the scope value can never be mistaken for a
+//! live one. In-flight signals keep using the same `fetch_add(1)`;
+//! [`JoinCounter::signal_observe`] distinguishes the two "last" shapes:
+//!
+//! * new value `0` — normal protocol, parent arrived, resume it;
+//! * new value `-SETTLE_BIAS` — the frame was abandoned, this signal
+//!   settles its debt; the signaller continues the owner's deferred
+//!   unwind (complete-to-abandon) instead of resuming dead code.
+//!
+//! The transition is race-free: before settlement the counter is
+//! `signals-so-far ∈ [0, steals]` (the dying owner never arrived), so
+//! neither "last" shape can fire early, and after it the remaining
+//! `debt` signals walk the value monotonically up to exactly
+//! `-SETTLE_BIAS`.
 
 use std::sync::atomic::{AtomicI64, Ordering};
 
@@ -71,6 +95,27 @@ pub type ResumeFn = unsafe fn(*mut FrameHeader, &mut crate::rt::worker::Worker) 
 #[derive(Debug)]
 pub struct JoinCounter(AtomicI64);
 
+/// Bias separating live scope values from abandon-settlement values in
+/// the join word. Live values sit in `(-2^32, 2^32)` (signals and steals
+/// are `u32`-bounded); settlement values sit in
+/// `[-SETTLE_BIAS - 2^32, -SETTLE_BIAS]`, so the two regimes can never
+/// collide and the queue-link overlay (pointer bit patterns, used only
+/// while a frame is enqueued and its scope idle) is untouched.
+pub const SETTLE_BIAS: i64 = 1 << 40;
+
+/// What a child-side signal observed (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignalOutcome {
+    /// Not the last outstanding signal; nothing to do.
+    Pending,
+    /// Parent arrived and this was the last signal: resume the parent.
+    LastResume,
+    /// The frame was abandoned mid-scope and this signal settled its
+    /// recorded debt: continue the owner's deferred unwind instead of
+    /// resuming.
+    LastSettle,
+}
+
 impl JoinCounter {
     /// Fresh counter (scope with no outstanding signals).
     pub const fn new() -> Self {
@@ -79,10 +124,49 @@ impl JoinCounter {
 
     /// Child side: signal completion of a dangling child. Returns `true`
     /// iff the parent already arrived and this was the last outstanding
-    /// child — the caller must resume the parent.
+    /// child — the caller must resume the parent. Prefer
+    /// [`Self::signal_observe`] where the frame may have been abandoned
+    /// (the runtime's final awaitable); this boolean form is kept for
+    /// contexts that provably never see settlement mode.
     #[inline]
     pub fn signal(&self) -> bool {
         self.0.fetch_add(1, Ordering::AcqRel) + 1 == 0
+    }
+
+    /// Child side, settlement-aware: signal completion and report which
+    /// of the two "last" shapes (if either) this signal hit.
+    #[inline]
+    pub fn signal_observe(&self) -> SignalOutcome {
+        let now = self.0.fetch_add(1, Ordering::AcqRel) + 1;
+        if now == 0 {
+            SignalOutcome::LastResume
+        } else if now == -SETTLE_BIAS {
+            SignalOutcome::LastSettle
+        } else {
+            SignalOutcome::Pending
+        }
+    }
+
+    /// Owner side of the owed-signal handoff: flip a dying frame's
+    /// counter into settlement mode, recording `steals` expected signals
+    /// for the scope. Returns the **outstanding debt** — the number of
+    /// stolen children that had not yet signalled at the transition
+    /// instant. A return of 0 means every signal already landed (the
+    /// counter is parked at exactly `-SETTLE_BIAS`, no future signal
+    /// will arrive) and the caller is its own settler: it must continue
+    /// the unwind itself rather than wait.
+    ///
+    /// Must only be called by the frame's exclusive owner, at most once
+    /// per scope, with the frame's continuation unreachable to thieves
+    /// (its deque entry popped) so `steals` is stable.
+    #[inline]
+    pub fn begin_settlement(&self, steals: u32) -> u32 {
+        let prev = self.0.fetch_sub(SETTLE_BIAS + steals as i64, Ordering::AcqRel);
+        debug_assert!(
+            (0..=steals as i64).contains(&prev),
+            "settlement from a non-live scope value {prev} (steals {steals})",
+        );
+        (steals as i64 - prev) as u32
     }
 
     /// Parent side: arrive at the join expecting `steals` signals.
@@ -329,6 +413,90 @@ mod tests {
                 "trial {trial}: exactly one resumer required"
             );
             assert_eq!(j.raw(), 0);
+        }
+    }
+
+    #[test]
+    fn settlement_partial_debt_settles_on_last_signal() {
+        // Scope forked 3 stolen children; 1 signalled before the kill.
+        let j = JoinCounter::new();
+        assert!(!j.signal());
+        assert_eq!(j.begin_settlement(3), 2, "two signals still owed");
+        assert_eq!(j.signal_observe(), SignalOutcome::Pending);
+        assert_eq!(j.signal_observe(), SignalOutcome::LastSettle);
+        assert_eq!(j.raw(), -SETTLE_BIAS);
+    }
+
+    #[test]
+    fn settlement_zero_debt_makes_owner_the_settler() {
+        let j = JoinCounter::new();
+        assert!(!j.signal());
+        assert!(!j.signal());
+        assert_eq!(j.begin_settlement(2), 0, "all signals already in");
+        assert_eq!(j.raw(), -SETTLE_BIAS);
+    }
+
+    #[test]
+    fn settlement_never_reports_last_resume() {
+        let j = JoinCounter::new();
+        assert_eq!(j.begin_settlement(1), 1);
+        assert_eq!(j.signal_observe(), SignalOutcome::LastSettle);
+    }
+
+    #[test]
+    fn signal_observe_matches_live_protocol() {
+        // The settlement-aware form must be a drop-in for `signal` on
+        // live scopes: same LastResume point, same final value.
+        let j = JoinCounter::new();
+        assert!(!j.arrive(2));
+        assert_eq!(j.signal_observe(), SignalOutcome::Pending);
+        assert_eq!(j.signal_observe(), SignalOutcome::LastResume);
+        assert_eq!(j.raw(), 0);
+    }
+
+    /// Exactly one participant observes `LastSettle` when the owner's
+    /// settlement races concurrent child signals.
+    #[test]
+    fn settlement_exactly_one_settler_under_race() {
+        for trial in 0..200 {
+            let j = Arc::new(JoinCounter::new());
+            let steals = 4u32;
+            let settlers = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..steals {
+                let j = Arc::clone(&j);
+                let settlers = Arc::clone(&settlers);
+                handles.push(std::thread::spawn(move || {
+                    match j.signal_observe() {
+                        SignalOutcome::LastSettle => {
+                            settlers.fetch_add(1, Ordering::SeqCst);
+                        }
+                        SignalOutcome::LastResume => {
+                            panic!("trial: resume observed during settlement race")
+                        }
+                        SignalOutcome::Pending => {}
+                    }
+                }));
+            }
+            {
+                let j = Arc::clone(&j);
+                let settlers = Arc::clone(&settlers);
+                handles.push(std::thread::spawn(move || {
+                    if j.begin_settlement(steals) == 0 {
+                        // Every signal beat the flip: the owner settles.
+                        settlers.fetch_add(1, Ordering::SeqCst);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(
+                settlers.load(Ordering::SeqCst),
+                1,
+                "trial {trial}: exactly one settler required"
+            );
+            assert_eq!(j.raw(), -SETTLE_BIAS);
         }
     }
 

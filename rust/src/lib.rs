@@ -228,8 +228,12 @@
 //!   gated by a consecutive-demand streak — a balanced system never
 //!   pays more than a couple of relaxed loads per yield. Long
 //!   non-forking phases opt in by yielding between phases
-//!   ([`service::jobs::LongPhaseJob`] is the reference shape); yields
-//!   inside a fork-join scope or off the root frame are free no-ops.
+//!   ([`service::jobs::LongPhaseJob`] is the reference shape). Yields
+//!   from non-root frames are free no-ops; a root yield *inside* a
+//!   fork scope is honoured under demand by arriving at the scope's
+//!   join word early (the same debt-settlement machinery as the
+//!   owed-signal handoff below), so detach and [`service::JobServer::drain_shard`]
+//!   don't stall behind long forking phases.
 //!
 //! **Elastic drain** composes both lanes:
 //! [`service::JobServer::drain_shard`] marks a shard draining (new
@@ -238,7 +242,12 @@
 //! frame, diverted spout frame and parked capsule to the surviving
 //! shards, discards dead frames (cancelled / shed / expired) with full
 //! accounting, and returns once the shard's queues are empty and its
-//! workers idle — no stranded handles, shard decommissioned.
+//! workers idle — no stranded handles, shard decommissioned. The
+//! inverse, [`service::JobServer::recommission_shard`], re-opens a
+//! drained shard for placement and re-arms its migration lanes, so
+//! capacity can elastically shrink and grow across
+//! drain → recommission → drain cycles with the ledger identities
+//! intact.
 //!
 //! `jobs_migrated`, `jobs_migrated_started`, `stacklets_adopted` and
 //! `migration_misses` in [`metrics::MetricsSnapshot`] expose the
@@ -342,16 +351,58 @@
 //!   the dequeue path, **0 heap allocations per cancelled job**
 //!   (regression-gated by the cancel scenario in
 //!   `rust/tests/alloc_regression.rs`).
-//! * **After the job starts**: the next `fork` the job's strand reaches
-//!   on its root's behalf raises a cancellation unwind, which rides the
-//!   existing panic-containment path (stack quarantined, deque drained,
-//!   root abandoned exactly once). Straight-line code between forks is
-//!   never interrupted.
+//! * **After the job starts**: every strand working on the job's
+//!   behalf — the submitting strand *and* every thief that stole one of
+//!   its continuations — re-checks the kill byte at each **child-frame
+//!   fork boundary** (fork dispatch, join resume, root-level yield),
+//!   and dies there via the **owed-signal handoff** below. Straight-line
+//!   code between boundaries is never interrupted.
+//!
+//! ### The owed-signal handoff
+//!
+//! A strand cannot simply unwind out of a fork scope: in a
+//! continuation-stealing runtime the scope's join word owes one signal
+//! per steal (`signals == steals` is the quiescence identity), and
+//! stolen children still running on other workers will deliver theirs
+//! into the dying parent's frame. The handoff reconciles that **steal
+//! debt** before anything is torn down:
+//!
+//! 1. **Poison first.** The dying strand poisons every stack it owns on
+//!    the parent chain *before* flipping any join counter, so
+//!    concurrent settlers observe the poison and the at-most-once
+//!    quarantine rule holds by construction, not by luck.
+//! 2. **Open the ledger.** Each frame with outstanding debt has its
+//!    split join counter parked at a **settlement bias** — a sentinel
+//!    far below any live count — recording how many child signals are
+//!    still owed. Children it still owns are settled on the spot.
+//! 3. **Hand off to the thieves.** Stolen children keep running, but
+//!    their completion no longer resumes a dead parent: the final
+//!    awaitable observes the biased counter and takes a
+//!    *complete-to-abandon* path instead — each completion pays one
+//!    unit of debt, and **exactly one** settler (the last arrival, by
+//!    counter arithmetic) releases the fused root block, fires the
+//!    abandonment hook, and quarantines the handed-off stacks.
+//! 4. **Unwind.** The dying strand's cancellation unwind then rides the
+//!    panic-containment path (stack quarantined, stale deque entries
+//!    drained, root abandoned exactly once) and the worker returns to
+//!    its scheduler loop within one contained unwind — which is what
+//!    bounds kill-to-reclaim latency by the fork granularity instead of
+//!    the job length (`rust/tests/chaos.rs` asserts the bound
+//!    mid-fork-phase on multi-second jobs).
+//!
+//! Every interleaving of child completion vs. parent unwind preserves
+//! `signals == steals`, the lease-ledger balance and the admission
+//! accounting exactly; the warm kill cycle is zero-alloc
+//! (regression-gated by the handoff scenario in
+//! `rust/tests/alloc_regression.rs`).
 //!
 //! Handles resolve either way: `join`/`poll` panic (as for workload
 //! panics), while [`rt::pool::RootHandle::try_join`] returns
 //! `Err(`[`rt::pool::AbortReason`]`)` distinguishing `Panicked` /
-//! `Cancelled` / `Shed` / `DeadlineExpired`.
+//! `Cancelled` / `Shed` / `DeadlineExpired`. Per-tenant kill causes are
+//! surfaced in [`service::TenantStats`] and the
+//! [`metrics::MetricsSnapshot`] tenant cells (`cancelled` ⊆
+//! `abandoned`, `deadline_expired` ⊆ `shed`).
 //!
 //! ### Deadlines and load shedding
 //!
@@ -360,9 +411,11 @@
 //! [`service::JobServer::submit_with`]) stamp a deadline into
 //! the root's hot block before the frame is published. A job whose
 //! deadline passes while still queued is killed **at dequeue or
-//! drain time** — expired jobs are *never executed*, which is the
-//! useful half of a deadline under overload (started jobs are never
-//! interrupted). [`service::ShedPolicy`] (mirroring
+//! drain time** — expired jobs are *never executed* — and one whose
+//! deadline passes mid-run stops at its next child-frame fork boundary
+//! through the owed-signal handoff, so an expiring job's reclaim
+//! latency is bounded by its fork granularity, not its remaining
+//! runtime. [`service::ShedPolicy`] (mirroring
 //! [`service::PlacementPolicy`]) decides what a full server does with
 //! new work: [`service::BlockOnFull`] (default, the classic
 //! backpressure), [`service::RejectNew`] (fail fast), or
@@ -383,9 +436,12 @@
 //! workload panic (first resume of a served job), delayed wake (lazy
 //! scheduler's pre-park window), spout overflow (migration divert
 //! fallback), shelf exhaustion (stack recycle miss), stack-adopt race
-//! (a started-capsule claim loses its race and retries), and
-//! safe-point stall (a root-level yield declines to detach once). The
-//! chaos suite (`rust/tests/chaos.rs`, seed-matrixed in CI) arms each
+//! (a started-capsule claim loses its race and retries), safe-point
+//! stall (a root-level yield declines to detach once), join race (a
+//! stolen child's completion signal is delayed into the parent's
+//! kill-unwind window), and handoff stall (a dying strand parks
+//! between handing its debt off and unwinding). The chaos suite
+//! (`rust/tests/chaos.rs`, seed-matrixed in CI) arms each
 //! site across scheduler × migration configurations and asserts the
 //! runtime's invariants hold under fire: `signals == steals` at
 //! quiescence, the admission accounting identity, the started-capsule

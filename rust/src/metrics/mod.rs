@@ -128,6 +128,13 @@ pub struct TenantCell {
     pub abandoned: u64,
     /// Jobs shed before execution (shed policy or deadline expiry).
     pub shed: u64,
+    /// Jobs killed by client cancellation (subset of `abandoned`:
+    /// unstarted discards and started jobs stopped at a child-frame
+    /// fork boundary by the owed-signal handoff).
+    pub cancelled: u64,
+    /// Jobs killed by deadline expiry, queued or mid-run (subset of
+    /// `shed`).
+    pub deadline_expired: u64,
     /// Admission rejections (reject-on-full bounces).
     pub rejected: u64,
     /// Sum of completed jobs' sojourn times (submit → root return), µs.
@@ -142,6 +149,8 @@ impl TenantCell {
         self.completed += other.completed;
         self.abandoned += other.abandoned;
         self.shed += other.shed;
+        self.cancelled += other.cancelled;
+        self.deadline_expired += other.deadline_expired;
         self.rejected += other.rejected;
         self.sojourn_us += other.sojourn_us;
         self.sojourn_jobs += other.sojourn_jobs;
@@ -153,6 +162,8 @@ impl TenantCell {
             completed: self.completed - earlier.completed,
             abandoned: self.abandoned - earlier.abandoned,
             shed: self.shed - earlier.shed,
+            cancelled: self.cancelled - earlier.cancelled,
+            deadline_expired: self.deadline_expired - earlier.deadline_expired,
             rejected: self.rejected - earlier.rejected,
             sojourn_us: self.sojourn_us - earlier.sojourn_us,
             sojourn_jobs: self.sojourn_jobs - earlier.sojourn_jobs,

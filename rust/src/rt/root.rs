@@ -127,8 +127,21 @@ pub struct RootHot {
     yielded: AtomicBool,
     /// Kill byte: `KILL_LIVE` or the first `KILL_*` cause marked by a
     /// client cancel, the shed policy, or deadline expiry. Checked with
-    /// one relaxed load at dequeue/steal/claim boundaries.
+    /// one relaxed load at dequeue/steal/claim boundaries and at every
+    /// child-frame fork boundary of a running strand.
     kill: AtomicU8,
+    /// **Debt ledger** for the owed-signal handoff: how many of this
+    /// job's frames are currently parked in join-word settlement mode
+    /// (`JoinCounter::begin_settlement`), each waiting for its last
+    /// stolen child to settle. Incremented by the dying owner at the
+    /// flip, decremented by the settling child when it picks the unwind
+    /// back up. Zero at quiescence; while non-zero the job's stacks may
+    /// still be written through remote join pointers, so the capsule
+    /// lanes and the clean-discard route must treat the job as live
+    /// memory (they already do — settlement only arises on started,
+    /// non-yielded roots — but the ledger makes the invariant checkable
+    /// and is asserted by the chaos suite at quiescence).
+    settling: AtomicUsize,
     /// Absolute deadline in [`now_micros`] ticks; `0` means none.
     deadline: AtomicU64,
     /// Monomorphized task destructor for the clean-discard path: drops
@@ -166,6 +179,7 @@ impl RootHot {
             started: AtomicBool::new(false),
             yielded: AtomicBool::new(false),
             kill: AtomicU8::new(KILL_LIVE),
+            settling: AtomicUsize::new(0),
             deadline: AtomicU64::new(0),
             discard_task,
             base,
@@ -193,6 +207,28 @@ impl RootHot {
     #[inline]
     pub(crate) fn kill_code(&self) -> u8 {
         self.kill.load(Ordering::Relaxed)
+    }
+
+    /// Debt-ledger entry: a dying owner flipped one more of this job's
+    /// frames into settlement mode. Pairs with [`Self::note_settled`].
+    #[inline]
+    pub(crate) fn note_handoff(&self) {
+        self.settling.fetch_add(1, Ordering::Release);
+    }
+
+    /// Debt-ledger exit: a settling child finished one handed-off
+    /// frame's deferred unwind.
+    #[inline]
+    pub(crate) fn note_settled(&self) {
+        let prev = self.settling.fetch_sub(1, Ordering::Release);
+        debug_assert!(prev > 0, "settlement ledger underflow");
+    }
+
+    /// Frames of this job currently in settlement mode (0 at
+    /// quiescence; see the field docs).
+    #[inline]
+    pub(crate) fn settling(&self) -> usize {
+        self.settling.load(Ordering::Acquire)
     }
 
     /// Set the absolute deadline (in [`now_micros`] ticks, `>= 1`).
@@ -321,14 +357,27 @@ pub(crate) unsafe fn release(hot: *const RootHot) {
 /// fires the signal, runs the pool's abandonment `hook` (strictly
 /// *before* the signal, mirroring the completion-hook ordering — the
 /// job server's accounting is settled by the time `join` unblocks) and
-/// releases the worker half.
+/// releases the worker half. Returns whether this call won the swap, so
+/// callers can keep their metric bumps exactly-once under kill storms.
+///
+/// The caller must **own the root frame**: either the old argument
+/// holds (an owed upward signal is missing, so no other strand can ever
+/// complete the root) or — on the owed-signal handoff path, which
+/// *delivers* those signals — the dying strand's settlement walk must
+/// have claimed the root frame itself. Abandoning a root another strand
+/// can still complete would release the worker half twice.
 ///
 /// # Safety
-/// `hot` must be the root of the panicked strand's job. The caller must
-/// not touch the block after this call (the release may dispose it).
-pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>, reason: DrainKind) {
+/// `hot` must be the root of the panicked strand's job, owned as
+/// described above. The caller must not touch the block after this call
+/// (the release may dispose it).
+pub(crate) unsafe fn abandon(
+    hot: *const RootHot,
+    hook: Option<&AbandonHook>,
+    reason: DrainKind,
+) -> bool {
     if (*hot).abandoned.swap(true, Ordering::AcqRel) {
-        return; // another strand of this job already abandoned the root
+        return false; // another strand of this job already abandoned the root
     }
     if let Some(h) = hook {
         let tag = (*hot).tag;
@@ -338,6 +387,7 @@ pub(crate) unsafe fn abandon(hot: *const RootHot, hook: Option<&AbandonHook>, re
     }
     (*hot).signal.complete_abandoned();
     release(hot);
+    true
 }
 
 /// Queue-side discard of a root that **never started** — or that is

@@ -94,6 +94,11 @@ pub struct Worker {
     /// strands. Read by the fork-boundary cancellation check — one
     /// relaxed load per fork, no pointer chasing.
     active_root: *const root::RootHot,
+    /// Containment-walk scratch (drained deque entries / visited
+    /// frames), retained across unwinds so the warm handoff-unwind
+    /// path performs no heap allocation.
+    settle_drained: Vec<*mut FrameHeader>,
+    settle_visited: Vec<*mut FrameHeader>,
 }
 
 impl Worker {
@@ -113,6 +118,8 @@ impl Worker {
             local: LocalCounters::default(),
             current: std::ptr::null_mut(),
             active_root: std::ptr::null(),
+            settle_drained: Vec::with_capacity(8),
+            settle_visited: Vec::with_capacity(16),
         }
     }
 
@@ -423,7 +430,12 @@ impl Worker {
     /// when `f` is a root, mark it started and clear any yielded flag
     /// (closing the queue-side discard window — for first starts and
     /// for re-homed capsules resuming after a root-level yield alike)
-    /// and cache its hot part for the fork-boundary cancellation check.
+    /// and cache its hot part for the fork-boundary kill check. When `f`
+    /// is a stolen **child** continuation, walk its parent chain to the
+    /// job's root so steal-originated strands see kill bytes too — the
+    /// walk is O(depth) against the steal's CAS and reads only immutable
+    /// header fields of frames that provably outlive the scope (each is
+    /// missing this subtree's signal/return).
     ///
     /// # Safety
     /// The caller must exclusively own `f` and be about to execute it.
@@ -436,56 +448,96 @@ impl Worker {
                 (*hot).set_yielded(false);
                 self.active_root = hot;
             }
+            return;
+        }
+        let mut root = f;
+        while !(*root).parent.is_null() {
+            root = (*root).parent;
+        }
+        if (*root).kind == FrameKind::Root && !(*root).root_hot.is_null() {
+            self.active_root = (*root).root_hot;
         }
     }
 
-    /// Contain a workload panic. The current stack holds the panicking
-    /// strand's live frames; they are abandoned where they lie: any
-    /// fork-join scope the strand participated in never joins, but every
-    /// *other* job and the pool itself keep running. The stack is
-    /// **poisoned and quarantined** — never recycled, reclaimed only
-    /// when the shelf (and thus every pool and root block sharing it)
-    /// drops — because its frames may still be referenced from outside.
-    /// The worker continues on a pooled stack.
+    /// Is the strand's job killed? Reads the cached hot part: the kill
+    /// byte, and (when armed) the deadline — marking `KILL_EXPIRED`
+    /// lazily on first observation past the deadline, exactly like the
+    /// queue-boundary check. Caller must have checked `active_root` is
+    /// non-null.
+    #[inline]
+    unsafe fn active_root_killed(&self) -> bool {
+        let hot = self.active_root;
+        let code = (*hot).kill_code();
+        if code != root::KILL_LIVE {
+            return true;
+        }
+        let deadline = (*hot).deadline();
+        if deadline != 0 && root::now_micros() >= deadline {
+            (*hot).mark_kill(root::KILL_EXPIRED);
+            return true;
+        }
+        false
+    }
+
+    /// Contain a workload panic or a kill unwind (`CancelUnwind`). The
+    /// current stack holds the dying strand's live frames; they are
+    /// abandoned where they lie, but — unlike the pre-handoff design —
+    /// their **steal debt is reconciled first** (the owed-signal
+    /// handoff), so every *other* job, every live strand of *this* job
+    /// and the pool itself keep running with exact accounting.
     ///
-    /// The job's **root** is found by walking the panicked frame's
-    /// parent chain and is always abandoned — whether the strand
-    /// started at a submitted root on this worker or at a **stolen**
-    /// continuation whose root lives on a remote victim's stack (the
-    /// PR 2 hole: such jobs used to hang their handles forever). The
-    /// walk is sound because every ancestor's scope is missing the
-    /// panicked frame's signal/return, so no ancestor can reach its
-    /// final return and free itself; `parent`/`kind`/`root_hot` are
-    /// immutable after frame creation. Abandoning marks the root's
-    /// block so its disposer quarantines the root's stack instead of
-    /// deallocating under the victim's live frames.
+    /// The walk starts at the frame the unwind began in and climbs the
+    /// parent chain, classifying each link:
+    ///
+    /// * **Owned** links — the called parent of a dying child, a fork
+    ///   parent whose continuation entry we just drained from our own
+    ///   deque, or a parent we claimed below — die with us. Each owned
+    ///   frame with open steal debt is flipped into join-word
+    ///   settlement mode ([`Self::settle_owned`]): its stolen children's
+    ///   eventual completions settle the recorded debt (the settler
+    ///   reclaims the frame's parked stack and the ledger entry) instead
+    ///   of resuming a dead parent.
+    /// * **Stolen** fork links (entry consumed by a thief) end our
+    ///   ownership. On a *kill* unwind we deliver the dead child's owed
+    ///   completion signal — `signals == steals` stays exact and the
+    ///   thief's scope is never left waiting: `Pending` means the scope
+    ///   stays alive elsewhere (its eventual join-resume runs the kill
+    ///   checkpoint before any user code can read our unwritten output
+    ///   slot); `LastResume` means we claimed the parent, so the walk
+    ///   continues up through it; `LastSettle` means another dying
+    ///   strand flipped it first and we are its settler. On a *plain
+    ///   panic* no signal is delivered (the dead child's output slot was
+    ///   never written and no kill byte guards the parent's join-resume
+    ///   from reading it), so the scope above parks forever — the
+    ///   pre-handoff containment semantics.
+    ///
+    /// The job's root is abandoned only when the walk **owns** it (or on
+    /// the plain-panic path, where the withheld upward signal proves no
+    /// other strand can ever complete it — the PR 2 argument). With
+    /// signals delivered, a non-owned root either completes normally
+    /// (kill raced completion — best effort) or is claimed and abandoned
+    /// by a later dying strand; exactly one of the two happens.
+    ///
+    /// The strand's stack is **poisoned strictly before any counter
+    /// flip** (the flip's `AcqRel` publishes the flag to settlers) and
+    /// quarantined — never recycled — because its abandoned frames may
+    /// still be referenced from outside. The worker continues on a
+    /// pooled stack.
     #[cold]
     fn on_workload_panic(&mut self) {
         self.staged = std::ptr::null_mut();
-        // Locate the job's root first (reads only immutable header
-        // fields of frames that provably stay allocated, see above).
-        let mut root = self.current;
+        let start = self.current;
         self.current = std::ptr::null_mut();
+        // Locate the job's root first (reads only immutable header
+        // fields of frames that provably stay allocated: every ancestor
+        // is missing a signal or return from this dying subtree, so none
+        // can reach its final return and free itself).
+        let mut root = start;
         unsafe {
             while !root.is_null() && !(*root).parent.is_null() {
                 root = (*root).parent;
             }
         }
-        // Invariant 2 repair: the strand's unconsumed fork entries (its
-        // own continuations, possibly from outer scopes of the same job)
-        // are still in our deque. Abandon them — a later job's hot-path
-        // pop must not receive a stale parent. Thieves racing this drain
-        // take entries through the normal steal protocol; the scopes
-        // they resume are missing the panicked child's signal and simply
-        // suspend forever (reclaimed with the quarantined stacks).
-        while self.shared.deques[self.id].pop().is_some() {}
-        // Poison strictly before abandoning: the last refcount release
-        // must observe the flag and quarantine the stack instead of
-        // deallocating under the abandoned frames.
-        unsafe { (*self.stack).poison() };
-        self.shared.metrics.worker(self.id).bump_stacks_poisoned();
-        let poisoned = self.stack;
-        self.stack = self.fresh_stack();
         let hot = unsafe {
             if !root.is_null() && (*root).kind == FrameKind::Root {
                 (*root).root_hot
@@ -493,36 +545,210 @@ impl Worker {
                 std::ptr::null()
             }
         };
-        // Reclaim route for the poisoned stack: when the job's root
-        // block lives on it, the block's disposer quarantines it after
-        // the last refcount release. Otherwise (steal-originated strand
-        // on a thief's own stack) no release path will ever see this
-        // stack — hand it to the shelf's poison bin directly.
+        let killed = unsafe { !hot.is_null() && (*hot).kill_code() != root::KILL_LIVE };
+        // Invariant 2 repair + steals stabilization: the strand's
+        // unconsumed fork entries (its own continuations, possibly from
+        // outer scopes of the same job) are still in our deque. Drain
+        // them — a later job's hot-path pop must not receive a stale
+        // parent, and a frame's `steals` is only stable for
+        // `begin_settlement` once its entry is unreachable to thieves.
+        // Entries lost to thieves racing this drain went through the
+        // normal steal protocol: those parents are alive elsewhere and
+        // are exactly the "stolen" links the walk below hands signals to.
+        let mut drained = std::mem::take(&mut self.settle_drained);
+        drained.clear();
+        while let Some(FramePtr(f)) = self.shared.deques[self.id].pop() {
+            drained.push(f);
+        }
+        // Poison strictly before abandoning or flipping any join word:
+        // settlers and the last refcount release must observe the flag
+        // and quarantine the stack instead of deallocating (or writing)
+        // under the abandoned frames.
+        unsafe { (*self.stack).poison() };
+        self.shared.metrics.worker(self.id).bump_stacks_poisoned();
+        let poisoned = self.stack;
+        self.stack = self.fresh_stack();
         let root_stack =
             unsafe { if hot.is_null() { std::ptr::null_mut() } else { (*root).stack } };
+
+        // The owed-signal handoff walk (see the method docs).
+        let mut settled = std::mem::take(&mut self.settle_visited);
+        settled.clear();
+        let mut owns_root = false;
+        unsafe {
+            let mut a = start;
+            while !a.is_null() {
+                self.settle_owned(a, hot, poisoned, root_stack);
+                settled.push(a);
+                if (*a).kind == FrameKind::Root || (*a).parent.is_null() {
+                    owns_root = (*a).kind == FrameKind::Root;
+                    break;
+                }
+                let p = (*a).parent;
+                match (*a).kind {
+                    FrameKind::Root => unreachable!("root frames have no parent"),
+                    FrameKind::Called => a = p,
+                    FrameKind::Forked if drained.contains(&p) => a = p,
+                    FrameKind::Forked if killed => {
+                        // Deliver the dead child's owed signal (the
+                        // failed-pop signal its final return would have
+                        // sent) to the stolen parent.
+                        self.shared.metrics.worker(self.id).bump_signals();
+                        match (*p).join.signal_observe() {
+                            crate::frame::SignalOutcome::Pending => break,
+                            crate::frame::SignalOutcome::LastResume => {
+                                // We won the parent's resume: its scope
+                                // is complete (counter at zero, no
+                                // future signal), so it dies with us
+                                // un-flipped; the walk continues.
+                                (*p).steals = 0;
+                                a = p;
+                            }
+                            crate::frame::SignalOutcome::LastSettle => {
+                                // Another dying strand flipped `p`; our
+                                // signal settled its debt — run the
+                                // settler duties and stop (that strand
+                                // handled everything above).
+                                self.finish_settlement(p, hot, poisoned, root_stack);
+                                break;
+                            }
+                        }
+                    }
+                    FrameKind::Forked => break, // plain panic: park the scope above
+                }
+            }
+            // Defensive sweep: a drained entry off the walked chain
+            // would otherwise leave its stolen children resuming a dead
+            // parent. (The chain argument says this is empty.)
+            for &f in &drained {
+                if !settled.contains(&f) {
+                    debug_assert!(false, "drained entry off the dying strand's chain");
+                    self.settle_owned(f, hot, poisoned, root_stack);
+                }
+            }
+        }
+        // Hand the scratch buffers back for the next unwind (capacity
+        // retained — the warm path stays allocation-free).
+        self.settle_drained = drained;
+        self.settle_visited = settled;
+        // Reclaim route for the poisoned stack: when the job's root
+        // block lives on it, the block's disposer quarantines it after
+        // the last refcount release. Otherwise no release path will
+        // ever see this stack — hand it to the shelf's poison bin
+        // directly.
         if root_stack != poisoned {
             unsafe { self.shared.shelf.quarantine(poisoned) };
         }
-        if !hot.is_null() {
-            // A fork-boundary cancellation stop unwinds through this
-            // same path; report it as a cancellation (metric + hook
-            // accounting), not a workload failure.
-            let reason = unsafe {
-                if (*hot).kill_code() == root::KILL_CANCELLED {
-                    self.shared.metrics.worker(self.id).bump_jobs_cancelled();
-                    DrainKind::Cancelled
-                } else {
-                    DrainKind::Panic
-                }
+        if !hot.is_null() && (owns_root || !killed) {
+            // A kill unwind is reported under its recorded cause
+            // (metric + hook accounting), not as a workload failure;
+            // the winner of the abandon swap bumps exactly once.
+            let code = unsafe { (*hot).kill_code() };
+            let reason = match code {
+                root::KILL_CANCELLED => DrainKind::Cancelled,
+                root::KILL_SHED => DrainKind::Shed,
+                root::KILL_EXPIRED => DrainKind::Expired,
+                _ => DrainKind::Panic,
             };
-            // Abandon the root (idempotent across concurrently panicking
-            // strands of the same job): runs the pool's abandonment hook
-            // and fires the signal so the handle unblocks-and-panics
-            // instead of waiting forever.
-            unsafe {
+            let won = unsafe {
                 crate::rt::root::abandon(hot, self.shared.on_abandon.as_deref(), reason)
             };
+            if won {
+                let counters = self.shared.metrics.worker(self.id);
+                match reason {
+                    DrainKind::Cancelled => counters.bump_jobs_cancelled(),
+                    DrainKind::Shed => counters.bump_jobs_shed(),
+                    DrainKind::Expired => counters.bump_deadline_expired(),
+                    DrainKind::Panic => {}
+                }
+            }
         }
+    }
+
+    /// Flip one frame this dying strand owns into join-word settlement
+    /// mode, recording its outstanding steal debt in the job's ledger.
+    /// Zero-debt outcomes (no steals, or every signal already landed)
+    /// make the owner its own settler: the frame's parked stack is
+    /// reclaimed here and the ledger entry is undone immediately.
+    ///
+    /// Per-frame order is load-bearing: `retain` + `note_handoff`
+    /// strictly before the `begin_settlement` flip, so a racing child
+    /// that hits `LastSettle` always finds both the ledger entry and
+    /// the block reference that keep `hot` (and the root stack under
+    /// it) alive until its `release`.
+    ///
+    /// # Safety
+    /// Caller must own `f` exclusively (its continuation unreachable to
+    /// thieves) with `f.steals` stable, on the containment path.
+    unsafe fn settle_owned(
+        &mut self,
+        f: *mut FrameHeader,
+        hot: *const root::RootHot,
+        poisoned: *mut SegmentedStack,
+        root_stack: *mut SegmentedStack,
+    ) {
+        let steals = (*f).steals;
+        if steals == 0 {
+            self.reclaim_dead_stack((*f).stack, poisoned, root_stack);
+            return;
+        }
+        if !hot.is_null() {
+            (*hot).retain();
+            (*hot).note_handoff();
+        }
+        let debt = (*f).join.begin_settlement(steals);
+        if crate::fault::should_fire(crate::fault::FaultSite::HandoffStall) {
+            // Park mid-handoff: settlers observe the ledger between the
+            // debt record and the rest of the unwind.
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        if debt == 0 {
+            self.reclaim_dead_stack((*f).stack, poisoned, root_stack);
+            if !hot.is_null() {
+                (*hot).note_settled();
+                root::release(hot);
+            }
+        }
+        // debt > 0: the last settling child reclaims f's stack and the
+        // ledger entry (final_awaitable's LastSettle arm).
+    }
+
+    /// Settler duties for a frame flipped by *another* dying strand
+    /// whose debt our containment walk just settled: reclaim its parked
+    /// stack and undo that strand's ledger entry + block reference.
+    unsafe fn finish_settlement(
+        &mut self,
+        p: *mut FrameHeader,
+        hot: *const root::RootHot,
+        poisoned: *mut SegmentedStack,
+        root_stack: *mut SegmentedStack,
+    ) {
+        self.reclaim_dead_stack((*p).stack, poisoned, root_stack);
+        if !hot.is_null() {
+            (*hot).note_settled();
+            root::release(hot);
+        }
+    }
+
+    /// Reclaim a dead frame's stack on the containment path. Skips our
+    /// own just-poisoned stack (quarantined by the caller), the root
+    /// block's stack (the disposer's job), and stacks already poisoned
+    /// by another dying strand (quarantined by it — the happens-before
+    /// edge is that strand's `AcqRel` counter flip, which follows its
+    /// poison write). Everything else is a parked stack holding exactly
+    /// this abandoned frame, which no release path will ever see.
+    unsafe fn reclaim_dead_stack(
+        &mut self,
+        s: *mut SegmentedStack,
+        poisoned: *mut SegmentedStack,
+        root_stack: *mut SegmentedStack,
+    ) {
+        if s.is_null() || s == poisoned || s == root_stack || (*s).is_poisoned() {
+            return;
+        }
+        (*s).poison();
+        self.shared.metrics.worker(self.id).bump_stacks_poisoned();
+        self.shared.shelf.quarantine(s);
     }
 
     fn enter_active(&self) {
@@ -549,27 +775,24 @@ impl Worker {
         self.staged = std::ptr::null_mut();
         match self.staged_kind {
             StageKind::Fork => {
-                // Fork-boundary cancellation checkpoint: one relaxed
-                // load on a line the fork path already executes. A
-                // cancelled running job stops here — before exposing
-                // more work — by unwinding into the panic-containment
-                // path, which abandons the root (as `Cancelled`),
-                // quarantines the strand's stack and keeps the worker
-                // alive. Best-effort by design: strands that never fork
-                // again run to completion.
+                // Fork-boundary kill checkpoint: one relaxed load on a
+                // line the fork path already executes. A killed running
+                // job (cancelled, shed, or past its deadline) stops here
+                // — before exposing more work — by unwinding into the
+                // panic-containment path, which reconciles the dying
+                // frames' steal debt (owed-signal handoff, see
+                // [`Self::on_workload_panic`]), abandons the root under
+                // the matching reason, quarantines the strand's stack
+                // and keeps the worker alive.
                 //
-                // Only the **root frame's own** fork boundaries stop:
-                // the root owes no parent signal, and a root frame's
-                // deque entries are always consumed before it steps
-                // again, so unwinding here can never strand a stolen
-                // scope's owed signal — `signals == steals` stays exact
-                // under cancellation (asserted by the chaos suite).
-                // Child frames of a cancelled job run their scope out;
-                // the job stops at its next root-level fork.
-                if (*parent).kind == FrameKind::Root
-                    && !self.active_root.is_null()
-                    && (*self.active_root).kill_code() == root::KILL_CANCELLED
-                {
+                // **Every** fork boundary stops, child frames included:
+                // the handoff flips each dying frame's join word into
+                // settlement mode before the unwind, so stolen children
+                // settle the recorded debt instead of resuming a dead
+                // parent — `signals == steals` stays exact (asserted by
+                // the chaos suite). Best-effort by design: strands that
+                // never fork again run to completion.
+                if !self.active_root.is_null() && self.active_root_killed() {
                     std::panic::panic_any(CancelUnwind);
                 }
                 self.shared.deques[self.id].push(FramePtr(parent));
@@ -608,6 +831,15 @@ impl Worker {
             // suspending, adopting h's stack (Alg. 4 lines 8–10).
             (*h).steals = 0;
             self.adopt_stack(h_stack);
+            // Join-resume kill checkpoint (see final_awaitable's
+            // LastResume arm): a killed job's dead children may have
+            // signalled without writing their outputs, so the scope
+            // must die before its post-join code runs. The scope is
+            // settled (steals zeroed, counter balanced), so the
+            // containment walk starts clean at `h`.
+            if !self.active_root.is_null() && self.active_root_killed() {
+                std::panic::panic_any(CancelUnwind);
+            }
             Transfer::To(h)
         } else {
             // Suspend; the last signalling child resumes h. After
@@ -685,12 +917,39 @@ impl Worker {
                 // the parent's stack before the signal linearizes.
                 let p_stack = (*parent).stack;
                 self.shared.metrics.worker(self.id).bump_signals();
-                if (*parent).join.signal() {
-                    // Last joiner: resume the parent, adopting its stack
-                    // (Alg. 5 lines 16–18).
-                    (*parent).steals = 0;
-                    self.adopt_stack(p_stack);
-                    return Transfer::To(parent);
+                if crate::fault::should_fire(crate::fault::FaultSite::JoinRace) {
+                    // Widen the window between a dying owner's
+                    // settlement flip and this completion signal.
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                }
+                match (*parent).join.signal_observe() {
+                    crate::frame::SignalOutcome::LastResume => {
+                        // Last joiner: the parent's resume is ours.
+                        (*parent).steals = 0;
+                        // Join-resume kill checkpoint: once a job is
+                        // killed, dead children may have signalled this
+                        // scope without writing their output slots, so
+                        // the parent must die *here* — before its post-
+                        // join user code can read them. We own the
+                        // parent (last signal won), so the containment
+                        // walk settles it and its ancestors.
+                        if !self.active_root.is_null() && self.active_root_killed() {
+                            self.current = parent;
+                            std::panic::panic_any(CancelUnwind);
+                        }
+                        // Resume it, adopting its stack (Alg. 5
+                        // lines 16–18).
+                        self.adopt_stack(p_stack);
+                        return Transfer::To(parent);
+                    }
+                    crate::frame::SignalOutcome::LastSettle => {
+                        // The parent was abandoned mid-scope (owed-
+                        // signal handoff) and our completion settled
+                        // its recorded debt: continue the dead owner's
+                        // deferred unwind instead of resuming it.
+                        return self.settle_abandoned(parent, p_stack);
+                    }
+                    crate::frame::SignalOutcome::Pending => {}
                 }
                 // Not last. If we hold the parent's stack (we are the
                 // original victim), release it to the future resumer
@@ -705,6 +964,56 @@ impl Worker {
         }
     }
 
+    /// Continue a dead owner's deferred unwind: the completing child's
+    /// signal just hit `LastSettle` on an abandoned parent (flipped by
+    /// [`Self::settle_owned`]). Exactly one child per flipped frame gets
+    /// here (the counter parks at `-SETTLE_BIAS` and no further signal
+    /// arrives), so the settler duties run once: park-reclaim the dead
+    /// parent's stack and undo the owner's ledger entry + block
+    /// reference (whose `release` — the last one, once the handle and
+    /// worker halves are gone — frees the fused root block through the
+    /// existing abandon path).
+    ///
+    /// The parent-chain walk reads only immutable header fields; every
+    /// ancestor is either live (its scope is missing a signal/return
+    /// from some strand, so it cannot free itself) or abandoned on a
+    /// poisoned/quarantined stack that the shelf keeps allocated, and
+    /// the ledger reference taken at the flip keeps the root block (and
+    /// the root stack under it) alive until our `release` below.
+    ///
+    /// # Safety
+    /// Caller observed `LastSettle` on `parent` whose stack is
+    /// `p_stack`; `parent` is dead and this worker is its unique
+    /// settler.
+    #[cold]
+    unsafe fn settle_abandoned(
+        &mut self,
+        parent: *mut FrameHeader,
+        p_stack: *mut SegmentedStack,
+    ) -> Transfer {
+        let mut root = parent;
+        while !(*root).parent.is_null() {
+            root = (*root).parent;
+        }
+        let hot = if (*root).kind == FrameKind::Root {
+            (*root).root_hot
+        } else {
+            std::ptr::null()
+        };
+        let root_stack =
+            if hot.is_null() { std::ptr::null_mut() } else { (*root).stack };
+        // If we are the original victim still holding the dead parent's
+        // stack, detach from it before reclaiming (Alg. 5 lines 20–21
+        // shape: the stack stays with the parked frame).
+        if self.stack == p_stack {
+            self.stack = self.fresh_stack();
+        } else {
+            debug_assert!((*self.stack).is_empty());
+        }
+        self.finish_settlement(parent, hot, std::ptr::null_mut(), root_stack);
+        Transfer::ToScheduler
+    }
+
     // ----------------------------------------------------------------
     // Root-level safe point (Step::Yield) — started-capsule detach
     // ----------------------------------------------------------------
@@ -713,15 +1022,24 @@ impl Worker {
     /// be re-homed. Returns `Some(ToScheduler)` when the frame was
     /// detached as a started-job capsule (root block + stack lease,
     /// pointer handoff — no byte copying) and handed to the pool's
-    /// external source; `None` when the yield is a no-op and the caller
-    /// should keep stepping the task.
+    /// external source, **or** suspended at the yield awaiting its
+    /// scope's outstanding signals (debt reconciliation below); `None`
+    /// when the yield is a no-op and the caller should keep stepping
+    /// the task.
     ///
     /// The detach is legal only at a **root-level** safe point, where
     /// the capsule is provably self-contained:
     ///
-    /// - `h` is the job's root and `h.steals == 0`: every fork the root
-    ///   made has joined (`signals == steals` held at each join), so no
-    ///   other worker holds a reference into this strand.
+    /// - `h` is the job's root with its steal debt **settled**: a yield
+    ///   inside a fork scope with `h.steals != 0` first arrives at the
+    ///   scope's join word early. If every dangling child has already
+    ///   signalled, the scope is settled on the spot (`steals` reset,
+    ///   outputs all written — the later explicit join takes the
+    ///   `steals == 0` fast path) and the detach checks proceed.
+    ///   Otherwise the strand **suspends at the yield** and the last
+    ///   signalling child resumes it there — exactly the join suspend
+    ///   shape, which is what lets `drain_shard` and capsule detach
+    ///   stop waiting on long forking phases.
     /// - No child is staged (the task yielded between phases, not
     ///   mid-dispatch).
     /// - The worker still runs on the root's own stack and the root
@@ -731,8 +1049,8 @@ impl Worker {
     ///
     /// Cost when the system is balanced: the pre-checks plus one
     /// `wants_started` call (a couple of relaxed loads), no state
-    /// changes. Only when the source wants the capsule do we pay the
-    /// detach: counter flush, `yielded` publish, fresh stack. The
+    /// changes — the early-arrive fires only when the source actually
+    /// wants the capsule, so live mid-scope yields stay free. The
     /// [`crate::fault::FaultSite::SafePointStall`] site declines the
     /// yield once, modelling a delayed safe point.
     ///
@@ -740,17 +1058,18 @@ impl Worker {
     /// Caller is the trampoline resuming `h`; the strand is suspended at
     /// the yield and owns its stack.
     pub(crate) unsafe fn yield_root(&mut self, h: *mut FrameHeader) -> Option<Transfer> {
-        if (*h).kind != FrameKind::Root || (*h).steals != 0 {
+        if (*h).kind != FrameKind::Root {
             return None;
         }
         let hot = (*h).root_hot;
         if hot.is_null() {
             return None;
         }
-        // Cancellation checkpoint: a yield is a strand boundary just
-        // like a root-level fork; a cancelled job stops here through
-        // the same contained unwind.
-        if (*hot).kill_code() == root::KILL_CANCELLED {
+        // Kill checkpoint: a yield is a strand boundary just like a
+        // fork; a killed job (cancelled / shed / past deadline) stops
+        // here through the same contained unwind — with any open steal
+        // debt handed off by the containment walk.
+        if !self.active_root.is_null() && self.active_root_killed() {
             std::panic::panic_any(CancelUnwind);
         }
         debug_assert!(self.staged.is_null(), "yield with a staged child");
@@ -760,18 +1079,39 @@ impl Worker {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return None;
         }
-        if self.stack != (*h).stack
-            || (*self.stack).live_bytes() != (*h).alloc_size as usize
-        {
-            // Not self-contained (yield from inside a live scope, or
-            // after a join left us on a different stack): free no-op.
-            return None;
-        }
         let wants = match &self.shared.external {
             Some(s) => s.wants_started(),
             None => return None,
         };
         if !wants {
+            return None;
+        }
+        // Debt reconciliation (mid-scope yield): settle or suspend, see
+        // the method docs. Only paid under demand (`wants` above).
+        if (*h).steals != 0 {
+            let steals = (*h).steals;
+            let h_stack = (*h).stack;
+            if !(*h).join.arrive(steals) {
+                // Outstanding signals: park the strand at the yield.
+                // The last signalling child resumes the task here (and
+                // resets `steals`), with every output written.
+                self.flush_counters();
+                if self.stack == h_stack {
+                    self.stack = self.fresh_stack();
+                } else {
+                    debug_assert!((*self.stack).is_empty());
+                }
+                self.active_root = std::ptr::null();
+                return Some(Transfer::ToScheduler);
+            }
+            (*h).steals = 0;
+            self.adopt_stack(h_stack);
+        }
+        if self.stack != (*h).stack
+            || (*self.stack).live_bytes() != (*h).alloc_size as usize
+        {
+            // Not self-contained (completed child frames still live, or
+            // a join left us on a different stack): free no-op.
             return None;
         }
         if crate::fault::should_fire(crate::fault::FaultSite::SafePointStall) {

@@ -12,6 +12,14 @@
 //! Parking uses a timeout as a liveness backstop: a lost wakeup costs at
 //! most one timeout period, never a hang. Wake-ups are targeted through
 //! the per-worker parked flags (see `Shared::wake_one`).
+//!
+//! Reclaim latency under kill storms is bounded by the same machinery:
+//! a worker whose strand dies at a fork/join/yield boundary (the
+//! owed-signal handoff in `rt::worker`) re-enters this loop within one
+//! contained unwind, and a worker parked here is at most one backstop
+//! period away from observing an emptied system — so `drain_shard`,
+//! cancel storms and deadline expiry converge without waiting for long
+//! forking phases to finish.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;

@@ -330,6 +330,13 @@ struct TenantLoad {
     completed: AtomicU64,
     abandoned: AtomicU64,
     shed: AtomicU64,
+    /// Kill-cause breakdown: jobs discarded on client cancellation
+    /// (queue-side or stopped mid-run at a child-frame fork boundary).
+    /// Subset of `abandoned`.
+    cancelled: AtomicU64,
+    /// Kill-cause breakdown: jobs discarded on deadline expiry (queued
+    /// or mid-run). Subset of `shed`.
+    deadline_expired: AtomicU64,
     rejected: AtomicU64,
     in_flight: AtomicUsize,
     /// Sum of admit→return sojourn times (µs) over `sojourn_jobs`
@@ -413,11 +420,37 @@ impl ServerCore {
         self.release_slot();
     }
 
+    /// The one mapping from a discard's [`DrainKind`] to slot recovery
+    /// and per-tenant kill accounting. Every abandonment funnel — the
+    /// pools' worker hook, [`JobServer::drain_shard`] and the server's
+    /// `Drop` drain — routes through here, so the abandon/shed split
+    /// and the `cancelled` / `deadline_expired` cause cells cannot
+    /// diverge between doors. The tag packs the placement shard and the
+    /// tenant id ([`root::pack_tag`]).
+    fn drain_release(&self, tag: u64, kind: DrainKind) {
+        let shard = root::tag_shard(tag);
+        let slot = tenant_slot(root::tag_tenant(tag));
+        match kind {
+            DrainKind::Cancelled => {
+                self.tenant(slot).cancelled.fetch_add(1, Ordering::Relaxed);
+            }
+            DrainKind::Expired => {
+                self.tenant(slot).deadline_expired.fetch_add(1, Ordering::Relaxed);
+            }
+            DrainKind::Panic | DrainKind::Shed => {}
+        }
+        match kind {
+            DrainKind::Panic | DrainKind::Cancelled => self.abandon(shard, slot),
+            DrainKind::Shed | DrainKind::Expired => self.shed_slot(shard, slot),
+        }
+    }
+
     /// Shed hook: runs (via the pool's abandonment hook, at most once
-    /// per job) when a queued job is discarded before execution —
-    /// shed-oldest victim or expired deadline. Same slot/load recovery
-    /// as [`ServerCore::abandon`], separate counter: shed jobs were
-    /// never started, abandoned jobs died mid-run.
+    /// per job) when a job is discarded by the shed policy or a
+    /// deadline — a queued victim, or (since the owed-signal handoff) a
+    /// started job stopped at its next child-frame fork boundary by a
+    /// stale shed mark or a mid-run expiry. Same slot/load recovery as
+    /// [`ServerCore::abandon`], separate counter.
     fn shed_slot(&self, shard: usize, slot: usize) {
         let shard = shard.min(self.loads.len().saturating_sub(1));
         self.loads[shard].in_flight.fetch_sub(1, Ordering::AcqRel);
@@ -1407,8 +1440,10 @@ impl JobServerBuilder {
     /// root-level safe point ([`crate::task::Step::Yield`]) can be
     /// detached as a capsule — root block plus its segmented stack,
     /// handed over by pointer — and resumed by a starved sibling shard;
-    /// see the [module docs](self). When off, yields are free no-ops
-    /// and only unstarted jobs migrate, exactly the pre-lane behavior.
+    /// see the [module docs](self). When off, only unstarted jobs
+    /// migrate and yields never detach, exactly the pre-lane behavior —
+    /// though a yield remains a kill safe point either way (a yielding
+    /// strand whose root is cancelled or expired still unwinds there).
     pub fn started_migration(mut self, enabled: bool) -> Self {
         self.started_migration = enabled;
         self
@@ -1432,7 +1467,11 @@ impl JobServerBuilder {
     /// a worker starts it is discarded at dequeue time — it is never
     /// executed — and its handle resolves to
     /// [`AbortReason::DeadlineExpired`](crate::rt::pool::AbortReason).
-    /// Deadlines never interrupt a job that has already started.
+    /// A job already running when its deadline passes stops at its next
+    /// child-frame fork boundary or accepted safe point (the
+    /// owed-signal handoff in `rt::worker` reconciles the scope's steal
+    /// debt, then the strand unwinds), resolving its handle the same
+    /// way.
     pub fn deadline_default(mut self, d: Duration) -> Self {
         self.deadline_default = Some(d);
         self
@@ -1600,19 +1639,8 @@ impl JobServerBuilder {
                     shard: s,
                 }))
                 // The tag packs the placement shard and the tenant id
-                // (`root::pack_tag`); the hooks decode both.
-                .abandon_hook(Arc::new(move |tag, kind| {
-                    let shard = root::tag_shard(tag);
-                    let slot = tenant_slot(root::tag_tenant(tag));
-                    match kind {
-                        DrainKind::Panic | DrainKind::Cancelled => {
-                            hook_core.abandon(shard, slot);
-                        }
-                        DrainKind::Shed | DrainKind::Expired => {
-                            hook_core.shed_slot(shard, slot);
-                        }
-                    }
-                }));
+                // (`root::pack_tag`); the shared release decodes both.
+                .abandon_hook(Arc::new(move |tag, kind| hook_core.drain_release(tag, kind)));
             if let Some(hub) = &hub {
                 builder = builder
                     .external_work(Arc::new(ShardSource { hub: Arc::clone(hub), shard: s }));
@@ -1654,10 +1682,12 @@ pub struct ServerStats {
     /// released through the abandonment hook).
     /// `submitted == completed + abandoned + shed` at quiescence.
     pub abandoned: u64,
-    /// Jobs shed before execution — shed-oldest victims and expired
-    /// deadlines. Shed jobs never run; their handles resolve to an
-    /// [`AbortReason`](crate::rt::pool::AbortReason). Cancelled jobs
-    /// (explicit [`RootHandle::cancel`]) count in `abandoned` instead.
+    /// Jobs shed — shed-oldest victims and expired deadlines. Most are
+    /// discarded before ever running; a victim that raced into starting
+    /// stops at its next child-frame fork boundary instead. Handles
+    /// resolve to an [`AbortReason`](crate::rt::pool::AbortReason).
+    /// Cancelled jobs (explicit [`RootHandle::cancel`]) count in
+    /// `abandoned` instead.
     pub shed: u64,
     /// Jobs routed through the migration spouts (diverted at placement;
     /// executed by whichever shard claimed them — `jobs_migrated` in
@@ -1693,10 +1723,17 @@ pub struct TenantStats {
     pub completed: u64,
     /// Jobs lost to workload panics or mid-run cancellation.
     pub abandoned: u64,
-    /// Jobs shed before execution (shed-oldest victims, expired
-    /// deadlines). `submitted == completed + abandoned + shed` per
-    /// tenant at quiescence.
+    /// Jobs shed (shed-oldest victims, expired deadlines — queued or
+    /// mid-run). `submitted == completed + abandoned + shed` per tenant
+    /// at quiescence.
     pub shed: u64,
+    /// Kill-cause breakdown of `abandoned`: jobs discarded on client
+    /// cancellation — unstarted, or stopped mid-run at a child-frame
+    /// fork boundary by the owed-signal handoff.
+    pub cancelled: u64,
+    /// Kill-cause breakdown of `shed`: jobs discarded on deadline
+    /// expiry, queued or mid-run.
+    pub deadline_expired: u64,
     /// Submissions bounced by backpressure.
     pub rejected: u64,
     /// Currently admitted (queued + running) jobs.
@@ -2029,8 +2066,10 @@ impl JobServer {
     /// Mark the oldest still-unstarted registered job shed. Returns true
     /// when a victim was marked (its admission slot frees when a worker
     /// pops and discards it). Racing starts are benign: a job that
-    /// started between the check and the mark simply runs to completion,
-    /// ignoring the stale mark.
+    /// started between the check and the mark stops at its next
+    /// child-frame fork boundary (the kill byte is a fork-boundary
+    /// checkpoint since the owed-signal handoff), releasing its slot
+    /// through the shed drain kind with exact accounting.
     fn shed_one(&self) -> bool {
         let Some(reg) = &self.shed_reg else { return false };
         let mut q = reg.lock().unwrap();
@@ -2070,8 +2109,8 @@ impl JobServer {
     /// bounce counts in [`ServerStats::rejected`] globally and for the
     /// tenant. A job whose deadline passes before a worker starts it is
     /// discarded at dequeue time — never executed — and its handle
-    /// resolves to `AbortReason::DeadlineExpired`; deadlines never
-    /// interrupt a started job.
+    /// resolves to `AbortReason::DeadlineExpired`; one that already
+    /// started stops at its next child-frame fork boundary instead.
     pub fn submit_with<C: Coroutine>(
         &self,
         job: C,
@@ -2232,10 +2271,11 @@ impl JobServer {
     /// moves.
     ///
     /// The shard stays decommissioned afterwards (its workers keep
-    /// running but receive no new work). Returns `false` — without
-    /// touching anything — when the server has no migration hub, the
-    /// index is out of range, or every other shard is already draining
-    /// (the last live shard cannot be evacuated).
+    /// running but receive no new work) until
+    /// [`Self::recommission_shard`] re-opens it. Returns `false` —
+    /// without touching anything — when the server has no migration
+    /// hub, the index is out of range, or every other shard is already
+    /// draining (the last live shard cannot be evacuated).
     pub fn drain_shard(&self, shard: usize) -> bool {
         let Some(hub) = &self.hub else { return false };
         if shard >= self.shards.len() {
@@ -2249,14 +2289,7 @@ impl JobServer {
         }
         hub.draining[shard].store(true, Ordering::Release);
         let core = Arc::clone(&self.core);
-        let hook = move |tag: u64, kind: DrainKind| {
-            let s = root::tag_shard(tag);
-            let slot = tenant_slot(root::tag_tenant(tag));
-            match kind {
-                DrainKind::Shed | DrainKind::Expired => core.shed_slot(s, slot),
-                DrainKind::Panic | DrainKind::Cancelled => core.abandon(s, slot),
-            }
-        };
+        let hook = move |tag: u64, kind: DrainKind| core.drain_release(tag, kind);
         let hook_ref: &crate::rt::pool::AbandonHook = &hook;
         // Route evacuated live frames round-robin over the live shards.
         let mut rr = 0usize;
@@ -2356,6 +2389,45 @@ impl JobServer {
         }
     }
 
+    /// Reverse a completed [`Self::drain_shard`]: re-open `shard` for
+    /// placement, admission dequeue and lane claiming, and wake its
+    /// workers so they resume polling. Intended to be called after
+    /// `drain_shard(shard)` has returned `true` (the shard is quiescent
+    /// and its queues are empty); calling it mid-drain merely makes the
+    /// drain loop race new claims, which is safe — every frame is
+    /// claimed exactly once — but can keep `drain_shard` from ever
+    /// observing quiescence.
+    ///
+    /// Re-arms the spout / started-lane occupancy bits when frames are
+    /// parked there (a producer can divert into a draining shard's
+    /// spout in the window before placement redirects, and the drain
+    /// loop may have exited between its last claim and a racing push),
+    /// and clears the detach streak so the recommissioned shard's
+    /// strands stop detaching at every safe point.
+    ///
+    /// Returns `false` — without touching anything — when the server
+    /// has no migration hub, the index is out of range, or the shard
+    /// was not draining (recommission is idempotent: the second call
+    /// reports `false`).
+    pub fn recommission_shard(&self, shard: usize) -> bool {
+        let Some(hub) = &self.hub else { return false };
+        if shard >= self.shards.len() {
+            return false;
+        }
+        if !hub.draining[shard].swap(false, Ordering::AcqRel) {
+            return false;
+        }
+        hub.started[shard].streak.store(0, Ordering::Relaxed);
+        if hub.spouts[shard].len.load(Ordering::Acquire) > 0 {
+            hub.mark_spout(shard);
+        }
+        if hub.started[shard].len.load(Ordering::Acquire) > 0 {
+            hub.mark_started_lane(shard);
+        }
+        self.wake_shard(shard);
+        true
+    }
+
     // ----------------------------------------------------------------
     // Introspection
     // ----------------------------------------------------------------
@@ -2405,6 +2477,8 @@ impl JobServer {
                         completed: load.completed.load(Ordering::Relaxed),
                         abandoned: load.abandoned.load(Ordering::Relaxed),
                         shed: load.shed.load(Ordering::Relaxed),
+                        cancelled: load.cancelled.load(Ordering::Relaxed),
+                        deadline_expired: load.deadline_expired.load(Ordering::Relaxed),
                         rejected: load.rejected.load(Ordering::Relaxed),
                         in_flight: load.in_flight.load(Ordering::Relaxed),
                         mean_sojourn_us: load.sojourn_us.load(Ordering::Relaxed)
@@ -2449,6 +2523,8 @@ impl JobServer {
             cell.completed = t.completed.load(Ordering::Relaxed);
             cell.abandoned = t.abandoned.load(Ordering::Relaxed);
             cell.shed = t.shed.load(Ordering::Relaxed);
+            cell.cancelled = t.cancelled.load(Ordering::Relaxed);
+            cell.deadline_expired = t.deadline_expired.load(Ordering::Relaxed);
             cell.rejected = t.rejected.load(Ordering::Relaxed);
             cell.sojourn_us = t.sojourn_us.load(Ordering::Relaxed);
             cell.sojourn_jobs = t.sojourn_jobs.load(Ordering::Relaxed);
@@ -2528,14 +2604,7 @@ impl Drop for JobServer {
             }
         }
         let core = Arc::clone(&self.core);
-        let hook = move |tag: u64, kind: DrainKind| {
-            let shard = root::tag_shard(tag);
-            let slot = tenant_slot(root::tag_tenant(tag));
-            match kind {
-                DrainKind::Shed | DrainKind::Expired => core.shed_slot(shard, slot),
-                DrainKind::Panic | DrainKind::Cancelled => core.abandon(shard, slot),
-            }
-        };
+        let hook = move |tag: u64, kind: DrainKind| core.drain_release(tag, kind);
         let hook_ref: &crate::rt::pool::AbandonHook = &hook;
         // Admission class queues first: workers may still be polling
         // them concurrently (Retry = a worker holds the claim), but the
@@ -2819,6 +2888,42 @@ mod tests {
         // A single-shard server has no hub at all.
         let single = small_server(1, 1, 16);
         assert!(!single.drain_shard(0));
+    }
+
+    #[test]
+    fn drain_recommission_drain_cycle() {
+        let server = small_server(2, 2, 64);
+        let run_wave = |n: u64| {
+            let mut handles = Vec::with_capacity(n as usize);
+            for seed in 0..n {
+                handles.push((seed, server.submit(MixedJob::from_seed(seed))));
+            }
+            for (seed, h) in handles {
+                assert_eq!(h.join(), MixedJob::expected(seed), "seed {seed}");
+            }
+        };
+        run_wave(24);
+        assert!(server.drain_shard(0), "drain of a live shard must succeed");
+        assert!(!server.recommission_shard(1), "a live shard is not draining");
+        assert!(!server.recommission_shard(7), "out of range must refuse");
+        // Decommissioned: all traffic re-routes to shard 1 and completes.
+        run_wave(24);
+        assert!(server.recommission_shard(0), "drained shard must re-open");
+        assert!(!server.recommission_shard(0), "recommission is one-shot");
+        // Re-opened: shard 0 takes placements again.
+        run_wave(24);
+        assert!(server.drain_shard(0), "a recommissioned shard drains again");
+        let stats = server.stats();
+        assert_eq!(stats.completed, 72);
+        assert_eq!(server.in_flight(), 0);
+        let (leased, adopted) = server.stack_shelf().lease_balance();
+        assert_eq!(
+            leased, adopted,
+            "lease ledger must balance across drain → recommission → drain"
+        );
+        // A single-shard server has no hub: recommission refuses too.
+        let single = small_server(1, 1, 16);
+        assert!(!single.recommission_shard(0));
     }
 
     #[test]

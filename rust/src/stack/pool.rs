@@ -420,11 +420,18 @@ impl StackShelf {
 
     /// Take custody of a poisoned (or abandonment-leaked) stack so its
     /// memory is reclaimed when the shelf drops, instead of leaking
-    /// forever (the PR 2 behaviour). Called from the panic-containment
-    /// path (`rt::worker`) for the panicking strand's own stack, and
-    /// from the root-block disposer (`rt::root`) for the stack an
-    /// abandoned root block lives on once both refcount halves are
-    /// released. Each stack must be quarantined **at most once**.
+    /// forever (the PR 2 behaviour). Called from the panic/kill
+    /// containment path (`rt::worker`) for the dying strand's own stack
+    /// and for each stack it still owns along its parent chain during
+    /// the owed-signal handoff (the owner poisons those **before**
+    /// flipping any join counter, so later settlers observe the poison
+    /// and skip them — the at-most-once rule below is upheld by that
+    /// poison check, not by luck); from the last settling child
+    /// (`rt::worker::settle_abandoned`) for a handed-off parent's stack
+    /// whose debt it just cleared; and from the root-block disposer
+    /// (`rt::root`) for the stack an abandoned root block lives on once
+    /// both refcount halves are released. Each stack must be
+    /// quarantined **at most once**.
     ///
     /// # Safety
     /// The caller transfers custody (not access: abandoned frames on

@@ -44,14 +44,28 @@ pub enum Step<T> {
     /// worker's current stack.
     ScheduleOn(usize),
     /// Cooperative safe point (`yield_point()`): the task declares it is
-    /// between long non-forking phases with no children in flight. At a
-    /// *root-level* yield — when `signals == steals` holds for this frame
-    /// and the frame's fused root block is the only live allocation on
-    /// its stack — the runtime may detach the strand and re-home it to
-    /// another shard ([`crate::service::MigrationHub`]'s started-capsule
-    /// lane). Otherwise the yield is free: the worker resumes the task
-    /// immediately. Yielding inside a fork-join scope, or from a non-root
-    /// frame, is always a no-op.
+    /// at a boundary where suspension is acceptable. Three things can
+    /// happen, in order of preference:
+    ///
+    /// 1. **Kill checkpoint** — a cancelled / shed / deadline-expired
+    ///    job stops here (contained unwind, steal debt handed off).
+    /// 2. **Detach** — at a *root-frame* yield whose fork-scope debt is
+    ///    settled (`signals == steals`) and whose fused root block is
+    ///    the only live allocation on its stack, the runtime may detach
+    ///    the strand and re-home it to another shard
+    ///    ([`crate::service::MigrationHub`]'s started-capsule lane).
+    ///    A root yield *inside* a fork scope is honourable too: under
+    ///    demand (a draining or starved shard) the runtime arrives at
+    ///    the scope's join word early — settling on the spot when every
+    ///    dangling child has signalled, or suspending at the yield until
+    ///    the last child resumes the task there — so capsule detach and
+    ///    `drain_shard` no longer stall behind long forking phases.
+    /// 3. **No-op** — otherwise the worker resumes the task
+    ///    immediately; yields from non-root frames are always free.
+    ///
+    /// Either way the task's `step` is next entered at the state saved
+    /// before the yield, so implementations cannot observe which case
+    /// ran.
     Yield,
 }
 

@@ -327,6 +327,107 @@ fn steady_state_is_allocation_free() {
         );
     }
 
+    // Mid-run kill containment (this PR): cancelling a *started* forking
+    // job makes its strand die at the next child-frame fork boundary via
+    // the owed-signal handoff — settle the scope's steal debt, poison
+    // the dying stack, quarantine it, abandon the root, resolve the
+    // handle. Every step is intrusive or atomic, so once the poison-bin
+    // `Vec` capacity and the shelf's stack bank are warm, the whole kill
+    // cycle performs **zero** heap allocations. Unlike a clean discard,
+    // each mid-run kill permanently retires one stack into the bin, so
+    // the bank must pre-fund the warmup kills plus every retry window.
+    {
+        use rustfork::rt::pool::AbortReason;
+        use rustfork::stack::StackShelf;
+        use rustfork::task::FnTask;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        // 140 warmup kills push the bin `Vec` past the 128-capacity
+        // doubling step to 256, leaving headroom for 5 × 20 measured
+        // kills; the 250-stack bank covers the worst-case 240 retired
+        // stacks.
+        const BANK: usize = 250;
+        const WARM_KILLS: u64 = 140;
+        const KILLS: u64 = 20;
+        let pool = Pool::builder()
+            .workers(1)
+            .stack_shelf(Arc::new(StackShelf::new(256)))
+            .build();
+        let shelf = Arc::clone(pool.stack_shelf());
+
+        // Bank stacks: a gate pins the worker while BANK queued roots
+        // materialise (each submit placement-allocates its root on a
+        // fresh stack); completing them shelves every stack.
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let blocker = pool.submit(FnTask::new(move || {
+            while !g.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            0u64
+        }));
+        let handles: Vec<_> = (0..BANK)
+            .map(|_| pool.submit(FnTask::new(|| 1u64)))
+            .collect();
+        gate.store(true, Ordering::Release);
+        assert_eq!(blocker.join(), 0);
+        for h in handles {
+            assert_eq!(h.join(), 1, "bank job wrong result");
+        }
+
+        // One kill cycle: fib(32) forks for milliseconds, the cancel
+        // lands 500 µs in — deep inside the fork phase. A quarantine
+        // bump is the proof the kill was mid-run (a queue-side discard
+        // or a completion never poisons).
+        let kill_one = |pool: &Pool| {
+            let h = pool.submit(Fib::new(32));
+            std::thread::sleep(Duration::from_micros(500));
+            h.cancel();
+            match h.try_join() {
+                Err(AbortReason::Cancelled) => {}
+                Ok(v) => assert_eq!(v, fib_exact(32), "survivor corrupted"),
+                Err(r) => panic!("mid-run kill resolved with the wrong reason: {r:?}"),
+            }
+        };
+        // Warmup: land WARM_KILLS genuine mid-run kills (iteration cap
+        // keeps a pathological race from looping forever).
+        let mut warmed = 0u64;
+        for _ in 0..WARM_KILLS * 3 {
+            if warmed == WARM_KILLS {
+                break;
+            }
+            let q = shelf.quarantined_count();
+            kill_one(&pool);
+            warmed += shelf.quarantined_count() - q;
+        }
+        assert_eq!(warmed, WARM_KILLS, "cancels keep losing the race to start");
+
+        let mut last = usize::MAX;
+        let mut mid_run = 0u64;
+        for _attempt in 0..5 {
+            let q_before = shelf.quarantined_count();
+            let before = alloc_count();
+            for _ in 0..KILLS {
+                kill_one(&pool);
+            }
+            last = alloc_count() - before;
+            mid_run = shelf.quarantined_count() - q_before;
+            if last == 0 && mid_run == KILLS {
+                break;
+            }
+        }
+        assert_eq!(
+            last, 0,
+            "warm handoff-unwind never reached a zero-allocation window"
+        );
+        assert_eq!(
+            mid_run, KILLS,
+            "the zero-allocation window must be all mid-run kills"
+        );
+    }
+
     // Started-job migration (ISSUE 9): a long-phase job that detaches at
     // a root-level safe point, rides the intrusive started-capsule lane,
     // has its stacklet chain adopted by the claiming shard and resumes

@@ -31,6 +31,7 @@ use rustfork::service::{
     SubmitOptions, WeightedFair,
 };
 use rustfork::task::FnTask;
+use rustfork::workloads::fib::fib_exact;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -124,6 +125,8 @@ fn fault_matrix_invariants() {
         (FaultSite::ShelfExhausted, 4, 100_000),
         (FaultSite::StackAdoptRace, 2, 100_000),
         (FaultSite::SafePointStall, 2, 100_000),
+        (FaultSite::JoinRace, 3, 100_000),
+        (FaultSite::HandoffStall, 2, 100_000),
     ];
     for sched in [SchedulerKind::Busy, SchedulerKind::Lazy] {
         for migration in [true, false] {
@@ -197,7 +200,8 @@ fn fault_matrix_invariants() {
                         if s % 7 == 0 {
                             // Cancel storm: unstarted victims discard at
                             // dequeue; started ones stop at their next
-                            // root-level fork or simply run out.
+                            // child-frame fork boundary (the owed-signal
+                            // handoff) or simply run out.
                             h.cancel();
                         }
                         handles.push((s, h));
@@ -236,6 +240,111 @@ fn fault_matrix_invariants() {
                 assert_capacity_recovers(&server, &label);
                 assert_invariants(&server, &label);
             }
+        }
+    }
+}
+
+/// The owed-signal handoff scenario: long **forking** jobs killed in
+/// the middle of their fork phase — by explicit cancel and by mid-run
+/// deadline expiry — must stop at the next child-frame fork boundary,
+/// reconcile the scope's steal debt and release every resource, across
+/// both schedulers × migration on/off while the `JoinRace` and
+/// `HandoffStall` sites widen exactly the settlement races the
+/// protocol must survive. Each deep fib carries minutes-scale work, so
+/// the latency bound below fails loudly if a kill ever waits for the
+/// forking phase to finish instead of interrupting it.
+#[test]
+fn mid_scope_kill_unwinds_at_fork_boundaries() {
+    let _lock = serial();
+    let base_seed = chaos_seed();
+    for sched in [SchedulerKind::Busy, SchedulerKind::Lazy] {
+        for migration in [true, false] {
+            let label = format!("mid-scope-kill/{sched:?}/migration={migration}");
+            let seed = base_seed
+                ^ ((migration as u64) << 3)
+                ^ (((sched == SchedulerKind::Lazy) as u64) << 4);
+            let guard = arm(
+                FaultPlan::new(seed)
+                    .with(FaultSite::JoinRace, 3, 100_000)
+                    .with(FaultSite::HandoffStall, 2, 100_000),
+            );
+            let server = JobServer::builder()
+                .topology(NumaTopology::synthetic(2, 2))
+                .shards(2)
+                .workers_per_shard(2)
+                .capacity(32)
+                .scheduler(sched)
+                .migration(migration)
+                .migration_hysteresis(2)
+                .admission_policy_boxed(chaos_admission())
+                .seed(seed)
+                .build();
+            // Two deep fork trees (fib 36 ≈ 24M nodes — seconds of work
+            // each) across four workers: each shard has one root and
+            // one idle sibling, so the sibling steals into the tree and
+            // the kill lands on a scope with **real steal debt** — the
+            // case the owed-signal handoff exists for. One job dies by
+            // deadline mid-run, the other by explicit cancel.
+            let Ok(expiring) = server.submit_with(
+                MixedJob::fib(36),
+                SubmitOptions::new().deadline(Duration::from_millis(40)),
+            ) else {
+                panic!("under-capacity admission cannot reject");
+            };
+            let cancelling = server.submit(MixedJob::fib(36));
+            // Let both get deep into their fork phase (and the first
+            // past its deadline), then kill the second.
+            std::thread::sleep(Duration::from_millis(60));
+            cancelling.cancel();
+            let killed_at = Instant::now();
+            let (mut cancelled, mut expired) = (0u64, 0u64);
+            for h in [expiring, cancelling] {
+                match h.try_join() {
+                    Err(AbortReason::Cancelled) => cancelled += 1,
+                    Err(AbortReason::DeadlineExpired) => expired += 1,
+                    Err(r) => panic!("{label}: job aborted for the wrong reason: {r:?}"),
+                    Ok(v) => assert_eq!(v, fib_exact(36), "{label}: survivor corrupted"),
+                }
+            }
+            // Bounded reclaim latency: every strand must die at a fork
+            // boundary within moments of its kill, not at the end of
+            // its multi-second forking phase. The bound is generous for
+            // CI noise yet far below what a surviving job needs.
+            let reclaim = killed_at.elapsed();
+            assert!(
+                reclaim < Duration::from_secs(4),
+                "{label}: kills waited out the fork phase ({reclaim:?})"
+            );
+            assert_eq!(
+                (cancelled, expired),
+                (1, 1),
+                "{label}: both jobs must abort for their own cause"
+            );
+            let m = server.metrics();
+            // Both strands were mid-fork when the kills landed, so the
+            // handoff unwind (which poisons each dying strand's stack)
+            // must have run — kills resolved purely queue-side would
+            // mean the mid-scope path was never exercised.
+            assert!(
+                m.stacks_poisoned > 0,
+                "{label}: no mid-run containment ran: {m:?}"
+            );
+            // Exactly-once kill-cause accounting, per tenant cell: the
+            // default class absorbs every abort observed on a handle.
+            assert_eq!(
+                (m.tenants[0].cancelled, m.tenants[0].deadline_expired),
+                (cancelled, expired),
+                "{label}: kill-cause cells disagree with handle outcomes: {m:?}"
+            );
+            assert!(
+                guard.arrivals(FaultSite::JoinRace) > 0,
+                "{label}: no stolen-child completion signal ever arrived — \
+                 the trees were never stolen into"
+            );
+            drop(guard);
+            assert_invariants(&server, &label);
+            assert_capacity_recovers(&server, &label);
+            assert_invariants(&server, &label);
         }
     }
 }

@@ -14,9 +14,10 @@
 //!   mean (this is the failure mode weighted-fair exists to prevent);
 //! * **fairness is cheap**: aggregate throughput under weighted-fair
 //!   stays within 20% of FIFO on identical two-tenant traffic;
-//! * the `signals == steals` quiescence identity and the per-tenant
-//!   `submitted == completed + abandoned + shed` admission identity
-//!   hold on every server afterwards.
+//! * the `signals == steals` quiescence identity, the per-tenant
+//!   `submitted == completed + abandoned + shed` admission identity and
+//!   the kill-cause subset cells (`cancelled` ⊆ `abandoned`,
+//!   `deadline_expired` ⊆ `shed`) hold on every server afterwards.
 //!
 //! Jobs busy-spin for a fixed wall-clock duration so service time is
 //! policy-independent; sojourn differences are pure queueing delay.
@@ -128,8 +129,11 @@ fn contended_victim_mean(server: &JobServer, victim: TenantHandle, aggressor: Te
     })
 }
 
-/// Post-run identities: quiescence, and the per-tenant admission
-/// identity partitioning the server-wide one.
+/// Post-run identities: quiescence, the per-tenant admission identity
+/// partitioning the server-wide one, and the kill-cause subset
+/// invariants (`cancelled` is a subset of `abandoned`,
+/// `deadline_expired` of `shed` — and this suite kills nothing, so both
+/// cells must stay zero).
 fn assert_identities(server: &JobServer, label: &str) {
     let stats = server.stats();
     assert_eq!(stats.in_flight, 0, "{label}: jobs still in flight");
@@ -142,6 +146,18 @@ fn assert_identities(server: &JobServer, label: &str) {
             t.name
         );
         assert_eq!(t.in_flight, 0, "{label}: tenant `{}` in flight: {t:?}", t.name);
+        assert!(
+            t.cancelled <= t.abandoned && t.deadline_expired <= t.shed,
+            "{label}: tenant `{}` kill-cause cells exceed their parent \
+             counters: {t:?}",
+            t.name
+        );
+        assert_eq!(
+            (t.cancelled, t.deadline_expired),
+            (0, 0),
+            "{label}: tenant `{}` recorded kills in a kill-free suite: {t:?}",
+            t.name
+        );
         by_tenant += t.submitted;
     }
     assert_eq!(
